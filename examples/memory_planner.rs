@@ -1,0 +1,73 @@
+//! Deployment memory planner: given a device memory budget for weights,
+//! find the highest average-bit allocation that fits and report the
+//! accuracy/ppl the deployment will get.
+//!
+//!   cargo run --release --example memory_planner [model] [budget_kib]
+//!
+//! Exercises the public API end-to-end the way an integration would:
+//! packed-size accounting (quant::pack), NSDS allocation, HQQ
+//! quantization, and runtime evaluation.
+
+use nsds::baselines::Method;
+use nsds::coordinator::Pipeline;
+use nsds::eval::EvalOptions;
+use nsds::quant::{fit_group, pack::packed_bytes, Backend, DEFAULT_GROUP};
+use nsds::sensitivity::Ablation;
+
+fn packed_model_bytes(p: &Pipeline, model: &str, bits: &[u8])
+    -> anyhow::Result<usize> {
+    let w = p.weights(model)?;
+    let mut total = 0usize;
+    for (l, &bl) in bits.iter().enumerate() {
+        for name in nsds::model::QUANT_WEIGHTS {
+            let m = w.layer_matrix(name, l);
+            let g = fit_group(m.rows(), DEFAULT_GROUP);
+            total += packed_bytes(m.rows(), m.cols(), bl, g);
+        }
+    }
+    Ok(total)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).map(|s| s.as_str()).unwrap_or("llama-s");
+    let budget_kib: f64 =
+        args.get(2).and_then(|s| s.parse().ok()).unwrap_or(300.0);
+
+    let p = Pipeline::new()?;
+    let entry = p.entry(model)?;
+    let nl = entry.config.n_layers;
+    let nsds = Method::Nsds(Ablation::Full);
+
+    // Scan average-bit budgets from 4.0 downward until the packed model
+    // fits the device budget.
+    let mut chosen = None;
+    for step in 0..=(2 * nl) {
+        let avg = 4.0 - step as f64 * (2.0 / (2 * nl) as f64);
+        let bits = p.allocate(nsds, model, avg)?;
+        let bytes = packed_model_bytes(&p, model, &bits)?;
+        let kib = bytes as f64 / 1024.0;
+        if kib <= budget_kib {
+            chosen = Some((avg, bits, kib));
+            break;
+        }
+    }
+    let Some((avg, bits, kib)) = chosen else {
+        anyhow::bail!(
+            "even uniform 2-bit does not fit {budget_kib} KiB");
+    };
+    println!("{model}: budget {budget_kib:.0} KiB -> b̄={avg:.2} \
+              ({kib:.1} KiB packed)");
+    println!("allocation: {bits:?}");
+
+    let qw = p.quantize(model, &bits, Backend::Hqq)?;
+    let r = p.eval(model, &qw, &EvalOptions::default())?;
+    let fp = p.eval_fp(model, &EvalOptions::default())?;
+    println!("deployed:  avg acc {:6.2}%  avg ppl {:7.3}", r.avg_acc(),
+             r.avg_ppl());
+    println!("reference: avg acc {:6.2}%  avg ppl {:7.3}  (FP32, {:.1} \
+              KiB)",
+             fp.avg_acc(), fp.avg_ppl(),
+             entry.params as f64 * 4.0 / 1024.0);
+    Ok(())
+}

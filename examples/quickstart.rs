@@ -1,0 +1,39 @@
+//! Quickstart: the five-line NSDS workflow.
+//!
+//!   cargo run --release --example quickstart
+//!
+//! Loads a trained model from the artifacts, scores every layer with the
+//! data-free NSDS metric, allocates bits for a 3-bit average budget,
+//! quantizes with HQQ, and evaluates perplexity + reasoning accuracy
+//! through the PJRT runtime.
+
+use nsds::baselines::Method;
+use nsds::coordinator::Pipeline;
+use nsds::eval::EvalOptions;
+use nsds::quant::Backend;
+use nsds::sensitivity::Ablation;
+
+fn main() -> anyhow::Result<()> {
+    let pipeline = Pipeline::new()?; // loads artifacts/manifest.json
+    let model = "llama-s";
+
+    // 1. Data-free layer sensitivity scores (no calibration pass!).
+    let scores = pipeline.scores(Method::Nsds(Ablation::Full), model)?;
+    println!("NSDS layer scores: {scores:.3?}");
+
+    // 2. Closed-form bit allocation at an average budget of 3 bits.
+    let bits = pipeline.allocate(Method::Nsds(Ablation::Full), model, 3.0)?;
+    println!("allocation (4-bit = sensitive): {bits:?}");
+
+    // 3. Quantize with the calibration-free HQQ backend.
+    let quantized = pipeline.quantize(model, &bits, Backend::Hqq)?;
+
+    // 4. Evaluate through the AOT-compiled PJRT executable.
+    let fp = pipeline.eval_fp(model, &EvalOptions::default())?;
+    let q = pipeline.eval(model, &quantized, &EvalOptions::default())?;
+    println!("FP32 : avg acc {:6.2}%  avg ppl {:7.3}", fp.avg_acc(),
+             fp.avg_ppl());
+    println!("3-bit: avg acc {:6.2}%  avg ppl {:7.3}", q.avg_acc(),
+             q.avg_ppl());
+    Ok(())
+}

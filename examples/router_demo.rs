@@ -1,0 +1,110 @@
+//! Router/batcher demo: concurrent clients + dynamic batching + a
+//! zero-downtime quantized-weight swap mid-stream.
+//!
+//!   cargo run --release --example router_demo [model] [n_clients] [reqs]
+//!
+//! Four client threads stream scoring requests into the bounded queue;
+//! the main thread runs the PJRT serve loop (PJRT handles are not Send).
+//! Halfway through, a client deploys the NSDS@3-bit variant via a queued
+//! weight-swap — ordered with in-flight requests, no recompilation.
+
+use std::sync::Arc;
+
+use nsds::baselines::Method;
+use nsds::coordinator::server::{serve, Client, ServerQueue};
+use nsds::coordinator::Pipeline;
+use nsds::quant::Backend;
+use nsds::sensitivity::Ablation;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).map(|s| s.as_str()).unwrap_or("llama-s");
+    let n_clients: usize =
+        args.get(2).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let per_client: usize =
+        args.get(3).and_then(|s| s.parse().ok()).unwrap_or(24);
+
+    let p = Pipeline::new()?;
+    let entry = p.entry(model)?.clone();
+    let seq = entry.config.seq;
+    let batch = p.man.eval_batch;
+    let fp = p.weights(model)?;
+    let bits = p.allocate(Method::Nsds(Ablation::Full), model, 3.0)?;
+    let q3 = p.quantize(model, &bits, Backend::Hqq)?;
+    let corpora = nsds::eval::ppl::load_corpora(&p.man)?;
+    let train = Arc::new(corpora.train);
+
+    let queue = ServerQueue::new(batch * 4);
+    let swap_at = n_clients * per_client / 2;
+    let counter = Arc::new(std::sync::atomic::AtomicUsize::new(0));
+
+    // Client threads.
+    let mut handles = Vec::new();
+    for cid in 0..n_clients {
+        let client = Client::new(queue.clone(), seq);
+        let train = train.clone();
+        let counter = counter.clone();
+        let q3 = q3.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<f64> {
+            let mut total_nll = 0.0;
+            let mut total_n = 0usize;
+            for r in 0..per_client {
+                let off = ((cid * 7919 + r * 613) * seq)
+                    % (train.len() - seq);
+                let toks = train[off..off + seq].to_vec();
+                let k = counter
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if k == swap_at {
+                    println!("[client {cid}] deploying NSDS@3-bit \
+                              (request #{k}) — no recompile");
+                    client.swap_weights(q3.clone());
+                }
+                let (nll, n) = client.nll(toks)?;
+                total_nll += nll;
+                total_n += n;
+            }
+            Ok((total_nll / total_n as f64).exp())
+        }));
+    }
+
+    // Stopper: once all clients finish, a stop message ends the loop.
+    {
+        let queue = queue.clone();
+        let done = handles.len();
+        let _ = done;
+        let stop_client = Client::new(queue, seq);
+        let counter = counter.clone();
+        let total = n_clients * per_client;
+        std::thread::spawn(move || {
+            loop {
+                if counter.load(std::sync::atomic::Ordering::Relaxed)
+                    >= total
+                {
+                    // Give the last replies a moment, then stop.
+                    std::thread::sleep(
+                        std::time::Duration::from_millis(300));
+                    stop_client.stop();
+                    break;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        });
+    }
+
+    // Engine thread = main thread.
+    let t0 = std::time::Instant::now();
+    serve(&p.engine, &entry, batch, fp, &queue)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    let (served, batches, padded) = queue.stats();
+    println!("served {served} requests in {batches} batches \
+              ({padded} padded rows) over {dt:.2}s \
+              -> {:.1} req/s, avg batch fill {:.1}%",
+             served as f64 / dt,
+             100.0 * served as f64 / (batches as f64 * batch as f64));
+    for (cid, h) in handles.into_iter().enumerate() {
+        let ppl = h.join().unwrap()?;
+        println!("client {cid}: stream ppl {ppl:.3}");
+    }
+    Ok(())
+}

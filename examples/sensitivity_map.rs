@@ -1,0 +1,91 @@
+//! Sensitivity cartography: rank-correlate every layer-ranking method
+//! against the ground-truth damage (single-layer 2-bit ΔPPL).
+//!
+//!   cargo run --release --example sensitivity_map [model]
+//!
+//! This is the analysis behind the paper's Fig. 1 claim: numerical
+//! metrics alone miss structurally expressive layers. It prints each
+//! method's per-layer scores, the measured ΔPPL oracle, and Spearman
+//! rank correlations method↔oracle.
+
+use nsds::baselines::Method;
+use nsds::coordinator::Pipeline;
+use nsds::quant::Backend;
+use nsds::sensitivity::Ablation;
+
+/// Spearman rank correlation.
+fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    let rank = |xs: &[f64]| -> Vec<f64> {
+        let mut idx: Vec<usize> = (0..xs.len()).collect();
+        idx.sort_by(|&i, &j| xs[i].total_cmp(&xs[j]));
+        let mut r = vec![0.0; xs.len()];
+        for (pos, &i) in idx.iter().enumerate() {
+            r[i] = pos as f64;
+        }
+        r
+    };
+    let ra = rank(a);
+    let rb = rank(b);
+    let n = a.len() as f64;
+    let ma = ra.iter().sum::<f64>() / n;
+    let mb = rb.iter().sum::<f64>() / n;
+    let mut num = 0.0;
+    let mut da = 0.0;
+    let mut db = 0.0;
+    for i in 0..a.len() {
+        num += (ra[i] - ma) * (rb[i] - mb);
+        da += (ra[i] - ma).powi(2);
+        db += (rb[i] - mb).powi(2);
+    }
+    num / (da.sqrt() * db.sqrt()).max(1e-12)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).map(|s| s.as_str()).unwrap_or("llama-s");
+    let p = Pipeline::new()?;
+    let entry = p.entry(model)?;
+    let nl = entry.config.n_layers;
+    let w = p.weights(model)?;
+    let corpora = nsds::eval::ppl::load_corpora(&p.man)?;
+
+    // Ground-truth oracle: ΔPPL when only layer l is quantized to 2-bit.
+    println!("measuring single-layer 2-bit ΔPPL oracle ({nl} layers)...");
+    let fp_ppl = nsds::eval::ppl::perplexity(
+        &p.engine, &p.man, entry, &w, &corpora.wiki_like, 16)?;
+    let mut oracle = Vec::with_capacity(nl);
+    for l in 0..nl {
+        let mut qw = w.clone();
+        for name in nsds::model::QUANT_WEIGHTS {
+            let m = w.layer_matrix(name, l);
+            let g = nsds::quant::fit_group(m.rows(),
+                                           nsds::quant::DEFAULT_GROUP);
+            let q = nsds::quant::quantize_matrix(
+                &m, nsds::quant::QuantSpec::new(2, g), Backend::Hqq, None);
+            qw.set_layer_matrix(name, l, &q.dequantize());
+        }
+        let ppl = nsds::eval::ppl::perplexity(
+            &p.engine, &p.man, entry, &qw, &corpora.wiki_like, 16)?;
+        oracle.push(ppl - fp_ppl);
+    }
+    println!("oracle ΔPPL per layer: {oracle:.3?}\n");
+
+    let methods = [
+        Method::Nsds(Ablation::Full),
+        Method::Nsds(Ablation::NoSe), // NV only
+        Method::Nsds(Ablation::NoNv), // SE only
+        Method::Mse,
+        Method::Ewq,
+        Method::Zd,
+        Method::KurtBoost,
+    ];
+    println!("{:<18} {:>9}  per-layer scores", "method", "spearman");
+    for m in methods {
+        let s = p.scores(m, model)?;
+        let rho = spearman(&s, &oracle);
+        let scores: Vec<String> =
+            s.iter().map(|x| format!("{x:7.3}")).collect();
+        println!("{:<18} {rho:>9.3}  [{}]", m.label(), scores.join(" "));
+    }
+    Ok(())
+}

@@ -1,0 +1,97 @@
+//! Serving scenario: a batched request loop over the weight-swappable
+//! PJRT executor — the deployment shape a quantized LLM service uses.
+//!
+//!   cargo run --release --example serve_quantized [model] [n_requests]
+//!
+//! Compares three deployed variants (FP32, NSDS@3-bit, uniform 2-bit) on
+//! the same compiled forward: per-request latency percentiles, throughput
+//! (tokens/s) and weight memory. Demonstrates that swapping a quantized
+//! model in/out needs NO recompilation (weights are runtime inputs).
+
+use std::time::Instant;
+
+use nsds::baselines::Method;
+use nsds::coordinator::Pipeline;
+use nsds::quant::Backend;
+use nsds::runtime::run_forward;
+use nsds::sensitivity::Ablation;
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    let idx = ((sorted.len() as f64 - 1.0) * p) as usize;
+    sorted[idx]
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let model = args.get(1).map(|s| s.as_str()).unwrap_or("llama-s");
+    let n_requests: usize =
+        args.get(2).and_then(|s| s.parse().ok()).unwrap_or(40);
+
+    let p = Pipeline::new()?;
+    let entry = p.entry(model)?;
+    let b = p.man.eval_batch;
+    let s = entry.config.seq;
+    let corpora = nsds::eval::ppl::load_corpora(&p.man)?;
+
+    let fp = p.weights(model)?;
+    let bits_nsds = p.allocate(Method::Nsds(Ablation::Full), model, 3.0)?;
+    let q3 = p.quantize(model, &bits_nsds, Backend::Hqq)?;
+    let q2 = p.quantize(model, &vec![2u8; entry.config.n_layers],
+                        Backend::Hqq)?;
+
+    // Weight memory if served packed (codes + group metadata).
+    let mem = |bits: &[u8]| -> usize {
+        let mut total = 0usize;
+        for (l, &bl) in bits.iter().enumerate() {
+            for name in nsds::model::QUANT_WEIGHTS {
+                let m = fp.layer_matrix(name, l);
+                let g = nsds::quant::fit_group(
+                    m.rows(), nsds::quant::DEFAULT_GROUP);
+                total += match bl {
+                    2 | 4 => nsds::quant::pack::packed_bytes(
+                        m.rows(), m.cols(), bl, g),
+                    _ => m.len() * 4,
+                };
+            }
+        }
+        total
+    };
+    let fp_mem: usize = (0..entry.config.n_layers)
+        .map(|l| {
+            nsds::model::QUANT_WEIGHTS
+                .iter()
+                .map(|n| fp.layer_matrix(n, l).len() * 4)
+                .sum::<usize>()
+        })
+        .sum();
+
+    println!("serving {model} ({} params), batch={b}, seq={s}, \
+              {n_requests} requests/variant", entry.params);
+    // Warm-up: compile the executable once outside every timing loop.
+    run_forward(&p.engine, entry, &corpora.train[..b * s], b, &fp)?;
+    for (label, w, bytes) in [
+        ("FP32", &fp, fp_mem),
+        ("NSDS@3bit", &q3, mem(&bits_nsds)),
+        ("uniform-2bit", &q2, mem(&vec![2u8; entry.config.n_layers])),
+    ] {
+        let mut lat = Vec::with_capacity(n_requests);
+        let t_total = Instant::now();
+        for r in 0..n_requests {
+            let off = (r * b * s) % (corpora.train.len() - b * s);
+            let chunk = &corpora.train[off..off + b * s];
+            let t0 = Instant::now();
+            let logits = run_forward(&p.engine, entry, chunk, b, w)?;
+            std::hint::black_box(&logits);
+            lat.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let total = t_total.elapsed().as_secs_f64();
+        lat.sort_by(|a, b| a.total_cmp(b));
+        let toks = (n_requests * b * s) as f64;
+        println!(
+            "  {label:12} p50 {:7.2}ms  p95 {:7.2}ms  {:8.0} tok/s  \
+             block-weights {:6.1} KiB",
+            percentile(&lat, 0.5), percentile(&lat, 0.95), toks / total,
+            bytes as f64 / 1024.0);
+    }
+    Ok(())
+}

@@ -1,0 +1,179 @@
+"""AOT driver: python runs ONCE here (`make artifacts`), never at runtime.
+
+Produces, under artifacts/:
+  corpus.tz                       train / wiki_like / c4_like token streams
+  tasks.tz                        six reasoning-task tensors
+  weights_<model>.tz              trained weights (the FP16 reference)
+  init_<model>.tz                 untrained weights (LieQ baseline input)
+  fwd_<model>.hlo.txt             tokens+weights -> logits  (Pallas kernels)
+  probe_<model>.hlo.txt           + per-layer activations   (calibration)
+  grad_<model>.hlo.txt            loss + grads              (LLM-MQ)
+  dequant_mm4.hlo.txt / dequant_mm2.hlo.txt / quant_rtn.hlo.txt
+                                  standalone L1 kernel executables (serving
+                                  demo + kernel benches)
+  manifest.json                   configs, shapes, file index, train logs
+
+Interchange is HLO TEXT (not serialized protos): xla_extension 0.5.1
+rejects jax>=0.5's 64-bit instruction ids; the text parser reassigns ids.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import model as M
+from . import train as T
+from . import tio
+from .kernels import ref
+from .kernels.dequant import dequant_matmul
+from .kernels.quant import rtn_quantize
+
+SEED = 20260710
+EVAL_BATCH = 8          # fixed B of every model executable
+TRAIN_TOKENS = 160_000
+EVAL_TOKENS = 16_384
+
+# Standalone kernel demo shapes (serving path). K=256 with group 64.
+KM, KK, KN, KGROUP = 64, 256, 256, 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def ws_args(cfg: M.ModelConfig):
+    """Stable weight argument order shared with the rust runtime."""
+    shapes = cfg.weight_shapes
+    return [jax.ShapeDtypeStruct(shapes[n], jnp.float32)
+            for n in M.WEIGHT_NAMES]
+
+
+def lower_model(cfg: M.ModelConfig, variant: str) -> str:
+    toks = jax.ShapeDtypeStruct((EVAL_BATCH, cfg.seq), jnp.int32)
+
+    def as_dict(args):
+        return dict(zip(M.WEIGHT_NAMES, args))
+
+    if variant == "fwd":
+        fn = lambda t, *w: M.forward(cfg, t, as_dict(w), use_kernel=True)
+    elif variant == "probe":
+        fn = lambda t, *w: M.forward_probe(cfg, t, as_dict(w))
+    elif variant == "grad":
+        fn = lambda t, *w: M.loss_and_grads(cfg, t, as_dict(w))
+    else:
+        raise ValueError(variant)
+    lowered = jax.jit(fn).lower(toks, *ws_args(cfg))
+    return to_hlo_text(lowered)
+
+
+def lower_kernels(out_dir: str, manifest: dict) -> None:
+    x = jax.ShapeDtypeStruct((KM, KK), jnp.float32)
+    w = jax.ShapeDtypeStruct((KK, KN), jnp.float32)
+    sz = jax.ShapeDtypeStruct((KK // KGROUP, KN), jnp.float32)
+    for bits in (4, 2):
+        per = 8 // bits
+        p = jax.ShapeDtypeStruct((KK // per, KN), jnp.uint8)
+        fn = lambda xx, pp, ss, zz, b=bits: (dequant_matmul(
+            xx, pp, ss, zz, bits=b, group=KGROUP),)
+        txt = to_hlo_text(jax.jit(fn).lower(x, p, sz, sz))
+        fname = f"dequant_mm{bits}.hlo.txt"
+        open(os.path.join(out_dir, fname), "w").write(txt)
+        manifest["kernels"][f"dequant_mm{bits}"] = {
+            "file": fname, "m": KM, "k": KK, "n": KN, "group": KGROUP,
+            "bits": bits}
+    fnq = lambda ww: rtn_quantize(ww, bits=4, group=KGROUP)
+    txt = to_hlo_text(jax.jit(fnq).lower(w))
+    open(os.path.join(out_dir, "quant_rtn.hlo.txt"), "w").write(txt)
+    manifest["kernels"]["quant_rtn"] = {
+        "file": "quant_rtn.hlo.txt", "k": KK, "n": KN, "group": KGROUP,
+        "bits": 4}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="llama-s,qwen-s,llama-m,qwen-m")
+    ap.add_argument("--steps", type=int, default=700)
+    args = ap.parse_args()
+    out = args.out
+    os.makedirs(out, exist_ok=True)
+    manifest: dict = {"seed": SEED, "eval_batch": EVAL_BATCH,
+                      "models": {}, "kernels": {}, "weight_order":
+                      M.WEIGHT_NAMES, "quant_weights": M.QUANT_WEIGHTS}
+
+    # ---- data ------------------------------------------------------------
+    print("== corpus ==")
+    train = D.gen_corpus(SEED, TRAIN_TOKENS, "wiki")
+    wiki = D.gen_corpus(SEED + 1, EVAL_TOKENS, "wiki")
+    c4 = D.gen_corpus(SEED + 2, EVAL_TOKENS, "c4")
+    tio.write_tz(os.path.join(out, "corpus.tz"),
+                 {"train": train, "wiki_like": wiki, "c4_like": c4})
+    manifest["corpus"] = {"file": "corpus.tz",
+                          "train_tokens": int(train.shape[0]),
+                          "eval_tokens": int(wiki.shape[0])}
+
+    print("== tasks ==")
+    seq = 64
+    tasks = D.gen_tasks(SEED, seq)
+    tz = {}
+    tmeta = []
+    for t in tasks:
+        tz[f"{t.name}.tokens"] = t.tokens
+        tz[f"{t.name}.prompt_len"] = t.prompt_len
+        tz[f"{t.name}.total_len"] = t.total_len
+        tz[f"{t.name}.gold"] = t.gold
+        tmeta.append({"name": t.name, "k": t.k,
+                      "n": int(t.gold.shape[0])})
+    tio.write_tz(os.path.join(out, "tasks.tz"), tz)
+    manifest["tasks"] = {"file": "tasks.tz", "list": tmeta, "seq": seq}
+
+    # ---- models ----------------------------------------------------------
+    for name in args.models.split(","):
+        cfg = M.MODEL_ZOO[name]
+        print(f"== model {name} ({cfg.param_count():,} params) ==")
+        ws, init_ws, log = T.train_model(cfg, train, steps=args.steps,
+                                         seed=SEED)
+        tio.write_tz(os.path.join(out, f"weights_{name}.tz"),
+                     {k: np.asarray(v) for k, v in ws.items()})
+        tio.write_tz(os.path.join(out, f"init_{name}.tz"),
+                     {k: np.asarray(v) for k, v in init_ws.items()})
+        files = {}
+        for variant in ("fwd", "probe", "grad"):
+            print(f"   lowering {variant} ...")
+            txt = lower_model(cfg, variant)
+            fname = f"{variant}_{name}.hlo.txt"
+            open(os.path.join(out, fname), "w").write(txt)
+            files[variant] = fname
+        manifest["models"][name] = {
+            "config": {k: getattr(cfg, k) for k in
+                       ("vocab", "d_model", "n_heads", "n_kv", "d_head",
+                        "d_ffn", "n_layers", "seq")},
+            "params": cfg.param_count(),
+            "weights": f"weights_{name}.tz",
+            "init_weights": f"init_{name}.tz",
+            "hlo": files,
+            "train_log": log,
+        }
+
+    # ---- standalone kernels ----------------------------------------------
+    print("== kernels ==")
+    lower_kernels(out, manifest)
+
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

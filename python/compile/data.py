@@ -1,0 +1,239 @@
+"""Synthetic corpus + reasoning-task generator (the data substrate).
+
+Substitutes the paper's WikiText-2 / C4 / Pile / six reasoning benchmarks
+(none of which are available offline) with a deterministic "nano-language":
+a fixed world of entities with attributes, rendered through sentence
+templates. A byte-level LM trained on the corpus acquires real skill
+(fact recall, arithmetic, pattern copying), so quantization-induced
+degradation is measurable and allocation methods can be discriminated —
+exactly the role the paper's benchmarks play. See DESIGN.md "Substitutions".
+
+Everything is keyed by a single seed so `make artifacts` is reproducible.
+
+Tokenization: raw bytes (vocab 256).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+NAMES = ["alice", "bob", "carol", "david", "erin", "frank", "grace", "henry",
+         "iris", "jack", "karen", "leo", "mona", "nina", "oscar", "paula"]
+ANIMALS = ["cat", "dog", "fox", "owl", "bat", "pig", "hen", "rat"]
+COLORS = ["red", "blue", "green", "black", "white", "brown", "gray", "pink"]
+DRINKS = ["tea", "milk", "juice", "cocoa", "water", "soda", "cider", "mead"]
+PLACES = ["rome", "oslo", "cairo", "lima", "kyoto", "quito", "delhi", "bonn"]
+LETTERS = list("abcdefghijklmnopqrstuvwxyz")
+
+
+@dataclasses.dataclass
+class World:
+    """Fixed entity->attribute facts (the 'knowledge' the LM learns)."""
+    animal: Dict[str, str]
+    color: Dict[str, str]
+    drink: Dict[str, str]
+    place: Dict[str, str]
+
+
+def make_world(seed: int) -> World:
+    rng = random.Random(seed)
+    return World(
+        animal={n: rng.choice(ANIMALS) for n in NAMES},
+        color={n: rng.choice(COLORS) for n in NAMES},
+        drink={n: rng.choice(DRINKS) for n in NAMES},
+        place={n: rng.choice(PLACES) for n in NAMES},
+    )
+
+
+# --------------------------------------------------------------------------
+# Sentence renderers. Two surface-form families: the "wiki" family (used for
+# training + the wiki_like eval split) and the "c4" family (same facts,
+# shifted templates — the domain-shift eval split).
+# --------------------------------------------------------------------------
+
+def _fact_sentences_wiki(w: World, rng: random.Random) -> List[str]:
+    n = rng.choice(NAMES)
+    return [
+        f"{n} has a {w.color[n]} {w.animal[n]} . ",
+        f"{n} likes {w.drink[n]} . ",
+        f"{n} lives in {w.place[n]} . ",
+        f"the {w.animal[n]} of {n} is {w.color[n]} . ",
+    ]
+
+
+def _fact_sentences_c4(w: World, rng: random.Random) -> List[str]:
+    n = rng.choice(NAMES)
+    return [
+        f"in {w.place[n]} lives {n} . ",
+        f"{n} drinks {w.drink[n]} every day . ",
+        f"a {w.color[n]} {w.animal[n]} belongs to {n} . ",
+    ]
+
+
+def _arith_sentence(rng: random.Random) -> str:
+    i = rng.randint(0, 9)
+    j = rng.randint(0, 9 - i)
+    return f"{i} + {j} = {i + j} . "
+
+
+def _qa_sentence(w: World, rng: random.Random) -> str:
+    n = rng.choice(NAMES)
+    if rng.random() < 0.5:
+        d = w.drink[n]
+        ans = "yes"
+    else:
+        d = rng.choice([x for x in DRINKS if x != w.drink[n]])
+        ans = "no"
+    return f"question : does {n} like {d} ? answer : {ans} . "
+
+
+def _pattern_sentence(rng: random.Random) -> str:
+    a, b = rng.sample(LETTERS, 2)
+    unit = f"{a} {b} "
+    return unit * rng.randint(3, 5) + ". "
+
+
+def gen_corpus(seed: int, n_tokens: int, family: str = "wiki") -> np.ndarray:
+    """Byte-token corpus of at least n_tokens tokens (i32)."""
+    w = make_world(seed)
+    rng = random.Random(seed * 7919 + hash(family) % 1000)
+    parts: List[str] = []
+    total = 0
+    while total < n_tokens:
+        r = rng.random()
+        if r < 0.55:
+            s = rng.choice(
+                _fact_sentences_wiki(w, rng) if family == "wiki"
+                else _fact_sentences_c4(w, rng))
+        elif r < 0.70:
+            s = _arith_sentence(rng)
+        elif r < 0.85:
+            s = _qa_sentence(w, rng)
+        else:
+            s = _pattern_sentence(rng)
+        parts.append(s)
+        total += len(s)
+    text = "".join(parts)[:n_tokens]
+    return np.frombuffer(text.encode("ascii"), dtype=np.uint8).astype(np.int32)
+
+
+# --------------------------------------------------------------------------
+# Reasoning tasks (analogs of ARC-C / HellaSwag / PIQA / BoolQ / WinoGrande /
+# TruthfulQA). Each item: prompt + k choices, gold index. Scored by the rust
+# eval harness with length-normalized continuation log-likelihood — the same
+# mechanism lm-eval-harness uses for the paper's benchmarks.
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Task:
+    name: str
+    k: int
+    # tokens [n*k, seq] i32 (prompt+choice, zero-padded)
+    tokens: np.ndarray
+    prompt_len: np.ndarray   # [n*k] i32
+    total_len: np.ndarray    # [n*k] i32
+    gold: np.ndarray         # [n] i32
+
+
+def _mk_items(items: List[Tuple[str, List[str], int]], seq: int,
+              name: str) -> Task:
+    k = len(items[0][1])
+    toks = np.zeros((len(items) * k, seq), np.int32)
+    p_len = np.zeros(len(items) * k, np.int32)
+    t_len = np.zeros(len(items) * k, np.int32)
+    gold = np.zeros(len(items), np.int32)
+    for i, (prompt, choices, g) in enumerate(items):
+        assert len(choices) == k
+        gold[i] = g
+        for j, ch in enumerate(choices):
+            row = i * k + j
+            s = (prompt + ch).encode("ascii")[:seq]
+            toks[row, :len(s)] = np.frombuffer(s, np.uint8)
+            p_len[row] = min(len(prompt), seq)
+            t_len[row] = len(s)
+    return Task(name, k, toks, p_len, t_len, gold)
+
+
+def _choices(gold: str, pool: List[str], rng: random.Random, k: int):
+    wrong = rng.sample([p for p in pool if p != gold], k - 1)
+    opts = wrong + [gold]
+    rng.shuffle(opts)
+    return opts, opts.index(gold)
+
+
+def gen_tasks(seed: int, seq: int, n_items: int = 32) -> List[Task]:
+    w = make_world(seed)
+    rng = random.Random(seed * 31337)
+    tasks = []
+
+    # 1. copy (ARC-C analog): continue the repeating pattern.
+    items = []
+    for _ in range(n_items):
+        a, b = rng.sample(LETTERS, 2)
+        prompt = f"{a} {b} " * 3 + a
+        opts, g = _choices(f" {b}", [f" {c}" for c in LETTERS[:8]] + [f" {b}"],
+                           rng, 4)
+        items.append((prompt, opts, g))
+    tasks.append(_mk_items(items, seq, "copy"))
+
+    # 2. continuation (HellaSwag analog): which animal does the entity own?
+    items = []
+    for _ in range(n_items):
+        n = rng.choice(NAMES)
+        prompt = f"{n} has a {w.color[n]}"
+        opts, g = _choices(f" {w.animal[n]} .", [f" {a} ." for a in ANIMALS],
+                           rng, 4)
+        items.append((prompt, opts, g))
+    tasks.append(_mk_items(items, seq, "continuation"))
+
+    # 3. arithmetic (PIQA analog).
+    items = []
+    for _ in range(n_items):
+        i = rng.randint(0, 9)
+        j = rng.randint(0, 9 - i)
+        prompt = f"{i} + {j} ="
+        opts, g = _choices(f" {i + j}", [f" {d}" for d in range(10)], rng, 4)
+        items.append((prompt, opts, g))
+    tasks.append(_mk_items(items, seq, "arithmetic"))
+
+    # 4. boolq analog: yes/no drink questions.
+    items = []
+    for _ in range(n_items):
+        n = rng.choice(NAMES)
+        if rng.random() < 0.5:
+            d, gold_txt = w.drink[n], " yes"
+        else:
+            d = rng.choice([x for x in DRINKS if x != w.drink[n]])
+            gold_txt = " no"
+        prompt = f"question : does {n} like {d} ? answer :"
+        opts = [" yes", " no"]
+        items.append((prompt, opts, opts.index(gold_txt)))
+    tasks.append(_mk_items(items, seq, "boolq"))
+
+    # 5. agreement (WinoGrande analog): color of the entity's animal.
+    items = []
+    for _ in range(n_items):
+        n = rng.choice(NAMES)
+        prompt = f"the {w.animal[n]} of {n} is"
+        opts, g = _choices(f" {w.color[n]} .", [f" {c} ." for c in COLORS],
+                           rng, 4)
+        items.append((prompt, opts, g))
+    tasks.append(_mk_items(items, seq, "agreement"))
+
+    # 6. truth (TruthfulQA analog): place facts vs plausible distractors
+    #    (places other entities actually live in).
+    items = []
+    for _ in range(n_items):
+        n = rng.choice(NAMES)
+        prompt = f"{n} lives in"
+        pool = [f" {w.place[m]} ." for m in NAMES]
+        gold_txt = f" {w.place[n]} ."
+        opts, g = _choices(gold_txt, list(dict.fromkeys(pool)), rng, 4)
+        items.append((prompt, opts, g))
+    tasks.append(_mk_items(items, seq, "truth"))
+
+    return tasks

@@ -1,0 +1,116 @@
+"""L1 Pallas fused causal attention kernel (flash-attention-shaped).
+
+One grid step owns one (batch, head) pair and a query-row block; keys and
+values stream through VMEM in blocks along the sequence axis while an
+online-softmax accumulator (running max m, running normalizer l, running
+weighted sum acc) keeps the full attention matrix out of memory — the
+standard flash-attention recurrence re-expressed with BlockSpec instead
+of CUDA threadblocks/shared memory.
+
+Not wired into the AOT model executable (the zoo's S=64 attention fits
+VMEM whole and jnp einsum lowers to the same contraction); this kernel is
+the scalable-S path, verified against `ref_attention` by hypothesis
+sweeps in python/tests/test_attention.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_block
+
+NEG_INF = -1e30
+
+
+def ref_attention(q: jnp.ndarray, k: jnp.ndarray,
+                  v: jnp.ndarray) -> jnp.ndarray:
+    """Oracle: causal softmax(QKᵀ/√d)V; q,k,v [B,H,S,dh]."""
+    s = q.shape[2]
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (q.shape[-1] ** 0.5)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask[None, None], att, NEG_INF)
+    att = jax.nn.softmax(att, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", att, v)
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
+                 n_k: int, scale: float):
+    """Grid: (B*H, S/bq, S/bk); k-axis innermost (revisited output block
+    holds the online-softmax state packed alongside the accumulator)."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    # o_ref layout: [bq, dh + 2] — columns [0:dh] accumulate the weighted
+    # sum, column dh holds the running max m, column dh+1 the running
+    # normalizer l. Packing the state into the revisited output block
+    # avoids scratch-shape APIs that differ across pallas versions.
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        o_ref[:, -2] = jnp.full((bq,), NEG_INF, jnp.float32)
+
+    q = q_ref[0]                       # [bq, dh]
+    k = k_ref[0]                       # [bk, dh]
+    v = v_ref[0]                       # [bk, dh]
+    scores = (q @ k.T) * scale         # [bq, bk]
+    # Causal mask between absolute positions.
+    q_pos = qi * bq + jax.lax.iota(jnp.int32, bq)[:, None]
+    k_pos = ki * bk + jax.lax.iota(jnp.int32, bk)[None, :]
+    scores = jnp.where(q_pos >= k_pos, scores, NEG_INF)
+
+    m_prev = o_ref[:, -2]
+    l_prev = o_ref[:, -1]
+    acc_prev = o_ref[:, :-2]
+
+    m_cur = jnp.maximum(m_prev, scores.max(axis=1))
+    # Guard fully-masked rows (m stays NEG_INF): exp(NEG_INF - NEG_INF)
+    # would be exp(0)=1; force alpha/p to 0 there instead.
+    valid = m_cur > NEG_INF / 2
+    alpha = jnp.where(valid, jnp.exp(m_prev - m_cur), 0.0)
+    p = jnp.where(valid[:, None], jnp.exp(scores - m_cur[:, None]), 0.0)
+    l_cur = l_prev * alpha + p.sum(axis=1)
+    acc = acc_prev * alpha[:, None] + p @ v
+
+    o_ref[:, :-2] = acc
+    o_ref[:, -2] = m_cur
+    o_ref[:, -1] = l_cur
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l_fin = o_ref[:, -1]
+        denom = jnp.where(l_fin > 0.0, l_fin, 1.0)
+        o_ref[:, :-2] = o_ref[:, :-2] / denom[:, None]
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    bq: int = 64, bk: int = 64) -> jnp.ndarray:
+    """Causal attention; q,k,v [B,H,S,dh] -> [B,H,S,dh]."""
+    b, h, s, dh = q.shape
+    assert k.shape == v.shape == (b, h, s, dh)
+    bq = _pick_block(s, bq)
+    bk = _pick_block(s, bk)
+    n_k = s // bk
+    scale = 1.0 / (dh ** 0.5)
+    qf = q.reshape(b * h, s, dh)
+    kf = k.reshape(b * h, s, dh)
+    vf = v.reshape(b * h, s, dh)
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, bq=bq, bk=bk, n_k=n_k,
+                          scale=scale),
+        grid=(b * h, s // bq, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda g, qi, ki: (g, qi, 0)),
+            pl.BlockSpec((1, bk, dh), lambda g, qi, ki: (g, ki, 0)),
+            pl.BlockSpec((1, bk, dh), lambda g, qi, ki: (g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, dh + 2), lambda g, qi, ki: (
+            g * (s // bq) + qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h * s, dh + 2), jnp.float32),
+        interpret=True,
+    )(qf, kf, vf)
+    # Strip the packed (m, l) state columns.
+    return out[:, :dh].reshape(b, h, s, dh)

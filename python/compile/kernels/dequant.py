@@ -1,0 +1,99 @@
+"""L1 Pallas fused dequant-matmul kernels (the quantized-inference hot path).
+
+Paper hardware adaptation (DESIGN.md §Hardware-Adaptation): the CUDA-style
+"keep 2/4-bit codes in HBM, dequantize per threadblock into shared memory,
+feed tensor cores" becomes "keep packed codes in HBM, stage one packed block
+per grid step through VMEM via BlockSpec, unpack + dequantize in-register,
+feed the MXU with an f32 (bf16-ready) tile".
+
+Packing convention (must match ref.pack_codes and rust quant::pack):
+  * codes are b-bit (b ∈ {2,4}), packed along the K (reduction) axis,
+    little-endian within each byte: packed[r, n] holds rows r*per..r*per+per-1
+    where per = 8 // b.
+  * scale/zero are per (group, column), groups of size `group` along K.
+  * dequant:  w[k, n] = (code[k, n] - zero[k//g, n]) * scale[k//g, n]
+
+Block constraint: bk (the K block) must be a multiple of both `group` and
+`per` so every block is self-contained (own scales, whole bytes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_block
+
+
+def _dequant_mm_kernel(x_ref, p_ref, s_ref, z_ref, o_ref, *, bits: int,
+                       group: int):
+    """One (i, j, k) grid step of x @ dequant(packed)."""
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    per = 8 // bits
+    mask = jnp.uint8(2**bits - 1)
+    packed = p_ref[...]                      # [bk//per, bn]
+    rows = [(packed >> (bits * i)) & mask for i in range(per)]
+    # [bk//per, per, bn] -> [bk, bn]
+    codes = jnp.stack(rows, axis=1).reshape(packed.shape[0] * per,
+                                            packed.shape[1])
+    s = jnp.repeat(s_ref[...], group, axis=0)   # [bk, bn]
+    z = jnp.repeat(z_ref[...], group, axis=0)
+    w = (codes.astype(jnp.float32) - z) * s
+    o_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def dequant_matmul(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
+                   zero: jnp.ndarray, *, bits: int, group: int,
+                   bm: int = 128, bn: int = 128,
+                   bk: int = 256) -> jnp.ndarray:
+    """x [M,K] f32 @ dequant(packed [K*bits/8, N] u8) -> [M,N] f32."""
+    m, k = x.shape
+    per = 8 // bits
+    kp, n = packed.shape
+    assert kp * per == k, (x.shape, packed.shape, bits)
+    assert k % group == 0 and scale.shape == (k // group, n)
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    # bk: multiple of lcm(group, per); choose the largest divisor of k that
+    # is a multiple of group (group is itself a multiple of per for our
+    # configs, enforced below) and <= want.
+    assert group % per == 0, (group, per)
+    n_groups = k // group
+    bg = _pick_block(n_groups, max(1, bk // group))
+    bk = bg * group
+    return pl.pallas_call(
+        functools.partial(_dequant_mm_kernel, bits=bits, group=group),
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // per, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // group, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // group, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, packed, scale, zero)
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, bits: int, group: int) -> int:
+    """Estimated VMEM footprint of one grid step (f32 = 4B, u8 codes).
+
+    Used by EXPERIMENTS.md §Perf to pick block shapes that fit a ~16 MiB
+    TPU VMEM budget with double buffering (×2 on the streamed inputs).
+    """
+    per = 8 // bits
+    x_b = bm * bk * 4
+    p_b = (bk // per) * bn
+    sz_b = 2 * (bk // group) * bn * 4
+    o_b = bm * bn * 4
+    unpacked = bk * bn * 4  # in-register dequantized tile
+    return 2 * (x_b + p_b + sz_b) + o_b + unpacked

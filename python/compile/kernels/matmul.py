@@ -1,0 +1,75 @@
+"""L1 Pallas tiled matmul kernel.
+
+This is the dense-matmul hot spot used inside the L2 transformer forward
+(`model.py`). It is written TPU-style: the grid walks (M/bm, N/bn, K/bk)
+tiles, each grid step stages an x-tile and a w-tile through VMEM via
+BlockSpec and accumulates into the revisited output tile — the HBM↔VMEM
+schedule a CUDA kernel would express with threadblocks + shared memory.
+
+interpret=True is mandatory on this image (CPU PJRT cannot execute Mosaic
+custom-calls); real-TPU perf is estimated from the block shapes in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (i, j, k) grid step: o += x_tile @ w_tile (o zeroed at k == 0).
+
+    The output BlockSpec maps every k to the same (i, j) tile, so the tile
+    stays resident in VMEM across the whole K loop (grid iterates k fastest)
+    and acts as the accumulator.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_block(dim: int, want: int) -> int:
+    """Largest divisor of `dim` that is <= want (keeps the grid exact)."""
+    b = max(1, min(dim, want))
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def pallas_matmul(x: jnp.ndarray, w: jnp.ndarray, *, bm: int = 128,
+                  bn: int = 128, bk: int = 128) -> jnp.ndarray:
+    """[M,K] f32 @ [K,N] f32 -> [M,N] f32 via the tiled Pallas kernel."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm = _pick_block(m, bm)
+    bn = _pick_block(n, bn)
+    bk = _pick_block(k, bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def matmul_3d(x: jnp.ndarray, w: jnp.ndarray, **kw) -> jnp.ndarray:
+    """Batched wrapper: [B,S,K] @ [K,N] -> [B,S,N] (flattens the batch)."""
+    b, s, k = x.shape
+    out = pallas_matmul(x.reshape(b * s, k), w, **kw)
+    return out.reshape(b, s, -1)

@@ -1,0 +1,63 @@
+"""L1 Pallas group-wise RTN quantization kernel.
+
+Quantizes a weight matrix W [K, N] to b-bit codes with per-(group, column)
+affine params, entirely on device: each grid step owns a [bk, bn] block
+(bk a multiple of the group size), computes group min/max, derives
+scale/zero, and emits rounded codes. This is the "quantize" half of the
+serving path (the coordinator calls it when admitting a new model variant);
+the fused dequant side lives in `dequant.py`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _pick_block
+
+
+def _rtn_kernel(w_ref, c_ref, s_ref, z_ref, *, bits: int, group: int):
+    w = w_ref[...]                           # [bk, bn]
+    bk, bn = w.shape
+    wg = w.reshape(bk // group, group, bn)
+    lo = wg.min(axis=1)                      # [bk//g, bn]
+    hi = wg.max(axis=1)
+    qmax = float(2**bits - 1)
+    scale = (hi - lo) / qmax
+    scale = jnp.where(scale <= 1e-12, 1.0, scale)
+    zero = -lo / scale
+    s_ref[...] = scale
+    z_ref[...] = zero
+    s_full = jnp.repeat(scale, group, axis=0)
+    z_full = jnp.repeat(zero, group, axis=0)
+    c_ref[...] = jnp.clip(jnp.round(w / s_full + z_full), 0.0,
+                          qmax).astype(jnp.uint8)
+
+
+def rtn_quantize(w: jnp.ndarray, *, bits: int, group: int, bn: int = 256,
+                 bk: int = 512):
+    """W [K,N] f32 -> (codes u8 [K,N], scale [K//g,N], zero [K//g,N])."""
+    k, n = w.shape
+    assert k % group == 0, (k, group)
+    bn = _pick_block(n, bn)
+    bg = _pick_block(k // group, max(1, bk // group))
+    bk = bg * group
+    return pl.pallas_call(
+        functools.partial(_rtn_kernel, bits=bits, group=group),
+        grid=(k // bk, n // bn),
+        in_specs=[pl.BlockSpec((bk, bn), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((bk, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bk // group, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bk // group, bn), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, n), jnp.uint8),
+            jax.ShapeDtypeStruct((k // group, n), jnp.float32),
+            jax.ShapeDtypeStruct((k // group, n), jnp.float32),
+        ],
+        interpret=True,
+    )(w)

@@ -1,0 +1,103 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1 correctness signal).
+
+Each function here is the mathematical specification that the corresponding
+Pallas kernel in `matmul.py` / `dequant.py` / `quant.py` must match to within
+float tolerance. pytest (python/tests/) asserts `assert_allclose(kernel, ref)`
+over hypothesis-generated shape/dtype/group-size sweeps.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain f32 matmul: [M,K] @ [K,N] -> [M,N]."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Group-wise affine quantization (RTN), groups along the K (input) axis.
+# Weight W [K, N]; group size g divides K. Per (group, column): scale, zero.
+# code = clip(round(W/s + z), 0, 2^b - 1);  deq = (code - z) * s.
+# This mirrors HQQ's parameterization (zero-point formulation) so the rust
+# backends and the kernels agree on one convention.
+# ---------------------------------------------------------------------------
+
+def rtn_params(w: jnp.ndarray, bits: int, group: int):
+    """Min/max affine quantization params. Returns (scale, zero) [K//g, N]."""
+    k, n = w.shape
+    assert k % group == 0, (k, group)
+    wg = w.reshape(k // group, group, n)
+    lo = wg.min(axis=1)
+    hi = wg.max(axis=1)
+    qmax = float(2**bits - 1)
+    scale = (hi - lo) / qmax
+    # Guard degenerate (constant) groups.
+    scale = jnp.where(scale <= 1e-12, 1.0, scale)
+    zero = -lo / scale
+    return scale, zero
+
+
+def rtn_quantize(w: jnp.ndarray, bits: int, group: int):
+    """Returns (codes u8 [K,N], scale [K//g,N], zero [K//g,N])."""
+    k, n = w.shape
+    scale, zero = rtn_params(w, bits, group)
+    s = jnp.repeat(scale, group, axis=0)
+    z = jnp.repeat(zero, group, axis=0)
+    qmax = float(2**bits - 1)
+    codes = jnp.clip(jnp.round(w / s + z), 0.0, qmax).astype(jnp.uint8)
+    return codes, scale, zero
+
+
+def dequantize(codes: jnp.ndarray, scale: jnp.ndarray, zero: jnp.ndarray,
+               group: int) -> jnp.ndarray:
+    """codes u8 [K,N] -> f32 [K,N]."""
+    s = jnp.repeat(scale, group, axis=0)
+    z = jnp.repeat(zero, group, axis=0)
+    return (codes.astype(jnp.float32) - z) * s
+
+
+def pack_codes(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack b-bit codes along K into u8: [K,N] -> [K*bits//8, N].
+
+    Layout: u8 row r holds codes for rows r*(8//bits) .. r*(8//bits)+per-1,
+    lowest bits = first row (little-endian within the byte).
+    """
+    assert bits in (2, 4)
+    per = 8 // bits
+    k, n = codes.shape
+    assert k % per == 0
+    c = codes.reshape(k // per, per, n).astype(jnp.uint8)
+    out = jnp.zeros((k // per, n), dtype=jnp.uint8)
+    for i in range(per):
+        out = out | (c[:, i, :] << (bits * i))
+    return out
+
+
+def unpack_codes(packed: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Inverse of pack_codes: [K*bits//8, N] -> u8 [K,N]."""
+    assert bits in (2, 4)
+    per = 8 // bits
+    mask = jnp.uint8(2**bits - 1)
+    rows = [(packed >> (bits * i)) & mask for i in range(per)]
+    return jnp.stack(rows, axis=1).reshape(packed.shape[0] * per,
+                                           packed.shape[1])
+
+
+def dequant_matmul(x: jnp.ndarray, packed: jnp.ndarray, scale: jnp.ndarray,
+                   zero: jnp.ndarray, bits: int, group: int) -> jnp.ndarray:
+    """Fused reference: x [M,K] @ dequant(packed codes) [K,N] -> [M,N]."""
+    codes = unpack_codes(packed, bits)
+    w = dequantize(codes, scale, zero, group)
+    return matmul(x, w)
+
+
+def kurtosis(w: jnp.ndarray) -> jnp.ndarray:
+    """Excess kurtosis of the flattened tensor (paper Eq. 5)."""
+    v = w.reshape(-1).astype(jnp.float32)
+    mu = v.mean()
+    c = v - mu
+    m2 = (c**2).mean()
+    m4 = (c**4).mean()
+    return m4 / (m2**2 + 1e-24) - 3.0

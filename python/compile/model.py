@@ -1,0 +1,219 @@
+"""L2: llama-style transformer in JAX (RMSNorm + RoPE + GQA + SwiGLU).
+
+Three lowering variants, all over STACKED per-layer weights scanned with
+`lax.scan` so one compiled executable serves every quantized weight variant
+(weights are runtime inputs fed by the rust coordinator):
+
+  * `forward`        — tokens -> logits; weight matmuls go through the L1
+                       Pallas tiled-matmul kernel (the served hot path).
+  * `forward_probe`  — additionally returns every activation the
+                       calibration-based baselines / GPTQ need (residual
+                       stream per layer, normed projection inputs, attention
+                       context, FFN intermediate). Pure-jnp matmuls.
+  * `loss_and_grads` — next-token cross-entropy + grads w.r.t. all stacked
+                       weights (for the LLM-MQ baseline). Pure-jnp (Pallas
+                       interpret kernels are not reverse-mode differentiable).
+
+Weight set (all f32):
+  embed   [V, D]          unembed [D, V]        lnf [D]
+  wq [L, D, H*dh]  wk [L, D, KV*dh]  wv [L, D, KV*dh]  wo [L, H*dh, D]
+  wgate [L, D, F]  wup [L, D, F]     wdown [L, F, D]
+  ln1 [L, D]       ln2 [L, D]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul_3d
+
+WEIGHT_NAMES = [
+    "embed", "unembed", "lnf",
+    "wq", "wk", "wv", "wo", "wgate", "wup", "wdown", "ln1", "ln2",
+]
+# The 2-D projection weights that get quantized (per layer slices of these).
+QUANT_WEIGHTS = ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_head: int
+    d_ffn: int
+    n_layers: int
+    seq: int
+
+    @property
+    def weight_shapes(self) -> Dict[str, tuple]:
+        c = self
+        hd = c.n_heads * c.d_head
+        kvd = c.n_kv * c.d_head
+        lyr = c.n_layers
+        return {
+            "embed": (c.vocab, c.d_model),
+            "unembed": (c.d_model, c.vocab),
+            "lnf": (c.d_model,),
+            "wq": (lyr, c.d_model, hd),
+            "wk": (lyr, c.d_model, kvd),
+            "wv": (lyr, c.d_model, kvd),
+            "wo": (lyr, hd, c.d_model),
+            "wgate": (lyr, c.d_model, c.d_ffn),
+            "wup": (lyr, c.d_model, c.d_ffn),
+            "wdown": (lyr, c.d_ffn, c.d_model),
+            "ln1": (lyr, c.d_model),
+            "ln2": (lyr, c.d_model),
+        }
+
+    def param_count(self) -> int:
+        import math
+        return sum(math.prod(s) for s in self.weight_shapes.values())
+
+
+# Reference model zoo (synthetic analogs of the paper's four LLMs; see
+# DESIGN.md "Substitutions").
+MODEL_ZOO = {
+    "llama-s": ModelConfig("llama-s", 256, 64, 4, 2, 16, 192, 8, 64),
+    "qwen-s": ModelConfig("qwen-s", 256, 64, 8, 4, 8, 256, 8, 64),
+    "llama-m": ModelConfig("llama-m", 256, 96, 6, 6, 16, 256, 12, 64),
+    "qwen-m": ModelConfig("qwen-m", 256, 96, 8, 4, 12, 288, 12, 64),
+}
+
+
+def init_weights(cfg: ModelConfig, key: jax.Array) -> Dict[str, jnp.ndarray]:
+    """Scaled-gaussian init (the 'untrained' reference the LieQ baseline
+    compares against)."""
+    ws = {}
+    shapes = cfg.weight_shapes
+    keys = jax.random.split(key, len(shapes))
+    for (name, shape), k in zip(sorted(shapes.items()), keys):
+        if name in ("ln1", "ln2", "lnf"):
+            ws[name] = jnp.ones(shape, jnp.float32)
+        elif name == "embed":
+            ws[name] = 0.02 * jax.random.normal(k, shape, jnp.float32)
+        else:
+            fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+            std = (2.0 / (fan_in + shape[-1])) ** 0.5
+            ws[name] = std * jax.random.normal(k, shape, jnp.float32)
+    return ws
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def rope(x: jnp.ndarray, base: float = 10000.0) -> jnp.ndarray:
+    """x [B, S, H, dh] -> rotary-embedded (half-split convention)."""
+    b, s, h, dh = x.shape
+    half = dh // 2
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    inv = base ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * inv                              # [S, half]
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                           axis=-1)
+
+
+def _mm(x: jnp.ndarray, w: jnp.ndarray, use_kernel: bool) -> jnp.ndarray:
+    """[B,S,K] @ [K,N]: Pallas tiled kernel on the served path, jnp else."""
+    if use_kernel:
+        return matmul_3d(x, w)
+    return jnp.einsum("bsk,kn->bsn", x, w)
+
+
+def _layer(cfg: ModelConfig, h: jnp.ndarray, lw: Dict[str, jnp.ndarray],
+           use_kernel: bool):
+    """One transformer block. Returns (new_resid, probes dict)."""
+    b, s, d = h.shape
+    nh, nkv, dh = cfg.n_heads, cfg.n_kv, cfg.d_head
+    x1 = rmsnorm(h, lw["ln1"])
+    q = _mm(x1, lw["wq"], use_kernel).reshape(b, s, nh, dh)
+    k = _mm(x1, lw["wk"], use_kernel).reshape(b, s, nkv, dh)
+    v = _mm(x1, lw["wv"], use_kernel).reshape(b, s, nkv, dh)
+    q = rope(q)
+    k = rope(k)
+    # GQA: broadcast each kv head over its query group.
+    rep = nh // nkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / (dh ** 0.5)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, nh * dh)
+    attn_out = _mm(ctx, lw["wo"], use_kernel)
+    h = h + attn_out
+    x2 = rmsnorm(h, lw["ln2"])
+    gate = _mm(x2, lw["wgate"], use_kernel)
+    up = _mm(x2, lw["wup"], use_kernel)
+    mid = jax.nn.silu(gate) * up
+    down = _mm(mid, lw["wdown"], use_kernel)
+    h = h + down
+    probes = {"x_ln1": x1, "x_ln2": x2, "attn_ctx": ctx, "ffn_mid": mid}
+    return h, probes
+
+
+def _run(cfg: ModelConfig, tokens: jnp.ndarray, ws: Dict[str, jnp.ndarray],
+         use_kernel: bool, collect: bool):
+    h = ws["embed"][tokens]                       # [B, S, D]
+    stacked = {k: ws[k] for k in
+               ("wq", "wk", "wv", "wo", "wgate", "wup", "wdown",
+                "ln1", "ln2")}
+
+    def step(carry, lw):
+        new_h, probes = _layer(cfg, carry, lw, use_kernel)
+        out = {"resid_in": carry, **probes} if collect else None
+        return new_h, out
+
+    h, ys = jax.lax.scan(step, h, stacked)
+    hf = rmsnorm(h, ws["lnf"])
+    logits = _mm(hf, ws["unembed"], use_kernel)
+    return logits, h, ys
+
+
+def forward(cfg: ModelConfig, tokens: jnp.ndarray,
+            ws: Dict[str, jnp.ndarray], use_kernel: bool = True):
+    """tokens i32 [B,S] -> logits f32 [B,S,V] (served path, Pallas matmuls)."""
+    logits, _, _ = _run(cfg, tokens, ws, use_kernel, collect=False)
+    return (logits,)
+
+
+def forward_probe(cfg: ModelConfig, tokens: jnp.ndarray,
+                  ws: Dict[str, jnp.ndarray]):
+    """Returns (logits, resid_in [L,B,S,D], final_resid [B,S,D],
+    x_ln1, x_ln2 [L,B,S,D], attn_ctx [L,B,S,H*dh], ffn_mid [L,B,S,F])."""
+    logits, h, ys = _run(cfg, tokens, ws, use_kernel=False, collect=True)
+    return (logits, ys["resid_in"], h, ys["x_ln1"], ys["x_ln2"],
+            ys["attn_ctx"], ys["ffn_mid"])
+
+
+def nll_loss(cfg: ModelConfig, tokens: jnp.ndarray,
+             ws: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Mean next-token cross-entropy over [B, S-1]."""
+    logits, _, _ = _run(cfg, tokens, ws, use_kernel=False, collect=False)
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean()
+
+
+def loss_and_grads(cfg: ModelConfig, tokens: jnp.ndarray,
+                   ws: Dict[str, jnp.ndarray]):
+    """(loss, grads for the 7 quantizable stacked weights) — LLM-MQ input."""
+    def f(qws, rest):
+        return nll_loss(cfg, tokens, {**rest, **qws})
+
+    qws = {k: ws[k] for k in QUANT_WEIGHTS}
+    rest = {k: v for k, v in ws.items() if k not in QUANT_WEIGHTS}
+    loss, grads = jax.value_and_grad(f)(qws, rest)
+    return (loss,) + tuple(grads[k] for k in QUANT_WEIGHTS)

@@ -1,0 +1,64 @@
+"""`.tz` tensor container: the python<->rust weight/corpus interchange format.
+
+Layout (little-endian):
+  magic  b"NSDT"
+  u32    version (1)
+  u32    tensor count
+  per tensor:
+    u32    name length, then name bytes (utf-8)
+    u8     dtype: 0 = f32, 1 = i32, 2 = u8
+    u32    ndim, then ndim × u64 dims
+    raw    data (C order)
+
+Kept deliberately trivial so the rust reader (`rust/src/util/tz.rs`) is a
+few dozen lines and testable by round-trip.
+"""
+
+from __future__ import annotations
+
+import struct
+from typing import Dict
+
+import numpy as np
+
+MAGIC = b"NSDT"
+_DTYPES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1,
+           np.dtype(np.uint8): 2}
+_INV = {v: k for k, v in _DTYPES.items()}
+
+
+def write_tz(path: str, tensors: Dict[str, np.ndarray]) -> None:
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", 1, len(tensors)))
+        for name, arr in tensors.items():
+            arr = np.ascontiguousarray(arr)
+            if arr.dtype not in _DTYPES:
+                raise TypeError(f"{name}: unsupported dtype {arr.dtype}")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<B", _DTYPES[arr.dtype]))
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def read_tz(path: str) -> Dict[str, np.ndarray]:
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, path
+        ver, count = struct.unpack("<II", f.read(8))
+        assert ver == 1
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            (dt,) = struct.unpack("<B", f.read(1))
+            (ndim,) = struct.unpack("<I", f.read(4))
+            dims = struct.unpack(f"<{ndim}Q", f.read(8 * ndim))
+            dtype = _INV[dt]
+            n = int(np.prod(dims)) if ndim else 1
+            data = np.frombuffer(f.read(n * dtype.itemsize), dtype=dtype)
+            out[name] = data.reshape(dims).copy()
+    return out

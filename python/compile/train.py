@@ -1,0 +1,78 @@
+"""Build-time training of the synthetic model zoo.
+
+Each model in `model.MODEL_ZOO` is trained with Adam on the nano-language
+corpus until next-token loss is far below the uniform baseline (ln 256 ≈
+5.55). Training happens ONCE inside `make artifacts`; the rust system only
+ever sees the exported `.tz` weights and the AOT HLO.
+
+Training uses the pure-jnp model variant (Pallas interpret kernels are not
+reverse-mode differentiable); pytest asserts the kernel and jnp paths agree
+on the forward, so the served artifact is numerically the trained model.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+
+
+def adam_init(ws):
+    z = lambda: {k: jnp.zeros_like(v) for k, v in ws.items()}
+    return {"m": z(), "v": z(), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(ws, grads, state, lr=3e-3, b1=0.9, b2=0.99, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in ws}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in ws}
+    mh = {k: m[k] / (1 - b1 ** t) for k in ws}
+    vh = {k: v[k] / (1 - b2 ** t) for k in ws}
+    new = {k: ws[k] - lr * mh[k] / (jnp.sqrt(vh[k]) + eps) for k in ws}
+    return new, {"m": m, "v": v, "t": t}
+
+
+def batches(corpus: np.ndarray, bs: int, seq: int, seed: int):
+    """Numpy-side batch sampler (one device_put per step, not bs of them)."""
+    rng = np.random.default_rng(seed)
+    n = corpus.shape[0] - seq - 1
+    # Strided view: row i = corpus[i : i+seq].
+    windows = np.lib.stride_tricks.sliding_window_view(corpus, seq)
+    while True:
+        idx = rng.integers(0, n, bs)
+        yield jnp.asarray(windows[idx])
+
+
+def train_model(cfg: M.ModelConfig, corpus: np.ndarray, *, steps: int = 600,
+                bs: int = 16, lr: float = 3e-3, seed: int = 0,
+                log_every: int = 100) -> Tuple[Dict, Dict, list]:
+    """Returns (trained weights, init weights, loss log [(step, loss)])."""
+    key = jax.random.PRNGKey(seed)
+    init_ws = M.init_weights(cfg, key)
+    ws = init_ws
+    opt = adam_init(ws)
+
+    @jax.jit
+    def step_fn(ws, opt, toks):
+        loss, grads = jax.value_and_grad(
+            lambda w: M.nll_loss(cfg, toks, w))(ws)
+        ws, opt = adam_update(ws, grads, opt, lr=lr)
+        return ws, opt, loss
+
+    gen = batches(corpus, bs, cfg.seq, seed + 1)
+    log = []
+    t0 = time.time()
+    for i in range(steps):
+        toks = next(gen)
+        ws, opt, loss = step_fn(ws, opt, toks)
+        if i % log_every == 0 or i == steps - 1:
+            l = float(loss)
+            log.append((i, l))
+            print(f"[train {cfg.name}] step {i:4d} loss {l:.4f} "
+                  f"({time.time() - t0:.1f}s)")
+    return ws, init_ws, log

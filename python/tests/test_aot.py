@@ -1,0 +1,71 @@
+"""AOT path tests: HLO text generation is parseable and the artifact
+directory (when present) is internally consistent with the manifest."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.aot import lower_model, to_hlo_text, ws_args
+
+TINY = M.ModelConfig("tiny", vocab=32, d_model=16, n_heads=2, n_kv=1,
+                     d_head=8, d_ffn=24, n_layers=2, seq=8)
+
+
+def test_lower_tiny_fwd_produces_hlo_text():
+    M.MODEL_ZOO["tiny"] = TINY
+    try:
+        txt = lower_model(TINY, "fwd")
+    finally:
+        del M.MODEL_ZOO["tiny"]
+    assert txt.startswith("HloModule"), txt[:60]
+    assert "ENTRY" in txt
+
+
+def test_ws_args_order_matches_weight_names():
+    args = ws_args(TINY)
+    assert len(args) == len(M.WEIGHT_NAMES)
+    assert args[0].shape == tuple(TINY.weight_shapes["embed"])
+    assert args[1].shape == tuple(TINY.weight_shapes["unembed"])
+
+
+def test_to_hlo_text_simple_fn():
+    f = lambda x: (x * 2.0 + 1.0,)
+    lowered = jax.jit(f).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    txt = to_hlo_text(lowered)
+    assert "HloModule" in txt
+
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_manifest_consistent_with_files():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["weight_order"] == M.WEIGHT_NAMES
+    for name, entry in man["models"].items():
+        cfg = M.MODEL_ZOO[name]
+        assert entry["params"] == cfg.param_count()
+        for fname in entry["hlo"].values():
+            assert os.path.exists(os.path.join(ART, fname)), fname
+        assert os.path.exists(os.path.join(ART, entry["weights"]))
+        # training reached well below the uniform baseline ln(256)≈5.55
+        assert entry["train_log"][-1][1] < 1.5
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")),
+                    reason="artifacts not built")
+def test_exported_weights_match_config_shapes():
+    from compile import tio
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    name = next(iter(man["models"]))
+    cfg = M.MODEL_ZOO[name]
+    ws = tio.read_tz(os.path.join(ART, man["models"][name]["weights"]))
+    for wname, shape in cfg.weight_shapes.items():
+        assert ws[wname].shape == tuple(shape), wname

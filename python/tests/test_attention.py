@@ -1,0 +1,65 @@
+"""Fused causal-attention Pallas kernel vs the jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import flash_attention, ref_attention
+
+SETTINGS = dict(max_examples=10, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 3),
+    s_blocks=st.integers(1, 4),
+    dh=st.sampled_from([4, 8, 16]),
+    bq=st.sampled_from([4, 8, 64]),
+    bk=st.sampled_from([4, 16, 64]),
+)
+def test_flash_matches_ref(b, h, s_blocks, dh, bq, bk):
+    s = 16 * s_blocks
+    rng = np.random.default_rng(0)
+    q = jnp.array(rng.standard_normal((b, h, s, dh), dtype=np.float32))
+    k = jnp.array(rng.standard_normal((b, h, s, dh), dtype=np.float32))
+    v = jnp.array(rng.standard_normal((b, h, s, dh), dtype=np.float32))
+    out = flash_attention(q, k, v, bq=bq, bk=bk)
+    want = ref_attention(q, k, v)
+    np.testing.assert_allclose(np.array(out), np.array(want), rtol=3e-4,
+                               atol=3e-4)
+
+
+def test_causality_of_kernel():
+    # Changing the last key/value must not affect earlier outputs.
+    rng = np.random.default_rng(1)
+    b, h, s, dh = 1, 2, 32, 8
+    q = jnp.array(rng.standard_normal((b, h, s, dh), dtype=np.float32))
+    k1 = rng.standard_normal((b, h, s, dh)).astype(np.float32)
+    v1 = rng.standard_normal((b, h, s, dh)).astype(np.float32)
+    k2 = k1.copy()
+    v2 = v1.copy()
+    k2[..., -1, :] += 5.0
+    v2[..., -1, :] -= 5.0
+    o1 = np.array(flash_attention(q, jnp.array(k1), jnp.array(v1), bq=8,
+                                  bk=8))
+    o2 = np.array(flash_attention(q, jnp.array(k2), jnp.array(v2), bq=8,
+                                  bk=8))
+    np.testing.assert_allclose(o1[..., : s - 1, :], o2[..., : s - 1, :],
+                               rtol=1e-6, atol=1e-6)
+    assert np.abs(o1[..., -1, :] - o2[..., -1, :]).max() > 1e-3
+
+
+def test_online_softmax_extreme_scores():
+    # Large score magnitudes must not overflow the online softmax.
+    rng = np.random.default_rng(2)
+    b, h, s, dh = 1, 1, 32, 8
+    q = jnp.array(30.0 * rng.standard_normal((b, h, s, dh),
+                                             dtype=np.float32))
+    k = jnp.array(30.0 * rng.standard_normal((b, h, s, dh),
+                                             dtype=np.float32))
+    v = jnp.array(rng.standard_normal((b, h, s, dh), dtype=np.float32))
+    out = np.array(flash_attention(q, k, v, bq=8, bk=8))
+    assert np.isfinite(out).all()
+    want = np.array(ref_attention(q, k, v))
+    np.testing.assert_allclose(out, want, rtol=1e-3, atol=1e-3)

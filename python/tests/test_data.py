@@ -1,0 +1,86 @@
+"""Data substrate tests: corpus determinism, task well-formedness, the
+.tz container round-trip."""
+
+import os
+import tempfile
+
+import numpy as np
+
+from compile import data as D
+from compile import tio
+
+
+def test_corpus_deterministic():
+    a = D.gen_corpus(7, 5000, "wiki")
+    b = D.gen_corpus(7, 5000, "wiki")
+    assert np.array_equal(a, b)
+    c = D.gen_corpus(8, 5000, "wiki")
+    assert not np.array_equal(a, c)
+
+
+def test_corpus_ascii_bytes():
+    a = D.gen_corpus(1, 3000, "c4")
+    assert a.dtype == np.int32
+    assert a.min() >= 0 and a.max() < 128  # plain ascii
+
+
+def test_families_share_facts():
+    # Same seed -> same world; the c4 family must mention the same
+    # entity-attribute pairs.
+    w = D.make_world(3)
+    text_wiki = bytes(D.gen_corpus(3, 40_000, "wiki").astype(np.uint8))
+    text_c4 = bytes(D.gen_corpus(3, 40_000, "c4").astype(np.uint8))
+    name = D.NAMES[0]
+    drink = w.drink[name]
+    assert f"{name} likes {drink}".encode() in text_wiki
+    assert f"{name} drinks {drink}".encode() in text_c4
+
+
+def test_tasks_well_formed():
+    tasks = D.gen_tasks(5, seq=64, n_items=16)
+    assert len(tasks) == 6
+    names = {t.name for t in tasks}
+    assert names == {"copy", "continuation", "arithmetic", "boolq",
+                     "agreement", "truth"}
+    for t in tasks:
+        n = t.gold.shape[0]
+        assert t.tokens.shape == (n * t.k, 64)
+        assert (t.gold >= 0).all() and (t.gold < t.k).all()
+        assert (t.prompt_len < t.total_len).all(), t.name
+        assert (t.total_len <= 64).all()
+        # Every choice row shares the item's prompt prefix.
+        for i in range(n):
+            p = t.prompt_len[i * t.k]
+            base = t.tokens[i * t.k, :p]
+            for j in range(1, t.k):
+                assert np.array_equal(t.tokens[i * t.k + j, :p], base)
+
+
+def test_task_gold_is_correct_fact():
+    # agreement task: gold choice must be the world's color fact.
+    w = D.make_world(5)
+    tasks = {t.name: t for t in D.gen_tasks(5, seq=64, n_items=8)}
+    t = tasks["agreement"]
+    for i in range(t.gold.shape[0]):
+        row = t.tokens[i * t.k + t.gold[i]]
+        text = bytes(row[: t.total_len[i * t.k + t.gold[i]]]
+                     .astype(np.uint8)).decode()
+        # "the {animal} of {name} is {color} ."
+        name = text.split(" of ")[1].split(" is ")[0]
+        color = text.split(" is ")[1].split(" .")[0].strip()
+        assert w.color[name] == color, text
+
+
+def test_tio_roundtrip():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.tz")
+        tensors = {
+            "f": np.arange(12, dtype=np.float32).reshape(3, 4),
+            "i": np.array([-1, 2, 3], dtype=np.int32),
+            "u": np.array([[7, 255]], dtype=np.uint8),
+        }
+        tio.write_tz(path, tensors)
+        back = tio.read_tz(path)
+        for k, v in tensors.items():
+            assert np.array_equal(back[k], v), k
+            assert back[k].dtype == v.dtype

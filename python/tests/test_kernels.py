@@ -1,0 +1,132 @@
+"""L1 correctness: every Pallas kernel vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes / bit-widths / group sizes — the CORE correctness
+signal for the compute layer (the rust side re-verifies the same packing
+convention independently).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dequant import dequant_matmul, vmem_bytes
+from compile.kernels.matmul import pallas_matmul
+from compile.kernels.quant import rtn_quantize
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 64),
+    n=st.integers(1, 40),
+    bm=st.sampled_from([8, 16, 128]),
+)
+def test_matmul_matches_ref(m, k, n, bm):
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((m, k), dtype=np.float32)
+    w = rng.standard_normal((k, n), dtype=np.float32)
+    out = pallas_matmul(jnp.array(x), jnp.array(w), bm=bm, bn=bm, bk=bm)
+    np.testing.assert_allclose(np.array(out), np.array(ref.matmul(x, w)),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    bits=st.sampled_from([2, 4]),
+    groups=st.integers(1, 6),
+    group=st.sampled_from([4, 8, 16]),
+    n=st.integers(1, 24),
+)
+def test_rtn_kernel_matches_ref(bits, groups, group, n):
+    k = groups * group
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((k, n), dtype=np.float32)
+    c_k, s_k, z_k = rtn_quantize(jnp.array(w), bits=bits, group=group,
+                                 bn=16, bk=group)
+    c_r, s_r, z_r = ref.rtn_quantize(w, bits, group)
+    np.testing.assert_array_equal(np.array(c_k), np.array(c_r))
+    np.testing.assert_allclose(np.array(s_k), np.array(s_r), rtol=1e-6)
+    np.testing.assert_allclose(np.array(z_k), np.array(z_r), rtol=1e-5,
+                               atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    bits=st.sampled_from([2, 4]),
+    groups=st.integers(1, 4),
+    group=st.sampled_from([8, 16]),
+    m=st.integers(1, 16),
+    n=st.integers(1, 24),
+)
+def test_dequant_matmul_matches_ref(bits, groups, group, m, n):
+    k = groups * group
+    rng = np.random.default_rng(2)
+    w = rng.standard_normal((k, n), dtype=np.float32)
+    x = rng.standard_normal((m, k), dtype=np.float32)
+    codes, scale, zero = ref.rtn_quantize(w, bits, group)
+    packed = ref.pack_codes(codes, bits)
+    out = dequant_matmul(jnp.array(x), jnp.array(packed), scale, zero,
+                         bits=bits, group=group, bm=8, bn=16, bk=group)
+    want = ref.dequant_matmul(x, packed, scale, zero, bits, group)
+    np.testing.assert_allclose(np.array(out), np.array(want), rtol=2e-4,
+                               atol=2e-4)
+
+
+@settings(**SETTINGS)
+@given(bits=st.sampled_from([2, 4]), k=st.integers(1, 8),
+       n=st.integers(1, 12))
+def test_pack_unpack_roundtrip(bits, k, n):
+    per = 8 // bits
+    rows = k * per
+    rng = np.random.default_rng(3)
+    codes = rng.integers(0, 2**bits, (rows, n)).astype(np.uint8)
+    packed = ref.pack_codes(codes, bits)
+    assert packed.shape == (rows // per, n)
+    back = ref.unpack_codes(jnp.array(packed), bits)
+    np.testing.assert_array_equal(np.array(back), codes)
+
+
+def test_dequantize_error_bounded():
+    rng = np.random.default_rng(4)
+    w = rng.standard_normal((64, 16), dtype=np.float32)
+    for bits in (2, 4):
+        codes, scale, zero = ref.rtn_quantize(w, bits, 16)
+        deq = np.array(ref.dequantize(codes, scale, zero, 16))
+        step = np.repeat(np.array(scale), 16, axis=0)
+        assert (np.abs(w - deq) <= 0.5 * step + 1e-6).all()
+
+
+def test_kurtosis_reference():
+    rng = np.random.default_rng(5)
+    g = rng.standard_normal(200_000).astype(np.float32)
+    assert abs(float(ref.kurtosis(jnp.array(g)))) < 0.1
+    lap = rng.laplace(size=200_000).astype(np.float32)
+    assert abs(float(ref.kurtosis(jnp.array(lap))) - 3.0) < 0.3
+
+
+def test_vmem_estimate_monotone():
+    # Doubling the N block must grow the footprint; used by the §Perf
+    # block-shape selection.
+    a = vmem_bytes(64, 128, 256, 4, 64)
+    b = vmem_bytes(64, 256, 256, 4, 64)
+    assert b > a
+
+
+@pytest.mark.parametrize("bits,group", [(4, 64), (2, 64)])
+def test_kernel_at_serving_shape(bits, group):
+    """The exact shape the AOT dequant kernels are lowered at."""
+    rng = np.random.default_rng(6)
+    k, n, m = 256, 256, 64
+    w = rng.standard_normal((k, n), dtype=np.float32)
+    x = rng.standard_normal((m, k), dtype=np.float32)
+    codes, scale, zero = ref.rtn_quantize(w, bits, group)
+    packed = ref.pack_codes(codes, bits)
+    out = dequant_matmul(jnp.array(x), jnp.array(packed), scale, zero,
+                         bits=bits, group=group)
+    want = ref.dequant_matmul(x, packed, scale, zero, bits, group)
+    np.testing.assert_allclose(np.array(out), np.array(want), rtol=2e-4,
+                               atol=2e-4)

@@ -1,0 +1,123 @@
+"""L2 model correctness: shapes, kernel-vs-jnp agreement, probe/grad
+variants, training step sanity."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile import train as T
+
+
+CFG = M.ModelConfig("tiny", vocab=64, d_model=16, n_heads=4, n_kv=2,
+                    d_head=4, d_ffn=32, n_layers=3, seq=12)
+
+
+@pytest.fixture(scope="module")
+def ws():
+    return M.init_weights(CFG, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def toks():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.integers(0, CFG.vocab, (2, CFG.seq),
+                                    dtype=np.int32))
+
+
+def test_forward_shapes(ws, toks):
+    (logits,) = M.forward(CFG, toks, ws, use_kernel=False)
+    assert logits.shape == (2, CFG.seq, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_kernel_and_jnp_paths_agree(ws, toks):
+    (lk,) = M.forward(CFG, toks, ws, use_kernel=True)
+    (lj,) = M.forward(CFG, toks, ws, use_kernel=False)
+    np.testing.assert_allclose(np.array(lk), np.array(lj), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_probe_outputs(ws, toks):
+    out = M.forward_probe(CFG, toks, ws)
+    logits, resid_in, final, x1, x2, ctx, mid = out
+    L, B, S, D = CFG.n_layers, 2, CFG.seq, CFG.d_model
+    assert resid_in.shape == (L, B, S, D)
+    assert final.shape == (B, S, D)
+    assert x1.shape == (L, B, S, D)
+    assert ctx.shape == (L, B, S, CFG.n_heads * CFG.d_head)
+    assert mid.shape == (L, B, S, CFG.d_ffn)
+    # Residual stream chains: resid_in[l+1] = resid_in[l] + attn + ffn;
+    # at minimum the layers must differ (information flows).
+    assert float(jnp.abs(resid_in[1] - resid_in[0]).max()) > 1e-6
+    np.testing.assert_allclose(np.array(logits)[..., 0].shape, (B, S))
+
+
+def test_grads_shapes_and_nonzero(ws, toks):
+    out = M.loss_and_grads(CFG, toks, ws)
+    loss = out[0]
+    assert loss.shape == ()
+    assert float(loss) > 0
+    for name, g in zip(M.QUANT_WEIGHTS, out[1:]):
+        assert g.shape == tuple(CFG.weight_shapes[name]), name
+        assert float(jnp.abs(g).max()) > 0, f"zero grad for {name}"
+
+
+def test_gqa_broadcast_consistency(toks):
+    # With n_kv == n_heads the model must behave like standard MHA: check
+    # it runs and differs from the GQA variant (different shapes).
+    cfg_mha = M.ModelConfig("mha", 64, 16, 4, 4, 4, 32, 2, 12)
+    ws = M.init_weights(cfg_mha, jax.random.PRNGKey(1))
+    (logits,) = M.forward(cfg_mha, toks, ws, use_kernel=False)
+    assert logits.shape == (2, 12, 64)
+
+
+def test_rope_rotates_by_position():
+    # RoPE must rotate identical head vectors differently per position
+    # while preserving their norm.
+    x = jnp.ones((1, 8, 2, 4), jnp.float32)
+    r = M.rope(x)
+    assert float(jnp.abs(r[0, 0] - r[0, 5]).max()) > 1e-3
+    norms = jnp.linalg.norm(r, axis=-1)
+    np.testing.assert_allclose(np.array(norms), 2.0, rtol=1e-5)
+
+
+def test_order_dependence_via_rope(ws):
+    # Swapping two earlier tokens must change the last position's logits
+    # (pure bag-of-words models would not).
+    rng = np.random.default_rng(9)
+    t1 = rng.integers(0, CFG.vocab, (1, CFG.seq), dtype=np.int32)
+    t2 = t1.copy()
+    t2[0, 0], t2[0, 1] = t1[0, 1], t1[0, 0]
+    if t1[0, 0] == t1[0, 1]:
+        t2[0, 0] = (t2[0, 0] + 1) % CFG.vocab
+    (l1,) = M.forward(CFG, jnp.asarray(t1), ws, use_kernel=False)
+    (l2,) = M.forward(CFG, jnp.asarray(t2), ws, use_kernel=False)
+    assert float(jnp.abs(l1[0, -1] - l2[0, -1]).max()) > 1e-6
+
+
+def test_causality(ws):
+    # Changing a future token must not change past logits.
+    rng = np.random.default_rng(3)
+    t1 = rng.integers(0, CFG.vocab, (1, CFG.seq), dtype=np.int32)
+    t2 = t1.copy()
+    t2[0, -1] = (t2[0, -1] + 1) % CFG.vocab
+    (l1,) = M.forward(CFG, jnp.asarray(t1), ws, use_kernel=False)
+    (l2,) = M.forward(CFG, jnp.asarray(t2), ws, use_kernel=False)
+    np.testing.assert_allclose(np.array(l1)[0, : CFG.seq - 1],
+                               np.array(l2)[0, : CFG.seq - 1],
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_train_reduces_loss():
+    from compile import data as D
+    # vocab must cover the byte-level corpus (ascii < 128).
+    cfg = M.ModelConfig("tiny128", vocab=128, d_model=16, n_heads=4,
+                        n_kv=2, d_head=4, d_ffn=32, n_layers=3, seq=12)
+    corpus = D.gen_corpus(99, 6000, "wiki")
+    ws, init_ws, log = T.train_model(cfg, corpus, steps=40, bs=8,
+                                     log_every=39, seed=0)
+    assert log[-1][1] < log[0][1] * 0.8, log
+    # init weights preserved separately
+    assert not np.allclose(np.array(ws["wq"]), np.array(init_ws["wq"]))

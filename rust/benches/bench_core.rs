@@ -1,0 +1,64 @@
+//! Core-numerics benches: SVD, matmul, stats, quantization backends —
+//! the L3 hot paths behind sensitivity scoring (EXPERIMENTS.md §Perf).
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, black_box};
+use nsds::quant::{Backend, QuantSpec};
+use nsds::tensor::matmul::{gram, matmul};
+use nsds::tensor::stats::excess_kurtosis;
+use nsds::tensor::svd::svd;
+use nsds::tensor::Tensor;
+use nsds::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    println!("== core numerics ==");
+
+    for &n in &[64usize, 96, 256] {
+        let a = Tensor::randn(vec![n, n], &mut rng);
+        bench(&format!("svd {n}x{n}"), || {
+            black_box(svd(&a));
+        });
+    }
+    let wide = Tensor::randn(vec![64, 256], &mut rng);
+    bench("svd 64x256 (unembed)", || {
+        black_box(svd(&wide));
+    });
+
+    for &(m, k, n) in &[(64usize, 64usize, 64usize), (512, 96, 288)] {
+        let a = Tensor::randn(vec![m, k], &mut rng);
+        let b = Tensor::randn(vec![k, n], &mut rng);
+        bench(&format!("matmul {m}x{k}x{n}"), || {
+            black_box(matmul(&a, &b));
+        });
+    }
+    let x = Tensor::randn(vec![2048, 96], &mut rng);
+    bench("gram 2048x96 (hessian)", || {
+        black_box(gram(&x));
+    });
+
+    let big = Tensor::randn(vec![288, 96], &mut rng);
+    bench("kurtosis 288x96", || {
+        black_box(excess_kurtosis(big.data()));
+    });
+
+    println!("== quantization backends (192x64 matrix, g=32) ==");
+    let w = Tensor::randn(vec![192, 64], &mut rng);
+    for (label, backend) in [("rtn", Backend::Rtn), ("hqq", Backend::Hqq),
+                             ("gptq-idH", Backend::Gptq)] {
+        for bits in [2u8, 4] {
+            bench(&format!("{label} {bits}-bit 192x64"), || {
+                black_box(nsds::quant::quantize_matrix(
+                    &w, QuantSpec::new(bits, 32), backend, None));
+            });
+        }
+    }
+    let xact = Tensor::randn(vec![512, 192], &mut rng);
+    let h = nsds::quant::gptq::hessian_from_inputs(&xact);
+    bench("gptq real-H 2-bit 192x64", || {
+        black_box(nsds::quant::gptq::quantize(
+            &w, QuantSpec::new(2, 32), Some(&h)));
+    });
+}

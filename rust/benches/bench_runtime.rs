@@ -1,0 +1,91 @@
+//! Runtime benches (need artifacts; exit 0 with a notice otherwise):
+//! forward-batch latency per model, the fused dequant-matmul Pallas
+//! kernels, probe/grad executables, and an end-to-end table-1-cell run
+//! (score → allocate → quantize → eval) with a timing breakdown.
+//! These regenerate the latency/throughput side of every paper exhibit.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, black_box};
+use nsds::baselines::Method;
+use nsds::coordinator::Pipeline;
+use nsds::eval::EvalOptions;
+use nsds::quant::Backend;
+use nsds::runtime::{run_forward, Input, Manifest};
+use nsds::sensitivity::Ablation;
+use nsds::tensor::Tensor;
+use nsds::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("bench_runtime: no artifacts (run `make artifacts`); \
+                  skipping");
+        return Ok(());
+    }
+    let p = Pipeline::new()?;
+    let corpora = nsds::eval::ppl::load_corpora(&p.man)?;
+    let b = p.man.eval_batch;
+
+    println!("== forward-batch latency (batch={b}) ==");
+    for model in ["llama-s", "qwen-s", "llama-m"] {
+        let entry = p.entry(model)?;
+        let w = p.weights(model)?;
+        let s = entry.config.seq;
+        let chunk = &corpora.wiki_like[..b * s];
+        // warm-up compiles outside the timing loop
+        run_forward(&p.engine, entry, chunk, b, &w)?;
+        bench(&format!("fwd {model} [{}x{}]", b, s), || {
+            black_box(run_forward(&p.engine, entry, chunk, b, &w)
+                .unwrap());
+        });
+    }
+
+    println!("== fused dequant-matmul Pallas kernels ==");
+    let mut rng = Rng::new(5);
+    for k in &p.man.kernels {
+        if !k.file.starts_with("dequant") {
+            continue;
+        }
+        let w = Tensor::randn(vec![k.k, k.n], &mut rng);
+        let x = Tensor::randn(vec![k.m, k.k], &mut rng);
+        let q = nsds::quant::rtn::quantize(
+            &w, nsds::quant::QuantSpec::new(k.bits, k.group));
+        let packed = nsds::quant::pack::pack(&q.codes, k.k, k.n, k.bits);
+        let scale = Tensor::new(q.scale.clone(), vec![k.k / k.group, k.n]);
+        let zero = Tensor::new(q.zero.clone(), vec![k.k / k.group, k.n]);
+        p.engine.load(&k.file)?;
+        bench(&format!("kernel {} [{}x{}x{}]", k.file, k.m, k.k, k.n),
+              || {
+            black_box(
+                p.engine
+                    .execute(&k.file, &[
+                        Input::F32(&x),
+                        Input::U8(&packed,
+                                  vec![k.k * k.bits as usize / 8, k.n]),
+                        Input::F32(&scale),
+                        Input::F32(&zero),
+                    ])
+                    .unwrap(),
+            );
+        });
+    }
+
+    println!("== end-to-end table-1 cell (llama-s, NSDS, b̄=3, HQQ) ==");
+    let t0 = std::time::Instant::now();
+    let method = Method::Nsds(Ablation::Full);
+    let scores = p.scores(method, "llama-s")?;
+    let t_score = t0.elapsed().as_secs_f64();
+    let bits = nsds::allocate::allocate_bits(&scores, 3.0);
+    let qw = p.quantize("llama-s", &bits, Backend::Hqq)?;
+    let t_quant = t0.elapsed().as_secs_f64() - t_score;
+    let r = p.eval("llama-s", &qw, &EvalOptions::default())?;
+    let t_eval = t0.elapsed().as_secs_f64() - t_score - t_quant;
+    println!(
+        "e2e breakdown: score {t_score:.2}s  quantize {t_quant:.2}s  \
+         eval {t_eval:.2}s  (avg acc {:.2}%)",
+        r.avg_acc()
+    );
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Sensitivity-scoring benches: full NSDS (per table-1 model shape) and
+//! every calibration-free baseline — the offline cost a user pays before
+//! deployment. One bench per paper-table model shape.
+
+#[path = "harness.rs"]
+mod harness;
+
+use harness::{bench, black_box};
+use nsds::model::{ModelConfig, Weights};
+use nsds::sensitivity::{nsds_layer_scores, NsdsOptions};
+use nsds::util::rng::Rng;
+
+fn shape(name: &str, d: usize, h: usize, kv: usize, dh: usize, f: usize,
+         l: usize) -> ModelConfig {
+    ModelConfig {
+        name: name.into(),
+        vocab: 256,
+        d_model: d,
+        n_heads: h,
+        n_kv: kv,
+        d_head: dh,
+        d_ffn: f,
+        n_layers: l,
+        seq: 64,
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(11);
+    let configs = [
+        shape("llama-s", 64, 4, 2, 16, 192, 8),
+        shape("qwen-s", 64, 8, 4, 8, 256, 8),
+        shape("llama-m", 96, 6, 6, 16, 256, 12),
+    ];
+    println!("== NSDS scoring (full metric, 1 worker) ==");
+    for cfg in &configs {
+        let w = Weights::synth(cfg, &mut rng, &[], &[]);
+        let opts = NsdsOptions { workers: 1, ..Default::default() };
+        bench(&format!("nsds scores {}", cfg.name), || {
+            black_box(nsds_layer_scores(cfg, &w, &opts));
+        });
+    }
+
+    println!("== calibration-free baselines (llama-s shape) ==");
+    let cfg = &configs[0];
+    let w = Weights::synth(cfg, &mut rng, &[], &[]);
+    bench("mse scores", || {
+        black_box(nsds::baselines::free::mse(cfg, &w, 1));
+    });
+    bench("ewq scores", || {
+        black_box(nsds::baselines::free::ewq(cfg, &w, 1));
+    });
+    bench("zd scores", || {
+        black_box(nsds::baselines::free::zd(cfg, &w, 1));
+    });
+    bench("kurtboost scores", || {
+        black_box(nsds::baselines::free::kurtboost_scores(cfg, &w, 1));
+    });
+}

@@ -1,0 +1,87 @@
+//! Minimal criterion-style bench harness (criterion is unreachable
+//! offline — DESIGN.md "Environment deviations").
+//!
+//! Each bench target sets `harness = false` in Cargo.toml and calls
+//! `bench(name, || work)`: adaptive iteration count targeting ~0.5 s per
+//! measurement, reporting median / mean / p95 per-iteration time.
+//! Results append to `bench_results.tsv` (gitignored) so the perf pass
+//! can diff before/after.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+}
+
+/// Run `f` adaptively and report stats. Returns per-iter median ns.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    // Warm-up + calibration.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let target = 0.5f64; // seconds of measurement
+    let iters = ((target / once) as usize).clamp(3, 10_000);
+
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e9);
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let p95_idx =
+        ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);
+    let p95 = samples[p95_idx];
+    let r = BenchResult {
+        name: name.to_string(),
+        iters,
+        median_ns: median,
+        mean_ns: mean,
+        p95_ns: p95,
+    };
+    println!(
+        "{:<44} {:>10} iters   median {:>12}   mean {:>12}   p95 {:>12}",
+        r.name, r.iters, fmt_ns(median), fmt_ns(mean), fmt_ns(p95)
+    );
+    append_tsv(&r);
+    r
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+fn append_tsv(r: &BenchResult) {
+    use std::io::Write;
+    if let Ok(mut f) = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open("bench_results.tsv")
+    {
+        let _ = writeln!(
+            f,
+            "{}\t{}\t{:.1}\t{:.1}\t{:.1}",
+            r.name, r.iters, r.median_ns, r.mean_ns, r.p95_ns
+        );
+    }
+}
+
+/// Prevent the optimizer from deleting the benched computation.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

@@ -1,0 +1,153 @@
+//! Score aggregation (paper §2.3): MAD-Sigmoid robust normalization and
+//! the Soft-OR operator with the n-th-root saturation guard (footnote 4).
+
+use crate::tensor::stats::{mad, median};
+
+/// Scale factor making MAD comparable to a standard deviation under
+/// normality (paper Eq. 10).
+pub const MAD_SIGMA: f64 = 1.4826;
+
+/// Paper's ε in Eq. 10.
+pub const EPS: f64 = 1e-12;
+
+/// Robust z-scores: (r − Median) / (1.4826 · MAD + ε).  (Eq. 10)
+pub fn mad_z(raw: &[f64]) -> Vec<f64> {
+    let med = median(raw);
+    let m = mad(raw);
+    let denom = MAD_SIGMA * m + EPS;
+    raw.iter().map(|r| (r - med) / denom).collect()
+}
+
+/// Sigmoid squashing of a z-score into (0, 1).
+pub fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+/// MAD-Sigmoid: Eq. 10 + sigmoid, the full robust normalizer.
+pub fn mad_sigmoid(raw: &[f64]) -> Vec<f64> {
+    mad_z(raw).into_iter().map(sigmoid).collect()
+}
+
+/// Soft-OR over n probabilities with the saturation guard
+/// (footnote 4): 1 − Π (1 − pᵢ)^(1/n).
+pub fn soft_or(ps: &[f64]) -> f64 {
+    if ps.is_empty() {
+        return 0.0;
+    }
+    let n = ps.len() as f64;
+    let mut prod = 1.0f64;
+    for &p in ps {
+        prod *= (1.0 - p.clamp(0.0, 1.0)).powf(1.0 / n);
+    }
+    1.0 - prod
+}
+
+/// Two-term Soft-OR without the root guard (paper Eq. 12 / Algorithm 1
+/// line 22): p₁ + p₂ − p₁p₂.
+pub fn soft_or2(p1: f64, p2: f64) -> f64 {
+    p1 + p2 - p1 * p2
+}
+
+/// Non-robust baseline aggregation used by the "w/o MAD-Sigmoid & Soft-OR"
+/// ablation (Fig. 4): plain (mean, std) z-score + arithmetic mean.
+pub fn plain_z(raw: &[f64]) -> Vec<f64> {
+    let n = raw.len().max(1) as f64;
+    let mean = raw.iter().sum::<f64>() / n;
+    let var = raw.iter().map(|r| (r - mean).powi(2)).sum::<f64>() / n;
+    let sd = var.sqrt() + EPS;
+    raw.iter().map(|r| (r - mean) / sd).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_ensure;
+    use crate::util::prop::check;
+
+    #[test]
+    fn mad_sigmoid_range_and_monotone() {
+        check("mad-sigmoid", 20, |rng| {
+            let n = 4 + rng.below(30);
+            let mut raw: Vec<f64> = (0..n).map(|_| rng.normal() * 10.0).collect();
+            raw.sort_by(|a, b| a.total_cmp(b));
+            let p = mad_sigmoid(&raw);
+            for v in &p {
+                prop_ensure!((0.0..=1.0).contains(v), "p out of range {v}");
+            }
+            for w in p.windows(2) {
+                prop_ensure!(w[1] >= w[0] - 1e-12, "not monotone");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mad_sigmoid_outlier_robust() {
+        // An extreme outlier must not crush the spread of the others.
+        let mut raw: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let p_clean = mad_sigmoid(&raw);
+        raw.push(1e9);
+        let p_dirty = mad_sigmoid(&raw);
+        let spread = |p: &[f64]| {
+            p.iter().cloned().fold(f64::MIN, f64::max)
+                - p.iter().cloned().fold(f64::MAX, f64::min)
+        };
+        assert!(
+            (spread(&p_clean) - spread(&p_dirty[..20])).abs() < 0.05,
+            "outlier destroyed the scale"
+        );
+    }
+
+    #[test]
+    fn soft_or_properties() {
+        check("soft-or", 30, |rng| {
+            let n = 1 + rng.below(6);
+            let ps: Vec<f64> = (0..n).map(|_| rng.f64()).collect();
+            let s = soft_or(&ps);
+            prop_ensure!((0.0..=1.0).contains(&s), "range {s}");
+            // ≥ any soft-or of a subset with one term reduced
+            let mut lower = ps.clone();
+            lower[0] *= 0.5;
+            prop_ensure!(
+                soft_or(&lower) <= s + 1e-12,
+                "not monotone in arguments"
+            );
+            // permutation invariant
+            let mut rev = ps.clone();
+            rev.reverse();
+            prop_ensure!((soft_or(&rev) - s).abs() < 1e-12, "not symmetric");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn soft_or_emphasizes_max() {
+        // One hot component keeps the OR high even if others are cold.
+        let hot = soft_or(&[0.95, 0.05, 0.05, 0.05]);
+        let avg = (0.95 + 0.05 * 3.0) / 4.0;
+        assert!(hot > avg, "soft-or {hot} should exceed mean {avg}");
+    }
+
+    #[test]
+    fn soft_or2_matches_formula() {
+        check("soft-or2", 20, |rng| {
+            let a = rng.f64();
+            let b = rng.f64();
+            let s = soft_or2(a, b);
+            prop_ensure!((s - (a + b - a * b)).abs() < 1e-15, "formula");
+            prop_ensure!(s >= a.max(b) - 1e-15, "or >= max");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn soft_or_saturation_guard() {
+        // With many medium components the guarded form stays < 1 while the
+        // naive product form saturates.
+        let ps = vec![0.9; 16];
+        let naive = 1.0 - ps.iter().map(|p| 1.0 - p).product::<f64>();
+        let guarded = soft_or(&ps);
+        assert!(naive > 0.999_999_999);
+        assert!(guarded < 0.95, "guard failed: {guarded}");
+    }
+}

@@ -1,0 +1,138 @@
+//! Data-free layer-wise bit allocation (paper §2.3 + Algorithm 1 phase 3).
+//!
+//! Given a target average-bit budget b̄ ∈ [2,4] and per-layer sensitivity
+//! scores, allocate 4-bit to the L₄ = round((b̄−2)/2·L) most sensitive
+//! layers and 2-bit to the rest (equal-sized-layer assumption; our zoo's
+//! layers are exactly equal-sized so the budget is met exactly).
+
+/// Per-layer bit widths from sensitivity scores (higher = more sensitive).
+pub fn allocate_bits(scores: &[f64], budget: f64) -> Vec<u8> {
+    let l = scores.len();
+    let rho = ((budget - 2.0) / 2.0).clamp(0.0, 1.0);
+    let l4 = (rho * l as f64).round() as usize;
+    allocate_top_k(scores, l4)
+}
+
+/// Give 4-bit to the `l4` highest-scoring layers, 2-bit elsewhere.
+/// Ties broken by layer index (earlier layer wins) for determinism.
+pub fn allocate_top_k(scores: &[f64], l4: usize) -> Vec<u8> {
+    let l = scores.len();
+    let mut order: Vec<usize> = (0..l).collect();
+    order.sort_by(|&a, &b| {
+        scores[b].total_cmp(&scores[a]).then(a.cmp(&b))
+    });
+    let mut bits = vec![2u8; l];
+    for &i in order.iter().take(l4.min(l)) {
+        bits[i] = 4;
+    }
+    bits
+}
+
+/// Achieved average bits (equal-sized layers).
+pub fn average_bits(bits: &[u8]) -> f64 {
+    if bits.is_empty() {
+        return 0.0;
+    }
+    bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64
+}
+
+/// Variant used by the KurtBoost baseline: some layers are *forced* to
+/// 4-bit (detected outliers) before filling the rest by score order under
+/// the same budget.
+pub fn allocate_with_priority(scores: &[f64], budget: f64,
+                              forced: &[usize]) -> Vec<u8> {
+    let l = scores.len();
+    let rho = ((budget - 2.0) / 2.0).clamp(0.0, 1.0);
+    let l4 = (rho * l as f64).round() as usize;
+    let mut bits = vec![2u8; l];
+    let mut remaining = l4;
+    for &i in forced {
+        if remaining == 0 {
+            break;
+        }
+        if i < l && bits[i] == 2 {
+            bits[i] = 4;
+            remaining -= 1;
+        }
+    }
+    let mut order: Vec<usize> = (0..l).collect();
+    order.sort_by(|&a, &b| {
+        scores[b].total_cmp(&scores[a]).then(a.cmp(&b))
+    });
+    for &i in &order {
+        if remaining == 0 {
+            break;
+        }
+        if bits[i] == 2 {
+            bits[i] = 4;
+            remaining -= 1;
+        }
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_ensure;
+    use crate::util::prop::check;
+
+    #[test]
+    fn budget_exact_at_3_bits() {
+        let scores = vec![0.9, 0.1, 0.5, 0.7, 0.2, 0.8, 0.3, 0.4];
+        let bits = allocate_bits(&scores, 3.0);
+        assert_eq!(average_bits(&bits), 3.0);
+        // The four highest scores (0.9, 0.8, 0.7, 0.5) get 4-bit.
+        assert_eq!(bits, vec![4, 2, 4, 4, 2, 4, 2, 2]);
+    }
+
+    #[test]
+    fn extreme_budgets() {
+        let scores = vec![0.5; 6];
+        assert_eq!(allocate_bits(&scores, 2.0), vec![2; 6]);
+        assert_eq!(allocate_bits(&scores, 4.0), vec![4; 6]);
+    }
+
+    #[test]
+    fn budget_rounding_property() {
+        check("budget within half-step", 40, |rng| {
+            let l = 2 + rng.below(40);
+            let scores: Vec<f64> = (0..l).map(|_| rng.f64()).collect();
+            let budget = 2.0 + 2.0 * rng.f64();
+            let bits = allocate_bits(&scores, budget);
+            let avg = average_bits(&bits);
+            // round() ⇒ achieved average within one layer's worth of budget
+            prop_ensure!(
+                (avg - budget).abs() <= 1.0 / l as f64 + 1e-9,
+                "avg {avg} vs budget {budget} (L={l})"
+            );
+            // Monotone: every 4-bit layer scores >= every 2-bit layer.
+            let min4 = bits
+                .iter()
+                .zip(&scores)
+                .filter(|(b, _)| **b == 4)
+                .map(|(_, s)| *s)
+                .fold(f64::INFINITY, f64::min);
+            let max2 = bits
+                .iter()
+                .zip(&scores)
+                .filter(|(b, _)| **b == 2)
+                .map(|(_, s)| *s)
+                .fold(f64::NEG_INFINITY, f64::max);
+            prop_ensure!(min4 >= max2 - 1e-12, "ranking violated");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn priority_respected_under_budget() {
+        let scores = vec![0.1, 0.2, 0.3, 0.4, 0.5, 0.6];
+        // budget 3.0 -> 3 layers at 4-bit; force layer 0 (lowest score).
+        let bits = allocate_with_priority(&scores, 3.0, &[0]);
+        assert_eq!(bits[0], 4);
+        assert_eq!(bits.iter().filter(|&&b| b == 4).count(), 3);
+        // remaining two picks are the top scorers 5 and 4.
+        assert_eq!(bits[5], 4);
+        assert_eq!(bits[4], 4);
+    }
+}

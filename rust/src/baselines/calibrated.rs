@@ -1,0 +1,214 @@
+//! Calibration-based baselines (paper App. E.2): LIM, LSAQ, LLM-MQ, LieQ.
+//! All consume the probe/grad activations collected by
+//! `coordinator::calib` through the PJRT probe executable.
+
+use std::collections::BTreeSet;
+
+use crate::coordinator::calib::Calibration;
+use crate::model::{ModelConfig, Weights, QUANT_WEIGHTS};
+use crate::quant::{rtn, QuantSpec, DEFAULT_GROUP};
+use crate::tensor::matmul::{dot, matmul};
+use crate::tensor::stats::entropy;
+use crate::tensor::svd::svd;
+use crate::tensor::Tensor;
+
+/// LIM (Eq. 22): 1 − cos(X_in, X_out) per token, averaged over the
+/// calibration rows. Higher = bigger transformation = more sensitive.
+pub fn lim(cfg: &ModelConfig, calib: &Calibration) -> Vec<f64> {
+    (0..cfg.n_layers)
+        .map(|l| {
+            let x_in = &calib.resid[l];
+            let x_out = &calib.resid[l + 1];
+            let rows = x_in.rows();
+            let mut acc = 0.0f64;
+            for r in 0..rows {
+                let a = x_in.row(r);
+                let b = x_out.row(r);
+                let na = dot(a, a).sqrt().max(1e-12);
+                let nb = dot(b, b).sqrt().max(1e-12);
+                acc += 1.0 - (dot(a, b) / (na * nb)) as f64;
+            }
+            acc / rows as f64
+        })
+        .collect()
+}
+
+/// LSAQ (Eqs. 23–24): project layer input/output hidden states onto the
+/// vocabulary (logit lens), compare top-k decoded token sets via Jaccard.
+/// Higher (1 − Jaccard) = more semantic transformation = more sensitive.
+pub fn lsaq(cfg: &ModelConfig, w: &Weights, calib: &Calibration)
+    -> Vec<f64> {
+    let wu = w.get("unembed"); // [D, V]
+    let k = 8;
+    let max_rows = 128; // logit-lens projection is the costly part
+    (0..cfg.n_layers)
+        .map(|l| {
+            let x_in = Calibration::subsample(&calib.resid[l], max_rows);
+            let x_out = Calibration::subsample(&calib.resid[l + 1],
+                                               max_rows);
+            let p_in = matmul(&x_in, wu);
+            let p_out = matmul(&x_out, wu);
+            let rows = p_in.rows();
+            let mut acc = 0.0f64;
+            for r in 0..rows {
+                let a = top_k_set(p_in.row(r), k);
+                let b = top_k_set(p_out.row(r), k);
+                let inter = a.intersection(&b).count() as f64;
+                let union = (a.len() + b.len()) as f64 - inter;
+                acc += 1.0 - inter / union;
+            }
+            acc / rows as f64
+        })
+        .collect()
+}
+
+fn top_k_set(row: &[f32], k: usize) -> BTreeSet<usize> {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]));
+    idx.into_iter().take(k).collect()
+}
+
+/// LLM-MQ (Eqs. 25–26): first-order loss perturbation
+/// |Σ G ⊙ (W − Q_b(W))| at the low bit width, averaged over the layer's
+/// matrices. Higher = more sensitive.
+pub fn llm_mq(cfg: &ModelConfig, w: &Weights, calib: &Calibration)
+    -> Vec<f64> {
+    (0..cfg.n_layers)
+        .map(|l| {
+            let mut acc = 0.0f64;
+            for name in QUANT_WEIGHTS {
+                let wm = w.layer_matrix(name, l);
+                let gm = calib.grads[name].slice0(l);
+                let g = crate::quant::fit_group(wm.rows(), DEFAULT_GROUP);
+                let q = rtn::quantize(&wm, QuantSpec::new(2, g));
+                let dq = q.dequantize();
+                let mut s = 0.0f64;
+                for ((wv, dv), gv) in
+                    wm.data().iter().zip(dq.data()).zip(gm.data())
+                {
+                    s += (*gv as f64) * ((*wv - *dv) as f64);
+                }
+                acc += s.abs();
+            }
+            acc / QUANT_WEIGHTS.len() as f64
+        })
+        .collect()
+}
+
+/// Representational compactness (Eq. 27): exp(H(σ(Z))) of the projected
+/// activations — the effective rank of Z.
+pub fn compactness(z: &Tensor) -> f64 {
+    let sv = svd(z).sigma;
+    let total: f64 = sv.iter().sum();
+    if total <= 0.0 {
+        return 1.0;
+    }
+    let p: Vec<f64> = sv.iter().map(|s| s / total).collect();
+    entropy(&p).exp()
+}
+
+/// LieQ (Eq. 28): relative compactness reduction of trained vs untrained
+/// projections, averaged over the layer's matrices. Higher = the layer
+/// concentrated information during training = more sensitive.
+pub fn lieq(cfg: &ModelConfig, w: &Weights, init: &Weights,
+            calib: &Calibration) -> Vec<f64> {
+    let max_rows = 96; // SVD cost control; documented in DESIGN.md
+    (0..cfg.n_layers)
+        .map(|l| {
+            let mut acc = 0.0f64;
+            for name in QUANT_WEIGHTS {
+                let x = Calibration::subsample(calib.inputs_for(name, l),
+                                               max_rows);
+                let z = matmul(&x, &w.layer_matrix(name, l));
+                let z0 = matmul(&x, &init.layer_matrix(name, l));
+                let c = compactness(&z);
+                let c0 = compactness(&z0).max(1e-9);
+                acc += (c0 - c) / c0;
+            }
+            acc / QUANT_WEIGHTS.len() as f64
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Hand-built calibration where layer 1 transforms the stream hard and
+    /// layer 0 is a near-identity.
+    fn fake_calib(cfg: &ModelConfig, rng: &mut Rng) -> Calibration {
+        let rows = 40;
+        let d = cfg.d_model;
+        let x0 = Tensor::randn(vec![rows, d], rng);
+        let x1 = x0.add(&Tensor::randn(vec![rows, d], rng).scale(0.01));
+        let x2 = Tensor::randn(vec![rows, d], rng); // decorrelated
+        let x3 = x2.add(&Tensor::randn(vec![rows, d], rng).scale(0.01));
+        let mut mk = |dim: usize| {
+            (0..cfg.n_layers)
+                .map(|_| Tensor::randn(vec![rows, dim], rng))
+                .collect::<Vec<_>>()
+        };
+        let mut grads = std::collections::BTreeMap::new();
+        for name in QUANT_WEIGHTS {
+            grads.insert(name.to_string(),
+                         Tensor::zeros(cfg.weight_dims(name)));
+        }
+        Calibration {
+            resid: vec![x0, x1, x2, x3],
+            x_ln1: mk(d),
+            x_ln2: mk(d),
+            attn_ctx: mk(cfg.n_heads * cfg.d_head),
+            ffn_mid: mk(cfg.d_ffn),
+            grads,
+            loss: 1.0,
+        }
+    }
+
+    #[test]
+    fn lim_detects_transforming_layer() {
+        let cfg = ModelConfig::test_config();
+        let mut rng = Rng::new(31);
+        let calib = fake_calib(&cfg, &mut rng);
+        let s = lim(&cfg, &calib);
+        // layer 1 (x1 -> x2) decorrelates; layers 0 and 2 are identity-ish.
+        assert!(s[1] > s[0] * 5.0, "{s:?}");
+        assert!(s[1] > s[2] * 5.0, "{s:?}");
+    }
+
+    #[test]
+    fn lsaq_detects_semantic_shift() {
+        let cfg = ModelConfig::test_config();
+        let mut rng = Rng::new(32);
+        let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        let calib = fake_calib(&cfg, &mut rng);
+        let s = lsaq(&cfg, &w, &calib);
+        assert!(s[1] > s[0], "{s:?}");
+    }
+
+    #[test]
+    fn compactness_rank_sensitivity() {
+        let mut rng = Rng::new(33);
+        // Full-rank gaussian vs rank-1: compactness must collapse.
+        let full = Tensor::randn(vec![30, 10], &mut rng);
+        let u = rng.normal_vec(30);
+        let v = rng.normal_vec(10);
+        let mut r1 = Tensor::zeros(vec![30, 10]);
+        for i in 0..30 {
+            for j in 0..10 {
+                r1.set(i, j, u[i] as f32 * v[j] as f32);
+            }
+        }
+        assert!(compactness(&full) > 5.0 * compactness(&r1));
+    }
+
+    #[test]
+    fn llm_mq_zero_gradient_zero_score() {
+        let cfg = ModelConfig::test_config();
+        let mut rng = Rng::new(34);
+        let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        let calib = fake_calib(&cfg, &mut rng); // zero grads
+        let s = llm_mq(&cfg, &w, &calib);
+        assert!(s.iter().all(|&x| x.abs() < 1e-12), "{s:?}");
+    }
+}

@@ -1,0 +1,155 @@
+//! Calibration-free baselines (paper App. E.1): MSE, ZD, EWQ, KurtBoost.
+
+use crate::model::{ModelConfig, Weights, QUANT_WEIGHTS};
+use crate::quant::{recon_error, Backend, QuantSpec, DEFAULT_GROUP};
+use crate::tensor::stats;
+use crate::util::pool::parallel_map;
+
+/// MSE (Eq. 15): total ‖W − Ŵ‖²_F over the layer's matrices at the low
+/// bit width (2-bit — the precision a mis-ranked layer would suffer).
+/// Higher = more sensitive.
+pub fn mse(cfg: &ModelConfig, w: &Weights, workers: usize) -> Vec<f64> {
+    parallel_map(cfg.n_layers, workers, |l| {
+        QUANT_WEIGHTS
+            .iter()
+            .map(|name| {
+                let m = w.layer_matrix(name, l);
+                let g = crate::quant::fit_group(m.rows(), DEFAULT_GROUP);
+                recon_error(&m, QuantSpec::new(2, g), Backend::Rtn)
+            })
+            .sum()
+    })
+}
+
+/// ZD (Eqs. 16–17): fraction of weights with z-score strictly above 1.
+/// The paper orients it inversely ("smaller ZD ⇒ higher sensitivity"), so
+/// we negate once here. Statistics are pooled over the whole layer.
+pub fn zd(cfg: &ModelConfig, w: &Weights, workers: usize) -> Vec<f64> {
+    parallel_map(cfg.n_layers, workers, |l| {
+        let mut all: Vec<f32> = Vec::new();
+        for name in QUANT_WEIGHTS {
+            all.extend_from_slice(w.layer_matrix(name, l).data());
+        }
+        let mu = stats::mean(&all);
+        let sd = stats::std_dev(&all).max(1e-12);
+        let frac = all
+            .iter()
+            .filter(|&&x| ((x as f64) - mu) / sd > 1.0)
+            .count() as f64
+            / all.len() as f64;
+        -frac
+    })
+}
+
+/// EWQ (Eqs. 18–19): parameter-weighted softmax entropy of each matrix,
+/// ε = 0.01 inside the log as in the paper. Higher = more sensitive.
+pub fn ewq(cfg: &ModelConfig, w: &Weights, workers: usize) -> Vec<f64> {
+    parallel_map(cfg.n_layers, workers, |l| {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for name in QUANT_WEIGHTS {
+            let m = w.layer_matrix(name, l);
+            let h = stats::softmax_entropy(m.data(), 0.01);
+            num += m.len() as f64 * h;
+            den += m.len() as f64;
+        }
+        num / den
+    })
+}
+
+/// KurtBoost (Eqs. 20–21): layer score = mean raw kurtosis of its
+/// matrices; layers whose adjacent-difference z-score exceeds 3 are
+/// flagged as outliers and force-prioritized during allocation.
+/// Returns (scores, forced layer indices).
+pub fn kurtboost_scores(cfg: &ModelConfig, w: &Weights, workers: usize)
+    -> (Vec<f64>, Vec<usize>) {
+    let scores: Vec<f64> = parallel_map(cfg.n_layers, workers, |l| {
+        let ks: Vec<f64> = QUANT_WEIGHTS
+            .iter()
+            .map(|name| stats::raw_kurtosis(w.layer_matrix(name, l).data()))
+            .collect();
+        ks.iter().sum::<f64>() / ks.len() as f64
+    });
+    // Difference sequence d_l = k_{l+1} − k_l; outliers at |d−μ|/σ > 3.
+    let diffs: Vec<f64> =
+        scores.windows(2).map(|p| p[1] - p[0]).collect();
+    let n = diffs.len().max(1) as f64;
+    let mu = diffs.iter().sum::<f64>() / n;
+    let sd = (diffs.iter().map(|d| (d - mu).powi(2)).sum::<f64>() / n)
+        .sqrt()
+        .max(1e-12);
+    let mut forced = Vec::new();
+    for (i, d) in diffs.iter().enumerate() {
+        if ((d - mu) / sd).abs() > 3.0 {
+            // A jump between layers i and i+1 flags the higher-kurtosis
+            // side as the outlier layer.
+            let flag = if scores[i + 1] > scores[i] { i + 1 } else { i };
+            if !forced.contains(&flag) {
+                forced.push(flag);
+            }
+        }
+    }
+    (scores, forced)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (ModelConfig, Weights) {
+        let cfg = ModelConfig::test_config();
+        let mut rng = Rng::new(21);
+        // layer 2 heavy-tailed
+        let w = Weights::synth(&cfg, &mut rng, &[0.0, 0.0, 5.0], &[]);
+        (cfg, w)
+    }
+
+    #[test]
+    fn mse_flags_wide_range_layers() {
+        let (cfg, w) = setup();
+        let s = mse(&cfg, &w, 1);
+        assert_eq!(s.len(), 3);
+        // Heavy tails stretch the quantization range -> larger 2-bit error.
+        assert!(s[2] > s[0], "{s:?}");
+    }
+
+    #[test]
+    fn kurtboost_ranks_heavy_tail_highest() {
+        let (cfg, w) = setup();
+        let (s, _forced) = kurtboost_scores(&cfg, &w, 1);
+        let top = s.iter().enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0;
+        assert_eq!(top, 2, "{s:?}");
+    }
+
+    #[test]
+    fn zd_negated_orientation() {
+        let (cfg, w) = setup();
+        let s = zd(&cfg, &w, 1);
+        // scores are negations of fractions in [0,1]
+        assert!(s.iter().all(|&x| (-1.0..=0.0).contains(&x)), "{s:?}");
+    }
+
+    #[test]
+    fn ewq_finite_and_layer_shaped() {
+        let (cfg, w) = setup();
+        let s = ewq(&cfg, &w, 1);
+        assert_eq!(s.len(), cfg.n_layers);
+        assert!(s.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn kurtboost_forces_extreme_jump() {
+        // Note: with L layers the max attainable |z| of the adjacent-diff
+        // sequence is ~sqrt(L-2), so the paper's z>3 rule only ever fires
+        // on deep stacks — we test with 24 layers and one violent spike.
+        let cfg = ModelConfig { n_layers: 24, ..ModelConfig::test_config() };
+        let mut rng = Rng::new(22);
+        let mut tb = vec![0.0; 24];
+        tb[13] = 25.0;
+        let w = Weights::synth(&cfg, &mut rng, &tb, &[]);
+        let (_s, forced) = kurtboost_scores(&cfg, &w, 1);
+        assert!(forced.contains(&13), "forced={forced:?}");
+    }
+}

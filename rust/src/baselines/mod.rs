@@ -1,0 +1,109 @@
+//! The paper's comparison layer-sensitivity metrics (Appendix E).
+//!
+//! All scorers return one f64 per layer, oriented so that **higher =
+//! more sensitive = quantize at higher precision** (metrics whose paper
+//! formulation is inverted, e.g. ZD, are negated here once so every
+//! allocation call site is uniform).
+
+pub mod calibrated;
+pub mod free;
+pub mod search;
+pub mod slimllm;
+
+use crate::coordinator::calib::Calibration;
+use crate::model::{ModelConfig, Weights};
+
+/// Every layer-ranking method in the paper's experiments.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Nsds(crate::sensitivity::Ablation),
+    Mse,
+    Ewq,
+    Zd,
+    KurtBoost,
+    Lim,
+    Lsaq,
+    LlmMq,
+    LieQ,
+}
+
+impl Method {
+    pub fn label(self) -> &'static str {
+        use crate::sensitivity::Ablation::*;
+        match self {
+            Method::Nsds(Full) => "NSDS",
+            Method::Nsds(NoNv) => "NSDS w/o NV",
+            Method::Nsds(NoSe) => "NSDS w/o SE",
+            Method::Nsds(NoBeta) => "NSDS w/o beta",
+            Method::Nsds(NoAgg) => "NSDS w/o MAD-Sigmoid & Soft-OR",
+            Method::Mse => "MSE",
+            Method::Ewq => "EWQ",
+            Method::Zd => "ZD",
+            Method::KurtBoost => "KurtBoost",
+            Method::Lim => "LIM",
+            Method::Lsaq => "LSAQ",
+            Method::LlmMq => "LLM-MQ",
+            Method::LieQ => "LieQ",
+        }
+    }
+
+    pub fn needs_calibration(self) -> bool {
+        matches!(self, Method::Lim | Method::Lsaq | Method::LlmMq
+                 | Method::LieQ)
+    }
+
+    /// The calibration-free lineup of Table 1.
+    pub fn table1() -> Vec<Method> {
+        vec![Method::Mse, Method::Ewq, Method::Zd, Method::KurtBoost,
+             Method::Nsds(crate::sensitivity::Ablation::Full)]
+    }
+
+    /// The calibration-based lineup of Fig. 5.
+    pub fn fig5() -> Vec<Method> {
+        vec![Method::Lim, Method::Lsaq, Method::LlmMq, Method::LieQ,
+             Method::Nsds(crate::sensitivity::Ablation::Full)]
+    }
+}
+
+/// Score all layers with a method. `calib`/`init` are required only by the
+/// calibration-based methods (panics otherwise — the coordinator enforces
+/// availability).
+pub fn layer_scores(method: Method, cfg: &ModelConfig, w: &Weights,
+                    calib: Option<&Calibration>, init: Option<&Weights>,
+                    workers: usize) -> Vec<f64> {
+    match method {
+        Method::Nsds(ablation) => {
+            let opts = crate::sensitivity::NsdsOptions {
+                ablation,
+                workers,
+                ..Default::default()
+            };
+            crate::sensitivity::nsds_layer_scores(cfg, w, &opts)
+        }
+        Method::Mse => free::mse(cfg, w, workers),
+        Method::Ewq => free::ewq(cfg, w, workers),
+        Method::Zd => free::zd(cfg, w, workers),
+        Method::KurtBoost => free::kurtboost_scores(cfg, w, workers).0,
+        Method::Lim => calibrated::lim(cfg, calib.expect("LIM needs calib")),
+        Method::Lsaq => calibrated::lsaq(
+            cfg, w, calib.expect("LSAQ needs calib")),
+        Method::LlmMq => calibrated::llm_mq(
+            cfg, w, calib.expect("LLM-MQ needs calib")),
+        Method::LieQ => calibrated::lieq(
+            cfg, w, init.expect("LieQ needs init weights"),
+            calib.expect("LieQ needs calib")),
+    }
+}
+
+/// Bit allocation for a method (KurtBoost adds its outlier-priority rule).
+pub fn allocate(method: Method, cfg: &ModelConfig, w: &Weights,
+                calib: Option<&Calibration>, init: Option<&Weights>,
+                budget: f64, workers: usize) -> Vec<u8> {
+    if method == Method::KurtBoost {
+        let (scores, forced) = free::kurtboost_scores(cfg, w, workers);
+        return crate::allocate::allocate_with_priority(&scores, budget,
+                                                       &forced);
+    }
+    let scores = layer_scores(method, cfg, w, calib, init, workers);
+    crate::allocate::allocate_bits(&scores, budget)
+}

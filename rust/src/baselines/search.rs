@@ -1,0 +1,80 @@
+//! Search-based LMPQ baseline (the family the paper's intro dismisses as
+//! "computationally prohibitive" — HAQ/BP-NAS style, reduced to the
+//! 2-vs-4-bit layer-assignment space).
+//!
+//! Greedy forward selection: start from uniform 2-bit; repeatedly promote
+//! to 4-bit the layer whose promotion lowers evaluated PPL the most,
+//! until the budget's L₄ promotions are spent. Each candidate evaluation
+//! is a *real* quantize+PPL run through the PJRT executor, so the cost is
+//! O(L²) evaluations vs O(0) for criterion-based methods — the
+//! cost/quality trade-off `nsds search-vs-criterion` quantifies.
+
+use anyhow::Result;
+
+use crate::coordinator::Pipeline;
+use crate::quant::Backend;
+
+/// Greedy search result.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    pub bits: Vec<u8>,
+    /// PPL after each greedy promotion (monitoring curve).
+    pub curve: Vec<f64>,
+    /// Number of full quantize+eval calls spent.
+    pub evals: usize,
+}
+
+/// Greedy ΔPPL search under an average-bit budget.
+/// `ppl_batches` controls the fidelity (and cost) of each probe eval.
+pub fn greedy_allocate(p: &Pipeline, model: &str, budget: f64,
+                       backend: Backend, ppl_batches: usize)
+                       -> Result<SearchResult> {
+    let entry = p.entry(model)?;
+    let nl = entry.config.n_layers;
+    let rho = ((budget - 2.0) / 2.0).clamp(0.0, 1.0);
+    let l4 = (rho * nl as f64).round() as usize;
+    let corpora = crate::eval::ppl::load_corpora(&p.man)?;
+
+    let eval_bits = |bits: &[u8], evals: &mut usize| -> Result<f64> {
+        *evals += 1;
+        let qw = p.quantize(model, bits, backend)?;
+        crate::eval::ppl::perplexity(&p.engine, &p.man, entry, &qw,
+                                     &corpora.wiki_like, ppl_batches)
+    };
+
+    let mut bits = vec![2u8; nl];
+    let mut evals = 0usize;
+    let mut curve = vec![eval_bits(&bits, &mut evals)?];
+    for _ in 0..l4 {
+        let mut best: Option<(usize, f64)> = None;
+        for l in 0..nl {
+            if bits[l] == 4 {
+                continue;
+            }
+            let mut cand = bits.clone();
+            cand[l] = 4;
+            let ppl = eval_bits(&cand, &mut evals)?;
+            if best.map(|(_, b)| ppl < b).unwrap_or(true) {
+                best = Some((l, ppl));
+            }
+        }
+        let (l, ppl) = best.expect("budget exceeds layer count");
+        bits[l] = 4;
+        curve.push(ppl);
+    }
+    Ok(SearchResult { bits, curve, evals })
+}
+
+#[cfg(test)]
+mod tests {
+    //! Pure-logic tests; the end-to-end greedy path is exercised by the
+    //! `search_beats_or_matches_criterion` integration test (needs
+    //! artifacts) and the `nsds search-vs-criterion` CLI.
+
+    #[test]
+    fn promotion_count_matches_budget() {
+        // round((b−2)/2·L) promotions at b̄=3, L=8 → 4.
+        let rho = (3.0f64 - 2.0) / 2.0;
+        assert_eq!((rho * 8.0).round() as usize, 4);
+    }
+}

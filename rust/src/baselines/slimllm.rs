@@ -1,0 +1,181 @@
+//! SliM-LLM (App. E.3): salience-driven **group-wise** mixed precision on
+//! a GPTQ substrate — the strongest calibration-based comparator (Fig. 6).
+//!
+//! Salience of element (i,j):  δ ≈ (w_{ij} · ‖x_j‖₂)²  (activation-aware,
+//! like AWQ/SliM). Salience-Determined Bit Allocation: within each weight
+//! matrix, groups (along K) are ranked by mean salience and the top ρ
+//! fraction get 4-bit while the rest get 2-bit, meeting the same average
+//! budget the layer-wise methods get — but *inside every layer* (the
+//! less hardware-friendly scheme the paper contrasts against).
+//! Quantization then runs a GPTQ sweep with the per-group bit widths.
+//!
+//! Simplification vs the original (documented in DESIGN.md): bit ladder is
+//! {2, 4} (not {2, 3}) to match our packing substrate, and group bits are
+//! chosen by salience ranking rather than KL search — the salience
+//! ordering is the paper's own SBA criterion; the KL refinement is noted
+//! as future work.
+
+use crate::model::{ModelConfig, Weights, QUANT_WEIGHTS};
+use crate::quant::{rtn, HessianMap, QuantSpec, QuantizedMatrix};
+use crate::tensor::linalg::spd_inverse;
+use crate::tensor::Tensor;
+
+/// Mean salience per K-group of W [K, N], given per-input-channel
+/// activation norms ‖x_k‖ (length K).
+pub fn group_salience(w: &Tensor, act_norm: &[f32], group: usize)
+    -> Vec<f64> {
+    let (k, n) = (w.rows(), w.cols());
+    assert_eq!(act_norm.len(), k);
+    let ng = k / group;
+    let mut out = vec![0.0f64; ng];
+    for r in 0..k {
+        let a = act_norm[r] as f64;
+        let row = w.row(r);
+        let s: f64 = row.iter().map(|&v| {
+            let d = v as f64 * a;
+            d * d
+        }).sum();
+        out[r / group] += s / (group * n) as f64;
+    }
+    out
+}
+
+/// Per-group bit widths meeting the average budget within one matrix.
+pub fn allocate_group_bits(salience: &[f64], budget: f64) -> Vec<u8> {
+    crate::allocate::allocate_bits(salience, budget)
+}
+
+/// GPTQ sweep with heterogeneous per-group bits.
+pub fn gptq_mixed(w: &Tensor, group: usize, group_bits: &[u8],
+                  hessian: Option<&Tensor>) -> QuantizedMatrix {
+    let (k, n) = (w.rows(), w.cols());
+    assert_eq!(group_bits.len(), k / group);
+    let hinv = hessian
+        .and_then(spd_inverse)
+        .unwrap_or_else(|| {
+            let mut eye = Tensor::zeros(vec![k, k]);
+            for i in 0..k {
+                eye.set(i, i, 1.0);
+            }
+            eye
+        });
+    let mut wr = w.clone();
+    let mut codes = vec![0u8; k * n];
+    let ng = k / group;
+    let mut scale = vec![0.0f32; ng * n];
+    let mut zero = vec![0.0f32; ng * n];
+    for r in 0..k {
+        let gr = r / group;
+        let bits = group_bits[gr];
+        let qmax = ((1u32 << bits) - 1) as f32;
+        if r % group == 0 {
+            let block = wr.rows_range(gr * group, (gr + 1) * group);
+            let (s_blk, z_blk) =
+                rtn::params(&block, QuantSpec::new(bits, group));
+            scale[gr * n..(gr + 1) * n].copy_from_slice(&s_blk);
+            zero[gr * n..(gr + 1) * n].copy_from_slice(&z_blk);
+        }
+        let d = hinv.at(r, r).max(1e-10);
+        let mut err = vec![0.0f32; n];
+        for c in 0..n {
+            let s = scale[gr * n + c];
+            let z = zero[gr * n + c];
+            let v = wr.at(r, c);
+            let q = (v / s + z).round().clamp(0.0, qmax);
+            codes[r * n + c] = q as u8;
+            err[c] = (v - s * (q - z)) / d;
+        }
+        for rr in (r + 1)..k {
+            let hval = hinv.at(rr, r);
+            if hval == 0.0 {
+                continue;
+            }
+            let row = wr.row_mut(rr);
+            for (c, e) in err.iter().enumerate() {
+                row[c] -= hval * e;
+            }
+        }
+    }
+    // spec.bits is nominal (mixed); dequantize only uses scale/zero/codes.
+    QuantizedMatrix { spec: QuantSpec::new(4, group), codes, k, n, scale,
+                      zero }
+}
+
+/// Full SliM-LLM model quantization at an average budget: every layer is
+/// quantized group-wise mixed-precision (no layer ranking involved).
+pub fn quantize_model(cfg: &ModelConfig, w: &Weights,
+                      calib: &crate::coordinator::calib::Calibration,
+                      budget: f64, group: usize) -> Weights {
+    let hessians: HessianMap = calib.hessians(cfg.n_layers);
+    let mut out = w.clone();
+    for l in 0..cfg.n_layers {
+        for name in QUANT_WEIGHTS {
+            let m = w.layer_matrix(name, l);
+            let x = calib.inputs_for(name, l);
+            // per-input-channel L2 norms of the activations
+            let k = m.rows();
+            let mut norms = vec![0.0f32; k];
+            for r in 0..x.rows() {
+                let row = x.row(r);
+                for (c, &v) in row.iter().enumerate() {
+                    norms[c] += v * v;
+                }
+            }
+            for v in norms.iter_mut() {
+                *v = v.sqrt();
+            }
+            let sal = group_salience(&m, &norms, group);
+            let gbits = allocate_group_bits(&sal, budget);
+            let h = hessians.get(&(l, name.to_string()));
+            let q = gptq_mixed(&m, group, &gbits, h);
+            out.set_layer_matrix(name, l, &q.dequantize());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn salience_tracks_activation_norms() {
+        let mut rng = Rng::new(41);
+        let w = Tensor::randn(vec![16, 8], &mut rng);
+        // group 1 (rows 8..16) sees 10x activations
+        let mut norms = vec![1.0f32; 16];
+        for n in norms[8..].iter_mut() {
+            *n = 10.0;
+        }
+        let s = group_salience(&w, &norms, 8);
+        assert!(s[1] > s[0] * 10.0, "{s:?}");
+    }
+
+    #[test]
+    fn mixed_budget_average_is_met() {
+        let sal = vec![0.9, 0.1, 0.5, 0.2];
+        let bits = allocate_group_bits(&sal, 3.0);
+        let avg: f64 =
+            bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64;
+        assert_eq!(avg, 3.0);
+        assert_eq!(bits[0], 4);
+        assert_eq!(bits[2], 4);
+    }
+
+    #[test]
+    fn mixed_gptq_protects_salient_groups() {
+        let mut rng = Rng::new(42);
+        let w = Tensor::randn(vec![32, 8], &mut rng);
+        let gbits = vec![4u8, 2, 4, 2];
+        let q = gptq_mixed(&w, 8, &gbits, None);
+        let d = q.dequantize();
+        let err_group = |g: usize| {
+            let a = w.rows_range(g * 8, (g + 1) * 8);
+            let b = d.rows_range(g * 8, (g + 1) * 8);
+            a.sub(&b).frob_norm()
+        };
+        assert!(err_group(0) < err_group(1), "4-bit group must be cleaner");
+        assert!(err_group(2) < err_group(3));
+    }
+}

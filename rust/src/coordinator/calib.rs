@@ -1,0 +1,210 @@
+//! Calibration data collection (the paper's "128 sequences from Pile" →
+//! our train-corpus sample; DESIGN.md "Substitutions").
+//!
+//! One probe-artifact pass per model yields every activation the
+//! calibration-based baselines and GPTQ need; one grad-artifact pass
+//! yields the loss gradients for LLM-MQ. Collected once and cached by the
+//! coordinator — the quantization experiments themselves stay data-free
+//! for NSDS and the calibration-free baselines.
+
+use anyhow::Result;
+
+use crate::model::Weights;
+use crate::quant::HessianMap;
+use crate::runtime::{Engine, Input, Manifest, ModelEntry};
+use crate::tensor::Tensor;
+
+/// Activations + gradients for one model, from `n_batches` probe batches.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    /// Residual-stream inputs per layer (+ the final residual as the last
+    /// entry): [L+1] tensors of [rows, D].
+    pub resid: Vec<Tensor>,
+    /// RMSNorm'd attention inputs (inputs to wq/wk/wv): [L] × [rows, D].
+    pub x_ln1: Vec<Tensor>,
+    /// RMSNorm'd FFN inputs (inputs to wgate/wup): [L] × [rows, D].
+    pub x_ln2: Vec<Tensor>,
+    /// Attention context (inputs to wo): [L] × [rows, H·dh].
+    pub attn_ctx: Vec<Tensor>,
+    /// FFN intermediates (inputs to wdown): [L] × [rows, F].
+    pub ffn_mid: Vec<Tensor>,
+    /// Loss gradients w.r.t. each stacked quantizable weight.
+    pub grads: std::collections::BTreeMap<String, Tensor>,
+    /// Calibration loss (diagnostic).
+    pub loss: f64,
+}
+
+/// Reorder a probe output [L, B, S, X] into per-layer [B·S, X] tensors.
+fn split_layers(t: &Tensor) -> Vec<Tensor> {
+    let l = t.dims()[0];
+    let rows = t.dims()[1] * t.dims()[2];
+    let x = t.dims()[3];
+    (0..l)
+        .map(|li| t.slice0(li).reshape(vec![rows, x]))
+        .collect()
+}
+
+/// Append rows of `src` onto `dst` (both [_, X]).
+fn append_rows(dst: &mut Tensor, src: &Tensor) {
+    assert_eq!(dst.cols(), src.cols());
+    let mut data = std::mem::replace(dst, Tensor::zeros(vec![0, 0]))
+        .into_data();
+    data.extend_from_slice(src.data());
+    let cols = src.cols();
+    let rows = data.len() / cols;
+    *dst = Tensor::new(data, vec![rows, cols]);
+}
+
+/// Collect calibration activations + gradients.
+/// `n_batches` probe batches of [eval_batch, seq] from the train corpus.
+pub fn collect(engine: &Engine, man: &Manifest, entry: &ModelEntry,
+               weights: &Weights, train: &[i32], n_batches: usize)
+               -> Result<Calibration> {
+    let b = man.eval_batch;
+    let s = entry.config.seq;
+    let l = entry.config.n_layers;
+    let per = b * s;
+
+    let mut resid: Vec<Tensor> = Vec::new();
+    let mut x_ln1: Vec<Tensor> = Vec::new();
+    let mut x_ln2: Vec<Tensor> = Vec::new();
+    let mut attn_ctx: Vec<Tensor> = Vec::new();
+    let mut ffn_mid: Vec<Tensor> = Vec::new();
+
+    let ordered = weights.ordered();
+    for i in 0..n_batches {
+        let chunk = &train[i * per..(i + 1) * per];
+        let mut inputs: Vec<Input> = Vec::with_capacity(13);
+        inputs.push(Input::I32(chunk, vec![b, s]));
+        for t in &ordered {
+            inputs.push(Input::F32(t));
+        }
+        let out = engine.execute(&entry.hlo_probe, &inputs)?;
+        // (logits, resid_in [L,B,S,D], final_resid, x_ln1, x_ln2,
+        //  attn_ctx, ffn_mid)
+        let r_in = split_layers(&out[1]);
+        let fin = out[2].clone().reshape(vec![per, entry.config.d_model]);
+        let l1 = split_layers(&out[3]);
+        let l2 = split_layers(&out[4]);
+        let ctx = split_layers(&out[5]);
+        let mid = split_layers(&out[6]);
+        if i == 0 {
+            resid = r_in;
+            resid.push(fin);
+            x_ln1 = l1;
+            x_ln2 = l2;
+            attn_ctx = ctx;
+            ffn_mid = mid;
+        } else {
+            for (d, sx) in resid.iter_mut().zip(
+                r_in.iter().chain(std::iter::once(&fin))) {
+                append_rows(d, sx);
+            }
+            for (d, sx) in x_ln1.iter_mut().zip(&l1) {
+                append_rows(d, sx);
+            }
+            for (d, sx) in x_ln2.iter_mut().zip(&l2) {
+                append_rows(d, sx);
+            }
+            for (d, sx) in attn_ctx.iter_mut().zip(&ctx) {
+                append_rows(d, sx);
+            }
+            for (d, sx) in ffn_mid.iter_mut().zip(&mid) {
+                append_rows(d, sx);
+            }
+        }
+    }
+    assert_eq!(resid.len(), l + 1);
+
+    // Gradients: one grad-artifact batch (averaging more adds little for
+    // a first-order saliency proxy).
+    let chunk = &train[0..per];
+    let mut inputs: Vec<Input> = Vec::with_capacity(13);
+    inputs.push(Input::I32(chunk, vec![b, s]));
+    for t in &ordered {
+        inputs.push(Input::F32(t));
+    }
+    let gout = engine.execute(&entry.hlo_grad, &inputs)?;
+    let loss = gout[0].data()[0] as f64;
+    let mut grads = std::collections::BTreeMap::new();
+    for (i, name) in crate::model::QUANT_WEIGHTS.iter().enumerate() {
+        grads.insert(name.to_string(), gout[i + 1].clone());
+    }
+
+    Ok(Calibration { resid, x_ln1, x_ln2, attn_ctx, ffn_mid, grads, loss })
+}
+
+impl Calibration {
+    /// Input activations feeding projection `name` at layer `l`.
+    pub fn inputs_for(&self, name: &str, l: usize) -> &Tensor {
+        match name {
+            "wq" | "wk" | "wv" => &self.x_ln1[l],
+            "wo" => &self.attn_ctx[l],
+            "wgate" | "wup" => &self.x_ln2[l],
+            "wdown" => &self.ffn_mid[l],
+            _ => panic!("no calibration inputs for {name}"),
+        }
+    }
+
+    /// GPTQ Hessians for every (layer, projection).
+    pub fn hessians(&self, n_layers: usize) -> HessianMap {
+        let mut map = HessianMap::new();
+        for l in 0..n_layers {
+            for name in crate::model::QUANT_WEIGHTS {
+                let x = self.inputs_for(name, l);
+                map.insert(
+                    (l, name.to_string()),
+                    crate::quant::gptq::hessian_from_inputs(x),
+                );
+            }
+        }
+        map
+    }
+
+    /// Row-subsampled copy of a [rows, X] activation (for SVD-heavy
+    /// baselines like LieQ).
+    pub fn subsample(x: &Tensor, max_rows: usize) -> Tensor {
+        let rows = x.rows();
+        if rows <= max_rows {
+            return x.clone();
+        }
+        let stride = rows / max_rows;
+        let mut out = Vec::with_capacity(max_rows * x.cols());
+        for r in 0..max_rows {
+            out.extend_from_slice(x.row(r * stride));
+        }
+        Tensor::new(out, vec![max_rows, x.cols()])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_layers_shapes() {
+        let t = Tensor::new((0..2 * 3 * 4 * 5).map(|x| x as f32).collect(),
+                            vec![2, 3, 4, 5]);
+        let v = split_layers(&t);
+        assert_eq!(v.len(), 2);
+        assert_eq!(v[0].dims(), &[12, 5]);
+        assert_eq!(v[1].at(0, 0), 60.0);
+    }
+
+    #[test]
+    fn append_rows_concatenates() {
+        let mut a = Tensor::new(vec![1.0, 2.0], vec![1, 2]);
+        let b = Tensor::new(vec![3.0, 4.0, 5.0, 6.0], vec![2, 2]);
+        append_rows(&mut a, &b);
+        assert_eq!(a.dims(), &[3, 2]);
+        assert_eq!(a.data(), &[1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn subsample_strides() {
+        let x = Tensor::new((0..20).map(|v| v as f32).collect(), vec![10, 2]);
+        let s = Calibration::subsample(&x, 5);
+        assert_eq!(s.dims(), &[5, 2]);
+        assert_eq!(s.at(1, 0), 4.0); // stride 2
+    }
+}

@@ -1,0 +1,250 @@
+//! L3 coordinator: the deployable pipeline tying everything together.
+//!
+//! `Pipeline` owns the PJRT engine, the artifact manifest, and per-model
+//! caches (FP weights, init weights, calibration activations, method
+//! scores). Experiment drivers (`report::paper`) ask it for
+//! (method × model × budget × backend) runs; it scores layers in parallel
+//! worker threads, quantizes, and evaluates THROUGH the runtime.
+
+pub mod calib;
+pub mod server;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::baselines::{self, Method};
+use crate::eval::{evaluate, EvalOptions, EvalResult};
+use crate::model::Weights;
+use crate::quant::{Backend, HessianMap, DEFAULT_GROUP};
+use crate::runtime::{Engine, Manifest, ModelEntry};
+use crate::sensitivity::Ablation;
+use crate::util::pool::default_workers;
+
+/// Number of probe batches for calibration (≈ eval_batch × seq × N tokens;
+/// the paper samples 128 × 2048 from Pile — scaled to our corpus).
+pub const CALIB_BATCHES: usize = 4;
+
+pub struct Pipeline {
+    pub engine: Engine,
+    pub man: Manifest,
+    pub workers: usize,
+    weights: Mutex<HashMap<String, Weights>>,
+    init_weights: Mutex<HashMap<String, Weights>>,
+    calib: Mutex<HashMap<String, std::sync::Arc<calib::Calibration>>>,
+    scores: Mutex<HashMap<(String, String), Vec<f64>>>,
+    hessians: Mutex<HashMap<String, std::sync::Arc<HessianMap>>>,
+    fp_eval: Mutex<HashMap<String, EvalResult>>,
+}
+
+impl Pipeline {
+    pub fn new() -> Result<Self> {
+        let dir = Manifest::default_dir();
+        let man = Manifest::load(&dir)?;
+        let engine = Engine::cpu(&dir)?;
+        Ok(Pipeline {
+            engine,
+            man,
+            workers: default_workers(),
+            weights: Mutex::new(HashMap::new()),
+            init_weights: Mutex::new(HashMap::new()),
+            calib: Mutex::new(HashMap::new()),
+            scores: Mutex::new(HashMap::new()),
+            hessians: Mutex::new(HashMap::new()),
+            fp_eval: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn entry(&self, model: &str) -> Result<&ModelEntry> {
+        self.man.model(model)
+    }
+
+    /// FP (trained) weights, cached.
+    pub fn weights(&self, model: &str) -> Result<Weights> {
+        let mut cache = self.weights.lock().unwrap();
+        if let Some(w) = cache.get(model) {
+            return Ok(w.clone());
+        }
+        let entry = self.man.model(model)?;
+        let w = Weights::load(&self.man.dir.join(&entry.weights_file),
+                              &entry.config)?;
+        cache.insert(model.to_string(), w.clone());
+        Ok(w)
+    }
+
+    /// Untrained init weights (LieQ), cached.
+    pub fn init_weights(&self, model: &str) -> Result<Weights> {
+        let mut cache = self.init_weights.lock().unwrap();
+        if let Some(w) = cache.get(model) {
+            return Ok(w.clone());
+        }
+        let entry = self.man.model(model)?;
+        let w = Weights::load(
+            &self.man.dir.join(&entry.init_weights_file), &entry.config)?;
+        cache.insert(model.to_string(), w.clone());
+        Ok(w)
+    }
+
+    /// Calibration activations + grads (probe/grad artifacts), cached.
+    pub fn calibration(&self, model: &str)
+        -> Result<std::sync::Arc<calib::Calibration>> {
+        {
+            let cache = self.calib.lock().unwrap();
+            if let Some(c) = cache.get(model) {
+                return Ok(c.clone());
+            }
+        }
+        let entry = self.man.model(model)?;
+        let w = self.weights(model)?;
+        let corpora = crate::eval::ppl::load_corpora(&self.man)?;
+        let t0 = Instant::now();
+        let c = calib::collect(&self.engine, &self.man, entry, &w,
+                               &corpora.train, CALIB_BATCHES)?;
+        eprintln!("[calib] {model}: {} batches in {:.2}s (loss {:.3})",
+                  CALIB_BATCHES, t0.elapsed().as_secs_f64(), c.loss);
+        let arc = std::sync::Arc::new(c);
+        self.calib.lock().unwrap().insert(model.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// GPTQ Hessians, cached per model.
+    pub fn hessians(&self, model: &str)
+        -> Result<std::sync::Arc<HessianMap>> {
+        {
+            let cache = self.hessians.lock().unwrap();
+            if let Some(h) = cache.get(model) {
+                return Ok(h.clone());
+            }
+        }
+        let entry = self.man.model(model)?;
+        let c = self.calibration(model)?;
+        let h = std::sync::Arc::new(c.hessians(entry.config.n_layers));
+        self.hessians.lock().unwrap().insert(model.to_string(), h.clone());
+        Ok(h)
+    }
+
+    /// Layer sensitivity scores for a method, cached per (method, model).
+    pub fn scores(&self, method: Method, model: &str) -> Result<Vec<f64>> {
+        let key = (method.label().to_string(), model.to_string());
+        {
+            let cache = self.scores.lock().unwrap();
+            if let Some(s) = cache.get(&key) {
+                return Ok(s.clone());
+            }
+        }
+        let entry = self.man.model(model)?;
+        let w = self.weights(model)?;
+        let calib = if method.needs_calibration() {
+            Some(self.calibration(model)?)
+        } else {
+            None
+        };
+        let init = if matches!(method, Method::LieQ) {
+            Some(self.init_weights(model)?)
+        } else {
+            None
+        };
+        let t0 = Instant::now();
+        let s = baselines::layer_scores(
+            method, &entry.config, &w, calib.as_deref(), init.as_ref(),
+            self.workers);
+        eprintln!("[score] {} on {model}: {:.2}s", method.label(),
+                  t0.elapsed().as_secs_f64());
+        self.scores.lock().unwrap().insert(key, s.clone());
+        Ok(s)
+    }
+
+    /// Bit allocation for (method, model, budget).
+    pub fn allocate(&self, method: Method, model: &str, budget: f64)
+        -> Result<Vec<u8>> {
+        let entry = self.man.model(model)?;
+        if method == Method::KurtBoost {
+            // KurtBoost's outlier-priority rule needs the raw pieces.
+            let w = self.weights(model)?;
+            return Ok(baselines::allocate(
+                method, &entry.config, &w, None, None, budget,
+                self.workers));
+        }
+        let scores = self.scores(method, model)?;
+        Ok(crate::allocate::allocate_bits(&scores, budget))
+    }
+
+    /// Quantize the model at an allocation with a backend.
+    pub fn quantize(&self, model: &str, bits: &[u8], backend: Backend)
+        -> Result<Weights> {
+        let entry = self.man.model(model)?;
+        let w = self.weights(model)?;
+        let hess = if backend == Backend::Gptq {
+            Some(self.hessians(model)?)
+        } else {
+            None
+        };
+        Ok(crate::quant::quantize_model(
+            &entry.config, &w, bits, DEFAULT_GROUP, backend,
+            hess.as_deref(), self.workers))
+    }
+
+    /// Evaluate a weight variant (PPL + all tasks) through the runtime.
+    pub fn eval(&self, model: &str, weights: &Weights, opts: &EvalOptions)
+        -> Result<EvalResult> {
+        let entry = self.man.model(model)?;
+        evaluate(&self.engine, &self.man, entry, weights, opts)
+    }
+
+    /// FP16-reference evaluation, cached (every table reports it).
+    pub fn eval_fp(&self, model: &str, opts: &EvalOptions)
+        -> Result<EvalResult> {
+        {
+            let cache = self.fp_eval.lock().unwrap();
+            if let Some(r) = cache.get(model) {
+                return Ok(r.clone());
+            }
+        }
+        let w = self.weights(model)?;
+        let r = self.eval(model, &w, opts)?;
+        self.fp_eval.lock().unwrap().insert(model.to_string(), r.clone());
+        Ok(r)
+    }
+
+    /// One full experimental run: method → allocation → quantize → eval.
+    pub fn run(&self, method: Method, model: &str, budget: f64,
+               backend: Backend, opts: &EvalOptions) -> Result<RunResult> {
+        let t0 = Instant::now();
+        let bits = self.allocate(method, model, budget)?;
+        let qw = self.quantize(model, &bits, backend)?;
+        let t_quant = t0.elapsed().as_secs_f64();
+        let eval = self.eval(model, &qw, opts)?;
+        eprintln!(
+            "[run] {} {model} b̄={budget} {}: quant {:.1}s eval {:.1}s \
+             avg-acc {:.2} avg-ppl {:.3}",
+            method.label(), backend.label(), t_quant,
+            t0.elapsed().as_secs_f64() - t_quant, eval.avg_acc(),
+            eval.avg_ppl());
+        Ok(RunResult { bits, eval })
+    }
+
+    /// SliM-LLM run (group-wise, no layer ranking).
+    pub fn run_slim(&self, model: &str, budget: f64, opts: &EvalOptions)
+        -> Result<RunResult> {
+        let entry = self.man.model(model)?;
+        let w = self.weights(model)?;
+        let c = self.calibration(model)?;
+        let qw = crate::baselines::slimllm::quantize_model(
+            &entry.config, &w, &c, budget, DEFAULT_GROUP);
+        let eval = self.eval(model, &qw, opts)?;
+        Ok(RunResult { bits: vec![], eval })
+    }
+
+    /// NSDS ablation helper.
+    pub fn nsds(ablation: Ablation) -> Method {
+        Method::Nsds(ablation)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub bits: Vec<u8>,
+    pub eval: EvalResult,
+}

@@ -1,0 +1,227 @@
+//! Serving front-end: a dynamic batcher over the weight-swappable PJRT
+//! executor — the vLLM-router-shaped piece of the L3 coordinator.
+//!
+//! Requests (token windows wanting NLL scores) arrive on a bounded queue
+//! from any number of client threads; the *engine thread* (PJRT handles
+//! are not `Send` — the client wraps an `Rc` internally) runs
+//! `Server::serve`, packing requests into the executable's fixed
+//! [eval_batch, seq] shape (padding the tail), executing, and resolving
+//! per-request replies. Backpressure: submitters block while the queue
+//! is at `max_queue`.
+//!
+//! Weight swap is a queued control message, so deploying a new quantized
+//! variant is ordered with respect to in-flight requests and requires NO
+//! recompilation (weights are runtime inputs of the AOT executable).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::Result;
+
+use crate::eval::ppl::batch_nll;
+use crate::model::Weights;
+use crate::runtime::{run_forward, Engine, ModelEntry};
+
+enum Msg {
+    Infer(Request),
+    Swap(Box<Weights>),
+    Stop,
+}
+
+struct Request {
+    tokens: Vec<i32>,
+    reply: std::sync::mpsc::Sender<(f64, usize)>,
+}
+
+/// Shared queue + stats between clients and the engine thread.
+pub struct ServerQueue {
+    queue: Mutex<VecDeque<Msg>>,
+    cv: Condvar,
+    max_queue: usize,
+    stopped: AtomicBool,
+    pub served: AtomicU64,
+    pub batches: AtomicU64,
+    pub padded_rows: AtomicU64,
+}
+
+impl ServerQueue {
+    pub fn new(max_queue: usize) -> Arc<Self> {
+        Arc::new(ServerQueue {
+            queue: Mutex::new(VecDeque::new()),
+            cv: Condvar::new(),
+            max_queue,
+            stopped: AtomicBool::new(false),
+            served: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            padded_rows: AtomicU64::new(0),
+        })
+    }
+
+    fn push(&self, msg: Msg) {
+        let mut q = self.queue.lock().unwrap();
+        // Control messages bypass backpressure; inference respects it.
+        if matches!(msg, Msg::Infer(_)) {
+            while q.len() >= self.max_queue {
+                q = self.cv.wait(q).unwrap();
+            }
+        }
+        q.push_back(msg);
+        drop(q);
+        self.cv.notify_all();
+    }
+
+    pub fn stats(&self) -> (u64, u64, u64) {
+        (
+            self.served.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.padded_rows.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Client handle (clone freely across threads).
+#[derive(Clone)]
+pub struct Client {
+    q: Arc<ServerQueue>,
+    seq: usize,
+}
+
+impl Client {
+    pub fn new(q: Arc<ServerQueue>, seq: usize) -> Self {
+        Client { q, seq }
+    }
+
+    /// Submit one sequence; blocks under backpressure. Returns the reply
+    /// channel for (sum NLL over next-token predictions, count).
+    pub fn submit(&self, tokens: Vec<i32>)
+        -> Result<std::sync::mpsc::Receiver<(f64, usize)>> {
+        anyhow::ensure!(tokens.len() == self.seq,
+                        "request must be exactly seq={} tokens", self.seq);
+        anyhow::ensure!(!self.q.stopped.load(Ordering::Acquire),
+                        "server stopped");
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.q.push(Msg::Infer(Request { tokens, reply: tx }));
+        Ok(rx)
+    }
+
+    /// Submit and wait.
+    pub fn nll(&self, tokens: Vec<i32>) -> Result<(f64, usize)> {
+        let rx = self.submit(tokens)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))
+    }
+
+    /// Queue a zero-downtime weight swap (ordered with inference).
+    pub fn swap_weights(&self, w: Weights) {
+        self.q.push(Msg::Swap(Box::new(w)));
+    }
+
+    /// Ask the serve loop to exit once the queue drains to this message.
+    pub fn stop(&self) {
+        self.q.push(Msg::Stop);
+    }
+}
+
+/// Run the batching serve loop on the thread that owns the PJRT engine.
+/// Returns when a `Stop` message is consumed.
+pub fn serve(engine: &Engine, entry: &ModelEntry, batch: usize,
+             mut weights: Weights, q: &ServerQueue) -> Result<()> {
+    let seq = entry.config.seq;
+    let v = entry.config.vocab;
+    loop {
+        // Collect up to `batch` inference requests; handle control
+        // messages inline (they are ordered barriers).
+        let mut reqs: Vec<Request> = Vec::with_capacity(batch);
+        let mut stop = false;
+        {
+            let mut guard = q.queue.lock().unwrap();
+            while guard.is_empty() {
+                guard = q.cv.wait(guard).unwrap();
+            }
+            while reqs.len() < batch {
+                match guard.pop_front() {
+                    Some(Msg::Infer(r)) => reqs.push(r),
+                    Some(Msg::Swap(w)) => {
+                        if reqs.is_empty() {
+                            weights = *w;
+                        } else {
+                            // Keep ordering: put it back, flush batch first.
+                            guard.push_front(Msg::Swap(w));
+                            break;
+                        }
+                    }
+                    Some(Msg::Stop) => {
+                        stop = true;
+                        break;
+                    }
+                    None => break,
+                }
+            }
+        }
+        q.cv.notify_all(); // wake submitters blocked on backpressure
+        if !reqs.is_empty() {
+            let rows = reqs.len();
+            let mut tokens = vec![0i32; batch * seq];
+            for (i, r) in reqs.iter().enumerate() {
+                tokens[i * seq..(i + 1) * seq].copy_from_slice(&r.tokens);
+            }
+            let logits = run_forward(engine, entry, &tokens, batch,
+                                     &weights)?;
+            q.batches.fetch_add(1, Ordering::Relaxed);
+            q.padded_rows
+                .fetch_add((batch - rows) as u64, Ordering::Relaxed);
+            for (i, r) in reqs.into_iter().enumerate() {
+                let row = crate::tensor::Tensor::new(
+                    logits.data()[i * seq * v..(i + 1) * seq * v].to_vec(),
+                    vec![1, seq, v],
+                );
+                let res = batch_nll(&row, &r.tokens, 1, seq);
+                q.served.fetch_add(1, Ordering::Relaxed);
+                let _ = r.reply.send(res);
+            }
+        }
+        if stop {
+            q.stopped.store(true, Ordering::Release);
+            q.cv.notify_all();
+            return Ok(());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_backpressure_blocks_then_releases() {
+        let q = ServerQueue::new(2);
+        let c = Client::new(q.clone(), 4);
+        let _r1 = c.submit(vec![0; 4]).unwrap();
+        let _r2 = c.submit(vec![0; 4]).unwrap();
+        // Third submit must block until the consumer drains one.
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || {
+            let c2 = Client::new(q2, 4);
+            c2.submit(vec![1; 4]).unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(!t.is_finished(), "submit should be blocked");
+        // Drain one message.
+        {
+            let mut g = q.queue.lock().unwrap();
+            g.pop_front();
+        }
+        q.cv.notify_all();
+        t.join().unwrap();
+        assert_eq!(q.queue.lock().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn control_messages_bypass_backpressure() {
+        let q = ServerQueue::new(1);
+        let c = Client::new(q.clone(), 4);
+        let _r = c.submit(vec![0; 4]).unwrap();
+        c.stop(); // must not block even though the queue is "full"
+        assert_eq!(q.queue.lock().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,84 @@
+//! Evaluation harness: perplexity on the held-out corpora and the six
+//! reasoning tasks, all executed THROUGH the PJRT runtime (the same
+//! artifact a production deployment would serve).
+
+pub mod ppl;
+pub mod tasks;
+
+use anyhow::Result;
+
+use crate::model::Weights;
+use crate::runtime::{Engine, Manifest, ModelEntry};
+
+/// Full evaluation result for one (model, weight-variant).
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    /// (corpus name, perplexity)
+    pub ppl: Vec<(String, f64)>,
+    /// (task name, accuracy %)
+    pub acc: Vec<(String, f64)>,
+}
+
+impl EvalResult {
+    pub fn avg_ppl(&self) -> f64 {
+        self.ppl.iter().map(|(_, p)| p).sum::<f64>()
+            / self.ppl.len().max(1) as f64
+    }
+
+    pub fn avg_acc(&self) -> f64 {
+        self.acc.iter().map(|(_, a)| a).sum::<f64>()
+            / self.acc.len().max(1) as f64
+    }
+
+    pub fn ppl_for(&self, name: &str) -> Option<f64> {
+        self.ppl.iter().find(|(n, _)| n == name).map(|(_, p)| *p)
+    }
+
+    pub fn acc_for(&self, name: &str) -> Option<f64> {
+        self.acc.iter().find(|(n, _)| n == name).map(|(_, a)| *a)
+    }
+}
+
+/// Evaluation workload knobs (the experiment harnesses shrink these for
+/// sweeps; defaults reproduce the headline tables).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalOptions {
+    /// Max eval batches per corpus (each batch = eval_batch × seq tokens).
+    pub max_ppl_batches: usize,
+    /// Max items per reasoning task.
+    pub max_task_items: usize,
+}
+
+impl Default for EvalOptions {
+    fn default() -> Self {
+        EvalOptions { max_ppl_batches: 16, max_task_items: 32 }
+    }
+}
+
+impl EvalOptions {
+    /// Reduced workload for wide parameter sweeps (Fig. 3).
+    pub fn fast() -> Self {
+        EvalOptions { max_ppl_batches: 6, max_task_items: 16 }
+    }
+}
+
+/// Evaluate a weight variant on both corpora and all six tasks.
+pub fn evaluate(engine: &Engine, man: &Manifest, entry: &ModelEntry,
+                weights: &Weights, opts: &EvalOptions) -> Result<EvalResult> {
+    let corpora = ppl::load_corpora(man)?;
+    let mut ppl_rows = Vec::new();
+    for (name, tokens) in [("wikitext2_like", &corpora.wiki_like),
+                           ("c4_like", &corpora.c4_like)] {
+        let p = ppl::perplexity(engine, man, entry, weights, tokens,
+                                opts.max_ppl_batches)?;
+        ppl_rows.push((name.to_string(), p));
+    }
+    let task_set = tasks::load_tasks(man)?;
+    let mut acc_rows = Vec::new();
+    for t in &task_set {
+        let a = tasks::accuracy(engine, man, entry, weights, t,
+                                opts.max_task_items)?;
+        acc_rows.push((t.name.clone(), a));
+    }
+    Ok(EvalResult { ppl: ppl_rows, acc: acc_rows })
+}

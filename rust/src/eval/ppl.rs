@@ -1,0 +1,114 @@
+//! Perplexity evaluation through the PJRT forward executable.
+//!
+//! The corpus is cut into non-overlapping [batch, seq] windows; the model
+//! executable returns logits and rust computes next-token NLL with a
+//! numerically stable log-softmax. exp(mean NLL) is the reported PPL —
+//! the same protocol as the paper's WikiText-2 / C4 numbers.
+
+use anyhow::Result;
+
+use crate::model::Weights;
+use crate::runtime::{run_forward, Engine, Manifest, ModelEntry};
+use crate::tensor::Tensor;
+use crate::util::tz;
+
+pub struct Corpora {
+    pub train: Vec<i32>,
+    pub wiki_like: Vec<i32>,
+    pub c4_like: Vec<i32>,
+}
+
+pub fn load_corpora(man: &Manifest) -> Result<Corpora> {
+    let raw = tz::read_tz(&man.dir.join(&man.corpus_file))?;
+    let get = |k: &str| -> Result<Vec<i32>> {
+        Ok(raw[k].as_i32()?.1.to_vec())
+    };
+    Ok(Corpora {
+        train: get("train")?,
+        wiki_like: get("wiki_like")?,
+        c4_like: get("c4_like")?,
+    })
+}
+
+/// Sum NLL + predicted-token count for one logits batch.
+/// logits [B, S, V] predicting tokens[b, s+1].
+pub fn batch_nll(logits: &Tensor, tokens: &[i32], b: usize, s: usize)
+    -> (f64, usize) {
+    let v = logits.dims()[2];
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for bi in 0..b {
+        for si in 0..s - 1 {
+            let row = &logits.data()
+                [(bi * s + si) * v..(bi * s + si + 1) * v];
+            let target = tokens[bi * s + si + 1] as usize;
+            nll -= log_softmax_at(row, target);
+            count += 1;
+        }
+    }
+    (nll, count)
+}
+
+/// log p(target) under a stable log-softmax of `row`.
+pub fn log_softmax_at(row: &[f32], target: usize) -> f64 {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+    let lse: f64 = row.iter().map(|&x| ((x as f64) - mx).exp()).sum();
+    (row[target] as f64 - mx) - lse.ln()
+}
+
+/// Perplexity of `weights` on a token stream, using at most `max_batches`
+/// non-overlapping [eval_batch, seq] windows.
+pub fn perplexity(engine: &Engine, man: &Manifest, entry: &ModelEntry,
+                  weights: &Weights, tokens: &[i32], max_batches: usize)
+                  -> Result<f64> {
+    let b = man.eval_batch;
+    let s = entry.config.seq;
+    let per = b * s;
+    let n_batches = (tokens.len() / per).min(max_batches).max(1);
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for i in 0..n_batches {
+        let chunk = &tokens[i * per..(i + 1) * per];
+        let logits = run_forward(engine, entry, chunk, b, weights)?;
+        let (n, c) = batch_nll(&logits, chunk, b, s);
+        nll += n;
+        count += c;
+    }
+    Ok((nll / count as f64).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_softmax_sums_to_one() {
+        let row = vec![1.0f32, 2.0, 3.0, -1.0];
+        let total: f64 = (0..4).map(|t| log_softmax_at(&row, t).exp()).sum();
+        assert!((total - 1.0).abs() < 1e-9, "{total}");
+    }
+
+    #[test]
+    fn batch_nll_counts_predictions() {
+        // B=2, S=3, V=4, uniform logits -> nll = ln 4 per prediction.
+        let logits = Tensor::zeros(vec![2, 3, 4]);
+        let tokens = vec![0, 1, 2, 3, 0, 1];
+        let (nll, n) = batch_nll(&logits, &tokens, 2, 3);
+        assert_eq!(n, 4); // (S-1) per row
+        assert!((nll / n as f64 - 4f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perfect_prediction_zero_nll() {
+        // Put a huge logit on the true next token.
+        let tokens = vec![0, 1, 2, 3];
+        let mut logits = Tensor::zeros(vec![1, 4, 8]);
+        for si in 0..3 {
+            let tgt = tokens[si + 1] as usize;
+            logits.data_mut()[si * 8 + tgt] = 100.0;
+        }
+        let (nll, n) = batch_nll(&logits, &tokens, 1, 4);
+        assert_eq!(n, 3);
+        assert!(nll < 1e-6);
+    }
+}

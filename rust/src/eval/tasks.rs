@@ -1,0 +1,151 @@
+//! Reasoning-task evaluation (the paper's six benchmarks → our six
+//! synthetic analogs; see DESIGN.md "Substitutions").
+//!
+//! Protocol = lm-eval-harness choice scoring: for each item, score every
+//! choice continuation by its length-normalized log-likelihood given the
+//! prompt, predict the argmax, report accuracy. All forwards go through
+//! the PJRT executable in batches of `eval_batch` rows.
+
+use anyhow::{Context, Result};
+
+use crate::eval::ppl::log_softmax_at;
+use crate::model::Weights;
+use crate::runtime::{run_forward, Engine, Manifest, ModelEntry};
+use crate::util::tz;
+
+#[derive(Clone, Debug)]
+pub struct TaskData {
+    pub name: String,
+    pub k: usize,
+    /// [n·k, seq] zero-padded prompt+choice token rows.
+    pub tokens: Vec<i32>,
+    pub seq: usize,
+    pub prompt_len: Vec<i32>,
+    pub total_len: Vec<i32>,
+    pub gold: Vec<i32>,
+}
+
+pub fn load_tasks(man: &Manifest) -> Result<Vec<TaskData>> {
+    let raw = tz::read_tz(&man.dir.join(&man.tasks_file))?;
+    man.tasks
+        .iter()
+        .map(|meta| {
+            let get = |suffix: &str| -> Result<(Vec<usize>, Vec<i32>)> {
+                let t = raw
+                    .get(&format!("{}.{suffix}", meta.name))
+                    .with_context(|| format!("{}.{suffix}", meta.name))?;
+                let (dims, data) = t.as_i32()?;
+                Ok((dims.to_vec(), data.to_vec()))
+            };
+            let (tdims, tokens) = get("tokens")?;
+            Ok(TaskData {
+                name: meta.name.clone(),
+                k: meta.k,
+                seq: tdims[1],
+                tokens,
+                prompt_len: get("prompt_len")?.1,
+                total_len: get("total_len")?.1,
+                gold: get("gold")?.1,
+            })
+        })
+        .collect()
+}
+
+/// Length-normalized continuation log-likelihood of row `r` given logits.
+fn row_score(logits_row: &[f32], tokens_row: &[i32], v: usize,
+             prompt_len: usize, total_len: usize) -> f64 {
+    let mut lp = 0.0f64;
+    let mut n = 0usize;
+    // predict tokens at positions prompt_len..total_len from the logits at
+    // the preceding position.
+    for pos in prompt_len..total_len {
+        let prev = pos - 1;
+        let row = &logits_row[prev * v..(prev + 1) * v];
+        lp += log_softmax_at(row, tokens_row[pos] as usize);
+        n += 1;
+    }
+    if n == 0 {
+        f64::NEG_INFINITY
+    } else {
+        lp / n as f64
+    }
+}
+
+/// Accuracy (%) of `weights` on one task, using at most `max_items` items.
+pub fn accuracy(engine: &Engine, man: &Manifest, entry: &ModelEntry,
+                weights: &Weights, task: &TaskData, max_items: usize)
+                -> Result<f64> {
+    let b = man.eval_batch;
+    let s = task.seq;
+    assert_eq!(s, entry.config.seq, "task/model seq mismatch");
+    let v = entry.config.vocab;
+    let n_items = task.gold.len().min(max_items);
+    let n_rows = n_items * task.k;
+
+    // Score all rows in eval_batch-sized chunks (zero-pad the tail).
+    let mut scores = vec![0.0f64; n_rows];
+    let mut r0 = 0usize;
+    while r0 < n_rows {
+        let rows = (n_rows - r0).min(b);
+        let mut chunk = vec![0i32; b * s];
+        chunk[..rows * s].copy_from_slice(
+            &task.tokens[r0 * s..(r0 + rows) * s]);
+        let logits = run_forward(engine, entry, &chunk, b, weights)?;
+        for r in 0..rows {
+            let gi = r0 + r;
+            scores[gi] = row_score(
+                &logits.data()[r * s * v..(r + 1) * s * v],
+                &task.tokens[gi * s..(gi + 1) * s],
+                v,
+                task.prompt_len[gi] as usize,
+                task.total_len[gi] as usize,
+            );
+        }
+        r0 += rows;
+    }
+
+    let mut correct = 0usize;
+    for i in 0..n_items {
+        let base = i * task.k;
+        let pred = (0..task.k)
+            .max_by(|&a, &b| {
+                scores[base + a].total_cmp(&scores[base + b])
+            })
+            .unwrap();
+        if pred as i32 == task.gold[i] {
+            correct += 1;
+        }
+    }
+    Ok(100.0 * correct as f64 / n_items as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_score_prefers_likely_continuation() {
+        // V=4, seq=4, prompt_len=2, total=4. Continuation tokens: [2, 3].
+        let v = 4;
+        let tokens = vec![0i32, 1, 2, 3];
+        let mut logits = vec![0.0f32; 4 * v];
+        // position 1 predicts token 2; position 2 predicts token 3.
+        logits[v + 2] = 5.0;
+        logits[2 * v + 3] = 5.0;
+        let good = row_score(&logits, &tokens, v, 2, 4);
+        let bad_tokens = vec![0i32, 1, 0, 0];
+        let bad = row_score(&logits, &bad_tokens, v, 2, 4);
+        assert!(good > bad, "good {good} bad {bad}");
+    }
+
+    #[test]
+    fn length_normalization() {
+        // Same per-token logprob, different lengths -> equal scores.
+        let v = 2;
+        let tokens3 = vec![0i32, 0, 0];
+        let logits = vec![0.0f32; 3 * v];
+        let s2 = row_score(&logits, &tokens3, v, 1, 2);
+        let s3 = row_score(&logits, &tokens3, v, 1, 3);
+        assert!((s2 - s3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,26 @@
+//! NSDS: data-free layer-wise mixed-precision quantization (paper repro).
+//!
+//! Layer map (see DESIGN.md):
+//!   tensor/, util/      — numeric + infra substrates
+//!   model/              — configs, weights, mechanistic decomposition
+//!   sensitivity/, aggregate/, allocate — the paper's NSDS metric
+//!   quant/              — RTN / HQQ / GPTQ backends + bit packing
+//!   baselines/          — the paper's comparison metrics
+//!   runtime/            — PJRT executor over AOT HLO artifacts
+//!   eval/               — perplexity + reasoning-task harness
+//!   coordinator/        — end-to-end pipeline + experiment drivers
+//!   report/             — tables/series for every paper exhibit
+#![allow(clippy::needless_range_loop)]
+
+pub mod aggregate;
+pub mod allocate;
+pub mod baselines;
+pub mod coordinator;
+pub mod eval;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod sensitivity;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,332 @@
+//! `nsds` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   info                          artifact + model zoo summary
+//!   score    --model M [--method X]   per-layer sensitivity scores
+//!   quantize --model M [--budget B] [--method X] [--backend B]
+//!                                 allocate + quantize + evaluate one run
+//!   eval     --model M            FP reference evaluation
+//!   sweep    --model M [--fast]   budget sweep for one model
+//!   paper    <table1|table2|fig1|fig3|fig4|fig5|fig6|fig7|all> [--fast]
+//!                                 regenerate a paper exhibit
+//!   serve-demo                    packed 2/4-bit Pallas kernel serving demo
+//!
+//! (clap is unreachable offline; argument parsing is hand-rolled — see
+//! DESIGN.md "Environment deviations".)
+
+use anyhow::{bail, Result};
+
+use nsds::baselines::Method;
+use nsds::coordinator::Pipeline;
+use nsds::eval::EvalOptions;
+use nsds::quant::Backend;
+use nsds::sensitivity::Ablation;
+
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Self {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::BTreeMap::new();
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let val = if i + 1 < argv.len()
+                    && !argv[i + 1].starts_with("--")
+                {
+                    i += 1;
+                    argv[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(name.to_string(), val);
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn model(&self) -> &str {
+        self.get("model").unwrap_or("llama-s")
+    }
+
+    fn budget(&self) -> f64 {
+        self.get("budget").and_then(|s| s.parse().ok()).unwrap_or(3.0)
+    }
+
+    fn backend(&self) -> Result<Backend> {
+        Ok(match self.get("backend").unwrap_or("hqq") {
+            "hqq" => Backend::Hqq,
+            "gptq" => Backend::Gptq,
+            "rtn" => Backend::Rtn,
+            other => bail!("unknown backend {other}"),
+        })
+    }
+
+    fn method(&self) -> Result<Method> {
+        Ok(match self.get("method").unwrap_or("nsds") {
+            "nsds" => Method::Nsds(Ablation::Full),
+            "mse" => Method::Mse,
+            "ewq" => Method::Ewq,
+            "zd" => Method::Zd,
+            "kurtboost" => Method::KurtBoost,
+            "lim" => Method::Lim,
+            "lsaq" => Method::Lsaq,
+            "llm-mq" => Method::LlmMq,
+            "lieq" => Method::LieQ,
+            other => bail!("unknown method {other}"),
+        })
+    }
+
+    fn eval_opts(&self) -> EvalOptions {
+        if self.get("fast").is_some() {
+            EvalOptions::fast()
+        } else {
+            EvalOptions::default()
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => info(),
+        "score" => score(&args),
+        "quantize" => quantize(&args),
+        "eval" => eval_fp(&args),
+        "sweep" => sweep(&args),
+        "paper" => paper(&args),
+        "search-vs-criterion" => search_vs_criterion(&args),
+        "serve-demo" => serve_demo(),
+        _ => {
+            print!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+nsds — data-free layer-wise mixed-precision quantization (paper repro)
+
+USAGE: nsds <command> [flags]
+
+COMMANDS:
+  info                              artifact + model zoo summary
+  score    --model M [--method X]   per-layer sensitivity scores
+  quantize --model M [--budget B] [--method X] [--backend hqq|gptq|rtn]
+  eval     --model M                FP reference evaluation
+  sweep    --model M [--fast]       budget sweep (one model, all methods)
+  paper    <exhibit> [--fast]       table1 table2 fig1 fig3 fig4 fig5
+                                    fig6 fig7 | all
+  serve-demo                        packed 2/4-bit Pallas kernel demo
+  search-vs-criterion --model M     greedy search-based LMPQ vs NSDS
+
+METHODS: nsds mse ewq zd kurtboost lim lsaq llm-mq lieq
+";
+
+fn info() -> Result<()> {
+    let p = Pipeline::new()?;
+    println!("platform: {}", p.engine.platform());
+    println!("artifacts: {:?}", p.man.dir);
+    println!("eval batch: {}", p.man.eval_batch);
+    for m in &p.man.models {
+        let c = &m.config;
+        let final_loss =
+            m.train_log.last().map(|(_, l)| *l).unwrap_or(f64::NAN);
+        println!(
+            "  {:8} L={:2} d={} H={}/{} ffn={} vocab={} params={} \
+             train-loss={:.3}",
+            m.name, c.n_layers, c.d_model, c.n_heads, c.n_kv, c.d_ffn,
+            c.vocab, m.params, final_loss);
+    }
+    for t in &p.man.tasks {
+        println!("  task {:12} k={} n={}", t.name, t.k, t.n);
+    }
+    Ok(())
+}
+
+fn score(args: &Args) -> Result<()> {
+    let p = Pipeline::new()?;
+    let method = args.method()?;
+    let model = args.model();
+    let scores = p.scores(method, model)?;
+    let bits = p.allocate(method, model, args.budget())?;
+    println!("{} scores on {model} (b̄={}):", method.label(),
+             args.budget());
+    for (l, (s, b)) in scores.iter().zip(&bits).enumerate() {
+        println!("  layer {l:2}  score {s:>9.4}  -> {b}-bit  {}",
+                 "#".repeat((s.abs() * 30.0).min(60.0) as usize));
+    }
+    Ok(())
+}
+
+fn quantize(args: &Args) -> Result<()> {
+    let p = Pipeline::new()?;
+    let r = p.run(args.method()?, args.model(), args.budget(),
+                  args.backend()?, &args.eval_opts())?;
+    println!("allocation: {:?}", r.bits);
+    print_eval(&r.eval);
+    Ok(())
+}
+
+fn eval_fp(args: &Args) -> Result<()> {
+    let p = Pipeline::new()?;
+    let r = p.eval_fp(args.model(), &args.eval_opts())?;
+    print_eval(&r);
+    Ok(())
+}
+
+fn print_eval(r: &nsds::eval::EvalResult) {
+    for (name, ppl) in &r.ppl {
+        println!("  ppl  {name:16} {ppl:.3}");
+    }
+    for (name, acc) in &r.acc {
+        println!("  acc  {name:16} {acc:.2}%");
+    }
+    println!("  avg acc {:.2}%   avg ppl {:.3}", r.avg_acc(), r.avg_ppl());
+}
+
+fn sweep(args: &Args) -> Result<()> {
+    let p = Pipeline::new()?;
+    let model = args.model();
+    let opts = args.eval_opts();
+    println!("budget sweep on {model}:");
+    for method in Method::table1() {
+        for b in [2.25, 2.5, 2.75, 3.0, 3.5] {
+            let r = p.run(method, model, b, Backend::Hqq, &opts)?;
+            println!("  {:10} b̄={b:<5} avg-acc {:6.2}%  avg-ppl {:8.3}",
+                     method.label(), r.eval.avg_acc(), r.eval.avg_ppl());
+        }
+    }
+    Ok(())
+}
+
+fn paper(args: &Args) -> Result<()> {
+    let p = Pipeline::new()?;
+    let opts = args.eval_opts();
+    let which = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    use nsds::report::paper as ex;
+    let t0 = std::time::Instant::now();
+    match which {
+        "table1" => ex::table1(&p, &opts)?,
+        "table2" => ex::table2(&p, &opts)?,
+        "fig1" => ex::fig1(&p, &opts)?,
+        "fig3" => ex::fig3(&p, &EvalOptions::fast())?,
+        "fig4" => ex::fig4(&p, &opts)?,
+        "fig5" => ex::fig5(&p, &opts)?,
+        "fig6" => ex::fig6(&p, &opts)?,
+        "fig7" => ex::fig7(&p)?,
+        "all" => {
+            ex::table1(&p, &opts)?;
+            ex::table2(&p, &opts)?;
+            ex::fig1(&p, &opts)?;
+            ex::fig3(&p, &EvalOptions::fast())?;
+            ex::fig4(&p, &opts)?;
+            ex::fig5(&p, &opts)?;
+            ex::fig6(&p, &opts)?;
+            ex::fig7(&p)?;
+        }
+        other => bail!("unknown exhibit {other}"),
+    }
+    eprintln!("[paper {which}] total {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Search-based vs criterion-based LMPQ (the paper's intro trade-off):
+/// greedy ΔPPL search needs O(L²) quantize+eval probes; NSDS needs zero.
+fn search_vs_criterion(args: &Args) -> Result<()> {
+    let p = Pipeline::new()?;
+    let model = args.model();
+    let budget = args.budget();
+    let opts = args.eval_opts();
+    let t0 = std::time::Instant::now();
+    let sr = nsds::baselines::search::greedy_allocate(
+        &p, model, budget, Backend::Hqq, 6)?;
+    let t_search = t0.elapsed().as_secs_f64();
+    let search_eval = {
+        let qw = p.quantize(model, &sr.bits, Backend::Hqq)?;
+        p.eval(model, &qw, &opts)?
+    };
+    let t1 = std::time::Instant::now();
+    let r = p.run(Method::Nsds(Ablation::Full), model, budget,
+                  Backend::Hqq, &opts)?;
+    let t_nsds = t1.elapsed().as_secs_f64();
+    println!("greedy search: bits {:?}", sr.bits);
+    println!("  {} probe evals, {t_search:.1}s;  avg acc {:.2}%  avg ppl \
+              {:.3}", sr.evals, search_eval.avg_acc(),
+             search_eval.avg_ppl());
+    println!("  ppl curve during search: {:?}",
+             sr.curve.iter().map(|x| (x * 1000.0).round() / 1000.0)
+                 .collect::<Vec<_>>());
+    println!("NSDS (criterion): bits {:?}", r.bits);
+    println!("  0 probe evals, {t_nsds:.1}s total;  avg acc {:.2}%  \
+              avg ppl {:.3}", r.eval.avg_acc(), r.eval.avg_ppl());
+    Ok(())
+}
+
+/// Serving-path demo: run the standalone fused dequant-matmul Pallas
+/// kernels on packed weights through PJRT, verify against the rust
+/// dequantize, and report memory savings and latency.
+fn serve_demo() -> Result<()> {
+    use nsds::quant::{pack, rtn, QuantSpec};
+    use nsds::runtime::{Engine, Input, Manifest};
+    use nsds::tensor::Tensor;
+    use nsds::util::rng::Rng;
+
+    let dir = Manifest::default_dir();
+    let man = Manifest::load(&dir)?;
+    let engine = Engine::cpu(&dir)?;
+    let mut rng = Rng::new(123);
+    for k in &man.kernels {
+        if !k.file.starts_with("dequant") {
+            continue;
+        }
+        let w = Tensor::randn(vec![k.k, k.n], &mut rng).scale(0.05);
+        let x = Tensor::randn(vec![k.m, k.k], &mut rng);
+        let spec = QuantSpec::new(k.bits, k.group);
+        let q = rtn::quantize(&w, spec);
+        let packed = pack::pack(&q.codes, k.k, k.n, k.bits);
+        let scale = Tensor::new(q.scale.clone(), vec![k.k / k.group, k.n]);
+        let zero = Tensor::new(q.zero.clone(), vec![k.k / k.group, k.n]);
+        // Warm-up compile, then measure.
+        engine.load(&k.file)?;
+        let t0 = std::time::Instant::now();
+        let reps = 20;
+        let mut out = Vec::new();
+        for _ in 0..reps {
+            out = engine.execute(&k.file, &[
+                Input::F32(&x),
+                Input::U8(&packed,
+                          vec![k.k * k.bits as usize / 8, k.n]),
+                Input::F32(&scale),
+                Input::F32(&zero),
+            ])?;
+        }
+        let dt = t0.elapsed().as_secs_f64() / reps as f64;
+        let wref = q.dequantize();
+        let yref = nsds::tensor::matmul::matmul(&x, &wref);
+        let err = out[0].sub(&yref).frob_norm() / yref.frob_norm();
+        let fp_bytes = k.k * k.n * 4;
+        let q_bytes = pack::packed_bytes(k.k, k.n, k.bits, k.group);
+        println!(
+            "{}: [{}x{}]@{}bit g={}  rel-err {:.2e}  {:.2}ms/call  \
+             weight bytes {} -> {} ({:.1}x smaller)",
+            k.file, k.k, k.n, k.bits, k.group, err, dt * 1e3, fp_bytes,
+            q_bytes, fp_bytes as f64 / q_bytes as f64);
+        anyhow::ensure!(err < 1e-4, "kernel mismatch");
+    }
+    println!("serve-demo OK");
+    Ok(())
+}

@@ -1,0 +1,226 @@
+//! Mechanistic decomposition of a layer into operational components
+//! (paper §2.1, Appendices C & D).
+//!
+//! Per layer the component set is 𝒞 = {QK, OV, up, gate, down}:
+//!   * `W_QK^(h) = W_Q^(h) · W_K^(kv(h))ᵀ`  (Detector) — per attention head,
+//!     with the GQA key head broadcast over its query group (App. D.2);
+//!   * `W_OV^(h) = W_V^(kv(h)) · W_O^(h)`    (Writer)  — `W_O` split into
+//!     per-head row blocks (App. C);
+//!   * `W_up`, `W_gate` (Detectors), `W_down` (Writer) from the SwiGLU FFN
+//!     (App. D.1: the gate is an "informational valve" ⇒ Detector).
+//!
+//! Convention note: weights are stored for the row-vector convention
+//! `y = x · W` (input dim first). The paper writes column-vector algebra;
+//! its "input singular vectors V" are our `Svd.u` columns and its "output
+//! singular vectors U" are our `Svd.v` columns. `Component::input_vectors`
+//! / `output_vectors` below resolve that once so no caller can mix it up.
+
+use crate::tensor::matmul::matmul;
+use crate::tensor::svd::Svd;
+use crate::tensor::Tensor;
+
+use super::{ModelConfig, Weights};
+
+/// Operational role (paper §2.1): Detectors compute attention / activation
+/// patterns; Writers move information into the residual stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Detector,
+    Writer,
+}
+
+/// Component type — MAD-Sigmoid normalization pools raw scores per type
+/// across layers (paper Eq. 10), so the type is part of the identity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum CompKind {
+    Qk,
+    Ov,
+    Up,
+    Gate,
+    Down,
+}
+
+impl CompKind {
+    pub const ALL: [CompKind; 5] =
+        [CompKind::Qk, CompKind::Ov, CompKind::Up, CompKind::Gate,
+         CompKind::Down];
+
+    pub fn role(self) -> Role {
+        match self {
+            CompKind::Qk | CompKind::Up | CompKind::Gate => Role::Detector,
+            CompKind::Ov | CompKind::Down => Role::Writer,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            CompKind::Qk => "QK",
+            CompKind::Ov => "OV",
+            CompKind::Up => "up",
+            CompKind::Gate => "gate",
+            CompKind::Down => "down",
+        }
+    }
+}
+
+/// One concrete weight component of one layer (one head for QK/OV).
+#[derive(Clone, Debug)]
+pub struct Component {
+    pub kind: CompKind,
+    pub layer: usize,
+    /// Head index for QK/OV; 0 for FFN components.
+    pub head: usize,
+    /// The component matrix, row-vector convention [in_dim, out_dim].
+    pub matrix: Tensor,
+}
+
+impl Component {
+    /// Paper's "input singular vectors V" (detection side): columns live in
+    /// the input space. With `y = x·W` and `W = UΣVᵀ` (our Svd), the input
+    /// directions are `u_i` (∈ R^in).
+    pub fn input_vectors<'a>(&self, s: &'a Svd) -> &'a Tensor {
+        let _ = self;
+        &s.u
+    }
+
+    /// Paper's "output singular vectors U" (writing side): columns live in
+    /// the output (residual-stream) space — our `v_i` (∈ R^out).
+    pub fn output_vectors<'a>(&self, s: &'a Svd) -> &'a Tensor {
+        let _ = self;
+        &s.v
+    }
+}
+
+/// Decompose layer `l` into its component list (QK/OV per head + 3 FFN).
+pub fn decompose_layer(cfg: &ModelConfig, w: &Weights, l: usize)
+    -> Vec<Component> {
+    let mut out = Vec::new();
+    let dh = cfg.d_head;
+    let group = cfg.n_heads / cfg.n_kv; // query heads per kv head
+    let wq = w.layer_matrix("wq", l); // [D, H*dh]
+    let wk = w.layer_matrix("wk", l); // [D, KV*dh]
+    let wv = w.layer_matrix("wv", l); // [D, KV*dh]
+    let wo = w.layer_matrix("wo", l); // [H*dh, D]
+    for h in 0..cfg.n_heads {
+        let kv = h / group;
+        let wq_h = wq.cols_range(h * dh, (h + 1) * dh); // [D, dh]
+        let wk_h = wk.cols_range(kv * dh, (kv + 1) * dh); // [D, dh]
+        let wv_h = wv.cols_range(kv * dh, (kv + 1) * dh); // [D, dh]
+        let wo_h = wo.rows_range(h * dh, (h + 1) * dh); // [dh, D]
+        // W_QK^(h) = W_Q^(h) W_K^(h)T : [D, D]
+        let wqk = matmul(&wq_h, &wk_h.transpose());
+        // W_OV^(h) = W_V^(h) W_O^(h) : [D, D]
+        let wov = matmul(&wv_h, &wo_h);
+        out.push(Component { kind: CompKind::Qk, layer: l, head: h,
+                             matrix: wqk });
+        out.push(Component { kind: CompKind::Ov, layer: l, head: h,
+                             matrix: wov });
+    }
+    out.push(Component { kind: CompKind::Up, layer: l, head: 0,
+                         matrix: w.layer_matrix("wup", l) });
+    out.push(Component { kind: CompKind::Gate, layer: l, head: 0,
+                         matrix: w.layer_matrix("wgate", l) });
+    out.push(Component { kind: CompKind::Down, layer: l, head: 0,
+                         matrix: w.layer_matrix("wdown", l) });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn component_counts_and_shapes() {
+        let cfg = ModelConfig::test_config(); // H=4, KV=2, D=16, F=24
+        let mut rng = Rng::new(1);
+        let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        let comps = decompose_layer(&cfg, &w, 0);
+        // 4 QK + 4 OV + up + gate + down
+        assert_eq!(comps.len(), 4 + 4 + 3);
+        for c in &comps {
+            match c.kind {
+                CompKind::Qk | CompKind::Ov => {
+                    assert_eq!(c.matrix.dims(), &[16, 16]);
+                }
+                CompKind::Up | CompKind::Gate => {
+                    assert_eq!(c.matrix.dims(), &[16, 24]);
+                }
+                CompKind::Down => assert_eq!(c.matrix.dims(), &[24, 16]),
+            }
+        }
+    }
+
+    #[test]
+    fn roles_match_paper() {
+        assert_eq!(CompKind::Qk.role(), Role::Detector);
+        assert_eq!(CompKind::Gate.role(), Role::Detector);
+        assert_eq!(CompKind::Up.role(), Role::Detector);
+        assert_eq!(CompKind::Ov.role(), Role::Writer);
+        assert_eq!(CompKind::Down.role(), Role::Writer);
+    }
+
+    #[test]
+    fn gqa_broadcast_shares_kv_heads() {
+        // With H=4, KV=2: heads 0,1 share kv0; heads 2,3 share kv1.
+        let cfg = ModelConfig::test_config();
+        let mut rng = Rng::new(2);
+        let mut w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        // Make wq identical for heads 0 and 1 -> their QK must then be
+        // identical (same kv head), but differ from head 2's.
+        let mut wq = w.layer_matrix("wq", 0);
+        let dh = cfg.d_head;
+        for r in 0..wq.rows() {
+            for c in 0..dh {
+                let v = wq.at(r, c);
+                wq.set(r, dh + c, v);
+            }
+        }
+        w.set_layer_matrix("wq", 0, &wq);
+        let comps = decompose_layer(&cfg, &w, 0);
+        let qk: Vec<&Component> =
+            comps.iter().filter(|c| c.kind == CompKind::Qk).collect();
+        let d01 = qk[0].matrix.sub(&qk[1].matrix).frob_norm();
+        let d02 = qk[0].matrix.sub(&qk[2].matrix).frob_norm();
+        assert!(d01 < 1e-6, "heads sharing kv+q must match: {d01}");
+        assert!(d02 > 1e-3, "distinct heads should differ");
+    }
+
+    #[test]
+    fn attention_equivalence_sum_of_heads() {
+        // Σ_h W_Q^h W_K^hT must equal W_Q W_Kᵀ when H == KV (no GQA).
+        let mut cfg = ModelConfig::test_config();
+        cfg.n_kv = cfg.n_heads;
+        let mut rng = Rng::new(3);
+        let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        let comps = decompose_layer(&cfg, &w, 1);
+        let wq = w.layer_matrix("wq", 1);
+        let wk = w.layer_matrix("wk", 1);
+        let full = matmul(&wq, &wk.transpose());
+        let mut sum = Tensor::zeros(vec![cfg.d_model, cfg.d_model]);
+        for c in comps.iter().filter(|c| c.kind == CompKind::Qk) {
+            sum = sum.add(&c.matrix);
+        }
+        let err = sum.sub(&full).frob_norm() / full.frob_norm();
+        assert!(err < 1e-5, "per-head QK decomposition broken: {err}");
+    }
+
+    #[test]
+    fn ov_equivalence_sum_of_heads() {
+        // Σ_h W_V^h W_O^h == W_V W_O when H == KV.
+        let mut cfg = ModelConfig::test_config();
+        cfg.n_kv = cfg.n_heads;
+        let mut rng = Rng::new(4);
+        let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        let comps = decompose_layer(&cfg, &w, 2);
+        let wv = w.layer_matrix("wv", 2);
+        let wo = w.layer_matrix("wo", 2);
+        let full = matmul(&wv, &wo);
+        let mut sum = Tensor::zeros(vec![cfg.d_model, cfg.d_model]);
+        for c in comps.iter().filter(|c| c.kind == CompKind::Ov) {
+            sum = sum.add(&c.matrix);
+        }
+        let err = sum.sub(&full).frob_norm() / full.frob_norm();
+        assert!(err < 1e-5, "per-head OV decomposition broken: {err}");
+    }
+}

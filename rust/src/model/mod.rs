@@ -1,0 +1,263 @@
+//! Model substrate: configs, the weight store (loaded from `.tz`
+//! artifacts), and synthetic weight generation for unit tests.
+//!
+//! The weight layout mirrors `python/compile/model.py` exactly — stacked
+//! per-layer tensors in the fixed `WEIGHT_NAMES` order that the AOT HLO
+//! executables take as runtime arguments.
+
+pub mod decompose;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::tz;
+
+/// Argument order of every model HLO executable (after the tokens arg).
+pub const WEIGHT_NAMES: [&str; 12] = [
+    "embed", "unembed", "lnf", "wq", "wk", "wv", "wo", "wgate", "wup",
+    "wdown", "ln1", "ln2",
+];
+
+/// The stacked 2-D projection weights that get quantized, layer by layer.
+pub const QUANT_WEIGHTS: [&str; 7] =
+    ["wq", "wk", "wv", "wo", "wgate", "wup", "wdown"];
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    pub n_layers: usize,
+    pub seq: usize,
+}
+
+impl ModelConfig {
+    pub fn from_json(name: &str, j: &Json) -> Result<Self> {
+        let g = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .with_context(|| format!("config key {k}"))
+        };
+        Ok(ModelConfig {
+            name: name.to_string(),
+            vocab: g("vocab")?,
+            d_model: g("d_model")?,
+            n_heads: g("n_heads")?,
+            n_kv: g("n_kv")?,
+            d_head: g("d_head")?,
+            d_ffn: g("d_ffn")?,
+            n_layers: g("n_layers")?,
+            seq: g("seq")?,
+        })
+    }
+
+    /// Tiny config for unit tests (no artifacts needed).
+    pub fn test_config() -> Self {
+        ModelConfig {
+            name: "test".into(),
+            vocab: 32,
+            d_model: 16,
+            n_heads: 4,
+            n_kv: 2,
+            d_head: 4,
+            d_ffn: 24,
+            n_layers: 3,
+            seq: 16,
+        }
+    }
+
+    pub fn weight_dims(&self, name: &str) -> Vec<usize> {
+        let hd = self.n_heads * self.d_head;
+        let kvd = self.n_kv * self.d_head;
+        let l = self.n_layers;
+        match name {
+            "embed" => vec![self.vocab, self.d_model],
+            "unembed" => vec![self.d_model, self.vocab],
+            "lnf" => vec![self.d_model],
+            "wq" => vec![l, self.d_model, hd],
+            "wk" => vec![l, self.d_model, kvd],
+            "wv" => vec![l, self.d_model, kvd],
+            "wo" => vec![l, hd, self.d_model],
+            "wgate" => vec![l, self.d_model, self.d_ffn],
+            "wup" => vec![l, self.d_model, self.d_ffn],
+            "wdown" => vec![l, self.d_ffn, self.d_model],
+            "ln1" | "ln2" => vec![l, self.d_model],
+            _ => panic!("unknown weight {name}"),
+        }
+    }
+
+    pub fn param_count(&self) -> usize {
+        WEIGHT_NAMES
+            .iter()
+            .map(|n| self.weight_dims(n).iter().product::<usize>())
+            .sum()
+    }
+}
+
+/// All weights of one model, keyed by name, in the shared layout.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(path: &Path, cfg: &ModelConfig) -> Result<Self> {
+        let raw = tz::read_tz(path)?;
+        let mut tensors = BTreeMap::new();
+        for name in WEIGHT_NAMES {
+            let t = raw
+                .get(name)
+                .with_context(|| format!("{path:?} missing {name}"))?
+                .as_f32()?
+                .clone();
+            let want = cfg.weight_dims(name);
+            if t.dims() != want.as_slice() {
+                bail!("{name}: dims {:?} != expected {:?}", t.dims(), want);
+            }
+            tensors.insert(name.to_string(), t);
+        }
+        Ok(Weights { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        &self.tensors[name]
+    }
+
+    /// 2-D weight of layer `l` (slices the stacked tensor).
+    pub fn layer_matrix(&self, name: &str, l: usize) -> Tensor {
+        self.tensors[name].slice0(l)
+    }
+
+    pub fn set_layer_matrix(&mut self, name: &str, l: usize, m: &Tensor) {
+        self.tensors.get_mut(name).unwrap().set_slice0(l, m);
+    }
+
+    /// Ordered tensor list for feeding the PJRT executable.
+    pub fn ordered(&self) -> Vec<&Tensor> {
+        WEIGHT_NAMES.iter().map(|n| &self.tensors[*n]).collect()
+    }
+
+    /// Synthetic weights for tests: gaussian with per-layer structure knobs.
+    /// `tail_boost[l]` mixes in heavy-tailed noise (raises kurtosis);
+    /// `rank_frac[l]` < 1 projects FFN weights onto a low-rank subspace
+    /// (lowers structural expressiveness). Both default-safe with empty
+    /// slices.
+    pub fn synth(
+        cfg: &ModelConfig,
+        rng: &mut Rng,
+        tail_boost: &[f64],
+        rank_frac: &[f64],
+    ) -> Self {
+        let mut tensors = BTreeMap::new();
+        for name in WEIGHT_NAMES {
+            let dims = cfg.weight_dims(name);
+            let n: usize = dims.iter().product();
+            let mut t = if name.starts_with("ln") {
+                Tensor::new(vec![1.0; n], dims.clone())
+            } else {
+                let std = 0.05f32;
+                Tensor::new(
+                    (0..n).map(|_| std * rng.normal_f32()).collect(),
+                    dims.clone(),
+                )
+            };
+            // Layer-structured modifications for the stacked projections.
+            if QUANT_WEIGHTS.contains(&name) {
+                for l in 0..cfg.n_layers {
+                    let mut m = t.slice0(l);
+                    if let Some(&tb) = tail_boost.get(l) {
+                        if tb > 0.0 {
+                            // Student-t-ish: scale a random subset up.
+                            let k = (m.len() as f64 * 0.01).max(1.0) as usize;
+                            for _ in 0..k {
+                                let i = rng.below(m.len());
+                                m.data_mut()[i] *= (1.0 + tb * 8.0) as f32;
+                            }
+                        }
+                    }
+                    if let Some(&rf) = rank_frac.get(l) {
+                        if rf < 1.0 && m.dims().len() == 2 {
+                            m = low_rank_project(&m, rf, rng);
+                        }
+                    }
+                    t.set_slice0(l, &m);
+                }
+            }
+            tensors.insert(name.to_string(), t);
+        }
+        Weights { tensors }
+    }
+}
+
+/// Project a matrix onto a random subspace of relative rank `frac`.
+fn low_rank_project(m: &Tensor, frac: f64, rng: &mut Rng) -> Tensor {
+    let (rows, cols) = (m.rows(), m.cols());
+    let r = ((rows.min(cols) as f64 * frac) as usize).max(1);
+    // B = R (rows x r) @ Rᵀ M with R orthonormal-ish gaussian — cheap rank-r.
+    let rmat = Tensor::new(rng.normal_vec(rows * r), vec![rows, r])
+        .scale(1.0 / (rows as f32).sqrt());
+    let proj = crate::tensor::matmul::matmul(&rmat.transpose(), m); // [r, cols]
+    crate::tensor::matmul::matmul(&rmat, &proj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_dims_consistent() {
+        let c = ModelConfig::test_config();
+        assert_eq!(c.weight_dims("wq"), vec![3, 16, 16]);
+        assert_eq!(c.weight_dims("wk"), vec![3, 16, 8]);
+        assert_eq!(c.weight_dims("wdown"), vec![3, 24, 16]);
+        assert!(c.param_count() > 0);
+    }
+
+    #[test]
+    fn synth_layer_roundtrip() {
+        let c = ModelConfig::test_config();
+        let mut rng = Rng::new(0);
+        let mut w = Weights::synth(&c, &mut rng, &[], &[]);
+        let m = w.layer_matrix("wq", 1);
+        assert_eq!(m.dims(), &[16, 16]);
+        let m2 = m.scale(2.0);
+        w.set_layer_matrix("wq", 1, &m2);
+        assert_eq!(w.layer_matrix("wq", 1), m2);
+        // other layers untouched
+        assert_eq!(w.layer_matrix("wq", 0).dims(), &[16, 16]);
+    }
+
+    #[test]
+    fn synth_tail_boost_raises_kurtosis() {
+        let c = ModelConfig::test_config();
+        let mut rng = Rng::new(0);
+        let tb = vec![0.0, 0.0, 3.0];
+        let w = Weights::synth(&c, &mut rng, &tb, &[]);
+        let k0 = crate::tensor::stats::excess_kurtosis(
+            w.layer_matrix("wup", 0).data(),
+        );
+        let k2 = crate::tensor::stats::excess_kurtosis(
+            w.layer_matrix("wup", 2).data(),
+        );
+        assert!(k2 > k0 + 1.0, "k0={k0} k2={k2}");
+    }
+
+    #[test]
+    fn ordered_matches_weight_names() {
+        let c = ModelConfig::test_config();
+        let mut rng = Rng::new(0);
+        let w = Weights::synth(&c, &mut rng, &[], &[]);
+        let o = w.ordered();
+        assert_eq!(o.len(), WEIGHT_NAMES.len());
+        assert_eq!(o[0].dims(), c.weight_dims("embed").as_slice());
+    }
+}

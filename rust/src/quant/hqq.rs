@@ -1,0 +1,159 @@
+//! HQQ — Half-Quadratic Quantization (Badri & Shaji 2023; paper App. F).
+//!
+//! The paper's default calibration-free backend. Fixes the min/max scale
+//! and optimizes the zero-point by minimizing a sparsity-promoting
+//! ℓ_{p<1} norm of the quantization error via half-quadratic splitting:
+//!
+//!   min_{z, Wₑ} φ(Wₑ) + β/2 ‖Wₑ − (W − Q_z⁻¹(Q_z(W)))‖²
+//!
+//! alternating (1) the generalized soft-threshold shrinkage for Wₑ and
+//! (2) the closed-form group-mean update for z, with β annealed upward.
+//! Calibration-free: touches only the weights.
+
+use super::{rtn, QuantSpec, QuantizedMatrix};
+use crate::tensor::Tensor;
+
+#[derive(Clone, Copy, Debug)]
+pub struct HqqOptions {
+    /// ℓ_p exponent (p < 1 models the heavy-tailed error distribution).
+    pub p: f64,
+    /// Initial half-quadratic penalty.
+    pub beta: f64,
+    /// Per-iteration growth of β.
+    pub kappa: f64,
+    pub iters: usize,
+}
+
+impl Default for HqqOptions {
+    fn default() -> Self {
+        HqqOptions { p: 0.7, beta: 10.0, kappa: 1.01, iters: 20 }
+    }
+}
+
+/// Generalized soft-threshold (the prox of the ℓ_p quasi-norm):
+/// shrink(x) = sign(x) · relu(|x| − p·|x|^{p−1} / β).
+#[inline]
+fn shrink(x: f32, p: f64, beta: f64) -> f32 {
+    let ax = x.abs() as f64;
+    if ax < 1e-12 {
+        return 0.0;
+    }
+    let thresh = p * ax.powf(p - 1.0) / beta;
+    let mag = (ax - thresh).max(0.0);
+    (x.signum() as f64 * mag) as f32
+}
+
+/// HQQ quantization of a [K, N] matrix.
+pub fn quantize(w: &Tensor, spec: QuantSpec, opts: &HqqOptions)
+    -> QuantizedMatrix {
+    let (k, n) = (w.rows(), w.cols());
+    let g = spec.group;
+    let ng = k / g;
+    let qmax = spec.qmax();
+    let (scale, mut zero) = rtn::params(w, spec);
+    let mut beta = opts.beta;
+    let wd = w.data();
+
+    // Iterate: codes -> error -> shrink -> zero update, fused into one
+    // pass per iteration (quantize + accumulate together; §Perf).
+    let mut acc = vec![0.0f64; ng * n];
+    for _ in 0..opts.iters {
+        acc.iter_mut().for_each(|a| *a = 0.0);
+        for r in 0..k {
+            let gr = r / g;
+            let srow = &scale[gr * n..(gr + 1) * n];
+            let zrow = &zero[gr * n..(gr + 1) * n];
+            let wrow = &wd[r * n..(r + 1) * n];
+            let arow = &mut acc[gr * n..(gr + 1) * n];
+            for c in 0..n {
+                let s = srow[c];
+                let z = zrow[c];
+                // 1) quantize with current (scale, zero)
+                let q = (wrow[c] / s + z).round().clamp(0.0, qmax);
+                // 2) zero-point contribution:
+                //    z_g = mean_g( q − (w − wₑ)/s ), wₑ = shrink(w − deq).
+                let deq = s * (q - z);
+                let we = shrink(wrow[c] - deq, opts.p, beta);
+                arow[c] += (q as f64) - ((wrow[c] - we) / s) as f64;
+            }
+        }
+        for (zi, a) in zero.iter_mut().zip(&acc) {
+            *zi = (*a / g as f64) as f32;
+        }
+        beta *= opts.kappa;
+    }
+    rtn::quantize_with(w, spec, &scale, &zero)
+}
+
+/// ℓ_p^p error of a quant-dequant reconstruction (the objective HQQ
+/// minimizes; used by the tests to verify it beats RTN).
+pub fn lp_error(w: &Tensor, q: &QuantizedMatrix, p: f64) -> f64 {
+    let d = q.dequantize();
+    w.data()
+        .iter()
+        .zip(d.data())
+        .map(|(a, b)| ((a - b).abs() as f64).powf(p))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_ensure;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    /// Heavy-tailed test matrix: gaussian with sparse large outliers —
+    /// exactly the regime HQQ's ℓ_{p<1} objective targets.
+    fn heavy(rng: &mut Rng, k: usize, n: usize) -> Tensor {
+        let mut t = Tensor::randn(vec![k, n], rng).scale(0.05);
+        let outliers = (k * n / 50).max(1);
+        for _ in 0..outliers {
+            let i = rng.below(k * n);
+            t.data_mut()[i] *= 20.0;
+        }
+        t
+    }
+
+    #[test]
+    fn beats_rtn_on_lp_objective() {
+        check("hqq < rtn (lp)", 8, |rng| {
+            let w = heavy(rng, 64, 16);
+            let spec = QuantSpec::new(2, 16);
+            let q_rtn = rtn::quantize(&w, spec);
+            let q_hqq = quantize(&w, spec, &HqqOptions::default());
+            let e_rtn = lp_error(&w, &q_rtn, 0.7);
+            let e_hqq = lp_error(&w, &q_hqq, 0.7);
+            prop_ensure!(
+                e_hqq <= e_rtn * 1.001,
+                "hqq {e_hqq} vs rtn {e_rtn}"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shrink_is_contraction() {
+        check("shrink", 20, |rng| {
+            let x = (rng.normal() * 3.0) as f32;
+            let y = shrink(x, 0.7, 10.0);
+            prop_ensure!(y.abs() <= x.abs() + 1e-7, "expansion {x}->{y}");
+            prop_ensure!(
+                y == 0.0 || y.signum() == x.signum(),
+                "sign flip"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn codes_in_range_and_deterministic() {
+        let mut rng = Rng::new(9);
+        let w = heavy(&mut rng, 32, 8);
+        let spec = QuantSpec::new(4, 8);
+        let a = quantize(&w, spec, &HqqOptions::default());
+        let b = quantize(&w, spec, &HqqOptions::default());
+        assert_eq!(a.codes, b.codes);
+        assert!(a.codes.iter().all(|&c| c <= 15));
+    }
+}

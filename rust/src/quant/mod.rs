@@ -1,0 +1,197 @@
+//! Weight-only quantization backends (paper §3.1 + App. F): RTN, HQQ
+//! (the default calibration-free backend), GPTQ (the stronger
+//! calibration-based backend of Fig. 6), plus 2/4-bit packing shared with
+//! the Pallas serving kernels.
+//!
+//! Shared convention (identical to `python/compile/kernels/ref.py`):
+//! groups of size `group` along the K (input) axis of a [K, N] weight;
+//! `code = clip(round(w/s + z), 0, 2^b − 1)`, `deq = s·(code − z)`.
+
+pub mod gptq;
+pub mod hqq;
+pub mod pack;
+pub mod rtn;
+
+use crate::model::{ModelConfig, Weights, QUANT_WEIGHTS};
+use crate::tensor::Tensor;
+use crate::util::pool::parallel_map;
+
+/// Quantization spec for one matrix.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantSpec {
+    pub bits: u8,
+    pub group: usize,
+}
+
+impl QuantSpec {
+    pub fn new(bits: u8, group: usize) -> Self {
+        assert!(matches!(bits, 2 | 3 | 4 | 8), "unsupported bits {bits}");
+        QuantSpec { bits, group }
+    }
+
+    pub fn qmax(&self) -> f32 {
+        ((1u32 << self.bits) - 1) as f32
+    }
+}
+
+/// Default group size: divides every K dim in the model zoo (64/96/192/
+/// 256/288) and matches the Pallas kernel constraint (multiple of 4).
+pub const DEFAULT_GROUP: usize = 32;
+
+/// Largest divisor of `k` that is ≤ `want` — lets callers use
+/// DEFAULT_GROUP against arbitrary (e.g. test) matrix shapes.
+pub fn fit_group(k: usize, want: usize) -> usize {
+    let mut g = want.clamp(1, k);
+    while k % g != 0 {
+        g -= 1;
+    }
+    g
+}
+
+/// Quantized representation of one [K, N] matrix.
+#[derive(Clone, Debug)]
+pub struct QuantizedMatrix {
+    pub spec: QuantSpec,
+    /// codes u8 [K, N] (unpacked; `pack::pack` for the serving layout).
+    pub codes: Vec<u8>,
+    pub k: usize,
+    pub n: usize,
+    /// scale/zero per (group, column): [K/group, N].
+    pub scale: Vec<f32>,
+    pub zero: Vec<f32>,
+}
+
+impl QuantizedMatrix {
+    pub fn dequantize(&self) -> Tensor {
+        let (k, n, g) = (self.k, self.n, self.spec.group);
+        let mut out = vec![0.0f32; k * n];
+        for r in 0..k {
+            let gr = r / g;
+            for c in 0..n {
+                let s = self.scale[gr * n + c];
+                let z = self.zero[gr * n + c];
+                out[r * n + c] = s * (self.codes[r * n + c] as f32 - z);
+            }
+        }
+        Tensor::new(out, vec![k, n])
+    }
+
+    /// Bits actually stored per weight element (codes only).
+    pub fn code_bits(&self) -> f64 {
+        self.spec.bits as f64
+    }
+}
+
+/// Backend selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Rtn,
+    Hqq,
+    /// GPTQ needs the Hessian of the layer inputs; without one it falls
+    /// back to RTN behaviour (identity Hessian).
+    Gptq,
+}
+
+impl Backend {
+    pub fn label(self) -> &'static str {
+        match self {
+            Backend::Rtn => "RTN",
+            Backend::Hqq => "HQQ",
+            Backend::Gptq => "GPTQ",
+        }
+    }
+}
+
+/// Quantize one matrix with the chosen backend. `hessian` is only
+/// consulted by GPTQ ([K, K] = XᵀX of that projection's inputs).
+pub fn quantize_matrix(w: &Tensor, spec: QuantSpec, backend: Backend,
+                       hessian: Option<&Tensor>) -> QuantizedMatrix {
+    match backend {
+        Backend::Rtn => rtn::quantize(w, spec),
+        Backend::Hqq => hqq::quantize(w, spec, &hqq::HqqOptions::default()),
+        Backend::Gptq => gptq::quantize(w, spec, hessian),
+    }
+}
+
+/// Hessians for GPTQ, keyed by (layer, weight-name). Built by the
+/// coordinator from probe-artifact activations.
+pub type HessianMap =
+    std::collections::BTreeMap<(usize, String), Tensor>;
+
+/// Quantize-dequantize every projection of every layer at the allocated
+/// bit width, returning a full weight set ready for the PJRT executor.
+/// Embed/unembed/norms stay FP (standard practice, matches the paper's
+/// layer-wise scheme which quantizes transformer blocks).
+pub fn quantize_model(cfg: &ModelConfig, w: &Weights, bits: &[u8],
+                      group: usize, backend: Backend,
+                      hessians: Option<&HessianMap>, workers: usize)
+                      -> Weights {
+    assert_eq!(bits.len(), cfg.n_layers);
+    let jobs: Vec<(usize, &str)> = (0..cfg.n_layers)
+        .flat_map(|l| QUANT_WEIGHTS.iter().map(move |n| (l, *n)))
+        .collect();
+    let done: Vec<(usize, &str, Tensor)> =
+        parallel_map(jobs.len(), workers, |j| {
+            let (l, name) = jobs[j];
+            let m = w.layer_matrix(name, l);
+            let spec = QuantSpec::new(bits[l], group);
+            let h = hessians
+                .and_then(|hm| hm.get(&(l, name.to_string())));
+            let q = quantize_matrix(&m, spec, backend, h);
+            (l, name, q.dequantize())
+        });
+    let mut out = w.clone();
+    for (l, name, dq) in done {
+        out.set_layer_matrix(name, l, &dq);
+    }
+    out
+}
+
+/// Frobenius reconstruction error ‖W − deq(quant(W))‖²_F (MSE baseline
+/// building block and a general diagnostic).
+pub fn recon_error(w: &Tensor, spec: QuantSpec, backend: Backend) -> f64 {
+    let q = quantize_matrix(w, spec, backend, None);
+    let d = q.dequantize();
+    let e = w.sub(&d);
+    e.data().iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn quantize_model_respects_allocation() {
+        let cfg = ModelConfig::test_config();
+        let mut rng = Rng::new(5);
+        let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        let bits = vec![4u8, 2, 4];
+        let qw = quantize_model(&cfg, &w, &bits, 8, Backend::Rtn, None, 1);
+        // 4-bit layers must reconstruct better than 2-bit layers.
+        let err = |l: usize| {
+            let a = w.layer_matrix("wup", l);
+            let b = qw.layer_matrix("wup", l);
+            (a.sub(&b).frob_norm() / a.frob_norm()) as f64
+        };
+        assert!(err(0) < err(1), "4-bit {} vs 2-bit {}", err(0), err(1));
+        assert!(err(2) < err(1));
+        // Non-quantized weights untouched.
+        assert_eq!(qw.get("embed"), w.get("embed"));
+        assert_eq!(qw.get("ln1"), w.get("ln1"));
+    }
+
+    #[test]
+    fn backends_all_produce_valid_codes() {
+        let mut rng = Rng::new(6);
+        let w = Tensor::randn(vec![16, 12], &mut rng);
+        for backend in [Backend::Rtn, Backend::Hqq, Backend::Gptq] {
+            let q = quantize_matrix(&w, QuantSpec::new(2, 8), backend, None);
+            for &c in &q.codes {
+                assert!(c <= 3, "{backend:?} emitted code {c}");
+            }
+            let d = q.dequantize();
+            assert_eq!(d.dims(), w.dims());
+        }
+    }
+}

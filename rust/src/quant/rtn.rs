@@ -1,0 +1,135 @@
+//! Round-to-nearest group-wise affine quantization — the baseline backend
+//! and the starting point HQQ/GPTQ refine. Mirrors `ref.rtn_quantize`.
+
+use super::{QuantSpec, QuantizedMatrix};
+use crate::tensor::Tensor;
+
+/// Min/max affine parameters per (group, column).
+pub fn params(w: &Tensor, spec: QuantSpec) -> (Vec<f32>, Vec<f32>) {
+    let (k, n) = (w.rows(), w.cols());
+    let g = spec.group;
+    assert_eq!(k % g, 0, "group {g} must divide K={k}");
+    let ng = k / g;
+    let qmax = spec.qmax();
+    let mut scale = vec![0.0f32; ng * n];
+    let mut zero = vec![0.0f32; ng * n];
+    for gi in 0..ng {
+        for c in 0..n {
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for r in gi * g..(gi + 1) * g {
+                let v = w.at(r, c);
+                lo = lo.min(v);
+                hi = hi.max(v);
+            }
+            let mut s = (hi - lo) / qmax;
+            if s <= 1e-12 {
+                s = 1.0;
+            }
+            scale[gi * n + c] = s;
+            zero[gi * n + c] = -lo / s;
+        }
+    }
+    (scale, zero)
+}
+
+/// Quantize with given params (shared by HQQ's inner loop).
+pub fn quantize_with(w: &Tensor, spec: QuantSpec, scale: &[f32],
+                     zero: &[f32]) -> QuantizedMatrix {
+    let (k, n) = (w.rows(), w.cols());
+    let g = spec.group;
+    let qmax = spec.qmax();
+    let mut codes = vec![0u8; k * n];
+    for r in 0..k {
+        let gr = r / g;
+        for c in 0..n {
+            let s = scale[gr * n + c];
+            let z = zero[gr * n + c];
+            let q = (w.at(r, c) / s + z).round().clamp(0.0, qmax);
+            codes[r * n + c] = q as u8;
+        }
+    }
+    QuantizedMatrix {
+        spec,
+        codes,
+        k,
+        n,
+        scale: scale.to_vec(),
+        zero: zero.to_vec(),
+    }
+}
+
+/// Full RTN: derive params, then round.
+pub fn quantize(w: &Tensor, spec: QuantSpec) -> QuantizedMatrix {
+    let (scale, zero) = params(w, spec);
+    quantize_with(w, spec, &scale, &zero)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_ensure;
+    use crate::util::prop::check;
+
+    #[test]
+    fn error_bounded_by_half_step() {
+        check("rtn half-step bound", 20, |rng| {
+            let k = 8 * (1 + rng.below(4));
+            let n = 1 + rng.below(12);
+            let w = Tensor::randn(vec![k, n], rng);
+            let spec = QuantSpec::new(4, 8);
+            let q = quantize(&w, spec);
+            let d = q.dequantize();
+            for r in 0..k {
+                let gr = r / 8;
+                for c in 0..n {
+                    let s = q.scale[gr * n + c];
+                    let err = (w.at(r, c) - d.at(r, c)).abs();
+                    prop_ensure!(
+                        err <= 0.5 * s + 1e-6,
+                        "err {err} > s/2 {}",
+                        0.5 * s
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn range_endpoints_exact() {
+        // Group min and max must be representable exactly (codes 0 / qmax).
+        let vals: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let w = Tensor::new(vals, vec![8, 1]);
+        let q = quantize(&w, QuantSpec::new(2, 8));
+        let d = q.dequantize();
+        assert!((d.at(0, 0) - 0.0).abs() < 1e-6);
+        assert!((d.at(7, 0) - 7.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        check("bits monotone", 10, |rng| {
+            let w = Tensor::randn(vec![32, 8], rng);
+            let e2 = crate::quant::recon_error(
+                &w, QuantSpec::new(2, 8), crate::quant::Backend::Rtn);
+            let e4 = crate::quant::recon_error(
+                &w, QuantSpec::new(4, 8), crate::quant::Backend::Rtn);
+            let e8 = crate::quant::recon_error(
+                &w, QuantSpec::new(8, 8), crate::quant::Backend::Rtn);
+            prop_ensure!(e4 < e2, "e4 {e4} !< e2 {e2}");
+            prop_ensure!(e8 < e4, "e8 {e8} !< e4 {e4}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn constant_group_safe() {
+        let w = Tensor::new(vec![2.5; 16], vec![16, 1]);
+        let q = quantize(&w, QuantSpec::new(4, 8));
+        let d = q.dequantize();
+        for v in d.data() {
+            assert!((v - 2.5).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! One harness per paper exhibit (DESIGN.md "Experiment index").
+//! Every function prints the paper's rows/series and writes a TSV under
+//! `results/`. Shapes (who wins, by roughly what factor) are compared to
+//! the paper in EXPERIMENTS.md — absolute numbers differ by design (our
+//! substrate is the synthetic trained model zoo).
+
+use anyhow::Result;
+
+use crate::baselines::Method;
+use crate::coordinator::Pipeline;
+use crate::eval::EvalOptions;
+use crate::quant::Backend;
+use crate::report::{fmt2, fmt3, results_dir, Table};
+use crate::sensitivity::{self, Ablation, NsdsOptions};
+
+pub const SMALL_MODELS: [&str; 2] = ["llama-s", "qwen-s"];
+pub const LARGE_MODELS: [&str; 2] = ["llama-m", "qwen-m"];
+pub const ALL_MODELS: [&str; 4] = ["llama-s", "qwen-s", "llama-m", "qwen-m"];
+pub const BUDGET: f64 = 3.0;
+
+fn task_headers(p: &Pipeline) -> Vec<String> {
+    p.man.tasks.iter().map(|t| t.name.clone()).collect()
+}
+
+/// Table 1: calibration-free methods × all benchmarks on the small models,
+/// b̄ = 3, HQQ backend.
+pub fn table1(p: &Pipeline, opts: &EvalOptions) -> Result<()> {
+    let mut headers = vec!["model".to_string(), "method".to_string()];
+    headers.extend(task_headers(p));
+    headers.push("wikitext2_like".into());
+    headers.push("c4_like".into());
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+
+    for model in SMALL_MODELS {
+        let fp = p.eval_fp(model, opts)?;
+        let mut row = vec![model.to_string(), "FP32".to_string()];
+        row.extend(fp.acc.iter().map(|(_, a)| fmt2(*a)));
+        row.extend(fp.ppl.iter().map(|(_, v)| fmt3(*v)));
+        t.row(row);
+        for method in Method::table1() {
+            let r = p.run(method, model, BUDGET, Backend::Hqq, opts)?;
+            let mut row =
+                vec![model.to_string(), method.label().to_string()];
+            row.extend(r.eval.acc.iter().map(|(_, a)| fmt2(*a)));
+            row.extend(r.eval.ppl.iter().map(|(_, v)| fmt3(*v)));
+            t.row(row);
+        }
+    }
+    println!("\n== Table 1: calibration-free LMPQ @ b̄=3 (HQQ) ==");
+    t.print();
+    t.write_tsv(&results_dir().join("table1.tsv"))?;
+    Ok(())
+}
+
+/// Table 2 (+ detailed Table 3): larger models, avg acc + avg PPL.
+pub fn table2(p: &Pipeline, opts: &EvalOptions) -> Result<()> {
+    let mut headers = vec!["model".to_string(), "method".to_string(),
+                           "avg_acc".to_string(), "avg_ppl".to_string()];
+    headers.extend(task_headers(p));
+    headers.push("wikitext2_like".into());
+    headers.push("c4_like".into());
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+    for model in LARGE_MODELS {
+        let fp = p.eval_fp(model, opts)?;
+        let mut row = vec![model.to_string(), "FP32".into(),
+                           fmt2(fp.avg_acc()), fmt3(fp.avg_ppl())];
+        row.extend(fp.acc.iter().map(|(_, a)| fmt2(*a)));
+        row.extend(fp.ppl.iter().map(|(_, v)| fmt3(*v)));
+        t.row(row);
+        for method in Method::table1() {
+            let r = p.run(method, model, BUDGET, Backend::Hqq, opts)?;
+            let mut row = vec![model.to_string(),
+                               method.label().to_string(),
+                               fmt2(r.eval.avg_acc()),
+                               fmt3(r.eval.avg_ppl())];
+            row.extend(r.eval.acc.iter().map(|(_, a)| fmt2(*a)));
+            row.extend(r.eval.ppl.iter().map(|(_, v)| fmt3(*v)));
+            t.row(row);
+        }
+    }
+    println!("\n== Table 2/3: larger-scale models @ b̄=3 (HQQ) ==");
+    t.print();
+    t.write_tsv(&results_dir().join("table2.tsv"))?;
+    Ok(())
+}
+
+/// Fig. 1: per-layer NV / SE scores vs ΔPPL when quantizing only that
+/// layer to 2-bit (the motivation scatter).
+pub fn fig1(p: &Pipeline, opts: &EvalOptions) -> Result<()> {
+    let mut t = Table::new(&["model", "layer", "NV", "SE", "NSDS",
+                             "dPPL_2bit"]);
+    for model in SMALL_MODELS {
+        let entry = p.entry(model)?;
+        let w = p.weights(model)?;
+        let nsds_opts = NsdsOptions::default();
+        let raw = sensitivity::raw_scores(&entry.config, &w, &nsds_opts);
+        let (nv, se) = sensitivity::nv_se_layer_scores(&raw);
+        let nsds =
+            sensitivity::aggregate_scores(&raw, Ablation::Full);
+        let fp = p.eval_fp(model, opts)?;
+        let fp_ppl = fp.ppl_for("wikitext2_like").unwrap();
+        let corpora = crate::eval::ppl::load_corpora(&p.man)?;
+        for l in 0..entry.config.n_layers {
+            // Quantize ONLY layer l to 2-bit, leave everything else FP.
+            let mut qw = w.clone();
+            for name in crate::model::QUANT_WEIGHTS {
+                let m = w.layer_matrix(name, l);
+                let g = crate::quant::fit_group(
+                    m.rows(), crate::quant::DEFAULT_GROUP);
+                let q = crate::quant::quantize_matrix(
+                    &m, crate::quant::QuantSpec::new(2, g),
+                    Backend::Hqq, None);
+                qw.set_layer_matrix(name, l, &q.dequantize());
+            }
+            let ppl = crate::eval::ppl::perplexity(
+                &p.engine, &p.man, entry, &qw, &corpora.wiki_like,
+                opts.max_ppl_batches)?;
+            t.row(vec![model.to_string(), l.to_string(), fmt3(nv[l]),
+                       fmt3(se[l]), fmt3(nsds[l]), fmt3(ppl - fp_ppl)]);
+        }
+    }
+    println!("\n== Fig. 1: layer sensitivity (NV / SE) vs single-layer \
+              2-bit ΔPPL ==");
+    t.print();
+    t.write_tsv(&results_dir().join("fig1.tsv"))?;
+    Ok(())
+}
+
+/// Fig. 3: average accuracy vs bit budget for every calibration-free
+/// method on the small models.
+pub fn fig3(p: &Pipeline, opts: &EvalOptions) -> Result<()> {
+    let budgets = [2.25, 2.5, 2.75, 3.0, 3.25, 3.5, 3.75];
+    let mut t = Table::new(&["model", "method", "budget", "avg_acc",
+                             "avg_ppl"]);
+    for model in SMALL_MODELS {
+        for method in Method::table1() {
+            for &b in &budgets {
+                let r = p.run(method, model, b, Backend::Hqq, opts)?;
+                t.row(vec![model.to_string(),
+                           method.label().to_string(), format!("{b}"),
+                           fmt2(r.eval.avg_acc()),
+                           fmt3(r.eval.avg_ppl())]);
+            }
+        }
+    }
+    println!("\n== Fig. 3: accuracy vs bit budget ==");
+    t.print();
+    t.write_tsv(&results_dir().join("fig3.tsv"))?;
+    Ok(())
+}
+
+/// Fig. 4 (+ Fig. 8): ablation analysis on all models.
+pub fn fig4(p: &Pipeline, opts: &EvalOptions) -> Result<()> {
+    let variants = [Ablation::Full, Ablation::NoNv, Ablation::NoSe,
+                    Ablation::NoBeta, Ablation::NoAgg];
+    let mut t = Table::new(&["model", "variant", "avg_acc", "avg_ppl"]);
+    for model in ALL_MODELS {
+        for &v in &variants {
+            let r = p.run(Method::Nsds(v), model, BUDGET, Backend::Hqq,
+                          opts)?;
+            t.row(vec![model.to_string(),
+                       Method::Nsds(v).label().to_string(),
+                       fmt2(r.eval.avg_acc()), fmt3(r.eval.avg_ppl())]);
+        }
+    }
+    println!("\n== Fig. 4/8: NSDS ablations @ b̄=3 (HQQ) ==");
+    t.print();
+    t.write_tsv(&results_dir().join("fig4.tsv"))?;
+    Ok(())
+}
+
+/// Fig. 5 (+ Fig. 9): NSDS vs calibration-based metrics on all models.
+pub fn fig5(p: &Pipeline, opts: &EvalOptions) -> Result<()> {
+    let mut t = Table::new(&["model", "method", "avg_acc", "avg_ppl"]);
+    for model in ALL_MODELS {
+        for method in Method::fig5() {
+            let r = p.run(method, model, BUDGET, Backend::Hqq, opts)?;
+            t.row(vec![model.to_string(), method.label().to_string(),
+                       fmt2(r.eval.avg_acc()), fmt3(r.eval.avg_ppl())]);
+        }
+    }
+    println!("\n== Fig. 5/9: vs calibration-based metrics @ b̄=3 (HQQ) ==");
+    t.print();
+    t.write_tsv(&results_dir().join("fig5.tsv"))?;
+    Ok(())
+}
+
+/// Fig. 6 (+ Fig. 10): PTQ-backend orthogonality — NSDS+HQQ vs NSDS+GPTQ
+/// vs SliM-LLM (group-wise, GPTQ-based).
+pub fn fig6(p: &Pipeline, opts: &EvalOptions) -> Result<()> {
+    let nsds = Method::Nsds(Ablation::Full);
+    let mut t = Table::new(&["model", "system", "avg_acc", "avg_ppl"]);
+    for model in ALL_MODELS {
+        let r = p.run(nsds, model, BUDGET, Backend::Hqq, opts)?;
+        t.row(vec![model.to_string(), "NSDS+HQQ".into(),
+                   fmt2(r.eval.avg_acc()), fmt3(r.eval.avg_ppl())]);
+        let r = p.run(nsds, model, BUDGET, Backend::Gptq, opts)?;
+        t.row(vec![model.to_string(), "NSDS+GPTQ".into(),
+                   fmt2(r.eval.avg_acc()), fmt3(r.eval.avg_ppl())]);
+        let r = p.run_slim(model, BUDGET, opts)?;
+        t.row(vec![model.to_string(), "SliM-LLM".into(),
+                   fmt2(r.eval.avg_acc()), fmt3(r.eval.avg_ppl())]);
+    }
+    println!("\n== Fig. 6/10: PTQ backend comparison @ b̄=3 ==");
+    t.print();
+    t.write_tsv(&results_dir().join("fig6.tsv"))?;
+    Ok(())
+}
+
+/// Fig. 7: NV / SE / NSDS per-layer score heatmap (text form).
+pub fn fig7(p: &Pipeline) -> Result<()> {
+    let mut t = Table::new(&["model", "layer", "NV", "SE", "NSDS",
+                             "bar"]);
+    for model in SMALL_MODELS {
+        let entry = p.entry(model)?;
+        let w = p.weights(model)?;
+        let raw = sensitivity::raw_scores(&entry.config, &w,
+                                          &NsdsOptions::default());
+        let (nv, se) = sensitivity::nv_se_layer_scores(&raw);
+        let nsds = sensitivity::aggregate_scores(&raw, Ablation::Full);
+        for l in 0..entry.config.n_layers {
+            let bar = "#".repeat((nsds[l] * 30.0) as usize);
+            t.row(vec![model.to_string(), l.to_string(), fmt3(nv[l]),
+                       fmt3(se[l]), fmt3(nsds[l]), bar]);
+        }
+    }
+    println!("\n== Fig. 7: NV/SE/NSDS score map ==");
+    t.print();
+    t.write_tsv(&results_dir().join("fig7.tsv"))?;
+    Ok(())
+}

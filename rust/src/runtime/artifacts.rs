@@ -1,0 +1,211 @@
+//! Artifact registry: parses `artifacts/manifest.json` into typed entries
+//! (model configs, file names, task metadata, corpus info).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::model::ModelConfig;
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub name: String,
+    pub config: ModelConfig,
+    pub params: usize,
+    pub weights_file: String,
+    pub init_weights_file: String,
+    pub hlo_fwd: String,
+    pub hlo_probe: String,
+    pub hlo_grad: String,
+    /// (step, loss) pairs from build-time training.
+    pub train_log: Vec<(usize, f64)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TaskMeta {
+    pub name: String,
+    pub k: usize,
+    pub n: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct KernelEntry {
+    pub file: String,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub group: usize,
+    pub bits: u8,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub eval_batch: usize,
+    pub models: Vec<ModelEntry>,
+    pub tasks_file: String,
+    pub tasks: Vec<TaskMeta>,
+    pub corpus_file: String,
+    pub kernels: Vec<KernelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read {dir:?}/manifest.json — run \
+                                      `make artifacts` first"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let eval_batch = j
+            .get("eval_batch")
+            .and_then(Json::as_usize)
+            .context("eval_batch")?;
+
+        let mut models = Vec::new();
+        for (name, m) in j.get("models").and_then(Json::as_obj)
+            .context("models")? {
+            let config = ModelConfig::from_json(
+                name,
+                m.get("config").context("config")?,
+            )?;
+            let gs = |k: &str| -> Result<String> {
+                Ok(m.path(&["hlo", k])
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("hlo.{k}"))?
+                    .to_string())
+            };
+            let train_log = m
+                .get("train_log")
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|p| {
+                    Some((
+                        p.idx(0)?.as_usize()?,
+                        p.idx(1)?.as_f64()?,
+                    ))
+                })
+                .collect();
+            models.push(ModelEntry {
+                name: name.clone(),
+                config,
+                params: m.get("params").and_then(Json::as_usize)
+                    .unwrap_or(0),
+                weights_file: m
+                    .get("weights")
+                    .and_then(Json::as_str)
+                    .context("weights")?
+                    .to_string(),
+                init_weights_file: m
+                    .get("init_weights")
+                    .and_then(Json::as_str)
+                    .context("init_weights")?
+                    .to_string(),
+                hlo_fwd: gs("fwd")?,
+                hlo_probe: gs("probe")?,
+                hlo_grad: gs("grad")?,
+                train_log,
+            });
+        }
+
+        let tasks = j
+            .path(&["tasks", "list"])
+            .and_then(Json::as_arr)
+            .context("tasks.list")?
+            .iter()
+            .map(|t| {
+                Ok(TaskMeta {
+                    name: t
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .context("task name")?
+                        .to_string(),
+                    k: t.get("k").and_then(Json::as_usize).context("k")?,
+                    n: t.get("n").and_then(Json::as_usize).context("n")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let kernels = j
+            .get("kernels")
+            .and_then(Json::as_obj)
+            .map(|m| {
+                m.values()
+                    .filter_map(|k| {
+                        Some(KernelEntry {
+                            file: k.get("file")?.as_str()?.to_string(),
+                            m: k.get("m").and_then(Json::as_usize)
+                                .unwrap_or(0),
+                            k: k.get("k")?.as_usize()?,
+                            n: k.get("n")?.as_usize()?,
+                            group: k.get("group")?.as_usize()?,
+                            bits: k.get("bits")?.as_usize()? as u8,
+                        })
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            eval_batch,
+            models,
+            tasks_file: j
+                .path(&["tasks", "file"])
+                .and_then(Json::as_str)
+                .context("tasks.file")?
+                .to_string(),
+            tasks,
+            corpus_file: j
+                .path(&["corpus", "file"])
+                .and_then(Json::as_str)
+                .context("corpus.file")?
+                .to_string(),
+            kernels,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .with_context(|| {
+                let have: Vec<&str> =
+                    self.models.iter().map(|m| m.name.as_str()).collect();
+                format!("model '{name}' not in manifest (have {have:?})")
+            })
+    }
+
+    /// Default artifacts dir: $NSDS_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("NSDS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Parses the real manifest when artifacts exist (skips otherwise so
+    /// `cargo test` works pre-`make artifacts`).
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.eval_batch > 0);
+        assert!(!m.models.is_empty());
+        for e in &m.models {
+            assert!(e.config.n_layers > 0);
+            assert!(dir.join(&e.hlo_fwd).exists());
+            assert!(dir.join(&e.weights_file).exists());
+        }
+        assert_eq!(m.tasks.len(), 6);
+    }
+}

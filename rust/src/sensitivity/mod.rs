@@ -1,0 +1,252 @@
+//! NSDS sensitivity estimation (paper §2.2–2.3): Numerical Vulnerability,
+//! role-aware Structural Expressiveness, and the full layer-scoring
+//! pipeline with ablation switches.
+
+pub mod nv;
+pub mod se;
+
+use std::collections::BTreeMap;
+
+use crate::aggregate::{mad_sigmoid, plain_z, soft_or, soft_or2};
+use crate::model::decompose::{decompose_layer, CompKind};
+use crate::model::{ModelConfig, Weights};
+use crate::tensor::svd::svd;
+use crate::tensor::Tensor;
+use crate::util::pool::parallel_map;
+
+/// Ablation variants (Fig. 4 / Fig. 8).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ablation {
+    /// The full NSDS metric.
+    Full,
+    /// w/o NV — structural term only.
+    NoNv,
+    /// w/o SE — numerical term only.
+    NoSe,
+    /// w/o β_DS & β_WD — raw singular values in Eq. 7.
+    NoBeta,
+    /// w/o MAD-Sigmoid & Soft-OR — plain z-score + arithmetic mean.
+    NoAgg,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct NsdsOptions {
+    /// SVD truncation energy (paper App. D.3; default 0.90).
+    pub energy_frac: f64,
+    pub ablation: Ablation,
+    /// Worker threads for the per-layer scoring loop.
+    pub workers: usize,
+}
+
+impl Default for NsdsOptions {
+    fn default() -> Self {
+        NsdsOptions {
+            energy_frac: 0.90,
+            ablation: Ablation::Full,
+            workers: crate::util::pool::default_workers(),
+        }
+    }
+}
+
+/// Raw per-(layer, component-type) scores: NV and SE, with QK/OV averaged
+/// across heads (paper §3.1 "computed per head and then averaged").
+#[derive(Clone, Debug)]
+pub struct RawScores {
+    pub n_layers: usize,
+    /// [kind][layer] raw NV (excess kurtosis).
+    pub nv: BTreeMap<CompKind, Vec<f64>>,
+    /// [kind][layer] raw SE (role-aware spectral capacity).
+    pub se: BTreeMap<CompKind, Vec<f64>>,
+}
+
+/// Compute raw NV/SE scores for every layer and component type.
+pub fn raw_scores(cfg: &ModelConfig, w: &Weights, opts: &NsdsOptions)
+    -> RawScores {
+    // Pre-compute the truncated unembedding subspace once (App. D.3).
+    let wu_trunc = se::truncated_unembed(w.get("unembed"), opts.energy_frac);
+
+    let per_layer: Vec<BTreeMap<CompKind, (f64, f64)>> =
+        parallel_map(cfg.n_layers, opts.workers, |l| {
+            score_layer(cfg, w, l, &wu_trunc, opts)
+        });
+
+    let mut nv = BTreeMap::new();
+    let mut se_m = BTreeMap::new();
+    for kind in CompKind::ALL {
+        let nv_col: Vec<f64> =
+            per_layer.iter().map(|m| m[&kind].0).collect();
+        let se_col: Vec<f64> =
+            per_layer.iter().map(|m| m[&kind].1).collect();
+        nv.insert(kind, nv_col);
+        se_m.insert(kind, se_col);
+    }
+    RawScores { n_layers: cfg.n_layers, nv, se: se_m }
+}
+
+/// One layer: decompose, score every component, average QK/OV over heads.
+fn score_layer(cfg: &ModelConfig, w: &Weights, l: usize, wu_trunc: &Tensor,
+               opts: &NsdsOptions) -> BTreeMap<CompKind, (f64, f64)> {
+    let comps = decompose_layer(cfg, w, l);
+    let mut acc: BTreeMap<CompKind, (f64, f64, usize)> = BTreeMap::new();
+    for c in &comps {
+        let nv = nv::numerical_vulnerability(&c.matrix);
+        let s = svd(&c.matrix);
+        let s = s.truncate(s.energy_rank(opts.energy_frac));
+        let se = if opts.ablation == Ablation::NoBeta {
+            se::base_expressiveness(&s.sigma)
+        } else {
+            se::role_aware_expressiveness(c, &s, wu_trunc)
+        };
+        let e = acc.entry(c.kind).or_insert((0.0, 0.0, 0));
+        e.0 += nv;
+        e.1 += se;
+        e.2 += 1;
+    }
+    acc.into_iter()
+        .map(|(k, (nv, se, n))| (k, (nv / n as f64, se / n as f64)))
+        .collect()
+}
+
+/// Full NSDS layer scores (paper Algorithm 1 phases 1–2).
+/// Returns one sensitivity score per layer, higher = more sensitive.
+pub fn nsds_layer_scores(cfg: &ModelConfig, w: &Weights,
+                         opts: &NsdsOptions) -> Vec<f64> {
+    let raw = raw_scores(cfg, w, opts);
+    aggregate_scores(&raw, opts.ablation)
+}
+
+/// Phase 2: normalize per component type across layers, Soft-OR within the
+/// layer, merge NV and SE. Separated from `raw_scores` so ablations and the
+/// Fig. 7 heatmap can reuse the expensive raw computation.
+pub fn aggregate_scores(raw: &RawScores, ablation: Ablation) -> Vec<f64> {
+    let l = raw.n_layers;
+    match ablation {
+        Ablation::NoAgg => {
+            // Plain z-normalization + arithmetic-mean aggregation.
+            let mut total = vec![0.0f64; l];
+            let mut terms = 0usize;
+            for kind in CompKind::ALL {
+                for src in [&raw.nv[&kind], &raw.se[&kind]] {
+                    let z = plain_z(src);
+                    for (t, zi) in total.iter_mut().zip(z) {
+                        *t += zi;
+                    }
+                    terms += 1;
+                }
+            }
+            return total.into_iter().map(|t| t / terms as f64).collect();
+        }
+        _ => {}
+    }
+    // MAD-Sigmoid per component type (pooled across layers).
+    let mut p_nv: BTreeMap<CompKind, Vec<f64>> = BTreeMap::new();
+    let mut p_se: BTreeMap<CompKind, Vec<f64>> = BTreeMap::new();
+    for kind in CompKind::ALL {
+        p_nv.insert(kind, mad_sigmoid(&raw.nv[&kind]));
+        p_se.insert(kind, mad_sigmoid(&raw.se[&kind]));
+    }
+    (0..l)
+        .map(|li| {
+            let nv_ps: Vec<f64> =
+                CompKind::ALL.iter().map(|k| p_nv[k][li]).collect();
+            let se_ps: Vec<f64> =
+                CompKind::ALL.iter().map(|k| p_se[k][li]).collect();
+            let s_nv = soft_or(&nv_ps);
+            let s_se = soft_or(&se_ps);
+            match ablation {
+                Ablation::NoNv => s_se,
+                Ablation::NoSe => s_nv,
+                _ => soft_or2(s_nv, s_se),
+            }
+        })
+        .collect()
+}
+
+/// Layer-wise S_NV and S_SE separately (Fig. 1 / Fig. 7 exhibits).
+pub fn nv_se_layer_scores(raw: &RawScores) -> (Vec<f64>, Vec<f64>) {
+    let l = raw.n_layers;
+    let mut p_nv: BTreeMap<CompKind, Vec<f64>> = BTreeMap::new();
+    let mut p_se: BTreeMap<CompKind, Vec<f64>> = BTreeMap::new();
+    for kind in CompKind::ALL {
+        p_nv.insert(kind, mad_sigmoid(&raw.nv[&kind]));
+        p_se.insert(kind, mad_sigmoid(&raw.se[&kind]));
+    }
+    let nv = (0..l)
+        .map(|li| {
+            soft_or(&CompKind::ALL.iter().map(|k| p_nv[k][li])
+                .collect::<Vec<_>>())
+        })
+        .collect();
+    let se = (0..l)
+        .map(|li| {
+            soft_or(&CompKind::ALL.iter().map(|k| p_se[k][li])
+                .collect::<Vec<_>>())
+        })
+        .collect();
+    (nv, se)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn test_setup() -> (ModelConfig, Weights) {
+        let cfg = ModelConfig::test_config();
+        let mut rng = Rng::new(7);
+        // Layer 2 heavy-tailed, layer 0 low-rank-reduced.
+        let w = Weights::synth(&cfg, &mut rng, &[0.0, 0.0, 4.0],
+                               &[0.3, 1.0, 1.0]);
+        (cfg, w)
+    }
+
+    #[test]
+    fn scores_have_layer_shape_and_are_finite() {
+        let (cfg, w) = test_setup();
+        let scores = nsds_layer_scores(&cfg, &w, &NsdsOptions::default());
+        assert_eq!(scores.len(), cfg.n_layers);
+        for s in &scores {
+            assert!(s.is_finite() && (0.0..=1.0).contains(s), "{s}");
+        }
+    }
+
+    #[test]
+    fn heavy_tail_layer_ranks_high_on_nv() {
+        let (cfg, w) = test_setup();
+        let raw = raw_scores(&cfg, &w, &NsdsOptions::default());
+        let (nv, _) = nv_se_layer_scores(&raw);
+        let max_l = nv
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .unwrap()
+            .0;
+        assert_eq!(max_l, 2, "nv scores {nv:?}");
+    }
+
+    #[test]
+    fn ablations_change_scores() {
+        let (cfg, w) = test_setup();
+        let base = nsds_layer_scores(&cfg, &w, &NsdsOptions::default());
+        for ab in [Ablation::NoNv, Ablation::NoSe, Ablation::NoBeta,
+                   Ablation::NoAgg] {
+            let opts = NsdsOptions { ablation: ab, ..Default::default() };
+            let alt = nsds_layer_scores(&cfg, &w, &opts);
+            assert_eq!(alt.len(), base.len());
+            let diff: f64 = base
+                .iter()
+                .zip(&alt)
+                .map(|(a, b)| (a - b).abs())
+                .sum();
+            assert!(diff > 1e-9, "ablation {ab:?} had no effect");
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let (cfg, w) = test_setup();
+        let a = nsds_layer_scores(&cfg, &w, &NsdsOptions::default());
+        let b = nsds_layer_scores(&cfg, &w, &NsdsOptions::default());
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,36 @@
+//! Numerical Vulnerability (paper §2.2, Eq. 5): excess kurtosis of the
+//! flattened component weights. Heavy-tailed components stretch the
+//! quantization range and degrade hardest under low-bit quantization.
+
+use crate::tensor::stats::excess_kurtosis;
+use crate::tensor::Tensor;
+
+/// NV score of one component matrix.
+pub fn numerical_vulnerability(w: &Tensor) -> f64 {
+    excess_kurtosis(w.data())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn outlier_injection_raises_nv() {
+        let mut rng = Rng::new(1);
+        let base = Tensor::randn(vec![32, 32], &mut rng);
+        let nv0 = numerical_vulnerability(&base);
+        let mut spiked = base.clone();
+        for i in 0..10 {
+            spiked.data_mut()[i * 97] *= 30.0;
+        }
+        let nv1 = numerical_vulnerability(&spiked);
+        assert!(nv1 > nv0 + 5.0, "nv0={nv0} nv1={nv1}");
+    }
+
+    #[test]
+    fn constant_matrix_zero() {
+        let t = Tensor::new(vec![3.0; 64], vec![8, 8]);
+        assert_eq!(numerical_vulnerability(&t), 0.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Structural Expressiveness (paper §2.2, Eqs. 6–9 + Appendices D.3–D.5).
+//!
+//! Base form (Eq. 7):  𝓔_base = ‖σ‖₁ · exp(H(σ)) on the top-90 %-energy
+//! spectrum. Role-aware form reweights each singular value before Eq. 7:
+//!   * Detectors  — Detection Specificity β_DS = log1p(ReLU(κ(input vec)))
+//!     (Eq. 8 + the robust sub-linear transform of App. D.4); for QK the
+//!     raw factor is the PRODUCT κ(query-side)·κ(key-side) (App. D.5).
+//!   * Writers    — Writing Density β_WD = ‖W_Uᵀ u_i‖₁ (Eq. 9, logit lens)
+//!     with W_U pre-truncated to its top-90 % subspace (App. D.3).
+
+use crate::model::decompose::{CompKind, Component, Role};
+use crate::tensor::matmul::vecmat;
+use crate::tensor::stats::{excess_kurtosis, spectral_entropy};
+use crate::tensor::svd::{svd, Svd};
+use crate::tensor::Tensor;
+
+/// Eq. 7 on a (possibly reweighted) spectrum.
+pub fn base_expressiveness(sigma: &[f64]) -> f64 {
+    let l1: f64 = sigma.iter().sum();
+    let h = spectral_entropy(sigma);
+    l1 * h.exp()
+}
+
+/// App. D.4: β = log(1 + ReLU(x)) — kills flat/uniform detectors
+/// (κ < 0 ⇒ 0) and rewards sharp ones sub-linearly.
+pub fn sublinear(x: f64) -> f64 {
+    (1.0 + x.max(0.0)).ln()
+}
+
+/// Pre-truncate the unembedding matrix to its top-90 % SVD subspace
+/// (App. D.3: "filter out vocabulary noise"). Returns the reconstructed
+/// [D, V] matrix.
+pub fn truncated_unembed(wu: &Tensor, energy_frac: f64) -> Tensor {
+    let s = svd(wu);
+    let r = s.energy_rank(energy_frac);
+    s.truncate(r).reconstruct()
+}
+
+/// Role-aware SE (Eq. 7 after σᵢ ← σᵢ·βᵢ). `s` must already be truncated to
+/// the top-90 % spectrum; `wu_trunc` is the pre-truncated unembedding.
+pub fn role_aware_expressiveness(c: &Component, s: &Svd, wu_trunc: &Tensor)
+    -> f64 {
+    let mut sigma = Vec::with_capacity(s.sigma.len());
+    match c.kind.role() {
+        Role::Detector => {
+            let inputs = c.input_vectors(s);
+            // QK interacts on both sides (App. D.5): κ(query)·κ(key).
+            let both = c.kind == CompKind::Qk;
+            let outputs = c.output_vectors(s);
+            for (i, &sv) in s.sigma.iter().enumerate() {
+                let k_in = excess_kurtosis(&inputs.col(i));
+                let raw = if both {
+                    k_in * excess_kurtosis(&outputs.col(i))
+                } else {
+                    k_in
+                };
+                sigma.push(sv * sublinear(raw));
+            }
+        }
+        Role::Writer => {
+            let outputs = c.output_vectors(s); // columns in R^{d_model}
+            for (i, &sv) in s.sigma.iter().enumerate() {
+                let u_i = outputs.col(i);
+                let proj = vecmat(&u_i, wu_trunc); // u_iᵀ W_U ∈ R^V
+                let l1: f64 =
+                    proj.iter().map(|x| x.abs() as f64).sum();
+                sigma.push(sv * l1);
+            }
+        }
+    }
+    base_expressiveness(&sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::decompose::{CompKind, Component};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn base_rewards_rich_spectra() {
+        // Flat spectrum (high entropy) beats a spiked one of equal L1 mass.
+        let flat = vec![1.0; 8];
+        let mut spiked = vec![0.0; 8];
+        spiked[0] = 8.0;
+        assert!(base_expressiveness(&flat) > base_expressiveness(&spiked));
+    }
+
+    #[test]
+    fn base_scales_with_magnitude() {
+        let s = vec![3.0, 2.0, 1.0];
+        let s2: Vec<f64> = s.iter().map(|x| x * 2.0).collect();
+        let r = base_expressiveness(&s2) / base_expressiveness(&s);
+        assert!((r - 2.0).abs() < 1e-12, "ratio {r}");
+    }
+
+    #[test]
+    fn sublinear_clamps_and_grows() {
+        assert_eq!(sublinear(-5.0), 0.0);
+        assert_eq!(sublinear(0.0), 0.0);
+        assert!(sublinear(10.0) > sublinear(1.0));
+        assert!(sublinear(1000.0) < 1000.0); // sub-linear
+    }
+
+    #[test]
+    fn truncated_unembed_reduces_rank() {
+        let mut rng = Rng::new(3);
+        // Construct a [8, 32] matrix with a dominant direction + noise.
+        let mut wu = Tensor::randn(vec![8, 32], &mut rng).scale(0.05);
+        let u = rng.normal_vec(8);
+        let v = rng.normal_vec(32);
+        for i in 0..8 {
+            for j in 0..32 {
+                let val = wu.at(i, j) + 4.0 * u[i] as f32 * v[j] as f32;
+                wu.set(i, j, val);
+            }
+        }
+        let t = truncated_unembed(&wu, 0.9);
+        assert_eq!(t.dims(), wu.dims());
+        let s_t = svd(&t);
+        let s_w = svd(&wu);
+        // Truncation keeps the head of the spectrum, kills the tail.
+        assert!((s_t.sigma[0] - s_w.sigma[0]).abs() / s_w.sigma[0] < 1e-3);
+        assert!(s_t.sigma[5] < s_w.sigma[5] + 1e-6);
+    }
+
+    #[test]
+    fn writer_beta_tracks_unembed_alignment() {
+        // A writer whose output direction aligns with W_U's row space gets
+        // a higher SE than one writing into W_U's null space.
+        let d = 8;
+        let v = 16;
+        // W_U maps only the first 4 residual dims to logits.
+        let mut wu = Tensor::zeros(vec![d, v]);
+        for i in 0..4 {
+            for j in 0..v {
+                wu.set(i, j, if (i + j) % 2 == 0 { 1.0 } else { -1.0 });
+            }
+        }
+        let make_writer = |aligned: bool| {
+            // rank-2 matrix writing into dims {0,1} or {6,7}.
+            let mut m = Tensor::zeros(vec![d, d]);
+            let off = if aligned { 0 } else { 6 };
+            m.set(0, off, 2.0);
+            m.set(1, off + 1, 1.5);
+            Component { kind: CompKind::Ov, layer: 0, head: 0, matrix: m }
+        };
+        let score = |c: &Component| {
+            let s = svd(&c.matrix);
+            let s = s.truncate(s.energy_rank(0.999));
+            role_aware_expressiveness(c, &s, &wu)
+        };
+        let hi = score(&make_writer(true));
+        let lo = score(&make_writer(false));
+        assert!(hi > lo * 10.0, "aligned {hi} vs null-space {lo}");
+    }
+}

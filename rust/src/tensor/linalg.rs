@@ -1,0 +1,130 @@
+//! Cholesky machinery for the GPTQ backend (Hessian inverse) — f64
+//! internally: quantization error feedback is sensitive to the
+//! conditioning of Xᵀ X.
+
+use super::Tensor;
+
+/// Cholesky factor L (lower) of a symmetric positive-definite matrix.
+/// Returns None if the matrix is not PD (caller should raise damping).
+pub fn cholesky(a: &Tensor) -> Option<Tensor> {
+    let n = a.rows();
+    assert_eq!(n, a.cols());
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j) as f64;
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Some(Tensor::new(l.into_iter().map(|x| x as f32).collect(),
+                     vec![n, n]))
+}
+
+/// Inverse of an SPD matrix via Cholesky: A⁻¹ = L⁻ᵀ L⁻¹.
+pub fn spd_inverse(a: &Tensor) -> Option<Tensor> {
+    let n = a.rows();
+    let l = cholesky(a)?;
+    // Invert L (lower triangular) by forward substitution, in f64.
+    let ld: Vec<f64> = l.data().iter().map(|&x| x as f64).collect();
+    let mut linv = vec![0.0f64; n * n];
+    for j in 0..n {
+        linv[j * n + j] = 1.0 / ld[j * n + j];
+        for i in (j + 1)..n {
+            let mut s = 0.0;
+            for k in j..i {
+                s += ld[i * n + k] * linv[k * n + j];
+            }
+            linv[i * n + j] = -s / ld[i * n + i];
+        }
+    }
+    // A⁻¹ = Linvᵀ · Linv.
+    let mut inv = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in i..n {
+            let mut s = 0.0;
+            // (Linvᵀ Linv)[i,j] = Σ_k Linv[k,i]·Linv[k,j]; Linv lower ⇒
+            // k ≥ max(i, j).
+            for k in j.max(i)..n {
+                s += linv[k * n + i] * linv[k * n + j];
+            }
+            inv[i * n + j] = s;
+            inv[j * n + i] = s;
+        }
+    }
+    Some(Tensor::new(inv.into_iter().map(|x| x as f32).collect(),
+                     vec![n, n]))
+}
+
+/// Upper-triangular Cholesky factor U of an SPD matrix (A = Uᵀ U) — the
+/// form GPTQ consumes for its error-propagation row updates.
+pub fn cholesky_upper(a: &Tensor) -> Option<Tensor> {
+    cholesky(a).map(|l| l.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_ensure;
+    use crate::tensor::matmul::{gram, matmul};
+    use crate::util::prop::check;
+
+    fn spd(rng: &mut crate::util::rng::Rng, n: usize) -> Tensor {
+        let a = Tensor::randn(vec![n + 3, n], rng);
+        let mut g = gram(&a);
+        for i in 0..n {
+            let v = g.at(i, i) + 0.1;
+            g.set(i, i, v);
+        }
+        g
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        check("cholesky LLt", 15, |rng| {
+            let n = 2 + rng.below(24);
+            let a = spd(rng, n);
+            let l = cholesky(&a).ok_or("not PD")?;
+            let rec = matmul(&l, &l.transpose());
+            let err = rec.sub(&a).frob_norm() / a.frob_norm();
+            prop_ensure!(err < 1e-4, "rel err {err}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        check("spd inverse", 15, |rng| {
+            let n = 2 + rng.below(20);
+            let a = spd(rng, n);
+            let inv = spd_inverse(&a).ok_or("not PD")?;
+            let prod = matmul(&a, &inv);
+            let mut err = 0.0f32;
+            for i in 0..n {
+                for j in 0..n {
+                    let t = if i == j { 1.0 } else { 0.0 };
+                    err = err.max((prod.at(i, j) - t).abs());
+                }
+            }
+            prop_ensure!(err < 5e-3, "‖AA⁻¹−I‖∞ = {err}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn non_pd_rejected() {
+        let mut a = Tensor::zeros(vec![2, 2]);
+        a.set(0, 0, 1.0);
+        a.set(1, 1, -1.0);
+        assert!(cholesky(&a).is_none());
+    }
+}

@@ -1,0 +1,166 @@
+//! Blocked matmul + friends. This is the L3-side GEMM used by quantization
+//! backends (GPTQ Hessians, error propagation), calibration baselines and
+//! the component decomposition (per-head `W_Q W_Kᵀ` products).
+//!
+//! Layout strategy: i-k-j loop order with the inner j loop over contiguous
+//! rows of B, which vectorizes well and avoids strided access entirely —
+//! the classic "ikj" kernel. Blocking keeps the active B panel in cache
+//! for the larger Hessian-sized products.
+
+use super::Tensor;
+
+/// C = A @ B, A [m,k], B [k,n].
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul shape mismatch {:?} @ {:?}", a.dims(), b.dims());
+    let mut c = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    const BK: usize = 64;
+    for k0 in (0..k).step_by(BK) {
+        let k1 = (k0 + BK).min(k);
+        for i in 0..m {
+            let crow = &mut c[i * n..(i + 1) * n];
+            for kk in k0..k1 {
+                let aik = ad[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &bd[kk * n..(kk + 1) * n];
+                for (cv, bv) in crow.iter_mut().zip(brow) {
+                    *cv += aik * bv;
+                }
+            }
+        }
+    }
+    Tensor::new(c, vec![m, n])
+}
+
+/// C = Aᵀ @ A (Gram matrix, used for GPTQ Hessians), A [m,k] -> C [k,k].
+/// Exploits symmetry: computes the upper triangle and mirrors.
+pub fn gram(a: &Tensor) -> Tensor {
+    let (m, k) = (a.rows(), a.cols());
+    let ad = a.data();
+    let mut c = vec![0.0f32; k * k];
+    for r in 0..m {
+        let row = &ad[r * k..(r + 1) * k];
+        for i in 0..k {
+            let v = row[i];
+            if v == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * k..(i + 1) * k];
+            for j in i..k {
+                crow[j] += v * row[j];
+            }
+        }
+    }
+    for i in 0..k {
+        for j in 0..i {
+            c[i * k + j] = c[j * k + i];
+        }
+    }
+    Tensor::new(c, vec![k, k])
+}
+
+/// y = x @ W for a single row vector x [k], W [k,n].
+pub fn vecmat(x: &[f32], w: &Tensor) -> Vec<f32> {
+    let (k, n) = (w.rows(), w.cols());
+    assert_eq!(x.len(), k);
+    let wd = w.data();
+    let mut y = vec![0.0f32; n];
+    for (kk, &xv) in x.iter().enumerate() {
+        if xv == 0.0 {
+            continue;
+        }
+        let row = &wd[kk * n..(kk + 1) * n];
+        for (yv, wv) in y.iter_mut().zip(row) {
+            *yv += xv * wv;
+        }
+    }
+    y
+}
+
+/// Dot product.
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_ensure;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    fn naive(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.rows(), a.cols());
+        let n = b.cols();
+        let mut c = Tensor::zeros(vec![m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a.at(i, kk) * b.at(kk, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matches_naive() {
+        check("matmul==naive", 20, |rng| {
+            let m = 1 + rng.below(20);
+            let k = 1 + rng.below(90);
+            let n = 1 + rng.below(20);
+            let a = Tensor::randn(vec![m, k], rng);
+            let b = Tensor::randn(vec![k, n], rng);
+            let c1 = matmul(&a, &b);
+            let c2 = naive(&a, &b);
+            let err = c1.sub(&c2).frob_norm() / c2.frob_norm().max(1e-6);
+            prop_ensure!(err < 1e-5, "rel err {err}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gram_matches_matmul() {
+        check("gram==AtA", 10, |rng| {
+            let m = 1 + rng.below(40);
+            let k = 1 + rng.below(30);
+            let a = Tensor::randn(vec![m, k], rng);
+            let g1 = gram(&a);
+            let g2 = matmul(&a.transpose(), &a);
+            let err = g1.sub(&g2).frob_norm() / g2.frob_norm().max(1e-6);
+            prop_ensure!(err < 1e-5, "rel err {err}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn vecmat_matches() {
+        let mut rng = Rng::new(5);
+        let w = Tensor::randn(vec![8, 6], &mut rng);
+        let x: Vec<f32> = rng.normal_vec(8);
+        let y = vecmat(&x, &w);
+        let xm = Tensor::new(x, vec![1, 8]);
+        let ym = matmul(&xm, &w);
+        for (a, b) in y.iter().zip(ym.data()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn identity() {
+        let mut eye = Tensor::zeros(vec![4, 4]);
+        for i in 0..4 {
+            eye.set(i, i, 1.0);
+        }
+        let mut rng = Rng::new(2);
+        let a = Tensor::randn(vec![4, 4], &mut rng);
+        assert!(matmul(&a, &eye).sub(&a).frob_norm() < 1e-6);
+    }
+}

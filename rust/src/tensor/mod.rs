@@ -1,0 +1,241 @@
+//! Dense f32 tensor substrate: the numeric foundation every higher module
+//! (sensitivity, quantization, baselines, eval) builds on.
+//!
+//! Deliberately small: row-major `Vec<f32>` + dims, 2-D matrix views,
+//! blocked matmul, one-sided Jacobi SVD, robust statistics. No external
+//! linear-algebra crates are reachable offline, so this *is* the BLAS/LAPACK
+//! of the project — correctness is pinned by unit + property tests
+//! (reconstruction errors, orthogonality, agreement with hand computations).
+
+pub mod matmul;
+pub mod linalg;
+pub mod stats;
+pub mod svd;
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    data: Vec<f32>,
+    dims: Vec<usize>,
+}
+
+impl Tensor {
+    pub fn new(data: Vec<f32>, dims: Vec<usize>) -> Self {
+        assert_eq!(
+            data.len(),
+            dims.iter().product::<usize>(),
+            "data/dims mismatch: {} vs {:?}",
+            data.len(),
+            dims
+        );
+        Tensor { data, dims }
+    }
+
+    pub fn zeros(dims: Vec<usize>) -> Self {
+        let n = dims.iter().product();
+        Tensor { data: vec![0.0; n], dims }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { data: vec![v], dims: vec![] }
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with new dims (same element count).
+    pub fn reshape(mut self, dims: Vec<usize>) -> Self {
+        assert_eq!(self.data.len(), dims.iter().product::<usize>());
+        self.dims = dims;
+        self
+    }
+
+    /// 2-D accessors -------------------------------------------------------
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.dims.len(), 2, "not a matrix: {:?}", self.dims);
+        self.dims[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.dims.len(), 2, "not a matrix: {:?}", self.dims);
+        self.dims[1]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.dims[1] + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        let w = self.dims[1];
+        self.data[r * w + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let w = self.dims[1];
+        &self.data[r * w..(r + 1) * w]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let w = self.dims[1];
+        &mut self.data[r * w..(r + 1) * w]
+    }
+
+    pub fn col(&self, c: usize) -> Vec<f32> {
+        let (m, n) = (self.dims[0], self.dims[1]);
+        (0..m).map(|r| self.data[r * n + c]).collect()
+    }
+
+    /// Slice the leading axis: `t[i]` for a `[L, ...]` stacked tensor.
+    pub fn slice0(&self, i: usize) -> Tensor {
+        assert!(!self.dims.is_empty() && i < self.dims[0]);
+        let inner: usize = self.dims[1..].iter().product();
+        Tensor::new(
+            self.data[i * inner..(i + 1) * inner].to_vec(),
+            self.dims[1..].to_vec(),
+        )
+    }
+
+    /// Write a slice back into the leading axis.
+    pub fn set_slice0(&mut self, i: usize, t: &Tensor) {
+        let inner: usize = self.dims[1..].iter().product();
+        assert_eq!(t.len(), inner);
+        self.data[i * inner..(i + 1) * inner].copy_from_slice(t.data());
+    }
+
+    pub fn transpose(&self) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        let mut out = vec![0.0f32; m * n];
+        for r in 0..m {
+            for c in 0..n {
+                out[c * m + r] = self.data[r * n + c];
+            }
+        }
+        Tensor::new(out, vec![n, m])
+    }
+
+    /// Columns `c0..c1` as a new matrix.
+    pub fn cols_range(&self, c0: usize, c1: usize) -> Tensor {
+        let (m, n) = (self.rows(), self.cols());
+        assert!(c0 <= c1 && c1 <= n);
+        let w = c1 - c0;
+        let mut out = Vec::with_capacity(m * w);
+        for r in 0..m {
+            out.extend_from_slice(&self.data[r * n + c0..r * n + c1]);
+        }
+        Tensor::new(out, vec![m, w])
+    }
+
+    /// Rows `r0..r1` as a new matrix.
+    pub fn rows_range(&self, r0: usize, r1: usize) -> Tensor {
+        let n = self.cols();
+        assert!(r0 <= r1 && r1 <= self.rows());
+        Tensor::new(self.data[r0 * n..r1 * n].to_vec(), vec![r1 - r0, n])
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor::new(self.data.iter().map(|&x| f(x)).collect(),
+                    self.dims.clone())
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.dims, other.dims);
+        Tensor::new(
+            self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+            self.dims.clone(),
+        )
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        assert_eq!(self.dims, other.dims);
+        Tensor::new(
+            self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect(),
+            self.dims.clone(),
+        )
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    /// Random-normal tensor (test/model-zoo helper).
+    pub fn randn(dims: Vec<usize>, rng: &mut crate::util::rng::Rng) -> Self {
+        let n = dims.iter().product();
+        Tensor::new(rng.normal_vec(n), dims)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn basic_accessors() {
+        let t = Tensor::new(vec![1., 2., 3., 4., 5., 6.], vec![2, 3]);
+        assert_eq!(t.at(0, 2), 3.0);
+        assert_eq!(t.at(1, 0), 4.0);
+        assert_eq!(t.row(1), &[4., 5., 6.]);
+        assert_eq!(t.col(1), vec![2., 5.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let t = Tensor::randn(vec![7, 5], &mut rng);
+        assert_eq!(t.transpose().transpose(), t);
+    }
+
+    #[test]
+    fn slice0_roundtrip() {
+        let t = Tensor::new((0..24).map(|x| x as f32).collect(), vec![2, 3, 4]);
+        let s1 = t.slice0(1);
+        assert_eq!(s1.dims(), &[3, 4]);
+        assert_eq!(s1.data()[0], 12.0);
+        let mut t2 = t.clone();
+        t2.set_slice0(0, &s1);
+        assert_eq!(t2.slice0(0), s1);
+    }
+
+    #[test]
+    fn ranges() {
+        let t = Tensor::new((0..12).map(|x| x as f32).collect(), vec![3, 4]);
+        let c = t.cols_range(1, 3);
+        assert_eq!(c.dims(), &[3, 2]);
+        assert_eq!(c.data(), &[1., 2., 5., 6., 9., 10.]);
+        let r = t.rows_range(1, 2);
+        assert_eq!(r.data(), &[4., 5., 6., 7.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![1.0; 5], vec![2, 3]);
+    }
+}

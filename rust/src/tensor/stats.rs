@@ -1,0 +1,209 @@
+//! Robust statistics used by the sensitivity metrics and aggregation:
+//! moments (excess kurtosis — paper Eq. 5), median / MAD (Eq. 10),
+//! Shannon entropy of a spectrum (Eq. 6), softmax entropy (EWQ baseline),
+//! z-score machinery (ZD / KurtBoost baselines).
+//!
+//! All accumulation is in f64: kurtosis is a 4th-moment statistic and f32
+//! accumulators visibly bias it for the >100k-element FFN matrices.
+
+/// Mean of a slice (f64 accumulation).
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance.
+pub fn variance(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mu = mean(xs);
+    xs.iter().map(|&x| (x as f64 - mu).powi(2)).sum::<f64>() / xs.len() as f64
+}
+
+/// Excess kurtosis (paper Eq. 5): E[(w-μ)⁴] / E[(w-μ)²]² − 3.
+pub fn excess_kurtosis(xs: &[f32]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let mu = mean(xs);
+    let (mut m2, mut m4) = (0.0f64, 0.0f64);
+    for &x in xs {
+        let c = x as f64 - mu;
+        let c2 = c * c;
+        m2 += c2;
+        m4 += c2 * c2;
+    }
+    let n = xs.len() as f64;
+    m2 /= n;
+    m4 /= n;
+    if m2 <= 1e-24 {
+        return 0.0;
+    }
+    m4 / (m2 * m2) - 3.0
+}
+
+/// Raw (non-excess) kurtosis — the KurtBoost baseline uses this directly.
+pub fn raw_kurtosis(xs: &[f32]) -> f64 {
+    excess_kurtosis(xs) + 3.0
+}
+
+/// Median (copies + sorts; slices here are small or called off hot path).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Median absolute deviation: Median(|x − Median(x)|). (Paper Eq. 10.)
+pub fn mad(xs: &[f64]) -> f64 {
+    let med = median(xs);
+    let dev: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+    median(&dev)
+}
+
+/// Shannon entropy of a normalized distribution p (natural log).
+/// Zero entries contribute 0 (lim p→0 of p·ln p).
+pub fn entropy(p: &[f64]) -> f64 {
+    -p.iter()
+        .filter(|&&x| x > 0.0)
+        .map(|&x| x * x.ln())
+        .sum::<f64>()
+}
+
+/// Spectral entropy (paper Eq. 6): normalize singular values to a
+/// distribution, return its Shannon entropy.
+pub fn spectral_entropy(sigma: &[f64]) -> f64 {
+    let s: f64 = sigma.iter().sum();
+    if s <= 0.0 {
+        return 0.0;
+    }
+    let p: Vec<f64> = sigma.iter().map(|x| x / s).collect();
+    entropy(&p)
+}
+
+/// Softmax-entropy of a weight vector (EWQ baseline, paper Eq. 18),
+/// computed stably (max subtraction) with the paper's +ε inside the log.
+pub fn softmax_entropy(xs: &[f32], eps: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mx = xs.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+    let mut z = 0.0f64;
+    for &x in xs {
+        z += ((x as f64) - mx).exp();
+    }
+    let mut h = 0.0f64;
+    for &x in xs {
+        let p = ((x as f64) - mx).exp() / z;
+        h -= p * (p + eps).ln();
+    }
+    h
+}
+
+/// Standard deviation (population).
+pub fn std_dev(xs: &[f32]) -> f64 {
+    variance(xs).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_ensure;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kurtosis_gaussian_near_zero() {
+        let mut rng = Rng::new(11);
+        let xs = rng.normal_vec(400_000);
+        let k = excess_kurtosis(&xs);
+        assert!(k.abs() < 0.08, "gaussian excess kurtosis {k}");
+    }
+
+    #[test]
+    fn kurtosis_heavy_tail_positive() {
+        // Laplace via difference of exponentials: excess kurtosis = 3.
+        let mut rng = Rng::new(12);
+        let xs: Vec<f32> = (0..200_000)
+            .map(|_| {
+                let u: f64 = rng.f64().max(1e-12);
+                let v: f64 = rng.f64().max(1e-12);
+                (-u.ln() + v.ln()) as f32
+            })
+            .collect();
+        let k = excess_kurtosis(&xs);
+        assert!((k - 3.0).abs() < 0.4, "laplace excess kurtosis {k}");
+    }
+
+    #[test]
+    fn kurtosis_uniform_negative() {
+        let mut rng = Rng::new(13);
+        let xs: Vec<f32> = (0..100_000).map(|_| rng.f32()).collect();
+        let k = excess_kurtosis(&xs);
+        assert!((k + 1.2).abs() < 0.1, "uniform excess kurtosis {k}");
+    }
+
+    #[test]
+    fn median_mad_hand_cases() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        // xs = [1,2,3,4,100]: med=3, |dev|=[2,1,0,1,97] -> mad=1
+        assert_eq!(mad(&[1.0, 2.0, 3.0, 4.0, 100.0]), 1.0);
+    }
+
+    #[test]
+    fn mad_robust_to_outliers() {
+        check("mad-robust", 10, |rng| {
+            let mut xs: Vec<f64> = (0..101).map(|_| rng.normal()).collect();
+            let m0 = mad(&xs);
+            xs[0] = 1e9; // one wild outlier
+            let m1 = mad(&xs);
+            prop_ensure!((m0 - m1).abs() < 0.5, "mad moved {m0} -> {m1}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        // Uniform over k has entropy ln k; point mass has 0.
+        let k = 8;
+        let p = vec![1.0 / k as f64; k];
+        assert!((entropy(&p) - (k as f64).ln()).abs() < 1e-12);
+        let mut q = vec![0.0; k];
+        q[3] = 1.0;
+        assert_eq!(entropy(&q), 0.0);
+    }
+
+    #[test]
+    fn spectral_entropy_scale_invariant() {
+        check("spec-ent scale inv", 10, |rng| {
+            let s: Vec<f64> = (0..12).map(|_| rng.f64() + 0.01).collect();
+            let s2: Vec<f64> = s.iter().map(|x| x * 7.5).collect();
+            let d = (spectral_entropy(&s) - spectral_entropy(&s2)).abs();
+            prop_ensure!(d < 1e-12, "not scale invariant: {d}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn softmax_entropy_uniform_max() {
+        let xs = vec![0.5f32; 64];
+        let h = softmax_entropy(&xs, 0.0);
+        assert!((h - 64f64.ln()).abs() < 1e-6, "{h}");
+        // peaked distribution has lower entropy
+        let mut ys = vec![0.0f32; 64];
+        ys[0] = 20.0;
+        assert!(softmax_entropy(&ys, 0.0) < 0.1);
+    }
+}

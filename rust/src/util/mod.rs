@@ -1,0 +1,10 @@
+//! Infrastructure substrates the offline environment forces us to own:
+//! JSON, the `.tz` tensor container, a PRNG, a scoped thread pool and a
+//! property-test harness (no serde / rand / rayon / proptest crates are
+//! reachable — see DESIGN.md "Environment deviations").
+
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod tz;

@@ -1,0 +1,72 @@
+//! Scoped worker pool over std threads (no tokio/rayon offline — DESIGN.md).
+//!
+//! The coordinator uses this to score layers / quantize matrices in
+//! parallel. On this single-core image it degrades to near-sequential
+//! execution, but the structure (and the tests) are what a multi-core
+//! deployment runs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Run `f(i)` for every `i in 0..n` on up to `workers` threads, collecting
+/// results in index order. Panics in workers propagate.
+pub fn parallel_map<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let workers = workers.clamp(1, n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let out: Mutex<Vec<Option<T>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let v = f(i);
+                out.lock().unwrap()[i] = Some(v);
+            });
+        }
+    });
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|v| v.expect("worker skipped an index"))
+        .collect()
+}
+
+/// Default worker count: available parallelism (>= 1).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let v = parallel_map(100, 4, |i| i * i);
+        assert_eq!(v, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker_and_empty() {
+        assert_eq!(parallel_map(5, 1, |i| i), vec![0, 1, 2, 3, 4]);
+        assert_eq!(parallel_map(0, 8, |i| i), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn more_workers_than_items() {
+        assert_eq!(parallel_map(2, 16, |i| i + 1), vec![1, 2]);
+    }
+}

@@ -1,0 +1,67 @@
+//! Tiny property-test harness (proptest is unreachable offline).
+//!
+//! `check(name, cases, |rng| ...)` runs a seeded-random property `cases`
+//! times; on failure it reports the case seed so the exact input can be
+//! replayed with `check_one`. Used by the tensor / quant / aggregate /
+//! allocate invariant tests.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` for `cases` deterministic seeds; panic with the failing seed.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0x5eed_0000 + case;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property '{name}' failed at seed {seed:#x}: {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case.
+pub fn check_one<F>(name: &str, seed: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property '{name}' failed at seed {seed:#x}: {msg}");
+    }
+}
+
+/// Assert helper: `ensure!(cond, "msg {}", x)` inside properties.
+#[macro_export]
+macro_rules! prop_ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial() {
+        check("trivial", 10, |rng| {
+            let x = rng.f64();
+            prop_ensure!((0.0..1.0).contains(&x), "x out of range: {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn reports_failure() {
+        check("fails", 5, |rng| {
+            let x = rng.f64();
+            prop_ensure!(x < 0.0, "x={x}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,204 @@
+//! `.tz` tensor container reader/writer — the python↔rust interchange
+//! format for weights, corpora and task tensors. Mirrors
+//! `python/compile/tio.py`; the format is round-trip tested on both sides.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"NSDT";
+
+/// A raw tensor as stored in a `.tz` file.
+#[derive(Clone, Debug)]
+pub enum RawTensor {
+    F32(Tensor),
+    I32 { dims: Vec<usize>, data: Vec<i32> },
+    U8 { dims: Vec<usize>, data: Vec<u8> },
+}
+
+impl RawTensor {
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            RawTensor::F32(t) => t.dims(),
+            RawTensor::I32 { dims, .. } => dims,
+            RawTensor::U8 { dims, .. } => dims,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&Tensor> {
+        match self {
+            RawTensor::F32(t) => Ok(t),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<(&[usize], &[i32])> {
+        match self {
+            RawTensor::I32 { dims, data } => Ok((dims, data)),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn as_u8(&self) -> Result<(&[usize], &[u8])> {
+        match self {
+            RawTensor::U8 { dims, data } => Ok((dims, data)),
+            _ => bail!("tensor is not u8"),
+        }
+    }
+}
+
+pub type TzMap = BTreeMap<String, RawTensor>;
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Load every tensor in a `.tz` file.
+pub fn read_tz(path: &Path) -> Result<TzMap> {
+    let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: bad magic {magic:?}");
+    }
+    let version = read_u32(&mut r)?;
+    if version != 1 {
+        bail!("{path:?}: unsupported version {version}");
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut out = TzMap::new();
+    for _ in 0..count {
+        let nlen = read_u32(&mut r)? as usize;
+        let mut nb = vec![0u8; nlen];
+        r.read_exact(&mut nb)?;
+        let name = String::from_utf8(nb)?;
+        let mut dt = [0u8; 1];
+        r.read_exact(&mut dt)?;
+        let ndim = read_u32(&mut r)? as usize;
+        let mut dims = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            dims.push(read_u64(&mut r)? as usize);
+        }
+        let n: usize = dims.iter().product::<usize>().max(1);
+        let t = match dt[0] {
+            0 => {
+                let mut buf = vec![0u8; n * 4];
+                r.read_exact(&mut buf)?;
+                let data: Vec<f32> = buf
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                RawTensor::F32(Tensor::new(data, dims))
+            }
+            1 => {
+                let mut buf = vec![0u8; n * 4];
+                r.read_exact(&mut buf)?;
+                let data: Vec<i32> = buf
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                RawTensor::I32 { dims, data }
+            }
+            2 => {
+                let mut data = vec![0u8; n];
+                r.read_exact(&mut data)?;
+                RawTensor::U8 { dims, data }
+            }
+            d => bail!("{path:?}: unknown dtype {d}"),
+        };
+        out.insert(name, t);
+    }
+    Ok(out)
+}
+
+/// Write a `.tz` file (used by tests and by result snapshots).
+pub fn write_tz(path: &Path, tensors: &TzMap) -> Result<()> {
+    let f = File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&1u32.to_le_bytes())?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        let (code, dims): (u8, &[usize]) = match t {
+            RawTensor::F32(x) => (0, x.dims()),
+            RawTensor::I32 { dims, .. } => (1, dims),
+            RawTensor::U8 { dims, .. } => (2, dims),
+        };
+        w.write_all(&[code])?;
+        w.write_all(&(dims.len() as u32).to_le_bytes())?;
+        for d in dims {
+            w.write_all(&(*d as u64).to_le_bytes())?;
+        }
+        match t {
+            RawTensor::F32(x) => {
+                for v in x.data() {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+            RawTensor::I32 { data, .. } => {
+                for v in data {
+                    w.write_all(&v.to_le_bytes())?;
+                }
+            }
+            RawTensor::U8 { data, .. } => w.write_all(data)?,
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("nsds_tz_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.tz");
+        let mut m = TzMap::new();
+        m.insert(
+            "a".into(),
+            RawTensor::F32(Tensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2])),
+        );
+        m.insert(
+            "b".into(),
+            RawTensor::I32 { dims: vec![3], data: vec![-1, 0, 7] },
+        );
+        m.insert(
+            "c".into(),
+            RawTensor::U8 { dims: vec![2, 1], data: vec![9, 255] },
+        );
+        write_tz(&path, &m).unwrap();
+        let back = read_tz(&path).unwrap();
+        assert_eq!(back.len(), 3);
+        assert_eq!(back["a"].as_f32().unwrap().data(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(back["b"].as_i32().unwrap().1, &[-1, 0, 7]);
+        assert_eq!(back["c"].as_u8().unwrap().1, &[9, 255]);
+        assert_eq!(back["c"].dims(), &[2, 1]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("nsds_tz_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.tz");
+        std::fs::write(&path, b"XXXX0000").unwrap();
+        assert!(read_tz(&path).is_err());
+    }
+}

@@ -1,0 +1,112 @@
+//! Failure-injection and robustness tests for the IO + eval substrates
+//! (artifact-independent — always run).
+
+use nsds::tensor::Tensor;
+use nsds::util::json::Json;
+use nsds::util::tz;
+
+#[test]
+fn tz_truncated_file_rejected_not_panicking() {
+    let dir = std::env::temp_dir().join("nsds_robust");
+    std::fs::create_dir_all(&dir).unwrap();
+    // Write a valid file, then truncate at every prefix length: the
+    // reader must return Err (never panic, never loop).
+    let path = dir.join("full.tz");
+    let mut m = tz::TzMap::new();
+    m.insert("w".into(),
+             tz::RawTensor::F32(Tensor::new(vec![1.0; 12], vec![3, 4])));
+    m.insert("g".into(),
+             tz::RawTensor::I32 { dims: vec![2], data: vec![5, 6] });
+    tz::write_tz(&path, &m).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    for cut in [0, 3, 4, 8, 12, 13, 20, bytes.len() - 1] {
+        let p = dir.join(format!("cut{cut}.tz"));
+        std::fs::write(&p, &bytes[..cut]).unwrap();
+        assert!(tz::read_tz(&p).is_err(), "cut at {cut} accepted");
+    }
+    // The intact file still reads.
+    assert_eq!(tz::read_tz(&path).unwrap().len(), 2);
+}
+
+#[test]
+fn tz_corrupt_dtype_rejected() {
+    let dir = std::env::temp_dir().join("nsds_robust2");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("x.tz");
+    let mut m = tz::TzMap::new();
+    m.insert("w".into(),
+             tz::RawTensor::U8 { dims: vec![2], data: vec![1, 2] });
+    tz::write_tz(&path, &m).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    // dtype byte sits right after magic+version+count+namelen+name.
+    let dtype_pos = 4 + 4 + 4 + 4 + 1;
+    bytes[dtype_pos] = 42;
+    let p = dir.join("bad_dtype.tz");
+    std::fs::write(&p, &bytes).unwrap();
+    assert!(tz::read_tz(&p).is_err());
+}
+
+#[test]
+fn json_fuzz_never_panics() {
+    // Deterministic mutation fuzz over a seed document: parser must
+    // return Ok or Err, never panic or hang.
+    let seed = r#"{"models":{"a":{"hlo":["f","g"],"n":1.5e3}},"ok":true}"#;
+    let mut rng = nsds::util::rng::Rng::new(99);
+    for _ in 0..2000 {
+        let mut b = seed.as_bytes().to_vec();
+        let flips = 1 + rng.below(4);
+        for _ in 0..flips {
+            let i = rng.below(b.len());
+            b[i] = (rng.below(127) as u8).max(1);
+        }
+        if let Ok(s) = String::from_utf8(b) {
+            let _ = Json::parse(&s);
+        }
+    }
+}
+
+#[test]
+fn batch_nll_handles_single_token_rows() {
+    // S=1 means zero predictions — must not panic or divide by zero.
+    let logits = Tensor::zeros(vec![2, 1, 4]);
+    let tokens = vec![0, 1];
+    let (nll, n) = nsds::eval::ppl::batch_nll(&logits, &tokens, 2, 1);
+    assert_eq!(n, 0);
+    assert_eq!(nll, 0.0);
+}
+
+#[test]
+fn quantize_extreme_values_stay_finite() {
+    // Denormals, huge magnitudes and constant groups must all survive
+    // every backend without NaN/inf.
+    let mut data = vec![0.0f32; 64];
+    data[0] = 1e30;
+    data[1] = -1e30;
+    data[2] = 1e-38;
+    for d in data.iter_mut().skip(32) {
+        *d = 7.0; // constant group
+    }
+    let w = Tensor::new(data, vec![64, 1]);
+    for backend in [nsds::quant::Backend::Rtn, nsds::quant::Backend::Hqq,
+                    nsds::quant::Backend::Gptq] {
+        let q = nsds::quant::quantize_matrix(
+            &w, nsds::quant::QuantSpec::new(2, 32), backend, None);
+        let d = q.dequantize();
+        assert!(d.data().iter().all(|x| x.is_finite()),
+                "{backend:?} produced non-finite dequant");
+    }
+}
+
+#[test]
+fn svd_degenerate_inputs() {
+    // Zero matrix, rank-0, single column/row — all must return finite
+    // factors with non-negative sigma.
+    for t in [Tensor::zeros(vec![5, 3]), Tensor::zeros(vec![1, 1]),
+              Tensor::new(vec![2.0], vec![1, 1]),
+              Tensor::new(vec![1.0, 2.0, 3.0], vec![3, 1])] {
+        let s = nsds::tensor::svd::svd(&t);
+        assert!(s.sigma.iter().all(|x| x.is_finite() && *x >= 0.0));
+        let rec = s.reconstruct();
+        assert!((rec.frob_norm() - t.frob_norm()).abs() < 1e-4);
+    }
+}

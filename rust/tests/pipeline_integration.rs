@@ -1,0 +1,136 @@
+//! Integration: full coordinator pipeline over real artifacts
+//! (skips gracefully when `make artifacts` hasn't run).
+
+use nsds::baselines::Method;
+use nsds::coordinator::Pipeline;
+use nsds::eval::EvalOptions;
+use nsds::quant::Backend;
+use nsds::sensitivity::Ablation;
+
+fn pipeline() -> Option<Pipeline> {
+    if !nsds::runtime::Manifest::default_dir()
+        .join("manifest.json")
+        .exists()
+    {
+        eprintln!("skipping: run `make artifacts`");
+        return None;
+    }
+    Some(Pipeline::new().unwrap())
+}
+
+#[test]
+fn all_method_scores_are_layer_shaped_and_deterministic() {
+    let Some(p) = pipeline() else { return };
+    let model = "llama-s";
+    let nl = p.entry(model).unwrap().config.n_layers;
+    let mut methods = Method::table1();
+    methods.extend(Method::fig5());
+    for m in methods {
+        let a = p.scores(m, model).unwrap();
+        let b = p.scores(m, model).unwrap();
+        assert_eq!(a.len(), nl, "{}", m.label());
+        assert_eq!(a, b, "{} not deterministic", m.label());
+        assert!(a.iter().all(|x| x.is_finite()), "{}: {a:?}", m.label());
+        // A useful metric must discriminate: not all equal.
+        let spread = a.iter().cloned().fold(f64::MIN, f64::max)
+            - a.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread > 0.0, "{} is constant", m.label());
+    }
+}
+
+#[test]
+fn allocations_meet_budget_for_every_method() {
+    let Some(p) = pipeline() else { return };
+    let model = "qwen-s";
+    let nl = p.entry(model).unwrap().config.n_layers as f64;
+    for m in Method::table1() {
+        for budget in [2.0, 2.5, 3.0, 3.5, 4.0] {
+            let bits = p.allocate(m, model, budget).unwrap();
+            let avg: f64 =
+                bits.iter().map(|&b| b as f64).sum::<f64>() / nl;
+            assert!(
+                (avg - budget).abs() <= 1.0 / nl + 1e-9,
+                "{} b̄={budget}: got {avg}",
+                m.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn nsds_budget_endpoints_ordered() {
+    // What is actually guaranteed: the b̄=4 endpoint (uniform 4-bit) must
+    // beat the b̄=2 endpoint (uniform 2-bit), and every intermediate
+    // allocation stays finite and between sane bounds.
+    //
+    // Two *empirical negative results* deliberately NOT asserted (both
+    // analysed in EXPERIMENTS.md §Divergences):
+    //  * NSDS beats its anti-allocation — false here (layer 0 dominates
+    //    the true sensitivity; the SE term prefers late layers);
+    //  * PPL is monotone in pointwise precision — false here: raising
+    //    layers 4–7 to 4-bit over uniform 2-bit *worsened* avg PPL
+    //    (7.78 vs 7.51), i.e. downstream 2-bit layers partially
+    //    compensate upstream quantization error, and precision unmasks
+    //    it (error-compensation effect).
+    let Some(p) = pipeline() else { return };
+    let model = "llama-s";
+    let opts = EvalOptions { max_ppl_batches: 8, max_task_items: 8 };
+    let mut ppls = Vec::new();
+    for budget in [2.0, 3.0, 4.0] {
+        let bits = p
+            .allocate(Method::Nsds(Ablation::Full), model, budget)
+            .unwrap();
+        let qw = p.quantize(model, &bits, Backend::Hqq).unwrap();
+        let e = p.eval(model, &qw, &opts).unwrap();
+        let ppl = e.avg_ppl();
+        eprintln!("b̄={budget}: avg ppl {ppl:.3}");
+        assert!(ppl.is_finite() && ppl > 1.0 && ppl < 256.0);
+        ppls.push(ppl);
+    }
+    assert!(ppls[2] < ppls[0],
+            "uniform 4-bit {} !< uniform 2-bit {}", ppls[2], ppls[0]);
+    // And the intermediate allocation must not be wildly outside the
+    // endpoint bracket (allows the compensation effect above).
+    assert!(ppls[1] < ppls[0] * 1.25, "b̄=3 pathological: {ppls:?}");
+}
+
+#[test]
+fn calibration_shapes_consistent() {
+    let Some(p) = pipeline() else { return };
+    let model = "llama-s";
+    let cfg = p.entry(model).unwrap().config.clone();
+    let c = p.calibration(model).unwrap();
+    assert_eq!(c.resid.len(), cfg.n_layers + 1);
+    assert_eq!(c.x_ln1.len(), cfg.n_layers);
+    let rows = c.resid[0].rows();
+    assert_eq!(rows, nsds::coordinator::CALIB_BATCHES
+               * p.man.eval_batch * cfg.seq);
+    assert_eq!(c.x_ln1[0].cols(), cfg.d_model);
+    assert_eq!(c.attn_ctx[0].cols(), cfg.n_heads * cfg.d_head);
+    assert_eq!(c.ffn_mid[0].cols(), cfg.d_ffn);
+    // grads present for all quantizable weights, correct stacked shape
+    for name in nsds::model::QUANT_WEIGHTS {
+        assert_eq!(c.grads[name].dims(), cfg.weight_dims(name).as_slice());
+    }
+    assert!(c.loss.is_finite() && c.loss > 0.0);
+}
+
+#[test]
+fn gptq_backend_beats_rtn_end_to_end() {
+    let Some(p) = pipeline() else { return };
+    let model = "llama-s";
+    let opts = EvalOptions { max_ppl_batches: 8, max_task_items: 4 };
+    let bits = p
+        .allocate(Method::Nsds(Ablation::Full), model, 3.0)
+        .unwrap();
+    let q_rtn = p.quantize(model, &bits, Backend::Rtn).unwrap();
+    let q_gptq = p.quantize(model, &bits, Backend::Gptq).unwrap();
+    let e_rtn = p.eval(model, &q_rtn, &opts).unwrap();
+    let e_gptq = p.eval(model, &q_gptq, &opts).unwrap();
+    eprintln!("rtn ppl {:.3} vs gptq ppl {:.3}", e_rtn.avg_ppl(),
+              e_gptq.avg_ppl());
+    // GPTQ minimizes output reconstruction error; on PPL it should not be
+    // meaningfully worse.
+    assert!(e_gptq.avg_ppl() < e_rtn.avg_ppl() * 1.10,
+            "gptq {} vs rtn {}", e_gptq.avg_ppl(), e_rtn.avg_ppl());
+}
