@@ -4,14 +4,16 @@
 //!   cargo run --release --example router_demo [model] [n_clients] [reqs]
 //!
 //! Four client threads stream scoring requests into the bounded queue;
-//! the main thread runs the PJRT serve loop (PJRT handles are not Send).
+//! the main thread runs the serve loop over the pipeline's executor
+//! (engine handles stay on one thread).
 //! Halfway through, a client deploys the NSDS@3-bit variant via a queued
 //! weight-swap — ordered with in-flight requests, no recompilation.
 
 use std::sync::Arc;
 
 use nsds::baselines::Method;
-use nsds::coordinator::server::{serve, Client, ServerQueue};
+use nsds::coordinator::server::{serve, Client, ServedWeights,
+                                ServerQueue};
 use nsds::coordinator::Pipeline;
 use nsds::quant::Backend;
 use nsds::sensitivity::Ablation;
@@ -93,7 +95,7 @@ fn main() -> anyhow::Result<()> {
 
     // Engine thread = main thread.
     let t0 = std::time::Instant::now();
-    serve(&p.engine, &entry, batch, fp, &queue)?;
+    serve(p.exec(), &entry, batch, ServedWeights::Dense(fp), &queue)?;
     let dt = t0.elapsed().as_secs_f64();
 
     let (served, batches, padded) = queue.stats();

@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
     // Ground-truth oracle: ΔPPL when only layer l is quantized to 2-bit.
     println!("measuring single-layer 2-bit ΔPPL oracle ({nl} layers)...");
     let fp_ppl = nsds::eval::ppl::perplexity(
-        &p.engine, &p.man, entry, &w, &corpora.wiki_like, 16)?;
+        p.exec(), &p.man, entry, &w, &corpora.wiki_like, 16)?;
     let mut oracle = Vec::with_capacity(nl);
     for l in 0..nl {
         let mut qw = w.clone();
@@ -65,7 +65,7 @@ fn main() -> anyhow::Result<()> {
             qw.set_layer_matrix(name, l, &q.dequantize());
         }
         let ppl = nsds::eval::ppl::perplexity(
-            &p.engine, &p.man, entry, &qw, &corpora.wiki_like, 16)?;
+            p.exec(), &p.man, entry, &qw, &corpora.wiki_like, 16)?;
         oracle.push(ppl - fp_ppl);
     }
     println!("oracle ΔPPL per layer: {oracle:.3?}\n");

@@ -1,5 +1,5 @@
 //! Serving scenario: a batched request loop over the weight-swappable
-//! PJRT executor — the deployment shape a quantized LLM service uses.
+//! executor — the deployment shape a quantized LLM service uses.
 //!
 //!   cargo run --release --example serve_quantized [model] [n_requests]
 //!
@@ -68,7 +68,7 @@ fn main() -> anyhow::Result<()> {
     println!("serving {model} ({} params), batch={b}, seq={s}, \
               {n_requests} requests/variant", entry.params);
     // Warm-up: compile the executable once outside every timing loop.
-    run_forward(&p.engine, entry, &corpora.train[..b * s], b, &fp)?;
+    run_forward(p.exec(), entry, &corpora.train[..b * s], b, &fp)?;
     for (label, w, bytes) in [
         ("FP32", &fp, fp_mem),
         ("NSDS@3bit", &q3, mem(&bits_nsds)),
@@ -80,7 +80,7 @@ fn main() -> anyhow::Result<()> {
             let off = (r * b * s) % (corpora.train.len() - b * s);
             let chunk = &corpora.train[off..off + b * s];
             let t0 = Instant::now();
-            let logits = run_forward(&p.engine, entry, chunk, b, w)?;
+            let logits = run_forward(p.exec(), entry, chunk, b, w)?;
             std::hint::black_box(&logits);
             lat.push(t0.elapsed().as_secs_f64() * 1e3);
         }

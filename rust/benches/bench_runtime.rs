@@ -1,76 +1,104 @@
-//! Runtime benches (need artifacts; exit 0 with a notice otherwise):
-//! forward-batch latency per model, the fused dequant-matmul Pallas
-//! kernels, probe/grad executables, and an end-to-end table-1-cell run
-//! (score → allocate → quantize → eval) with a timing breakdown.
-//! These regenerate the latency/throughput side of every paper exhibit.
+//! Runtime benches. The native section (fused dequant-matmul vs
+//! unpack-then-matmul, native forward latency) is fully self-contained;
+//! the pipeline section needs artifacts (notice + skip otherwise); the
+//! PJRT kernel section additionally needs the `xla` feature.
+//! These regenerate the latency/throughput side of every paper exhibit
+//! and the native-vs-PJRT comparison axis.
 
 #[path = "harness.rs"]
 mod harness;
 
 use harness::{bench, black_box};
-use nsds::baselines::Method;
-use nsds::coordinator::Pipeline;
-use nsds::eval::EvalOptions;
-use nsds::quant::Backend;
-use nsds::runtime::{run_forward, Input, Manifest};
-use nsds::sensitivity::Ablation;
+use nsds::infer::{fused_matmul, Executor, NativeEngine, PackedMatrix,
+                  QuantizedModel};
+use nsds::model::{ModelConfig, Weights};
+use nsds::quant::{rtn, Backend, QuantSpec, DEFAULT_GROUP};
+use nsds::runtime::{Manifest, ModelEntry};
+use nsds::tensor::matmul::matmul;
 use nsds::tensor::Tensor;
+use nsds::util::pool::default_workers;
 use nsds::util::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
-    let dir = Manifest::default_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("bench_runtime: no artifacts (run `make artifacts`); \
-                  skipping");
-        return Ok(());
+/// The unpack-then-matmul baseline the fused kernel must beat:
+/// unpack codes + materialize the f32 weight (`PackedMatrix::dequantize`
+/// does exactly that), then `tensor::matmul`.
+fn unpack_then_matmul(x: &Tensor, pm: &PackedMatrix) -> Tensor {
+    matmul(x, &pm.dequantize())
+}
+
+fn native_section() {
+    let workers = default_workers();
+    let mut rng = Rng::new(5);
+    println!("== native fused dequant-matmul vs unpack-then-matmul \
+              (workers={workers}) ==");
+    for bits in [2u8, 4] {
+        let (m, k, n, g) = (256usize, 256usize, 256usize, 64usize);
+        let w = Tensor::randn(vec![k, n], &mut rng);
+        let x = Tensor::randn(vec![m, k], &mut rng);
+        let q = rtn::quantize(&w, QuantSpec::new(bits, g));
+        let pm = PackedMatrix::from_quantized(&q);
+        let fused = bench(
+            &format!("fused dequant-matmul {bits}bit {m}x{k}x{n}"),
+            || {
+                black_box(fused_matmul(&x, &pm, workers));
+            },
+        );
+        let baseline = bench(
+            &format!("unpack-then-matmul  {bits}bit {m}x{k}x{n}"),
+            || {
+                black_box(unpack_then_matmul(&x, &pm));
+            },
+        );
+        println!("  -> fused speedup {bits}bit: {:.2}x",
+                 baseline.median_ns / fused.median_ns);
     }
+
+    println!("== native forward latency (synthetic llama-s shape) ==");
+    let cfg = ModelConfig::llama_s_synth();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let fp = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let bits = vec![4u8; cfg.n_layers];
+    let qm = QuantizedModel::quantize(&cfg, &fp, &bits, DEFAULT_GROUP,
+                                      Backend::Hqq, None, workers);
+    let exec = NativeEngine::new();
+    let b = 4;
+    let tokens: Vec<i32> =
+        (0..b * cfg.seq).map(|i| (i % cfg.vocab) as i32).collect();
+    bench(&format!("native fwd dense [{b}x{}]", cfg.seq), || {
+        black_box(exec.forward(&entry, &tokens, b, &fp).unwrap());
+    });
+    bench(&format!("native fwd packed-4bit [{b}x{}]", cfg.seq), || {
+        black_box(
+            exec.forward_packed(&entry, &tokens, b, &qm).unwrap());
+    });
+}
+
+fn pipeline_section() -> anyhow::Result<()> {
+    use nsds::baselines::Method;
+    use nsds::coordinator::Pipeline;
+    use nsds::eval::EvalOptions;
+    use nsds::sensitivity::Ablation;
+
     let p = Pipeline::new()?;
     let corpora = nsds::eval::ppl::load_corpora(&p.man)?;
     let b = p.man.eval_batch;
 
-    println!("== forward-batch latency (batch={b}) ==");
+    println!("== forward-batch latency (batch={b}, executor={}) ==",
+             p.exec().platform());
     for model in ["llama-s", "qwen-s", "llama-m"] {
         let entry = p.entry(model)?;
         let w = p.weights(model)?;
         let s = entry.config.seq;
         let chunk = &corpora.wiki_like[..b * s];
-        // warm-up compiles outside the timing loop
-        run_forward(&p.engine, entry, chunk, b, &w)?;
+        // warm-up (compiles on PJRT) outside the timing loop
+        p.exec().forward(entry, chunk, b, &w)?;
         bench(&format!("fwd {model} [{}x{}]", b, s), || {
-            black_box(run_forward(&p.engine, entry, chunk, b, &w)
-                .unwrap());
+            black_box(p.exec().forward(entry, chunk, b, &w).unwrap());
         });
     }
 
-    println!("== fused dequant-matmul Pallas kernels ==");
-    let mut rng = Rng::new(5);
-    for k in &p.man.kernels {
-        if !k.file.starts_with("dequant") {
-            continue;
-        }
-        let w = Tensor::randn(vec![k.k, k.n], &mut rng);
-        let x = Tensor::randn(vec![k.m, k.k], &mut rng);
-        let q = nsds::quant::rtn::quantize(
-            &w, nsds::quant::QuantSpec::new(k.bits, k.group));
-        let packed = nsds::quant::pack::pack(&q.codes, k.k, k.n, k.bits);
-        let scale = Tensor::new(q.scale.clone(), vec![k.k / k.group, k.n]);
-        let zero = Tensor::new(q.zero.clone(), vec![k.k / k.group, k.n]);
-        p.engine.load(&k.file)?;
-        bench(&format!("kernel {} [{}x{}x{}]", k.file, k.m, k.k, k.n),
-              || {
-            black_box(
-                p.engine
-                    .execute(&k.file, &[
-                        Input::F32(&x),
-                        Input::U8(&packed,
-                                  vec![k.k * k.bits as usize / 8, k.n]),
-                        Input::F32(&scale),
-                        Input::F32(&zero),
-                    ])
-                    .unwrap(),
-            );
-        });
-    }
+    #[cfg(feature = "xla")]
+    pjrt_kernel_section(&p)?;
 
     println!("== end-to-end table-1 cell (llama-s, NSDS, b̄=3, HQQ) ==");
     let t0 = std::time::Instant::now();
@@ -88,4 +116,55 @@ fn main() -> anyhow::Result<()> {
         r.avg_acc()
     );
     Ok(())
+}
+
+/// The standalone Pallas dequant kernels, executed through PJRT.
+#[cfg(feature = "xla")]
+fn pjrt_kernel_section(
+    p: &nsds::coordinator::Pipeline) -> anyhow::Result<()> {
+    use nsds::quant::pack;
+    use nsds::runtime::{Engine, Input};
+
+    let dir = Manifest::default_dir();
+    let engine = Engine::cpu(&dir)?;
+    let mut rng = Rng::new(5);
+    println!("== fused dequant-matmul Pallas kernels (PJRT) ==");
+    for k in &p.man.kernels {
+        if !k.file.starts_with("dequant") {
+            continue;
+        }
+        let w = Tensor::randn(vec![k.k, k.n], &mut rng);
+        let x = Tensor::randn(vec![k.m, k.k], &mut rng);
+        let q = rtn::quantize(&w, QuantSpec::new(k.bits, k.group));
+        let packed = pack::pack(&q.codes, k.k, k.n, k.bits);
+        let scale = Tensor::new(q.scale.clone(), vec![k.k / k.group, k.n]);
+        let zero = Tensor::new(q.zero.clone(), vec![k.k / k.group, k.n]);
+        engine.load(&k.file)?;
+        bench(&format!("kernel {} [{}x{}x{}]", k.file, k.m, k.k, k.n),
+              || {
+            black_box(
+                engine
+                    .execute(&k.file, &[
+                        Input::F32(&x),
+                        Input::U8(&packed,
+                                  vec![k.k * k.bits as usize / 8, k.n]),
+                        Input::F32(&scale),
+                        Input::F32(&zero),
+                    ])
+                    .unwrap(),
+            );
+        });
+    }
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    native_section();
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("bench_runtime: no artifacts (run `make artifacts`); \
+                  skipping pipeline benches");
+        return Ok(());
+    }
+    pipeline_section()
 }

@@ -73,12 +73,15 @@ fn top_k_set(row: &[f32], k: usize) -> BTreeSet<usize> {
 /// matrices. Higher = more sensitive.
 pub fn llm_mq(cfg: &ModelConfig, w: &Weights, calib: &Calibration)
     -> Vec<f64> {
+    let grads = calib.grads.as_ref().expect(
+        "LLM-MQ needs loss gradients, which this executor did not \
+         collect (enable the `xla` feature's grad artifact)");
     (0..cfg.n_layers)
         .map(|l| {
             let mut acc = 0.0f64;
             for name in QUANT_WEIGHTS {
                 let wm = w.layer_matrix(name, l);
-                let gm = calib.grads[name].slice0(l);
+                let gm = grads[name].slice0(l);
                 let g = crate::quant::fit_group(wm.rows(), DEFAULT_GROUP);
                 let q = rtn::quantize(&wm, QuantSpec::new(2, g));
                 let dq = q.dequantize();
@@ -160,7 +163,7 @@ mod tests {
             x_ln2: mk(d),
             attn_ctx: mk(cfg.n_heads * cfg.d_head),
             ffn_mid: mk(cfg.d_ffn),
-            grads,
+            grads: Some(grads),
             loss: 1.0,
         }
     }

@@ -38,7 +38,7 @@ pub fn greedy_allocate(p: &Pipeline, model: &str, budget: f64,
     let eval_bits = |bits: &[u8], evals: &mut usize| -> Result<f64> {
         *evals += 1;
         let qw = p.quantize(model, bits, backend)?;
-        crate::eval::ppl::perplexity(&p.engine, &p.man, entry, &qw,
+        crate::eval::ppl::perplexity(p.exec(), &p.man, entry, &qw,
                                      &corpora.wiki_like, ppl_batches)
     };
 

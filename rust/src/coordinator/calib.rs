@@ -1,17 +1,21 @@
 //! Calibration data collection (the paper's "128 sequences from Pile" →
 //! our train-corpus sample; DESIGN.md "Substitutions").
 //!
-//! One probe-artifact pass per model yields every activation the
-//! calibration-based baselines and GPTQ need; one grad-artifact pass
-//! yields the loss gradients for LLM-MQ. Collected once and cached by the
-//! coordinator — the quantization experiments themselves stay data-free
-//! for NSDS and the calibration-free baselines.
+//! Probe batches run through ANY `infer::Executor` (native or PJRT) and
+//! yield every activation the calibration-based baselines and GPTQ need;
+//! a grad pass yields the loss gradients for LLM-MQ. Gradients are an
+//! optional executor capability (the native engine has no reverse mode
+//! yet), so `grads` is `None` when the executor cannot provide them —
+//! the quantization experiments themselves stay data-free for NSDS and
+//! the calibration-free baselines either way.
 
 use anyhow::Result;
 
+use crate::eval::ppl::batch_nll;
+use crate::infer::Executor;
 use crate::model::Weights;
 use crate::quant::HessianMap;
-use crate::runtime::{Engine, Input, Manifest, ModelEntry};
+use crate::runtime::{Manifest, ModelEntry};
 use crate::tensor::Tensor;
 
 /// Activations + gradients for one model, from `n_batches` probe batches.
@@ -28,20 +32,11 @@ pub struct Calibration {
     pub attn_ctx: Vec<Tensor>,
     /// FFN intermediates (inputs to wdown): [L] × [rows, F].
     pub ffn_mid: Vec<Tensor>,
-    /// Loss gradients w.r.t. each stacked quantizable weight.
-    pub grads: std::collections::BTreeMap<String, Tensor>,
-    /// Calibration loss (diagnostic).
+    /// Loss gradients w.r.t. each stacked quantizable weight; `None`
+    /// when the executor cannot collect gradients (LLM-MQ unavailable).
+    pub grads: Option<std::collections::BTreeMap<String, Tensor>>,
+    /// Calibration loss (mean next-token NLL of batch 0; diagnostic).
     pub loss: f64,
-}
-
-/// Reorder a probe output [L, B, S, X] into per-layer [B·S, X] tensors.
-fn split_layers(t: &Tensor) -> Vec<Tensor> {
-    let l = t.dims()[0];
-    let rows = t.dims()[1] * t.dims()[2];
-    let x = t.dims()[3];
-    (0..l)
-        .map(|li| t.slice0(li).reshape(vec![rows, x]))
-        .collect()
 }
 
 /// Append rows of `src` onto `dst` (both [_, X]).
@@ -57,7 +52,7 @@ fn append_rows(dst: &mut Tensor, src: &Tensor) {
 
 /// Collect calibration activations + gradients.
 /// `n_batches` probe batches of [eval_batch, seq] from the train corpus.
-pub fn collect(engine: &Engine, man: &Manifest, entry: &ModelEntry,
+pub fn collect(exec: &dyn Executor, man: &Manifest, entry: &ModelEntry,
                weights: &Weights, train: &[i32], n_batches: usize)
                -> Result<Calibration> {
     let b = man.eval_batch;
@@ -70,66 +65,53 @@ pub fn collect(engine: &Engine, man: &Manifest, entry: &ModelEntry,
     let mut x_ln2: Vec<Tensor> = Vec::new();
     let mut attn_ctx: Vec<Tensor> = Vec::new();
     let mut ffn_mid: Vec<Tensor> = Vec::new();
+    let mut loss = 0.0f64;
 
-    let ordered = weights.ordered();
     for i in 0..n_batches {
         let chunk = &train[i * per..(i + 1) * per];
-        let mut inputs: Vec<Input> = Vec::with_capacity(13);
-        inputs.push(Input::I32(chunk, vec![b, s]));
-        for t in &ordered {
-            inputs.push(Input::F32(t));
-        }
-        let out = engine.execute(&entry.hlo_probe, &inputs)?;
-        // (logits, resid_in [L,B,S,D], final_resid, x_ln1, x_ln2,
-        //  attn_ctx, ffn_mid)
-        let r_in = split_layers(&out[1]);
-        let fin = out[2].clone().reshape(vec![per, entry.config.d_model]);
-        let l1 = split_layers(&out[3]);
-        let l2 = split_layers(&out[4]);
-        let ctx = split_layers(&out[5]);
-        let mid = split_layers(&out[6]);
+        let p = exec.probe(entry, chunk, b, weights)?;
         if i == 0 {
-            resid = r_in;
-            resid.push(fin);
-            x_ln1 = l1;
-            x_ln2 = l2;
-            attn_ctx = ctx;
-            ffn_mid = mid;
+            let (nll, count) = batch_nll(&p.logits, chunk, b, s);
+            loss = nll / count.max(1) as f64;
+            resid = p.resid_in;
+            resid.push(p.final_resid);
+            x_ln1 = p.x_ln1;
+            x_ln2 = p.x_ln2;
+            attn_ctx = p.attn_ctx;
+            ffn_mid = p.ffn_mid;
         } else {
             for (d, sx) in resid.iter_mut().zip(
-                r_in.iter().chain(std::iter::once(&fin))) {
+                p.resid_in.iter()
+                    .chain(std::iter::once(&p.final_resid))) {
                 append_rows(d, sx);
             }
-            for (d, sx) in x_ln1.iter_mut().zip(&l1) {
+            for (d, sx) in x_ln1.iter_mut().zip(&p.x_ln1) {
                 append_rows(d, sx);
             }
-            for (d, sx) in x_ln2.iter_mut().zip(&l2) {
+            for (d, sx) in x_ln2.iter_mut().zip(&p.x_ln2) {
                 append_rows(d, sx);
             }
-            for (d, sx) in attn_ctx.iter_mut().zip(&ctx) {
+            for (d, sx) in attn_ctx.iter_mut().zip(&p.attn_ctx) {
                 append_rows(d, sx);
             }
-            for (d, sx) in ffn_mid.iter_mut().zip(&mid) {
+            for (d, sx) in ffn_mid.iter_mut().zip(&p.ffn_mid) {
                 append_rows(d, sx);
             }
         }
     }
     assert_eq!(resid.len(), l + 1);
 
-    // Gradients: one grad-artifact batch (averaging more adds little for
-    // a first-order saliency proxy).
-    let chunk = &train[0..per];
-    let mut inputs: Vec<Input> = Vec::with_capacity(13);
-    inputs.push(Input::I32(chunk, vec![b, s]));
-    for t in &ordered {
-        inputs.push(Input::F32(t));
-    }
-    let gout = engine.execute(&entry.hlo_grad, &inputs)?;
-    let loss = gout[0].data()[0] as f64;
-    let mut grads = std::collections::BTreeMap::new();
-    for (i, name) in crate::model::QUANT_WEIGHTS.iter().enumerate() {
-        grads.insert(name.to_string(), gout[i + 1].clone());
-    }
+    // Gradients: one grad batch (averaging more adds little for a
+    // first-order saliency proxy). Optional executor capability — but a
+    // grad failure on a SUPPORTING executor (e.g. corrupt grad
+    // artifact) is a real error and propagates.
+    let grads = if exec.supports_grads() {
+        Some(exec.grads(entry, &train[0..per], b, weights)?)
+    } else {
+        eprintln!("[calib] {} collects no gradients; LLM-MQ scoring \
+                   disabled", exec.platform());
+        None
+    };
 
     Ok(Calibration { resid, x_ln1, x_ln2, attn_ctx, ffn_mid, grads, loss })
 }
@@ -180,16 +162,9 @@ impl Calibration {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn split_layers_shapes() {
-        let t = Tensor::new((0..2 * 3 * 4 * 5).map(|x| x as f32).collect(),
-                            vec![2, 3, 4, 5]);
-        let v = split_layers(&t);
-        assert_eq!(v.len(), 2);
-        assert_eq!(v[0].dims(), &[12, 5]);
-        assert_eq!(v[1].at(0, 0), 60.0);
-    }
+    use crate::infer::NativeEngine;
+    use crate::model::ModelConfig;
+    use crate::util::rng::Rng;
 
     #[test]
     fn append_rows_concatenates() {
@@ -206,5 +181,40 @@ mod tests {
         let s = Calibration::subsample(&x, 5);
         assert_eq!(s.dims(), &[5, 2]);
         assert_eq!(s.at(1, 0), 4.0); // stride 2
+    }
+
+    /// End-to-end collect through the native executor on a synthetic
+    /// model: shapes line up and grads degrade to None gracefully.
+    #[test]
+    fn collect_native_shapes_and_optional_grads() {
+        let cfg = ModelConfig::test_config();
+        let entry = ModelEntry::synthetic(cfg.clone());
+        let mut rng = Rng::new(60);
+        let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        let exec = NativeEngine::with_workers(2);
+        let man = Manifest {
+            dir: std::path::PathBuf::from("."),
+            eval_batch: 2,
+            models: vec![],
+            tasks_file: String::new(),
+            tasks: vec![],
+            corpus_file: String::new(),
+            kernels: vec![],
+        };
+        let n_batches = 3;
+        let train: Vec<i32> = (0..n_batches * man.eval_batch * cfg.seq)
+            .map(|i| ((i * 5) % cfg.vocab) as i32)
+            .collect();
+        let c = collect(&exec, &man, &entry, &w, &train, n_batches)
+            .unwrap();
+        let rows = n_batches * man.eval_batch * cfg.seq;
+        assert_eq!(c.resid.len(), cfg.n_layers + 1);
+        assert_eq!(c.resid[0].dims(), &[rows, cfg.d_model]);
+        assert_eq!(c.x_ln1[0].dims(), &[rows, cfg.d_model]);
+        assert_eq!(c.attn_ctx[0].dims(),
+                   &[rows, cfg.n_heads * cfg.d_head]);
+        assert_eq!(c.ffn_mid[0].dims(), &[rows, cfg.d_ffn]);
+        assert!(c.grads.is_none(), "native engine has no grads yet");
+        assert!(c.loss.is_finite() && c.loss > 0.0);
     }
 }

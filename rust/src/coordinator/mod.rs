@@ -1,10 +1,11 @@
 //! L3 coordinator: the deployable pipeline tying everything together.
 //!
-//! `Pipeline` owns the PJRT engine, the artifact manifest, and per-model
-//! caches (FP weights, init weights, calibration activations, method
-//! scores). Experiment drivers (`report::paper`) ask it for
-//! (method × model × budget × backend) runs; it scores layers in parallel
-//! worker threads, quantizes, and evaluates THROUGH the runtime.
+//! `Pipeline` owns an `infer::Executor` (native by default; PJRT behind
+//! the `xla` feature), the artifact manifest, and per-model caches (FP
+//! weights, init weights, calibration activations, method scores).
+//! Experiment drivers (`report::paper`) ask it for (method × model ×
+//! budget × backend) runs; it scores layers in parallel worker threads,
+//! quantizes, and evaluates THROUGH the executor.
 
 pub mod calib;
 pub mod server;
@@ -17,9 +18,10 @@ use anyhow::Result;
 
 use crate::baselines::{self, Method};
 use crate::eval::{evaluate, EvalOptions, EvalResult};
+use crate::infer::{default_executor, Executor, QuantizedModel};
 use crate::model::Weights;
 use crate::quant::{Backend, HessianMap, DEFAULT_GROUP};
-use crate::runtime::{Engine, Manifest, ModelEntry};
+use crate::runtime::{Manifest, ModelEntry};
 use crate::sensitivity::Ablation;
 use crate::util::pool::default_workers;
 
@@ -28,7 +30,7 @@ use crate::util::pool::default_workers;
 pub const CALIB_BATCHES: usize = 4;
 
 pub struct Pipeline {
-    pub engine: Engine,
+    pub engine: Box<dyn Executor>,
     pub man: Manifest,
     pub workers: usize,
     weights: Mutex<HashMap<String, Weights>>,
@@ -40,10 +42,19 @@ pub struct Pipeline {
 }
 
 impl Pipeline {
+    /// Pipeline over the default executor (native engine, or PJRT when
+    /// the `xla` feature is enabled — see `infer::default_executor`).
     pub fn new() -> Result<Self> {
         let dir = Manifest::default_dir();
+        let workers = default_workers();
+        let engine = default_executor(&dir, workers)?;
+        Self::with_engine(engine)
+    }
+
+    /// Pipeline over an explicit executor.
+    pub fn with_engine(engine: Box<dyn Executor>) -> Result<Self> {
+        let dir = Manifest::default_dir();
         let man = Manifest::load(&dir)?;
-        let engine = Engine::cpu(&dir)?;
         Ok(Pipeline {
             engine,
             man,
@@ -55,6 +66,11 @@ impl Pipeline {
             hessians: Mutex::new(HashMap::new()),
             fp_eval: Mutex::new(HashMap::new()),
         })
+    }
+
+    /// The executor every forward goes through.
+    pub fn exec(&self) -> &dyn Executor {
+        self.engine.as_ref()
     }
 
     pub fn entry(&self, model: &str) -> Result<&ModelEntry> {
@@ -100,7 +116,7 @@ impl Pipeline {
         let w = self.weights(model)?;
         let corpora = crate::eval::ppl::load_corpora(&self.man)?;
         let t0 = Instant::now();
-        let c = calib::collect(&self.engine, &self.man, entry, &w,
+        let c = calib::collect(self.exec(), &self.man, entry, &w,
                                &corpora.train, CALIB_BATCHES)?;
         eprintln!("[calib] {model}: {} batches in {:.2}s (loss {:.3})",
                   CALIB_BATCHES, t0.elapsed().as_secs_f64(), c.loss);
@@ -141,6 +157,16 @@ impl Pipeline {
         } else {
             None
         };
+        // Central capability guard: a clean error beats the panic the
+        // scorer would otherwise hit on grad-less executors.
+        if matches!(method, Method::LlmMq)
+            && calib.as_ref().is_some_and(|c| c.grads.is_none())
+        {
+            anyhow::bail!(
+                "LLM-MQ needs loss gradients, which the {} executor \
+                 does not collect (build with --features xla)",
+                self.exec().platform());
+        }
         let init = if matches!(method, Method::LieQ) {
             Some(self.init_weights(model)?)
         } else {
@@ -171,9 +197,11 @@ impl Pipeline {
         Ok(crate::allocate::allocate_bits(&scores, budget))
     }
 
-    /// Quantize the model at an allocation with a backend.
-    pub fn quantize(&self, model: &str, bits: &[u8], backend: Backend)
-        -> Result<Weights> {
+    /// Shared quantization inputs: model entry, FP weights, and (for
+    /// GPTQ only) the calibration Hessians.
+    fn quant_inputs(&self, model: &str, backend: Backend)
+        -> Result<(&ModelEntry, Weights,
+                   Option<std::sync::Arc<HessianMap>>)> {
         let entry = self.man.model(model)?;
         let w = self.weights(model)?;
         let hess = if backend == Backend::Gptq {
@@ -181,16 +209,33 @@ impl Pipeline {
         } else {
             None
         };
+        Ok((entry, w, hess))
+    }
+
+    /// Quantize the model at an allocation with a backend.
+    pub fn quantize(&self, model: &str, bits: &[u8], backend: Backend)
+        -> Result<Weights> {
+        let (entry, w, hess) = self.quant_inputs(model, backend)?;
         Ok(crate::quant::quantize_model(
             &entry.config, &w, bits, DEFAULT_GROUP, backend,
             hess.as_deref(), self.workers))
     }
 
-    /// Evaluate a weight variant (PPL + all tasks) through the runtime.
+    /// Quantize into the packed serving format (fused dequant-matmul
+    /// path of the native executor; see `infer::QuantizedModel`).
+    pub fn quantize_packed(&self, model: &str, bits: &[u8],
+                           backend: Backend) -> Result<QuantizedModel> {
+        let (entry, w, hess) = self.quant_inputs(model, backend)?;
+        Ok(QuantizedModel::quantize(
+            &entry.config, &w, bits, DEFAULT_GROUP, backend,
+            hess.as_deref(), self.workers))
+    }
+
+    /// Evaluate a weight variant (PPL + all tasks) through the executor.
     pub fn eval(&self, model: &str, weights: &Weights, opts: &EvalOptions)
         -> Result<EvalResult> {
         let entry = self.man.model(model)?;
-        evaluate(&self.engine, &self.man, entry, weights, opts)
+        evaluate(self.exec(), &self.man, entry, weights, opts)
     }
 
     /// FP16-reference evaluation, cached (every table reports it).

@@ -1,17 +1,19 @@
-//! Serving front-end: a dynamic batcher over the weight-swappable PJRT
+//! Serving front-end: a dynamic batcher over the weight-swappable
 //! executor — the vLLM-router-shaped piece of the L3 coordinator.
 //!
 //! Requests (token windows wanting NLL scores) arrive on a bounded queue
 //! from any number of client threads; the *engine thread* (PJRT handles
-//! are not `Send` — the client wraps an `Rc` internally) runs
-//! `Server::serve`, packing requests into the executable's fixed
-//! [eval_batch, seq] shape (padding the tail), executing, and resolving
-//! per-request replies. Backpressure: submitters block while the queue
-//! is at `max_queue`.
+//! are not `Send`; the native engine keeps the same discipline) runs
+//! `serve`, packing requests into the executor's fixed [batch, seq]
+//! shape (padding the tail), executing, and resolving per-request
+//! replies. Backpressure: submitters block while the queue is at
+//! `max_queue`.
 //!
 //! Weight swap is a queued control message, so deploying a new quantized
 //! variant is ordered with respect to in-flight requests and requires NO
-//! recompilation (weights are runtime inputs of the AOT executable).
+//! recompilation. Variants deploy either as dense f32 weights or as a
+//! packed 2/4-bit `QuantizedModel`, which the native executor serves via
+//! the fused dequant-matmul without ever materializing f32 weights.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -20,12 +22,34 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::Result;
 
 use crate::eval::ppl::batch_nll;
+use crate::infer::{Executor, QuantizedModel};
 use crate::model::Weights;
-use crate::runtime::{run_forward, Engine, ModelEntry};
+use crate::runtime::ModelEntry;
+
+/// A deployable weight variant: dense f32 or packed 2/4-bit codes.
+pub enum ServedWeights {
+    Dense(Weights),
+    Packed(QuantizedModel),
+}
+
+impl ServedWeights {
+    fn forward(&self, exec: &dyn Executor, entry: &ModelEntry,
+               tokens: &[i32], batch: usize)
+               -> Result<crate::tensor::Tensor> {
+        match self {
+            ServedWeights::Dense(w) => {
+                exec.forward(entry, tokens, batch, w)
+            }
+            ServedWeights::Packed(qm) => {
+                exec.forward_packed(entry, tokens, batch, qm)
+            }
+        }
+    }
+}
 
 enum Msg {
     Infer(Request),
-    Swap(Box<Weights>),
+    Swap(Box<ServedWeights>),
     Stop,
 }
 
@@ -111,9 +135,15 @@ impl Client {
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))
     }
 
-    /// Queue a zero-downtime weight swap (ordered with inference).
+    /// Queue a zero-downtime dense weight swap (ordered with inference).
     pub fn swap_weights(&self, w: Weights) {
-        self.q.push(Msg::Swap(Box::new(w)));
+        self.q.push(Msg::Swap(Box::new(ServedWeights::Dense(w))));
+    }
+
+    /// Queue a zero-downtime swap to a packed quantized variant, served
+    /// through the fused dequant-matmul path.
+    pub fn swap_packed(&self, qm: QuantizedModel) {
+        self.q.push(Msg::Swap(Box::new(ServedWeights::Packed(qm))));
     }
 
     /// Ask the serve loop to exit once the queue drains to this message.
@@ -122,10 +152,10 @@ impl Client {
     }
 }
 
-/// Run the batching serve loop on the thread that owns the PJRT engine.
+/// Run the batching serve loop on the thread that owns the executor.
 /// Returns when a `Stop` message is consumed.
-pub fn serve(engine: &Engine, entry: &ModelEntry, batch: usize,
-             mut weights: Weights, q: &ServerQueue) -> Result<()> {
+pub fn serve(exec: &dyn Executor, entry: &ModelEntry, batch: usize,
+             mut weights: ServedWeights, q: &ServerQueue) -> Result<()> {
     let seq = entry.config.seq;
     let v = entry.config.vocab;
     loop {
@@ -165,8 +195,8 @@ pub fn serve(engine: &Engine, entry: &ModelEntry, batch: usize,
             for (i, r) in reqs.iter().enumerate() {
                 tokens[i * seq..(i + 1) * seq].copy_from_slice(&r.tokens);
             }
-            let logits = run_forward(engine, entry, &tokens, batch,
-                                     &weights)?;
+            let logits =
+                weights.forward(exec, entry, &tokens, batch)?;
             q.batches.fetch_add(1, Ordering::Relaxed);
             q.padded_rows
                 .fetch_add((batch - rows) as u64, Ordering::Relaxed);

@@ -1,14 +1,16 @@
 //! Evaluation harness: perplexity on the held-out corpora and the six
-//! reasoning tasks, all executed THROUGH the PJRT runtime (the same
-//! artifact a production deployment would serve).
+//! reasoning tasks, all executed THROUGH an `infer::Executor` (the same
+//! path a production deployment serves — native engine by default, PJRT
+//! behind the `xla` feature).
 
 pub mod ppl;
 pub mod tasks;
 
 use anyhow::Result;
 
+use crate::infer::Executor;
 use crate::model::Weights;
-use crate::runtime::{Engine, Manifest, ModelEntry};
+use crate::runtime::{Manifest, ModelEntry};
 
 /// Full evaluation result for one (model, weight-variant).
 #[derive(Clone, Debug)]
@@ -63,20 +65,20 @@ impl EvalOptions {
 }
 
 /// Evaluate a weight variant on both corpora and all six tasks.
-pub fn evaluate(engine: &Engine, man: &Manifest, entry: &ModelEntry,
+pub fn evaluate(exec: &dyn Executor, man: &Manifest, entry: &ModelEntry,
                 weights: &Weights, opts: &EvalOptions) -> Result<EvalResult> {
     let corpora = ppl::load_corpora(man)?;
     let mut ppl_rows = Vec::new();
     for (name, tokens) in [("wikitext2_like", &corpora.wiki_like),
                            ("c4_like", &corpora.c4_like)] {
-        let p = ppl::perplexity(engine, man, entry, weights, tokens,
+        let p = ppl::perplexity(exec, man, entry, weights, tokens,
                                 opts.max_ppl_batches)?;
         ppl_rows.push((name.to_string(), p));
     }
     let task_set = tasks::load_tasks(man)?;
     let mut acc_rows = Vec::new();
     for t in &task_set {
-        let a = tasks::accuracy(engine, man, entry, weights, t,
+        let a = tasks::accuracy(exec, man, entry, weights, t,
                                 opts.max_task_items)?;
         acc_rows.push((t.name.clone(), a));
     }

@@ -1,14 +1,15 @@
-//! Perplexity evaluation through the PJRT forward executable.
+//! Perplexity evaluation through any `infer::Executor` forward.
 //!
-//! The corpus is cut into non-overlapping [batch, seq] windows; the model
-//! executable returns logits and rust computes next-token NLL with a
+//! The corpus is cut into non-overlapping [batch, seq] windows; the
+//! executor returns logits and rust computes next-token NLL with a
 //! numerically stable log-softmax. exp(mean NLL) is the reported PPL —
 //! the same protocol as the paper's WikiText-2 / C4 numbers.
 
 use anyhow::Result;
 
+use crate::infer::Executor;
 use crate::model::Weights;
-use crate::runtime::{run_forward, Engine, Manifest, ModelEntry};
+use crate::runtime::{Manifest, ModelEntry};
 use crate::tensor::Tensor;
 use crate::util::tz;
 
@@ -58,7 +59,7 @@ pub fn log_softmax_at(row: &[f32], target: usize) -> f64 {
 
 /// Perplexity of `weights` on a token stream, using at most `max_batches`
 /// non-overlapping [eval_batch, seq] windows.
-pub fn perplexity(engine: &Engine, man: &Manifest, entry: &ModelEntry,
+pub fn perplexity(exec: &dyn Executor, man: &Manifest, entry: &ModelEntry,
                   weights: &Weights, tokens: &[i32], max_batches: usize)
                   -> Result<f64> {
     let b = man.eval_batch;
@@ -69,7 +70,7 @@ pub fn perplexity(engine: &Engine, man: &Manifest, entry: &ModelEntry,
     let mut count = 0usize;
     for i in 0..n_batches {
         let chunk = &tokens[i * per..(i + 1) * per];
-        let logits = run_forward(engine, entry, chunk, b, weights)?;
+        let logits = exec.forward(entry, chunk, b, weights)?;
         let (n, c) = batch_nll(&logits, chunk, b, s);
         nll += n;
         count += c;

@@ -4,13 +4,14 @@
 //! Protocol = lm-eval-harness choice scoring: for each item, score every
 //! choice continuation by its length-normalized log-likelihood given the
 //! prompt, predict the argmax, report accuracy. All forwards go through
-//! the PJRT executable in batches of `eval_batch` rows.
+//! the configured `infer::Executor` in batches of `eval_batch` rows.
 
 use anyhow::{Context, Result};
 
 use crate::eval::ppl::log_softmax_at;
+use crate::infer::Executor;
 use crate::model::Weights;
-use crate::runtime::{run_forward, Engine, Manifest, ModelEntry};
+use crate::runtime::{Manifest, ModelEntry};
 use crate::util::tz;
 
 #[derive(Clone, Debug)]
@@ -72,7 +73,7 @@ fn row_score(logits_row: &[f32], tokens_row: &[i32], v: usize,
 }
 
 /// Accuracy (%) of `weights` on one task, using at most `max_items` items.
-pub fn accuracy(engine: &Engine, man: &Manifest, entry: &ModelEntry,
+pub fn accuracy(exec: &dyn Executor, man: &Manifest, entry: &ModelEntry,
                 weights: &Weights, task: &TaskData, max_items: usize)
                 -> Result<f64> {
     let b = man.eval_batch;
@@ -90,7 +91,7 @@ pub fn accuracy(engine: &Engine, man: &Manifest, entry: &ModelEntry,
         let mut chunk = vec![0i32; b * s];
         chunk[..rows * s].copy_from_slice(
             &task.tokens[r0 * s..(r0 + rows) * s]);
-        let logits = run_forward(engine, entry, &chunk, b, weights)?;
+        let logits = exec.forward(entry, &chunk, b, weights)?;
         for r in 0..rows {
             let gi = r0 + r;
             scores[gi] = row_score(

@@ -1,0 +1,101 @@
+//! Backend-agnostic inference: the `Executor` trait every serving /
+//! eval / calibration path runs through, plus the pure-Rust
+//! `NativeEngine` (dense + fused packed forward) that is the default
+//! executor. The PJRT/XLA engine (`runtime::Engine`, behind the
+//! off-by-default `xla` cargo feature) implements the same trait, so
+//! the coordinator, eval harness and server are executor-generic.
+//! See DESIGN.md "Executor trait".
+
+pub mod native;
+pub mod qmat;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::model::Weights;
+use crate::runtime::ModelEntry;
+use crate::tensor::Tensor;
+
+pub use native::NativeEngine;
+pub use qmat::{fused_matmul, PackedMatrix, QMat, QuantizedModel};
+
+/// Calibration activations from one probe batch, in the layout the
+/// baselines consume: per-layer `[B·S, X]` row matrices (row = b·S + s).
+pub struct Probes {
+    /// Logits [B, S, V] of the same forward.
+    pub logits: Tensor,
+    /// Residual-stream input of each layer: [L] × [B·S, D].
+    pub resid_in: Vec<Tensor>,
+    /// Final residual (pre-lnf): [B·S, D].
+    pub final_resid: Tensor,
+    /// RMSNorm'd attention inputs: [L] × [B·S, D].
+    pub x_ln1: Vec<Tensor>,
+    /// RMSNorm'd FFN inputs: [L] × [B·S, D].
+    pub x_ln2: Vec<Tensor>,
+    /// Attention context (inputs to wo): [L] × [B·S, H·dh].
+    pub attn_ctx: Vec<Tensor>,
+    /// FFN intermediates (inputs to wdown): [L] × [B·S, F].
+    pub ffn_mid: Vec<Tensor>,
+}
+
+/// A model-forward backend. `forward` is the one required capability;
+/// packed serving and calibration probes/grads are optional (executors
+/// without them return a descriptive error).
+pub trait Executor {
+    fn platform(&self) -> String;
+
+    /// tokens i32 [batch·seq] → logits f32 [batch, seq, vocab].
+    fn forward(&self, entry: &ModelEntry, tokens: &[i32], batch: usize,
+               weights: &Weights) -> Result<Tensor>;
+
+    /// Forward over packed 2/4-bit codes (fused dequant-matmul), without
+    /// dequantizing to a full weight set first.
+    fn forward_packed(&self, entry: &ModelEntry, tokens: &[i32],
+                      batch: usize, model: &QuantizedModel)
+                      -> Result<Tensor> {
+        let _ = (entry, tokens, batch, model);
+        anyhow::bail!("{}: packed serving not supported", self.platform())
+    }
+
+    /// Forward + per-layer calibration activations.
+    fn probe(&self, entry: &ModelEntry, tokens: &[i32], batch: usize,
+             weights: &Weights) -> Result<Probes> {
+        let _ = (entry, tokens, batch, weights);
+        anyhow::bail!("{}: probe collection not supported",
+                      self.platform())
+    }
+
+    /// Whether `grads` is implemented. Callers use this to distinguish
+    /// "capability absent" (degrade gracefully) from a genuine failure
+    /// of a supporting executor (propagate).
+    fn supports_grads(&self) -> bool {
+        false
+    }
+
+    /// Loss gradients w.r.t. the 7 stacked quantizable weights (LLM-MQ).
+    fn grads(&self, entry: &ModelEntry, tokens: &[i32], batch: usize,
+             weights: &Weights) -> Result<BTreeMap<String, Tensor>> {
+        let _ = (entry, tokens, batch, weights);
+        anyhow::bail!("{}: gradient collection not supported (enable \
+                       the `xla` feature for the grad artifact)",
+                      self.platform())
+    }
+}
+
+/// The process default executor: PJRT when the `xla` feature is enabled
+/// (unless `NSDS_EXECUTOR=native`), the native engine otherwise.
+/// `dir` is the artifacts directory the PJRT engine compiles from.
+pub fn default_executor(dir: &Path, workers: usize)
+    -> Result<Box<dyn Executor>> {
+    #[cfg(feature = "xla")]
+    {
+        if std::env::var("NSDS_EXECUTOR").as_deref() != Ok("native") {
+            return Ok(Box::new(crate::runtime::Engine::cpu(dir)?));
+        }
+    }
+    #[cfg(not(feature = "xla"))]
+    let _ = dir;
+    Ok(Box::new(NativeEngine::with_workers(workers)))
+}

@@ -1,0 +1,574 @@
+//! `NativeEngine`: a pure-Rust llama-style forward pass (RMSNorm + RoPE +
+//! GQA + SwiGLU) executing directly over `model::Weights`, or over packed
+//! 2/4-bit codes via the fused dequant-matmul in `infer::qmat`. Semantics
+//! mirror `python/compile/model.py` exactly (same eps, RoPE convention,
+//! GQA head mapping and causal softmax), so the same `.tz` weights score
+//! identically whichever executor runs them.
+//!
+//! Parallelism: batch rows are independent end-to-end, so the engine
+//! fans one sequence per `util::pool` worker; all per-sequence math is
+//! single-threaded to avoid nested pools.
+
+use anyhow::{ensure, Result};
+
+use super::qmat::{fused_matmul, PackedMatrix, QMat, QuantizedModel};
+use super::{Executor, Probes};
+use crate::model::{ModelConfig, Weights};
+use crate::runtime::ModelEntry;
+use crate::tensor::matmul::matmul;
+use crate::tensor::Tensor;
+use crate::util::pool::{default_workers, parallel_map};
+
+const RMS_EPS: f32 = 1e-5;
+const ROPE_BASE: f32 = 10000.0;
+
+/// Pure-Rust executor; needs no artifacts, no XLA, no Python.
+pub struct NativeEngine {
+    pub workers: usize,
+}
+
+impl NativeEngine {
+    pub fn new() -> Self {
+        NativeEngine { workers: default_workers() }
+    }
+
+    pub fn with_workers(workers: usize) -> Self {
+        NativeEngine { workers: workers.max(1) }
+    }
+}
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        NativeEngine::new()
+    }
+}
+
+impl Executor for NativeEngine {
+    fn platform(&self) -> String {
+        "native-cpu".to_string()
+    }
+
+    fn forward(&self, entry: &ModelEntry, tokens: &[i32], batch: usize,
+               weights: &Weights) -> Result<Tensor> {
+        let prep = prepare_dense(&entry.config, weights);
+        let (logits, _) =
+            run_batch(&prep, tokens, batch, self.workers, false)?;
+        Ok(logits)
+    }
+
+    fn forward_packed(&self, entry: &ModelEntry, tokens: &[i32],
+                      batch: usize, model: &QuantizedModel)
+                      -> Result<Tensor> {
+        let prep = prepare_packed(&entry.config, model);
+        let (logits, _) =
+            run_batch(&prep, tokens, batch, self.workers, false)?;
+        Ok(logits)
+    }
+
+    fn probe(&self, entry: &ModelEntry, tokens: &[i32], batch: usize,
+             weights: &Weights) -> Result<Probes> {
+        let prep = prepare_dense(&entry.config, weights);
+        let (_, probes) =
+            run_batch(&prep, tokens, batch, self.workers, true)?;
+        Ok(probes.expect("collect=true returns probes"))
+    }
+}
+
+/// One projection operand: dense f32 (owned slice or borrowed from a
+/// quantized model's fallback store) or packed codes (fused path).
+enum PMat<'a> {
+    Dense(Tensor),
+    DenseRef(&'a Tensor),
+    Packed(&'a PackedMatrix),
+}
+
+impl PMat<'_> {
+    /// `x [rows, K] @ W [K, N]` (single-threaded; batch-level parallelism
+    /// happens one level up).
+    fn apply(&self, x: &Tensor) -> Tensor {
+        match self {
+            PMat::Dense(w) => matmul(x, w),
+            PMat::DenseRef(w) => matmul(x, w),
+            PMat::Packed(p) => fused_matmul(x, p, 1),
+        }
+    }
+}
+
+struct PLayer<'a> {
+    ln1: Tensor,
+    ln2: Tensor,
+    wq: PMat<'a>,
+    wk: PMat<'a>,
+    wv: PMat<'a>,
+    wo: PMat<'a>,
+    wgate: PMat<'a>,
+    wup: PMat<'a>,
+    wdown: PMat<'a>,
+}
+
+/// Per-forward view: layer matrices sliced out of the stacked weight
+/// store once, shared read-only across the batch workers.
+///
+/// The dense path copies each projection out of the stacked tensor once
+/// per `forward` call (same order of work as the PJRT path's per-call
+/// host→device buffer uploads). A per-weight-set cache would need
+/// identity tracking across `&Weights` calls; revisit if the prepare
+/// step ever shows up in profiles.
+struct Prepared<'a> {
+    cfg: &'a ModelConfig,
+    embed: &'a Tensor,
+    unembed: &'a Tensor,
+    lnf: &'a Tensor,
+    layers: Vec<PLayer<'a>>,
+}
+
+fn prepare_dense<'a>(cfg: &'a ModelConfig, w: &'a Weights) -> Prepared<'a> {
+    let layers = (0..cfg.n_layers)
+        .map(|l| PLayer {
+            ln1: w.get("ln1").slice0(l),
+            ln2: w.get("ln2").slice0(l),
+            wq: PMat::Dense(w.layer_matrix("wq", l)),
+            wk: PMat::Dense(w.layer_matrix("wk", l)),
+            wv: PMat::Dense(w.layer_matrix("wv", l)),
+            wo: PMat::Dense(w.layer_matrix("wo", l)),
+            wgate: PMat::Dense(w.layer_matrix("wgate", l)),
+            wup: PMat::Dense(w.layer_matrix("wup", l)),
+            wdown: PMat::Dense(w.layer_matrix("wdown", l)),
+        })
+        .collect();
+    Prepared {
+        cfg,
+        embed: w.get("embed"),
+        unembed: w.get("unembed"),
+        lnf: w.get("lnf"),
+        layers,
+    }
+}
+
+fn prepare_packed<'a>(cfg: &'a ModelConfig, qm: &'a QuantizedModel)
+    -> Prepared<'a> {
+    let w = &qm.weights;
+    let pick = |l: usize, name: &'static str| -> PMat<'a> {
+        match qm.mats[l].get(name) {
+            Some(QMat::Packed(p)) => PMat::Packed(p),
+            Some(QMat::Dense(t)) => PMat::DenseRef(t),
+            None => panic!("quantized model missing {name} at layer {l}"),
+        }
+    };
+    let layers = (0..cfg.n_layers)
+        .map(|l| PLayer {
+            ln1: w.get("ln1").slice0(l),
+            ln2: w.get("ln2").slice0(l),
+            wq: pick(l, "wq"),
+            wk: pick(l, "wk"),
+            wv: pick(l, "wv"),
+            wo: pick(l, "wo"),
+            wgate: pick(l, "wgate"),
+            wup: pick(l, "wup"),
+            wdown: pick(l, "wdown"),
+        })
+        .collect();
+    Prepared {
+        cfg,
+        embed: w.get("embed"),
+        unembed: w.get("unembed"),
+        lnf: w.get("lnf"),
+        layers,
+    }
+}
+
+/// Per-sequence probe activations (row-major [s, X] buffers).
+struct SeqProbes {
+    resid_in: Vec<Vec<f32>>,
+    final_resid: Vec<f32>,
+    x_ln1: Vec<Vec<f32>>,
+    x_ln2: Vec<Vec<f32>>,
+    attn_ctx: Vec<Vec<f32>>,
+    ffn_mid: Vec<Vec<f32>>,
+}
+
+/// Run a token batch; returns logits [B, S, V] and, when `collect`,
+/// per-layer activations stitched to the PJRT probe row order
+/// (row = b·S + s).
+fn run_batch(prep: &Prepared, tokens: &[i32], batch: usize,
+             workers: usize, collect: bool)
+             -> Result<(Tensor, Option<Probes>)> {
+    let cfg = prep.cfg;
+    let s = cfg.seq;
+    let v = cfg.vocab;
+    ensure!(tokens.len() == batch * s,
+            "tokens {} != batch {batch} x seq {s}", tokens.len());
+    ensure!(tokens.iter().all(|&t| t >= 0 && (t as usize) < v),
+            "token id out of range (vocab {v})");
+
+    let outs: Vec<(Vec<f32>, Option<SeqProbes>)> =
+        parallel_map(batch, workers, |bi| {
+            forward_seq(prep, &tokens[bi * s..(bi + 1) * s], collect)
+        });
+
+    let mut logits = Vec::with_capacity(batch * s * v);
+    for (l, _) in &outs {
+        logits.extend_from_slice(l);
+    }
+    let logits = Tensor::new(logits, vec![batch, s, v]);
+
+    if !collect {
+        return Ok((logits, None));
+    }
+    let nl = cfg.n_layers;
+    let d = cfg.d_model;
+    let hd = cfg.n_heads * cfg.d_head;
+    let f = cfg.d_ffn;
+    let per_layer = |get: fn(&SeqProbes, usize) -> &[f32],
+                     cols: usize| -> Vec<Tensor> {
+        (0..nl).map(|l| cat_batch(&outs, cols, l, get)).collect()
+    };
+    let probes = Probes {
+        logits: logits.clone(),
+        resid_in: per_layer(|p, l| &p.resid_in[l], d),
+        final_resid: cat_batch(&outs, d, 0, |p, _| &p.final_resid),
+        x_ln1: per_layer(|p, l| &p.x_ln1[l], d),
+        x_ln2: per_layer(|p, l| &p.x_ln2[l], d),
+        attn_ctx: per_layer(|p, l| &p.attn_ctx[l], hd),
+        ffn_mid: per_layer(|p, l| &p.ffn_mid[l], f),
+    };
+    Ok((logits, Some(probes)))
+}
+
+/// Concatenate one per-sequence activation across the batch into a
+/// [batch·s, cols] tensor. `get` selects the buffer (layer index `l`
+/// is ignored by whole-model activations).
+fn cat_batch(outs: &[(Vec<f32>, Option<SeqProbes>)], cols: usize,
+             l: usize, get: fn(&SeqProbes, usize) -> &[f32]) -> Tensor {
+    let mut data = Vec::new();
+    for (_, p) in outs {
+        data.extend_from_slice(get(p.as_ref().unwrap(), l));
+    }
+    let rows = data.len() / cols;
+    Tensor::new(data, vec![rows, cols])
+}
+
+/// Full forward for one sequence: returns row-major logits [s·v].
+fn forward_seq(prep: &Prepared, tokens: &[i32], collect: bool)
+    -> (Vec<f32>, Option<SeqProbes>) {
+    let cfg = prep.cfg;
+    let (s, d) = (cfg.seq, cfg.d_model);
+    let (nh, nkv, dh) = (cfg.n_heads, cfg.n_kv, cfg.d_head);
+    let half = dh / 2;
+
+    // RoPE tables, shared by q and k at every layer.
+    let mut rope_cos = vec![0.0f32; s * half];
+    let mut rope_sin = vec![0.0f32; s * half];
+    for si in 0..s {
+        for j in 0..half {
+            let inv = ROPE_BASE.powf(-(j as f32) / half as f32);
+            let ang = si as f32 * inv;
+            rope_cos[si * half + j] = ang.cos();
+            rope_sin[si * half + j] = ang.sin();
+        }
+    }
+
+    // h = embed[tokens]  [s, d]
+    let mut h = Tensor::zeros(vec![s, d]);
+    for (si, &t) in tokens.iter().enumerate() {
+        h.row_mut(si).copy_from_slice(prep.embed.row(t as usize));
+    }
+
+    let mut probes = collect.then(|| SeqProbes {
+        resid_in: Vec::with_capacity(cfg.n_layers),
+        final_resid: Vec::new(),
+        x_ln1: Vec::with_capacity(cfg.n_layers),
+        x_ln2: Vec::with_capacity(cfg.n_layers),
+        attn_ctx: Vec::with_capacity(cfg.n_layers),
+        ffn_mid: Vec::with_capacity(cfg.n_layers),
+    });
+
+    for layer in &prep.layers {
+        if let Some(p) = probes.as_mut() {
+            p.resid_in.push(h.data().to_vec());
+        }
+        // Attention block.
+        let x1 = rmsnorm(&h, &layer.ln1);
+        let mut q = layer.wq.apply(&x1); // [s, nh·dh]
+        let mut km = layer.wk.apply(&x1); // [s, nkv·dh]
+        let vm = layer.wv.apply(&x1); // [s, nkv·dh]
+        rope(&mut q, nh, dh, &rope_cos, &rope_sin);
+        rope(&mut km, nkv, dh, &rope_cos, &rope_sin);
+        let ctx = attention(&q, &km, &vm, nh, nkv, dh);
+        let attn_out = layer.wo.apply(&ctx);
+        h = h.add(&attn_out);
+        // FFN block (SwiGLU).
+        let x2 = rmsnorm(&h, &layer.ln2);
+        let gate = layer.wgate.apply(&x2);
+        let up = layer.wup.apply(&x2);
+        let mut mid = gate;
+        for (g, u) in mid.data_mut().iter_mut().zip(up.data()) {
+            *g = silu(*g) * u;
+        }
+        let down = layer.wdown.apply(&mid);
+        if let Some(p) = probes.as_mut() {
+            p.x_ln1.push(x1.data().to_vec());
+            p.x_ln2.push(x2.data().to_vec());
+            p.attn_ctx.push(ctx.data().to_vec());
+            p.ffn_mid.push(mid.data().to_vec());
+        }
+        h = h.add(&down);
+    }
+
+    if let Some(p) = probes.as_mut() {
+        p.final_resid = h.data().to_vec();
+    }
+    let hf = rmsnorm(&h, prep.lnf);
+    let logits = matmul(&hf, prep.unembed);
+    (logits.into_data(), probes)
+}
+
+/// Row-wise RMSNorm: `x · rsqrt(mean(x²) + eps) · g`.
+fn rmsnorm(x: &Tensor, g: &Tensor) -> Tensor {
+    let (rows, d) = (x.rows(), x.cols());
+    let gd = g.data();
+    debug_assert_eq!(gd.len(), d);
+    let mut out = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let row = x.row(r);
+        let ms: f32 =
+            row.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+        let orow = &mut out[r * d..(r + 1) * d];
+        for c in 0..d {
+            orow[c] = row[c] * inv * gd[c];
+        }
+    }
+    Tensor::new(out, vec![rows, d])
+}
+
+/// In-place rotary embedding over `[s, heads·dh]` (half-split
+/// convention, matching `model.rope`).
+fn rope(x: &mut Tensor, heads: usize, dh: usize, cos: &[f32],
+        sin: &[f32]) {
+    let s = x.rows();
+    let half = dh / 2;
+    let w = heads * dh;
+    let xd = x.data_mut();
+    for si in 0..s {
+        let crow = &cos[si * half..(si + 1) * half];
+        let srow = &sin[si * half..(si + 1) * half];
+        for hi in 0..heads {
+            let base = si * w + hi * dh;
+            for j in 0..half {
+                let a = xd[base + j];
+                let b = xd[base + half + j];
+                xd[base + j] = a * crow[j] - b * srow[j];
+                xd[base + half + j] = a * srow[j] + b * crow[j];
+            }
+        }
+    }
+}
+
+/// Causal GQA attention: q [s, nh·dh], k/v [s, nkv·dh] -> ctx [s, nh·dh].
+/// Query head `hi` attends with kv head `hi / (nh/nkv)`.
+fn attention(q: &Tensor, k: &Tensor, v: &Tensor, nh: usize, nkv: usize,
+             dh: usize) -> Tensor {
+    let s = q.rows();
+    let rep = nh / nkv;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let (qw, kw) = (nh * dh, nkv * dh);
+    let (qd, kd, vd) = (q.data(), k.data(), v.data());
+    let mut ctx = vec![0.0f32; s * qw];
+    let mut scores = vec![0.0f32; s];
+    for hi in 0..nh {
+        let kv = hi / rep;
+        for i in 0..s {
+            let qrow = &qd[i * qw + hi * dh..i * qw + (hi + 1) * dh];
+            // Scores over the causal window j <= i.
+            let mut mx = f32::NEG_INFINITY;
+            for j in 0..=i {
+                let krow = &kd[j * kw + kv * dh..j * kw + (kv + 1) * dh];
+                let dot: f32 = qrow
+                    .iter()
+                    .zip(krow)
+                    .map(|(a, b)| a * b)
+                    .sum();
+                let sc = dot * scale;
+                scores[j] = sc;
+                mx = mx.max(sc);
+            }
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut().take(i + 1) {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            let inv = 1.0 / denom;
+            let crow = &mut ctx[i * qw + hi * dh..i * qw + (hi + 1) * dh];
+            for j in 0..=i {
+                let wgt = scores[j] * inv;
+                let vrow = &vd[j * kw + kv * dh..j * kw + (kv + 1) * dh];
+                for (c, vv) in crow.iter_mut().zip(vrow) {
+                    *c += wgt * vv;
+                }
+            }
+        }
+    }
+    Tensor::new(ctx, vec![s, qw])
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_entry() -> ModelEntry {
+        ModelEntry::synthetic(ModelConfig::test_config())
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        // A row of equal values x: ms = x², out = x/√(x²+eps)·g ≈ sign·g.
+        let x = Tensor::new(vec![3.0; 4], vec![1, 4]);
+        let g = Tensor::new(vec![1.0, 2.0, 0.5, 1.0], vec![4]);
+        let y = rmsnorm(&x, &g);
+        for (yv, gv) in y.data().iter().zip(g.data()) {
+            assert!((yv - gv).abs() < 1e-4, "{yv} vs {gv}");
+        }
+    }
+
+    #[test]
+    fn rope_preserves_pair_norm_and_fixes_pos0() {
+        let mut rng = Rng::new(50);
+        let dh = 8;
+        let mut x = Tensor::randn(vec![4, dh], &mut rng);
+        let orig = x.clone();
+        let half = dh / 2;
+        let mut cos = vec![0.0f32; 4 * half];
+        let mut sin = vec![0.0f32; 4 * half];
+        for si in 0..4 {
+            for j in 0..half {
+                let inv = ROPE_BASE.powf(-(j as f32) / half as f32);
+                cos[si * half + j] = (si as f32 * inv).cos();
+                sin[si * half + j] = (si as f32 * inv).sin();
+            }
+        }
+        rope(&mut x, 1, dh, &cos, &sin);
+        // Position 0: identity rotation.
+        assert_eq!(x.row(0), orig.row(0));
+        // Rotations preserve each (j, j+half) pair norm.
+        for si in 0..4 {
+            for j in 0..half {
+                let n0 = orig.at(si, j).powi(2)
+                    + orig.at(si, j + half).powi(2);
+                let n1 =
+                    x.at(si, j).powi(2) + x.at(si, j + half).powi(2);
+                assert!((n0 - n1).abs() < 1e-4, "{n0} vs {n1}");
+            }
+        }
+    }
+
+    #[test]
+    fn attention_constant_values_pass_through() {
+        // If every v row equals the same vector, softmax weights (which
+        // sum to 1) must return exactly that vector for every query.
+        let mut rng = Rng::new(51);
+        let (s, nh, nkv, dh) = (5, 2, 1, 4);
+        let q = Tensor::randn(vec![s, nh * dh], &mut rng);
+        let k = Tensor::randn(vec![s, nkv * dh], &mut rng);
+        let vconst: Vec<f32> = (0..nkv * dh).map(|i| i as f32).collect();
+        let mut v = Tensor::zeros(vec![s, nkv * dh]);
+        for r in 0..s {
+            v.row_mut(r).copy_from_slice(&vconst);
+        }
+        let ctx = attention(&q, &k, &v, nh, nkv, dh);
+        for r in 0..s {
+            for hi in 0..nh {
+                for j in 0..dh {
+                    assert!((ctx.at(r, hi * dh + j) - vconst[j]).abs()
+                            < 1e-5);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn forward_is_causal() {
+        // Changing the last token must not change earlier logits.
+        let entry = tiny_entry();
+        let cfg = &entry.config;
+        let mut rng = Rng::new(52);
+        let w = Weights::synth(cfg, &mut rng, &[], &[]);
+        let e = NativeEngine::with_workers(1);
+        let s = cfg.seq;
+        let mut a: Vec<i32> =
+            (0..s).map(|i| (i % cfg.vocab) as i32).collect();
+        let la = e.forward(&entry, &a, 1, &w).unwrap();
+        a[s - 1] = (a[s - 1] + 1) % cfg.vocab as i32;
+        let lb = e.forward(&entry, &a, 1, &w).unwrap();
+        let v = cfg.vocab;
+        let prefix = (s - 1) * v;
+        assert_eq!(la.data()[..prefix], lb.data()[..prefix]);
+        assert_ne!(la.data()[prefix..], lb.data()[prefix..]);
+    }
+
+    #[test]
+    fn forward_deterministic_and_worker_invariant() {
+        let entry = tiny_entry();
+        let cfg = &entry.config;
+        let mut rng = Rng::new(53);
+        let w = Weights::synth(cfg, &mut rng, &[], &[]);
+        let tokens: Vec<i32> = (0..3 * cfg.seq)
+            .map(|i| ((i * 7) % cfg.vocab) as i32)
+            .collect();
+        let l1 = NativeEngine::with_workers(1)
+            .forward(&entry, &tokens, 3, &w)
+            .unwrap();
+        let l4 = NativeEngine::with_workers(4)
+            .forward(&entry, &tokens, 3, &w)
+            .unwrap();
+        assert_eq!(l1, l4);
+        assert_eq!(l1.dims(), &[3, cfg.seq, cfg.vocab]);
+        assert!(l1.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn forward_rejects_bad_tokens() {
+        let entry = tiny_entry();
+        let cfg = &entry.config;
+        let mut rng = Rng::new(54);
+        let w = Weights::synth(cfg, &mut rng, &[], &[]);
+        let e = NativeEngine::with_workers(1);
+        let bad = vec![cfg.vocab as i32; cfg.seq];
+        assert!(e.forward(&entry, &bad, 1, &w).is_err());
+        assert!(e.forward(&entry, &[0i32; 3], 1, &w).is_err());
+    }
+
+    #[test]
+    fn probe_shapes_match_config() {
+        let entry = tiny_entry();
+        let cfg = &entry.config;
+        let mut rng = Rng::new(55);
+        let w = Weights::synth(cfg, &mut rng, &[], &[]);
+        let e = NativeEngine::with_workers(2);
+        let b = 2;
+        let tokens: Vec<i32> = (0..b * cfg.seq)
+            .map(|i| ((i * 3) % cfg.vocab) as i32)
+            .collect();
+        let p = e.probe(&entry, &tokens, b, &w).unwrap();
+        let rows = b * cfg.seq;
+        assert_eq!(p.resid_in.len(), cfg.n_layers);
+        assert_eq!(p.resid_in[0].dims(), &[rows, cfg.d_model]);
+        assert_eq!(p.final_resid.dims(), &[rows, cfg.d_model]);
+        assert_eq!(p.x_ln1[0].dims(), &[rows, cfg.d_model]);
+        assert_eq!(p.attn_ctx[0].dims(),
+                   &[rows, cfg.n_heads * cfg.d_head]);
+        assert_eq!(p.ffn_mid[0].dims(), &[rows, cfg.d_ffn]);
+        assert_eq!(p.logits.dims(), &[b, cfg.seq, cfg.vocab]);
+        // resid_in[0] is the embedding of the tokens.
+        for (si, &t) in tokens.iter().enumerate() {
+            assert_eq!(p.resid_in[0].row(si),
+                       w.get("embed").row(t as usize));
+        }
+    }
+}

@@ -1,0 +1,349 @@
+//! Packed quantized matrices + the fused dequant-matmul kernel — the
+//! native serving format. Codes stay in the 2/4-bit `quant::pack` layout
+//! end to end; dequantization happens inside the matmul's cache-blocked
+//! K panels, so the full f32 weight matrix is never materialized (unlike
+//! the unpack-then-`tensor::matmul` baseline the benches compare against).
+
+use std::collections::BTreeMap;
+
+use crate::model::{ModelConfig, Weights, QUANT_WEIGHTS, WEIGHT_NAMES};
+use crate::quant::{self, pack, Backend, HessianMap, QuantSpec, QuantizedMatrix};
+use crate::tensor::Tensor;
+use crate::util::pool::parallel_map;
+
+/// One [K, N] weight in the packed serving layout: 2/4-bit codes packed
+/// along K (`quant::pack`) plus per-(group, column) f32 scale/zero.
+#[derive(Clone, Debug)]
+pub struct PackedMatrix {
+    pub k: usize,
+    pub n: usize,
+    pub bits: u8,
+    pub group: usize,
+    /// u8 [K·bits/8, N], little-endian sub-bytes along K.
+    pub packed: Vec<u8>,
+    /// f32 [K/group, N].
+    pub scale: Vec<f32>,
+    /// f32 [K/group, N].
+    pub zero: Vec<f32>,
+}
+
+impl PackedMatrix {
+    /// Pack an (unpacked-code) quantized matrix into the serving layout.
+    pub fn from_quantized(q: &QuantizedMatrix) -> Self {
+        PackedMatrix {
+            k: q.k,
+            n: q.n,
+            bits: q.spec.bits,
+            group: q.spec.group,
+            packed: pack::pack(&q.codes, q.k, q.n, q.spec.bits),
+            scale: q.scale.clone(),
+            zero: q.zero.clone(),
+        }
+    }
+
+    /// Total serving bytes (codes + scale/zero metadata).
+    pub fn bytes(&self) -> usize {
+        self.packed.len() + (self.scale.len() + self.zero.len()) * 4
+    }
+
+    /// Materialize the full f32 weight (tests / fallback paths only —
+    /// the fused matmul never calls this). Delegates to the one
+    /// group-affine dequant implementation in `quant`.
+    pub fn dequantize(&self) -> Tensor {
+        QuantizedMatrix {
+            spec: QuantSpec::new(self.bits, self.group),
+            codes: pack::unpack(&self.packed, self.k, self.n, self.bits),
+            k: self.k,
+            n: self.n,
+            scale: self.scale.clone(),
+            zero: self.zero.clone(),
+        }
+        .dequantize()
+    }
+}
+
+/// K-panel height of the fused kernel (matches `tensor::matmul`'s
+/// blocking so the two paths accumulate in the same order).
+const BK: usize = 64;
+
+/// Fused dequant-matmul: `x [M, K] @ dequant(pm) -> [M, N]` without ever
+/// materializing the f32 weight. Each K panel of `BK` rows is decoded
+/// once into a small cache-resident buffer and reused across all M rows;
+/// rows of `x` are split across `workers` threads via `util::pool`.
+pub fn fused_matmul(x: &Tensor, pm: &PackedMatrix, workers: usize)
+    -> Tensor {
+    let (m, k) = (x.rows(), x.cols());
+    assert_eq!(k, pm.k, "fused_matmul: x cols {k} != packed K {}", pm.k);
+    let n = pm.n;
+    let workers = workers.clamp(1, m.max(1));
+    if workers == 1 {
+        let data = fused_rows(x.data(), 0, m, pm);
+        return Tensor::new(data, vec![m, n]);
+    }
+    // Contiguous row blocks, one per worker; each decodes its own panels.
+    let per = m.div_ceil(workers);
+    let ranges: Vec<(usize, usize)> = (0..workers)
+        .map(|w| (w * per, ((w + 1) * per).min(m)))
+        .filter(|(a, b)| a < b)
+        .collect();
+    let chunks = parallel_map(ranges.len(), ranges.len(), |i| {
+        let (r0, r1) = ranges[i];
+        fused_rows(x.data(), r0, r1, pm)
+    });
+    let mut data = Vec::with_capacity(m * n);
+    for c in chunks {
+        data.extend_from_slice(&c);
+    }
+    Tensor::new(data, vec![m, n])
+}
+
+/// Fused kernel body for output rows `r0..r1`.
+fn fused_rows(xd: &[f32], r0: usize, r1: usize, pm: &PackedMatrix)
+    -> Vec<f32> {
+    let (k, n) = (pm.k, pm.n);
+    let bits = pm.bits as usize;
+    let per = 8 / bits;
+    let mask = (1u8 << pm.bits) - 1;
+    let rows = r1 - r0;
+    let mut out = vec![0.0f32; rows * n];
+    let panel_rows = BK.min(k);
+    let mut panel = vec![0.0f32; panel_rows * n];
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + BK).min(k);
+        // Decode this K panel once: panel[kk-k0] = s·(code − z).
+        for kk in k0..k1 {
+            let byte_row = kk / per;
+            let shift = (bits * (kk % per)) as u32;
+            let gr = kk / pm.group;
+            let srow = &pm.scale[gr * n..gr * n + n];
+            let zrow = &pm.zero[gr * n..gr * n + n];
+            let brow = &pm.packed[byte_row * n..byte_row * n + n];
+            let prow = &mut panel[(kk - k0) * n..(kk - k0 + 1) * n];
+            for c in 0..n {
+                let code = (brow[c] >> shift) & mask;
+                prow[c] = srow[c] * (code as f32 - zrow[c]);
+            }
+        }
+        // Accumulate the panel into every output row (ikj order).
+        for i in r0..r1 {
+            let xrow = &xd[i * k..(i + 1) * k];
+            let orow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+            for kk in k0..k1 {
+                let aik = xrow[kk];
+                let prow = &panel[(kk - k0) * n..(kk - k0 + 1) * n];
+                for (o, p) in orow.iter_mut().zip(prow) {
+                    *o += aik * p;
+                }
+            }
+        }
+        k0 = k1;
+    }
+    out
+}
+
+/// One projection of a quantized model: packed when the bit width has a
+/// serving layout (2/4-bit), dense f32 fallback otherwise.
+#[derive(Clone, Debug)]
+pub enum QMat {
+    Packed(PackedMatrix),
+    Dense(Tensor),
+}
+
+impl QMat {
+    pub fn bytes(&self) -> usize {
+        match self {
+            QMat::Packed(p) => p.bytes(),
+            QMat::Dense(t) => t.len() * 4,
+        }
+    }
+}
+
+/// A full model in the native packed serving format: FP embeddings /
+/// norms / unembed (standard practice — they are never quantized) plus
+/// one `QMat` per (layer, projection). This is what the coordinator's
+/// server deploys when it swaps in a quantized variant.
+#[derive(Clone, Debug)]
+pub struct QuantizedModel {
+    /// Only the non-quantized tensors (embed, unembed, lnf, ln1, ln2) —
+    /// the dense f32 projections are NOT retained, so deploying a packed
+    /// variant really does shrink resident weight memory.
+    pub weights: Weights,
+    /// Per layer: projection name -> packed/dense matrix.
+    pub mats: Vec<BTreeMap<&'static str, QMat>>,
+    /// The bit allocation this model was quantized at.
+    pub bits: Vec<u8>,
+}
+
+impl QuantizedModel {
+    /// Quantize every projection at the allocated bit widths and pack the
+    /// 2/4-bit codes for fused serving. Mirrors `quant::quantize_model`
+    /// but keeps codes packed instead of dequantizing back to f32.
+    pub fn quantize(cfg: &ModelConfig, w: &Weights, bits: &[u8],
+                    group: usize, backend: Backend,
+                    hessians: Option<&HessianMap>, workers: usize)
+                    -> Self {
+        assert_eq!(bits.len(), cfg.n_layers);
+        let jobs: Vec<(usize, &'static str)> = (0..cfg.n_layers)
+            .flat_map(|l| QUANT_WEIGHTS.iter().map(move |n| (l, *n)))
+            .collect();
+        let done: Vec<(usize, &'static str, QMat)> =
+            parallel_map(jobs.len(), workers, |j| {
+                let (l, name) = jobs[j];
+                let m = w.layer_matrix(name, l);
+                let g = quant::fit_group(m.rows(), group);
+                let spec = QuantSpec::new(bits[l], g);
+                let h = hessians
+                    .and_then(|hm| hm.get(&(l, name.to_string())));
+                let q = quant::quantize_matrix(&m, spec, backend, h);
+                let qm = if matches!(bits[l], 2 | 4) {
+                    QMat::Packed(PackedMatrix::from_quantized(&q))
+                } else {
+                    QMat::Dense(q.dequantize())
+                };
+                (l, name, qm)
+            });
+        let mut mats: Vec<BTreeMap<&'static str, QMat>> =
+            (0..cfg.n_layers).map(|_| BTreeMap::new()).collect();
+        for (l, name, qm) in done {
+            mats[l].insert(name, qm);
+        }
+        // Keep only the never-quantized tensors; the dense projections
+        // must not stay resident alongside their packed codes.
+        let mut tensors = std::collections::BTreeMap::new();
+        for name in WEIGHT_NAMES {
+            if !QUANT_WEIGHTS.contains(&name) {
+                tensors.insert(name.to_string(), w.get(name).clone());
+            }
+        }
+        QuantizedModel {
+            weights: Weights { tensors },
+            mats,
+            bits: bits.to_vec(),
+        }
+    }
+
+    /// Serving bytes of the quantized projections (codes + metadata).
+    pub fn packed_bytes(&self) -> usize {
+        self.mats
+            .iter()
+            .map(|layer| layer.values().map(QMat::bytes).sum::<usize>())
+            .sum()
+    }
+
+    /// Fake-quant weight set (every projection dequantized back to f32
+    /// and restacked to [L, K, N]), e.g. for scoring through an executor
+    /// that cannot serve packed codes, or for testing fused-vs-dense
+    /// parity.
+    pub fn dequantized_weights(&self) -> Weights {
+        let mut out = self.weights.clone();
+        let nl = self.mats.len();
+        for name in QUANT_WEIGHTS {
+            let mut stacked: Option<Tensor> = None;
+            for (l, layer) in self.mats.iter().enumerate() {
+                let t = match &layer[name] {
+                    QMat::Packed(p) => p.dequantize(),
+                    QMat::Dense(t) => t.clone(),
+                };
+                let s = stacked.get_or_insert_with(|| {
+                    Tensor::zeros(vec![nl, t.rows(), t.cols()])
+                });
+                s.set_slice0(l, &t);
+            }
+            out.tensors.insert(
+                name.to_string(),
+                stacked.expect("quantized model has no layers"),
+            );
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_ensure;
+    use crate::quant::rtn;
+    use crate::tensor::matmul::matmul;
+    use crate::util::prop::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn packed_dequantize_matches_unpacked() {
+        let mut rng = Rng::new(40);
+        let w = Tensor::randn(vec![32, 12], &mut rng);
+        let q = rtn::quantize(&w, QuantSpec::new(4, 8));
+        let pm = PackedMatrix::from_quantized(&q);
+        let a = q.dequantize();
+        let b = pm.dequantize();
+        assert_eq!(a, b);
+        assert_eq!(pm.bytes(),
+                   pack::packed_bytes(32, 12, 4, 8));
+    }
+
+    #[test]
+    fn fused_matches_unpack_then_matmul() {
+        check("fused == unpack+matmul", 25, |rng| {
+            let bits = if rng.f64() < 0.5 { 2u8 } else { 4u8 };
+            let k = 8 * (1 + rng.below(20));
+            let n = 1 + rng.below(24);
+            let m = 1 + rng.below(12);
+            let g = quant::fit_group(k, 8 * (1 + rng.below(4)));
+            let w = Tensor::randn(vec![k, n], rng);
+            let x = Tensor::randn(vec![m, k], rng);
+            let q = rtn::quantize(&w, QuantSpec::new(bits, g));
+            let pm = PackedMatrix::from_quantized(&q);
+            let workers = 1 + rng.below(3);
+            let fused = fused_matmul(&x, &pm, workers);
+            let reference = matmul(&x, &pm.dequantize());
+            let err = fused.sub(&reference).frob_norm()
+                / reference.frob_norm().max(1e-6);
+            prop_ensure!(err < 1e-5, "rel err {err} (bits {bits})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_single_row_matches_dot() {
+        let mut rng = Rng::new(41);
+        let w = Tensor::randn(vec![16, 4], &mut rng);
+        let q = rtn::quantize(&w, QuantSpec::new(4, 8));
+        let pm = PackedMatrix::from_quantized(&q);
+        let x = Tensor::randn(vec![1, 16], &mut rng);
+        let y = fused_matmul(&x, &pm, 1);
+        let d = pm.dequantize();
+        for c in 0..4 {
+            let manual: f32 =
+                (0..16).map(|r| x.at(0, r) * d.at(r, c)).sum();
+            assert!((y.at(0, c) - manual).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn quantized_model_roundtrip_matches_quantize_model() {
+        let cfg = ModelConfig::test_config();
+        let mut rng = Rng::new(42);
+        let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        let bits = vec![4u8, 2, 4];
+        let qm = QuantizedModel::quantize(&cfg, &w, &bits, 8,
+                                          Backend::Rtn, None, 2);
+        let dq = qm.dequantized_weights();
+        let reference = quant::quantize_model(&cfg, &w, &bits, 8,
+                                              Backend::Rtn, None, 1);
+        for name in QUANT_WEIGHTS {
+            assert_eq!(dq.get(name), reference.get(name), "{name}");
+        }
+        // Non-quantized tensors untouched; packed model is smaller.
+        assert_eq!(dq.get("embed"), w.get("embed"));
+        let fp_bytes: usize = (0..cfg.n_layers)
+            .map(|l| {
+                QUANT_WEIGHTS
+                    .iter()
+                    .map(|n| w.layer_matrix(n, l).len() * 4)
+                    .sum::<usize>()
+            })
+            .sum();
+        assert!(qm.packed_bytes() * 3 < fp_bytes,
+                "packed {} vs fp {fp_bytes}", qm.packed_bytes());
+    }
+}

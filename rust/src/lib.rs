@@ -6,7 +6,10 @@
 //!   sensitivity/, aggregate/, allocate — the paper's NSDS metric
 //!   quant/              — RTN / HQQ / GPTQ backends + bit packing
 //!   baselines/          — the paper's comparison metrics
-//!   runtime/            — PJRT executor over AOT HLO artifacts
+//!   infer/              — Executor trait + native engine (dense and
+//!                         fused packed 2/4-bit forward)
+//!   runtime/            — artifact registry; PJRT executor behind the
+//!                         off-by-default `xla` feature
 //!   eval/               — perplexity + reasoning-task harness
 //!   coordinator/        — end-to-end pipeline + experiment drivers
 //!   report/             — tables/series for every paper exhibit
@@ -17,6 +20,7 @@ pub mod allocate;
 pub mod baselines;
 pub mod coordinator;
 pub mod eval;
+pub mod infer;
 pub mod model;
 pub mod quant;
 pub mod report;

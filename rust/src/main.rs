@@ -9,7 +9,8 @@
 //!   sweep    --model M [--fast]   budget sweep for one model
 //!   paper    <table1|table2|fig1|fig3|fig4|fig5|fig6|fig7|all> [--fast]
 //!                                 regenerate a paper exhibit
-//!   serve-demo                    packed 2/4-bit Pallas kernel serving demo
+//!   serve-demo                    native fused 2/4-bit serving demo
+//!                                 (synthetic model; needs NO artifacts)
 //!
 //! (clap is unreachable offline; argument parsing is hand-rolled — see
 //! DESIGN.md "Environment deviations".)
@@ -130,7 +131,8 @@ COMMANDS:
   sweep    --model M [--fast]       budget sweep (one model, all methods)
   paper    <exhibit> [--fast]       table1 table2 fig1 fig3 fig4 fig5
                                     fig6 fig7 | all
-  serve-demo                        packed 2/4-bit Pallas kernel demo
+  serve-demo                        native fused 2/4-bit serving demo
+                                    (synthetic model, no artifacts)
   search-vs-criterion --model M     greedy search-based LMPQ vs NSDS
 
 METHODS: nsds mse ewq zd kurtboost lim lsaq llm-mq lieq
@@ -276,57 +278,101 @@ fn search_vs_criterion(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Serving-path demo: run the standalone fused dequant-matmul Pallas
-/// kernels on packed weights through PJRT, verify against the rust
-/// dequantize, and report memory savings and latency.
+/// Serving-path demo, fully self-contained (no artifacts, no XLA): a
+/// synthetic llama-s-shaped model is quantized into the packed 2/4-bit
+/// serving format and deployed through `coordinator::server::serve` over
+/// the native executor — dense FP32 first, then a zero-downtime swap to
+/// the fused packed variant mid-stream. Reports NLL parity, memory
+/// savings and per-request latency.
 fn serve_demo() -> Result<()> {
-    use nsds::quant::{pack, rtn, QuantSpec};
-    use nsds::runtime::{Engine, Input, Manifest};
-    use nsds::tensor::Tensor;
+    use nsds::coordinator::server::{serve, Client, ServedWeights,
+                                    ServerQueue};
+    use nsds::infer::{NativeEngine, QuantizedModel};
+    use nsds::model::{ModelConfig, Weights, QUANT_WEIGHTS};
+    use nsds::quant::{Backend, DEFAULT_GROUP};
+    use nsds::runtime::ModelEntry;
     use nsds::util::rng::Rng;
 
-    let dir = Manifest::default_dir();
-    let man = Manifest::load(&dir)?;
-    let engine = Engine::cpu(&dir)?;
+    // The llama-s shape from the model zoo (synthetic weights).
+    let cfg = ModelConfig::llama_s_synth();
+    let entry = ModelEntry::synthetic(cfg.clone());
     let mut rng = Rng::new(123);
-    for k in &man.kernels {
-        if !k.file.starts_with("dequant") {
-            continue;
+    let fp = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let bits: Vec<u8> =
+        (0..cfg.n_layers).map(|l| if l % 2 == 0 { 4 } else { 2 }).collect();
+    let qm = QuantizedModel::quantize(
+        &cfg, &fp, &bits, DEFAULT_GROUP, Backend::Hqq, None,
+        nsds::util::pool::default_workers());
+    let fp_bytes: usize = (0..cfg.n_layers)
+        .map(|l| {
+            QUANT_WEIGHTS
+                .iter()
+                .map(|n| fp.layer_matrix(n, l).len() * 4)
+                .sum::<usize>()
+        })
+        .sum();
+    println!("model {}: {} params, allocation {bits:?}", cfg.name,
+             entry.params);
+    println!("block weights: {:.1} KiB fp32 -> {:.1} KiB packed \
+              ({:.1}x smaller)",
+             fp_bytes as f64 / 1024.0,
+             qm.packed_bytes() as f64 / 1024.0,
+             fp_bytes as f64 / qm.packed_bytes() as f64);
+
+    let batch = 4;
+    let seq = cfg.seq;
+    let n_requests = 32;
+    let queue = ServerQueue::new(batch * 4);
+    let client = Client::new(queue.clone(), seq);
+    let vocab = cfg.vocab as i32;
+    let qm_for_swap = qm.clone();
+    let handle = std::thread::spawn(move || -> Result<Vec<f64>> {
+        let mut rng = Rng::new(7);
+        let mut nlls = Vec::new();
+        for r in 0..n_requests {
+            if r == n_requests / 2 {
+                println!("[client] deploying packed 2/4-bit variant \
+                          (request #{r}) — fused dequant-matmul path");
+                client.swap_packed(qm_for_swap.clone());
+            }
+            let toks: Vec<i32> =
+                (0..seq).map(|_| rng.below(vocab as usize) as i32)
+                    .collect();
+            let (nll, n) = client.nll(toks)?;
+            nlls.push(nll / n as f64);
         }
-        let w = Tensor::randn(vec![k.k, k.n], &mut rng).scale(0.05);
-        let x = Tensor::randn(vec![k.m, k.k], &mut rng);
-        let spec = QuantSpec::new(k.bits, k.group);
-        let q = rtn::quantize(&w, spec);
-        let packed = pack::pack(&q.codes, k.k, k.n, k.bits);
-        let scale = Tensor::new(q.scale.clone(), vec![k.k / k.group, k.n]);
-        let zero = Tensor::new(q.zero.clone(), vec![k.k / k.group, k.n]);
-        // Warm-up compile, then measure.
-        engine.load(&k.file)?;
-        let t0 = std::time::Instant::now();
-        let reps = 20;
-        let mut out = Vec::new();
-        for _ in 0..reps {
-            out = engine.execute(&k.file, &[
-                Input::F32(&x),
-                Input::U8(&packed,
-                          vec![k.k * k.bits as usize / 8, k.n]),
-                Input::F32(&scale),
-                Input::F32(&zero),
-            ])?;
-        }
-        let dt = t0.elapsed().as_secs_f64() / reps as f64;
-        let wref = q.dequantize();
-        let yref = nsds::tensor::matmul::matmul(&x, &wref);
-        let err = out[0].sub(&yref).frob_norm() / yref.frob_norm();
-        let fp_bytes = k.k * k.n * 4;
-        let q_bytes = pack::packed_bytes(k.k, k.n, k.bits, k.group);
-        println!(
-            "{}: [{}x{}]@{}bit g={}  rel-err {:.2e}  {:.2}ms/call  \
-             weight bytes {} -> {} ({:.1}x smaller)",
-            k.file, k.k, k.n, k.bits, k.group, err, dt * 1e3, fp_bytes,
-            q_bytes, fp_bytes as f64 / q_bytes as f64);
-        anyhow::ensure!(err < 1e-4, "kernel mismatch");
-    }
+        client.stop();
+        Ok(nlls)
+    });
+
+    let exec = NativeEngine::new();
+    let t0 = std::time::Instant::now();
+    serve(&exec, &entry, batch, ServedWeights::Dense(fp.clone()),
+          &queue)?;
+    let dt = t0.elapsed().as_secs_f64();
+    let nlls = handle.join().unwrap()?;
+
+    let (served, batches, padded) = queue.stats();
+    let half = nlls.len() / 2;
+    let mean = |xs: &[f64]| xs.iter().sum::<f64>() / xs.len() as f64;
+    println!("served {served} requests in {batches} batches \
+              ({padded} padded rows) over {dt:.2}s");
+    println!("mean NLL  fp32 {:.4}  packed {:.4}  (random tokens: \
+              both ≈ ln V = {:.4})",
+             mean(&nlls[..half]), mean(&nlls[half..]),
+             (cfg.vocab as f64).ln());
+
+    // Cross-check the fused path against dequantize-then-dense forward.
+    let toks: Vec<i32> =
+        (0..batch * seq).map(|i| (i % cfg.vocab) as i32).collect();
+    use nsds::infer::Executor;
+    let fused = exec.forward_packed(&entry, &toks, batch, &qm)?;
+    let dense = exec.forward(&entry, &toks, batch,
+                             &qm.dequantized_weights())?;
+    let err = fused.sub(&dense).frob_norm()
+        / dense.frob_norm().max(1e-9);
+    println!("fused vs dequant-dense logits rel-err {err:.2e}");
+    anyhow::ensure!(err < 1e-4, "fused/dense mismatch");
     println!("serve-demo OK");
     Ok(())
 }

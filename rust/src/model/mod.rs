@@ -60,6 +60,23 @@ impl ModelConfig {
         })
     }
 
+    /// The llama-s shape from the build-time model zoo, for synthetic
+    /// (artifact-less) serving demos and benches — keep in sync with
+    /// `python/compile/model.py MODEL_ZOO`.
+    pub fn llama_s_synth() -> Self {
+        ModelConfig {
+            name: "llama-s-synth".into(),
+            vocab: 256,
+            d_model: 64,
+            n_heads: 4,
+            n_kv: 2,
+            d_head: 16,
+            d_ffn: 192,
+            n_layers: 8,
+            seq: 64,
+        }
+    }
+
     /// Tiny config for unit tests (no artifacts needed).
     pub fn test_config() -> Self {
         ModelConfig {

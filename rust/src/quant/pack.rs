@@ -46,7 +46,9 @@ pub fn unpack(packed: &[u8], k: usize, n: usize, bits: u8) -> Vec<u8> {
 /// reported by the serving example).
 pub fn packed_bytes(k: usize, n: usize, bits: u8, group: usize) -> usize {
     let code_bytes = k * n * bits as usize / 8;
-    let meta = (k / group) * n * 8; // f32 scale + f32 zero
+    // f32 scale + f32 zero per (group, column); a ragged tail group still
+    // carries full metadata, so the group count rounds UP.
+    let meta = k.div_ceil(group) * n * 8;
     code_bytes + meta
 }
 
@@ -99,5 +101,15 @@ mod tests {
         assert!(fp as f64 / q4 as f64 > 6.0);
         let q2 = packed_bytes(256, 256, 2, 64);
         assert!(q2 < q4);
+    }
+
+    #[test]
+    fn ragged_group_metadata_rounds_up() {
+        // K=96, group=64 -> 2 groups (64 + ragged 32), not 96/64 = 1.
+        let b = packed_bytes(96, 10, 4, 64);
+        assert_eq!(b, 96 * 10 * 4 / 8 + 2 * 10 * 8);
+        // Exact division unchanged.
+        assert_eq!(packed_bytes(128, 10, 4, 64),
+                   128 * 10 * 4 / 8 + 2 * 10 * 8);
     }
 }

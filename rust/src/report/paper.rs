@@ -115,7 +115,7 @@ pub fn fig1(p: &Pipeline, opts: &EvalOptions) -> Result<()> {
                 qw.set_layer_matrix(name, l, &q.dequantize());
             }
             let ppl = crate::eval::ppl::perplexity(
-                &p.engine, &p.man, entry, &qw, &corpora.wiki_like,
+                p.exec(), &p.man, entry, &qw, &corpora.wiki_like,
                 opts.max_ppl_batches)?;
             t.row(vec![model.to_string(), l.to_string(), fmt3(nv[l]),
                        fmt3(se[l]), fmt3(nsds[l]), fmt3(ppl - fp_ppl)]);
@@ -175,7 +175,15 @@ pub fn fig4(p: &Pipeline, opts: &EvalOptions) -> Result<()> {
 pub fn fig5(p: &Pipeline, opts: &EvalOptions) -> Result<()> {
     let mut t = Table::new(&["model", "method", "avg_acc", "avg_ppl"]);
     for model in ALL_MODELS {
-        for method in Method::fig5() {
+        let mut methods = Method::fig5();
+        // LLM-MQ needs loss gradients, an optional executor capability
+        // (the native engine has no reverse mode).
+        if p.calibration(model)?.grads.is_none() {
+            eprintln!("[fig5] {model}: executor collects no gradients; \
+                       skipping LLM-MQ");
+            methods.retain(|m| *m != Method::LlmMq);
+        }
+        for method in methods {
             let r = p.run(method, model, BUDGET, Backend::Hqq, opts)?;
             t.row(vec![model.to_string(), method.label().to_string(),
                        fmt2(r.eval.avg_acc()), fmt3(r.eval.avg_ppl())]);

@@ -22,6 +22,26 @@ pub struct ModelEntry {
     pub train_log: Vec<(usize, f64)>,
 }
 
+impl ModelEntry {
+    /// Entry for a synthetic (artifact-less) model served by the native
+    /// executor: config-only, no weight files or HLO artifacts.
+    pub fn synthetic(config: ModelConfig) -> Self {
+        let name = config.name.clone();
+        let params = config.param_count();
+        ModelEntry {
+            name,
+            config,
+            params,
+            weights_file: String::new(),
+            init_weights_file: String::new(),
+            hlo_fwd: String::new(),
+            hlo_probe: String::new(),
+            hlo_grad: String::new(),
+            train_log: Vec::new(),
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct TaskMeta {
     pub name: String,

@@ -1,181 +1,35 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them from the rust hot path.
-//! Python never runs here — the binary is self-contained once
-//! `make artifacts` has been built.
+//! Runtime layer: the artifact registry (always available) and the
+//! PJRT/XLA executor over AOT HLO artifacts (behind the off-by-default
+//! `xla` cargo feature — the bindings crate is not fetchable offline;
+//! see DESIGN.md "Environment deviations").
 //!
-//! Design: one `Engine` per process (owns the PJRT CPU client), one
-//! compiled `Executable` per artifact, cached by name. Model weights are
-//! *runtime inputs* of every model executable, so a single compiled
-//! forward serves every quantized weight variant the coordinator produces
-//! (the weight-swappable-executor pattern; see DESIGN.md).
+//! Execution itself is backend-agnostic: every hot path goes through
+//! `infer::Executor`, implemented here by the PJRT `Engine` and by
+//! `infer::NativeEngine` (the default). Model weights are *runtime
+//! inputs* of every forward, so one engine serves every quantized
+//! weight variant the coordinator produces (the weight-swappable
+//! executor pattern; see DESIGN.md).
 
 pub mod artifacts;
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+#[cfg(feature = "xla")]
+pub mod pjrt;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
+use crate::infer::Executor;
+use crate::model::Weights;
 use crate::tensor::Tensor;
 
 pub use artifacts::{Manifest, ModelEntry};
 
-/// Process-wide PJRT engine + executable cache.
-pub struct Engine {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
-}
+#[cfg(feature = "xla")]
+pub use pjrt::{Engine, Input};
 
-impl Engine {
-    /// Create a CPU engine rooted at the artifacts directory.
-    pub fn cpu(artifacts_dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow::anyhow!("pjrt client: {e:?}"))?;
-        Ok(Engine {
-            client,
-            dir: artifacts_dir.to_path_buf(),
-            cache: Mutex::new(HashMap::new()),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn artifacts_dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// Load + compile an HLO-text artifact (cached by file name).
-    pub fn load(&self, file: &str) -> Result<()> {
-        let mut cache = self.cache.lock().unwrap();
-        if cache.contains_key(file) {
-            return Ok(());
-        }
-        let path = self.dir.join(file);
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .map_err(|e| anyhow::anyhow!("parse {file}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow::anyhow!("compile {file}: {e:?}"))?;
-        cache.insert(file.to_string(), exe);
-        Ok(())
-    }
-
-    /// Execute an artifact with the given inputs. Outputs are the elements
-    /// of the module's result tuple (aot.py lowers with return_tuple=True).
-    ///
-    /// Inputs go through explicit `PjRtBuffer`s + `execute_b` rather than
-    /// the crate's literal-taking `execute`: the latter leaks its
-    /// internally-created device buffers (~input-bytes per call, OOM after
-    /// a few thousand batches — see EXPERIMENTS.md §Perf).
-    pub fn execute(&self, file: &str, inputs: &[Input]) -> Result<Vec<Tensor>> {
-        self.load(file)?;
-        let cache = self.cache.lock().unwrap();
-        let exe = cache.get(file).unwrap();
-        let bufs: Vec<xla::PjRtBuffer> = inputs
-            .iter()
-            .map(|i| i.to_buffer(&self.client))
-            .collect::<Result<_>>()?;
-        let out = exe
-            .execute_b::<xla::PjRtBuffer>(&bufs)
-            .map_err(|e| anyhow::anyhow!("execute {file}: {e:?}"))?;
-        let result = out[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow::anyhow!("fetch {file}: {e:?}"))?;
-        let tuple = result
-            .to_tuple()
-            .map_err(|e| anyhow::anyhow!("untuple {file}: {e:?}"))?;
-        tuple
-            .into_iter()
-            .map(literal_to_tensor)
-            .collect::<Result<Vec<_>>>()
-    }
-}
-
-/// A runtime input: f32 tensor, i32 tokens, or u8 packed codes.
-pub enum Input<'a> {
-    F32(&'a Tensor),
-    I32(&'a [i32], Vec<usize>),
-    U8(&'a [u8], Vec<usize>),
-}
-
-impl Input<'_> {
-    fn to_buffer(&self, client: &xla::PjRtClient)
-        -> Result<xla::PjRtBuffer> {
-        match self {
-            Input::F32(t) => client
-                .buffer_from_host_buffer(t.data(), t.dims(), None)
-                .map_err(|e| anyhow::anyhow!("f32 buffer: {e:?}")),
-            Input::I32(data, dims) => client
-                .buffer_from_host_buffer(data, dims, None)
-                .map_err(|e| anyhow::anyhow!("i32 buffer: {e:?}")),
-            Input::U8(data, dims) => client
-                .buffer_from_host_buffer(data, dims, None)
-                .map_err(|e| anyhow::anyhow!("u8 buffer: {e:?}")),
-        }
-    }
-}
-
-fn literal_to_tensor(lit: xla::Literal) -> Result<Tensor> {
-    let shape = lit
-        .array_shape()
-        .map_err(|e| anyhow::anyhow!("shape: {e:?}"))?;
-    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-    let data: Vec<f32> = match shape.ty() {
-        xla::ElementType::F32 => lit
-            .to_vec::<f32>()
-            .map_err(|e| anyhow::anyhow!("to_vec f32: {e:?}"))?,
-        xla::ElementType::S32 => lit
-            .to_vec::<i32>()
-            .map_err(|e| anyhow::anyhow!("to_vec i32: {e:?}"))?
-            .into_iter()
-            .map(|x| x as f32)
-            .collect(),
-        xla::ElementType::U8 => lit
-            .to_vec::<u8>()
-            .map_err(|e| anyhow::anyhow!("to_vec u8: {e:?}"))?
-            .into_iter()
-            .map(|x| x as f32)
-            .collect(),
-        other => anyhow::bail!("unsupported output dtype {other:?}"),
-    };
-    Ok(Tensor::new(data, dims))
-}
-
-/// Convenience: run a model forward (`fwd_<model>.hlo.txt`) on one token
-/// batch with the given weight set. Returns logits [B, S, V].
-pub fn run_forward(engine: &Engine, entry: &ModelEntry, tokens: &[i32],
-                   batch: usize, weights: &crate::model::Weights)
+/// Convenience: run a model forward on one token batch with the given
+/// weight set through any executor. Returns logits [B, S, V].
+pub fn run_forward(exec: &dyn Executor, entry: &ModelEntry,
+                   tokens: &[i32], batch: usize, weights: &Weights)
                    -> Result<Tensor> {
-    let seq = entry.config.seq;
-    assert_eq!(tokens.len(), batch * seq);
-    let mut inputs: Vec<Input> = Vec::with_capacity(13);
-    inputs.push(Input::I32(tokens, vec![batch, seq]));
-    let ordered = weights.ordered();
-    for t in &ordered {
-        inputs.push(Input::F32(t));
-    }
-    let mut out = engine.execute(&entry.hlo_fwd, &inputs)?;
-    Ok(out.remove(0))
-}
-
-#[cfg(test)]
-mod tests {
-    //! Integration tests live in rust/tests/ (they need artifacts); here we
-    //! only check engine construction degrades gracefully.
-    use super::*;
-
-    #[test]
-    fn engine_builds_on_cpu() {
-        let e = Engine::cpu(Path::new("/nonexistent")).unwrap();
-        assert_eq!(e.platform(), "cpu");
-        assert!(e.load("missing.hlo.txt").is_err());
-    }
+    exec.forward(entry, tokens, batch, weights)
 }

@@ -1,0 +1,397 @@
+//! Native-engine coverage that needs NO artifacts: golden-value forward
+//! tests, an independent naive-reference cross-check, the fused
+//! packed-matmul property test, and the end-to-end offline serving path
+//! (quantize → fused packed forward → NLL through
+//! `coordinator::server::serve`).
+
+use std::collections::BTreeMap;
+
+use nsds::coordinator::server::{serve, Client, ServedWeights,
+                                ServerQueue};
+use nsds::eval::ppl::batch_nll;
+use nsds::infer::{fused_matmul, Executor, NativeEngine, PackedMatrix,
+                  QuantizedModel};
+use nsds::model::{ModelConfig, Weights, QUANT_WEIGHTS, WEIGHT_NAMES};
+use nsds::quant::{fit_group, pack, rtn, Backend, QuantSpec};
+use nsds::runtime::ModelEntry;
+use nsds::tensor::matmul::matmul;
+use nsds::tensor::Tensor;
+use nsds::util::rng::Rng;
+
+fn rel_err(a: &Tensor, b: &Tensor) -> f32 {
+    a.sub(b).frob_norm() / b.frob_norm().max(1e-9)
+}
+
+/// Zero-knowledge golden value: with every projection AND the unembed
+/// zeroed, logits are exactly zero, so the model is uniform and PPL
+/// equals the vocabulary size.
+#[test]
+fn golden_zero_model_is_uniform() {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(70);
+    let mut w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    for name in QUANT_WEIGHTS {
+        let dims = cfg.weight_dims(name);
+        w.tensors.insert(name.to_string(), Tensor::zeros(dims));
+    }
+    w.tensors.insert("unembed".to_string(),
+                     Tensor::zeros(cfg.weight_dims("unembed")));
+    let e = NativeEngine::with_workers(2);
+    let b = 2;
+    let tokens: Vec<i32> = (0..b * cfg.seq)
+        .map(|i| ((i * 11) % cfg.vocab) as i32)
+        .collect();
+    let logits = e.forward(&entry, &tokens, b, &w).unwrap();
+    assert!(logits.data().iter().all(|&x| x == 0.0));
+    let (nll, n) = batch_nll(&logits, &tokens, b, cfg.seq);
+    let ppl = (nll / n as f64).exp();
+    assert!((ppl - cfg.vocab as f64).abs() < 1e-6,
+            "uniform ppl {ppl} != vocab {}", cfg.vocab);
+}
+
+/// Golden value on a hand-built 1-layer model: identity embed/unembed
+/// with zero projections makes the model predict "repeat the last
+/// token", so a constant stream scores ~zero NLL.
+#[test]
+fn golden_identity_model_repeats_last_token() {
+    let cfg = ModelConfig {
+        name: "ident".into(),
+        vocab: 8,
+        d_model: 8,
+        n_heads: 2,
+        n_kv: 2,
+        d_head: 2,
+        d_ffn: 8,
+        n_layers: 1,
+        seq: 8,
+    };
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut tensors = BTreeMap::new();
+    for name in WEIGHT_NAMES {
+        let dims = cfg.weight_dims(name);
+        let n: usize = dims.iter().product();
+        let t = match name {
+            "embed" | "unembed" => {
+                let scale = if name == "embed" { 5.0 } else { 20.0 };
+                let mut m = Tensor::zeros(dims);
+                for i in 0..cfg.vocab {
+                    m.set(i, i, scale);
+                }
+                m
+            }
+            "lnf" | "ln1" | "ln2" => Tensor::new(vec![1.0; n], dims),
+            _ => Tensor::zeros(dims),
+        };
+        tensors.insert(name.to_string(), t);
+    }
+    let w = Weights { tensors };
+    let e = NativeEngine::with_workers(1);
+    let tokens = vec![3i32; cfg.seq];
+    let logits = e.forward(&entry, &tokens, 1, &w).unwrap();
+    // Position-0 logit at token 3: 20·√8·5/√25 ≈ 56.6.
+    assert!(logits.data()[3] > 50.0, "{}", logits.data()[3]);
+    let (nll, n) = batch_nll(&logits, &tokens, 1, cfg.seq);
+    assert_eq!(n, cfg.seq - 1);
+    assert!(nll / n as f64 < 1e-3, "repeat-NLL {}", nll / n as f64);
+}
+
+/// Independent naive reference forward (straight per-position loops, no
+/// blocking, no pools) must agree with the engine on random weights —
+/// exercises RoPE, GQA head mapping, causal softmax and SwiGLU.
+#[test]
+fn forward_matches_naive_reference() {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(71);
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let e = NativeEngine::with_workers(2);
+    let b = 2;
+    let tokens: Vec<i32> = (0..b * cfg.seq)
+        .map(|_| rng.below(cfg.vocab) as i32)
+        .collect();
+    let logits = e.forward(&entry, &tokens, b, &w).unwrap();
+    for bi in 0..b {
+        let naive = naive_forward(&cfg, &w,
+                                  &tokens[bi * cfg.seq..(bi + 1) * cfg.seq]);
+        let got = Tensor::new(
+            logits.data()[bi * cfg.seq * cfg.vocab
+                          ..(bi + 1) * cfg.seq * cfg.vocab].to_vec(),
+            vec![cfg.seq, cfg.vocab]);
+        let want = Tensor::new(naive, vec![cfg.seq, cfg.vocab]);
+        let err = rel_err(&got, &want);
+        assert!(err < 1e-4, "batch row {bi}: rel err {err}");
+    }
+}
+
+/// Property: fused packed-code matmul == unpack-then-`tensor::matmul`
+/// within 1e-5 (the satellite acceptance bound).
+#[test]
+fn fused_packed_matmul_matches_unpack_then_matmul() {
+    let mut rng = Rng::new(72);
+    for case in 0..20 {
+        let bits = if case % 2 == 0 { 2u8 } else { 4u8 };
+        let k = 8 * (1 + rng.below(24));
+        let n = 1 + rng.below(40);
+        let m = 1 + rng.below(20);
+        let g = fit_group(k, 32);
+        let w = Tensor::randn(vec![k, n], &mut rng);
+        let x = Tensor::randn(vec![m, k], &mut rng);
+        let q = rtn::quantize(&w, QuantSpec::new(bits, g));
+        let pm = PackedMatrix::from_quantized(&q);
+        // Reference: explicitly unpack codes, dequantize, dense matmul.
+        let codes = pack::unpack(&pm.packed, k, n, bits);
+        let mut deq = vec![0.0f32; k * n];
+        for r in 0..k {
+            for c in 0..n {
+                let gr = r / g;
+                deq[r * n + c] = pm.scale[gr * n + c]
+                    * (codes[r * n + c] as f32 - pm.zero[gr * n + c]);
+            }
+        }
+        let reference = matmul(&x, &Tensor::new(deq, vec![k, n]));
+        let fused = fused_matmul(&x, &pm, 1 + case % 3);
+        let err = rel_err(&fused, &reference);
+        assert!(err < 1e-5,
+                "case {case} ({m}x{k}x{n}@{bits}b g={g}): rel err {err}");
+    }
+}
+
+/// The acceptance path: quantize → fused packed forward → NLL through
+/// `coordinator::server::serve`, artifact-free, on the native engine.
+#[test]
+fn serve_packed_end_to_end() {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(73);
+    let fp = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let bits = vec![4u8, 2, 4];
+    let qm = QuantizedModel::quantize(&cfg, &fp, &bits, 8,
+                                      Backend::Hqq, None, 2);
+    let exec = NativeEngine::with_workers(2);
+
+    // Expected NLLs via a direct fused forward, outside the server.
+    let n_requests = 6;
+    let requests: Vec<Vec<i32>> = (0..n_requests)
+        .map(|_| {
+            (0..cfg.seq).map(|_| rng.below(cfg.vocab) as i32).collect()
+        })
+        .collect();
+    let mut expected = Vec::new();
+    for toks in &requests {
+        let logits = exec.forward_packed(&entry, toks, 1, &qm).unwrap();
+        let (nll, n) = batch_nll(&logits, toks, 1, cfg.seq);
+        expected.push(nll / n as f64);
+    }
+
+    // Same requests through the batching serve loop.
+    let batch = 2;
+    let queue = ServerQueue::new(8);
+    let client = Client::new(queue.clone(), cfg.seq);
+    let reqs = requests.clone();
+    let handle = std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+        let mut got = Vec::new();
+        for toks in reqs {
+            let (nll, n) = client.nll(toks)?;
+            got.push(nll / n as f64);
+        }
+        client.stop();
+        Ok(got)
+    });
+    serve(&exec, &entry, batch, ServedWeights::Packed(qm.clone()),
+          &queue).unwrap();
+    let got = handle.join().unwrap().unwrap();
+
+    assert_eq!(got.len(), expected.len());
+    for (g, e) in got.iter().zip(&expected) {
+        assert!((g - e).abs() < 1e-9,
+                "served NLL {g} != direct fused NLL {e}");
+        assert!(g.is_finite() && *g > 0.0);
+    }
+    let (served, batches, _) = queue.stats();
+    assert_eq!(served, n_requests as u64);
+    assert!(batches >= (n_requests / batch) as u64);
+
+    // Mid-stream swap parity: packed serving must equal serving the
+    // dequantized weights densely.
+    let queue2 = ServerQueue::new(8);
+    let client2 = Client::new(queue2.clone(), cfg.seq);
+    let toks = requests[0].clone();
+    let dq = qm.dequantized_weights();
+    let handle2 =
+        std::thread::spawn(move || -> anyhow::Result<(f64, f64)> {
+            let (a, na) = client2.nll(toks.clone())?;
+            client2.swap_weights(dq);
+            let (b, nb) = client2.nll(toks)?;
+            client2.stop();
+            Ok((a / na as f64, b / nb as f64))
+        });
+    serve(&exec, &entry, batch, ServedWeights::Packed(qm), &queue2)
+        .unwrap();
+    let (packed_nll, dense_nll) = handle2.join().unwrap().unwrap();
+    assert!((packed_nll - dense_nll).abs() < 1e-4,
+            "packed {packed_nll} vs dense {dense_nll}");
+}
+
+/// Fused packed forward parity against the dense engine on the
+/// dequantized weights (whole-model version of the matmul property).
+#[test]
+fn packed_forward_matches_dequantized_dense_forward() {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(74);
+    let fp = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let exec = NativeEngine::with_workers(2);
+    let b = 2;
+    let tokens: Vec<i32> = (0..b * cfg.seq)
+        .map(|_| rng.below(cfg.vocab) as i32)
+        .collect();
+    for backend in [Backend::Rtn, Backend::Hqq] {
+        let qm = QuantizedModel::quantize(&cfg, &fp, &[2, 4, 2], 8,
+                                          backend, None, 1);
+        let fused =
+            exec.forward_packed(&entry, &tokens, b, &qm).unwrap();
+        let dense = exec
+            .forward(&entry, &tokens, b, &qm.dequantized_weights())
+            .unwrap();
+        let err = rel_err(&fused, &dense);
+        assert!(err < 1e-4, "{backend:?}: rel err {err}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Naive reference implementation (deliberately structured differently
+// from infer::native: per-position vectors, no blocking, no buffers).
+// ---------------------------------------------------------------------
+
+fn naive_forward(cfg: &ModelConfig, w: &Weights, tokens: &[i32])
+    -> Vec<f32> {
+    let (s, v) = (cfg.seq, cfg.vocab);
+    let (nh, nkv, dh) = (cfg.n_heads, cfg.n_kv, cfg.d_head);
+    assert_eq!(tokens.len(), s);
+    let embed = w.get("embed");
+    let mut h: Vec<Vec<f32>> = tokens
+        .iter()
+        .map(|&t| embed.row(t as usize).to_vec())
+        .collect();
+
+    for l in 0..cfg.n_layers {
+        let ln1 = w.get("ln1").slice0(l);
+        let ln2 = w.get("ln2").slice0(l);
+        let wq = w.layer_matrix("wq", l);
+        let wk = w.layer_matrix("wk", l);
+        let wv = w.layer_matrix("wv", l);
+        let wo = w.layer_matrix("wo", l);
+        let wgate = w.layer_matrix("wgate", l);
+        let wup = w.layer_matrix("wup", l);
+        let wdown = w.layer_matrix("wdown", l);
+
+        // Attention.
+        let x1: Vec<Vec<f32>> =
+            h.iter().map(|r| naive_rmsnorm(r, ln1.data())).collect();
+        let mut q: Vec<Vec<f32>> =
+            x1.iter().map(|r| naive_vecmat(r, &wq)).collect();
+        let mut kk: Vec<Vec<f32>> =
+            x1.iter().map(|r| naive_vecmat(r, &wk)).collect();
+        let vv: Vec<Vec<f32>> =
+            x1.iter().map(|r| naive_vecmat(r, &wv)).collect();
+        for (pos, row) in q.iter_mut().enumerate() {
+            for hi in 0..nh {
+                naive_rope(&mut row[hi * dh..(hi + 1) * dh], pos);
+            }
+        }
+        for (pos, row) in kk.iter_mut().enumerate() {
+            for hi in 0..nkv {
+                naive_rope(&mut row[hi * dh..(hi + 1) * dh], pos);
+            }
+        }
+        let rep = nh / nkv;
+        let mut ctx: Vec<Vec<f32>> = vec![vec![0.0; nh * dh]; s];
+        for i in 0..s {
+            for hi in 0..nh {
+                let kv = hi / rep;
+                let qh = &q[i][hi * dh..(hi + 1) * dh];
+                let raw: Vec<f32> = (0..=i)
+                    .map(|j| {
+                        let kh = &kk[j][kv * dh..(kv + 1) * dh];
+                        qh.iter().zip(kh).map(|(a, b)| a * b)
+                            .sum::<f32>()
+                            / (dh as f32).sqrt()
+                    })
+                    .collect();
+                let mx =
+                    raw.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let exps: Vec<f32> =
+                    raw.iter().map(|x| (x - mx).exp()).collect();
+                let denom: f32 = exps.iter().sum();
+                for (j, ex) in exps.iter().enumerate() {
+                    let wgt = ex / denom;
+                    let vh = &vv[j][kv * dh..(kv + 1) * dh];
+                    for (c, val) in ctx[i][hi * dh..(hi + 1) * dh]
+                        .iter_mut()
+                        .zip(vh)
+                    {
+                        *c += wgt * val;
+                    }
+                }
+            }
+        }
+        for i in 0..s {
+            let attn_out = naive_vecmat(&ctx[i], &wo);
+            for (hv, a) in h[i].iter_mut().zip(&attn_out) {
+                *hv += a;
+            }
+        }
+
+        // FFN.
+        for i in 0..s {
+            let x2 = naive_rmsnorm(&h[i], ln2.data());
+            let gate = naive_vecmat(&x2, &wgate);
+            let up = naive_vecmat(&x2, &wup);
+            let mid: Vec<f32> = gate
+                .iter()
+                .zip(&up)
+                .map(|(g, u)| g / (1.0 + (-g).exp()) * u)
+                .collect();
+            let down = naive_vecmat(&mid, &wdown);
+            for (hv, dn) in h[i].iter_mut().zip(&down) {
+                *hv += dn;
+            }
+        }
+    }
+
+    let lnf = w.get("lnf");
+    let unembed = w.get("unembed");
+    let mut out = Vec::with_capacity(s * v);
+    for row in &h {
+        let hf = naive_rmsnorm(row, lnf.data());
+        out.extend(naive_vecmat(&hf, unembed));
+    }
+    out
+}
+
+fn naive_rmsnorm(x: &[f32], g: &[f32]) -> Vec<f32> {
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + 1e-5).sqrt();
+    x.iter().zip(g).map(|(v, gv)| v * inv * gv).collect()
+}
+
+fn naive_vecmat(x: &[f32], w: &Tensor) -> Vec<f32> {
+    let (k, n) = (w.rows(), w.cols());
+    assert_eq!(x.len(), k);
+    (0..n)
+        .map(|c| (0..k).map(|r| x[r] * w.at(r, c)).sum())
+        .collect()
+}
+
+fn naive_rope(x: &mut [f32], pos: usize) {
+    let dh = x.len();
+    let half = dh / 2;
+    for j in 0..half {
+        let inv = 10000f32.powf(-(j as f32) / half as f32);
+        let ang = pos as f32 * inv;
+        let (a, b) = (x[j], x[j + half]);
+        x[j] = a * ang.cos() - b * ang.sin();
+        x[j + half] = a * ang.sin() + b * ang.cos();
+    }
+}

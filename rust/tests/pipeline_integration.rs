@@ -12,7 +12,8 @@ fn pipeline() -> Option<Pipeline> {
         .join("manifest.json")
         .exists()
     {
-        eprintln!("skipping: run `make artifacts`");
+        eprintln!("skipping: no artifacts/manifest.json (run `make \
+                   artifacts`)");
         return None;
     }
     Some(Pipeline::new().unwrap())
@@ -25,6 +26,11 @@ fn all_method_scores_are_layer_shaped_and_deterministic() {
     let nl = p.entry(model).unwrap().config.n_layers;
     let mut methods = Method::table1();
     methods.extend(Method::fig5());
+    // LLM-MQ needs loss gradients, an optional executor capability.
+    if p.calibration(model).unwrap().grads.is_none() {
+        eprintln!("executor has no grad collection; skipping LLM-MQ");
+        methods.retain(|m| *m != Method::LlmMq);
+    }
     for m in methods {
         let a = p.scores(m, model).unwrap();
         let b = p.scores(m, model).unwrap();
@@ -108,9 +114,15 @@ fn calibration_shapes_consistent() {
     assert_eq!(c.x_ln1[0].cols(), cfg.d_model);
     assert_eq!(c.attn_ctx[0].cols(), cfg.n_heads * cfg.d_head);
     assert_eq!(c.ffn_mid[0].cols(), cfg.d_ffn);
-    // grads present for all quantizable weights, correct stacked shape
-    for name in nsds::model::QUANT_WEIGHTS {
-        assert_eq!(c.grads[name].dims(), cfg.weight_dims(name).as_slice());
+    // When the executor collects grads, every quantizable weight has a
+    // correctly-shaped stacked gradient.
+    if let Some(grads) = &c.grads {
+        for name in nsds::model::QUANT_WEIGHTS {
+            assert_eq!(grads[name].dims(),
+                       cfg.weight_dims(name).as_slice());
+        }
+    } else {
+        eprintln!("executor has no grad collection; grads are None");
     }
     assert!(c.loss.is_finite() && c.loss > 0.0);
 }
