@@ -15,6 +15,7 @@ use nsds::baselines::Method;
 use nsds::coordinator::server::{serve, Client, ServedWeights,
                                 ServerQueue};
 use nsds::coordinator::Pipeline;
+use nsds::infer::NativeEngine;
 use nsds::quant::Backend;
 use nsds::sensitivity::Ablation;
 
@@ -93,9 +94,12 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
-    // Engine thread = main thread.
+    // Engine thread = main thread. `serve` needs a `Sync` executor (it
+    // fans concurrent generations across pool workers), so the demo
+    // serves on the native engine — the default executor offline anyway.
+    let engine = NativeEngine::new();
     let t0 = std::time::Instant::now();
-    serve(p.exec(), &entry, batch, ServedWeights::Dense(fp), &queue)?;
+    serve(&engine, &entry, batch, ServedWeights::Dense(fp), &queue)?;
     let dt = t0.elapsed().as_secs_f64();
 
     let (served, batches, padded) = queue.stats();

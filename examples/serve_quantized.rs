@@ -1,24 +1,107 @@
-//! Serving scenario: a batched request loop over the weight-swappable
-//! executor — the deployment shape a quantized LLM service uses.
+//! Serving scenario: batched NLL scoring AND KV-cached autoregressive
+//! generation over the weight-swappable executor — the deployment shape a
+//! quantized LLM service uses.
 //!
 //!   cargo run --release --example serve_quantized [model] [n_requests]
 //!
-//! Compares three deployed variants (FP32, NSDS@3-bit, uniform 2-bit) on
-//! the same compiled forward: per-request latency percentiles, throughput
-//! (tokens/s) and weight memory. Demonstrates that swapping a quantized
-//! model in/out needs NO recompilation (weights are runtime inputs).
+//! With `artifacts/` present (after `make artifacts`) it serves the
+//! trained model zoo through the coordinator pipeline; without artifacts
+//! it falls back to a fully synthetic llama-s-shaped deployment on the
+//! native engine, so the example runs on a clean offline checkout.
+//! Either way it compares deployed variants (FP32 vs packed quantized)
+//! on per-request forward latency and on generation: tokens/sec,
+//! prefill/decode split, and greedy-output agreement between the FP32
+//! and packed variants.
 
 use std::time::Instant;
 
-use nsds::baselines::Method;
-use nsds::coordinator::Pipeline;
+use nsds::infer::{generate, Executor, GenConfig, ModelRef, NativeEngine,
+                  QuantizedModel, Sampling};
+use nsds::model::{ModelConfig, Weights};
 use nsds::quant::Backend;
-use nsds::runtime::run_forward;
-use nsds::sensitivity::Ablation;
+use nsds::runtime::{run_forward, ModelEntry};
+use nsds::util::rng::Rng;
 
 fn percentile(sorted: &[f64], p: f64) -> f64 {
     let idx = ((sorted.len() as f64 - 1.0) * p) as usize;
     sorted[idx]
+}
+
+/// Generation showcase shared by both modes: greedy + top-k from every
+/// variant, with per-request stats and FP-vs-packed greedy agreement.
+fn generation_demo(exec: &dyn Executor, entry: &ModelEntry,
+                   fp: ModelRef, packed: ModelRef,
+                   corpus: &[i32]) -> anyhow::Result<()> {
+    let s = entry.config.seq;
+    let prompt = &corpus[..(s / 2).max(1)];
+    let max_new = (s / 2).max(1);
+    println!("generation: prompt {} tokens, up to {max_new} new",
+             prompt.len());
+    for (label, model) in [("FP32", fp), ("packed", packed)] {
+        for (mode, sampling) in [
+            ("greedy", Sampling::Greedy),
+            ("top-k",
+             Sampling::TopK { k: 8, temperature: 0.9 }),
+        ] {
+            let gc = GenConfig {
+                max_new,
+                sampling,
+                seed: 17,
+                ..GenConfig::default()
+            };
+            let g = generate(exec, entry, model, prompt, &gc)?;
+            println!(
+                "  {label:6} {mode:6} -> {:2} tokens  prefill {:6.2}ms  \
+                 decode {:6.2}ms  {:7.0} tok/s  first: {:?}",
+                g.tokens.len(),
+                g.stats.prefill_s * 1e3,
+                g.stats.decode_s * 1e3,
+                g.stats.decode_tok_per_s(),
+                &g.tokens[..g.tokens.len().min(6)]
+            );
+        }
+    }
+    let agree = nsds::eval::gen::greedy_agreement(
+        exec, entry, fp, packed, corpus, (s / 2).max(1), (s / 4).max(1),
+        8)?;
+    println!("  FP32 vs packed greedy agreement: {:.1}%", agree * 100.0);
+    Ok(())
+}
+
+/// Artifact-less mode: synthetic llama-s shape, native engine only.
+fn synthetic_main(n_requests: usize) -> anyhow::Result<()> {
+    let cfg = ModelConfig::llama_s_synth();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(99);
+    let fp = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let bits: Vec<u8> = (0..cfg.n_layers)
+        .map(|l| if l % 2 == 0 { 4 } else { 2 })
+        .collect();
+    let qm = QuantizedModel::quantize(
+        &cfg, &fp, &bits, nsds::quant::DEFAULT_GROUP, Backend::Hqq, None,
+        nsds::util::pool::default_workers());
+    let exec = NativeEngine::new();
+    let corpus: Vec<i32> = (0..4 * cfg.seq)
+        .map(|_| rng.below(cfg.vocab) as i32)
+        .collect();
+
+    println!("serving {} (synthetic, no artifacts), seq={}, \
+              {n_requests} forwards/variant", cfg.name, cfg.seq);
+    let toks: Vec<i32> = corpus[..cfg.seq].to_vec();
+    for (label, model) in [("FP32", ModelRef::Dense(&fp)),
+                           ("packed-2/4", ModelRef::Packed(&qm))] {
+        let mut lat = Vec::with_capacity(n_requests);
+        for _ in 0..n_requests {
+            let t0 = Instant::now();
+            std::hint::black_box(model.forward(&exec, &entry, &toks, 1)?);
+            lat.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        lat.sort_by(|a, b| a.total_cmp(b));
+        println!("  {label:12} fwd p50 {:7.2}ms  p95 {:7.2}ms",
+                 percentile(&lat, 0.5), percentile(&lat, 0.95));
+    }
+    generation_demo(&exec, &entry, ModelRef::Dense(&fp),
+                    ModelRef::Packed(&qm), &corpus)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -26,6 +109,19 @@ fn main() -> anyhow::Result<()> {
     let model = args.get(1).map(|s| s.as_str()).unwrap_or("llama-s");
     let n_requests: usize =
         args.get(2).and_then(|s| s.parse().ok()).unwrap_or(40);
+
+    if !nsds::runtime::Manifest::default_dir()
+        .join("manifest.json")
+        .exists()
+    {
+        println!("no artifacts/manifest.json — synthetic serving demo \
+                  (run `make artifacts` for the trained zoo)");
+        return synthetic_main(n_requests);
+    }
+
+    use nsds::baselines::Method;
+    use nsds::coordinator::Pipeline;
+    use nsds::sensitivity::Ablation;
 
     let p = Pipeline::new()?;
     let entry = p.entry(model)?;
@@ -38,6 +134,7 @@ fn main() -> anyhow::Result<()> {
     let q3 = p.quantize(model, &bits_nsds, Backend::Hqq)?;
     let q2 = p.quantize(model, &vec![2u8; entry.config.n_layers],
                         Backend::Hqq)?;
+    let q3_packed = p.quantize_packed(model, &bits_nsds, Backend::Hqq)?;
 
     // Weight memory if served packed (codes + group metadata).
     let mem = |bits: &[u8]| -> usize {
@@ -93,5 +190,10 @@ fn main() -> anyhow::Result<()> {
             percentile(&lat, 0.5), percentile(&lat, 0.95), toks / total,
             bytes as f64 / 1024.0);
     }
-    Ok(())
+
+    // Generation runs on the native engine (the PJRT executor has no
+    // decode path), serving the same weight variants.
+    let native = NativeEngine::new();
+    generation_demo(&native, entry, ModelRef::Dense(&fp),
+                    ModelRef::Packed(&q3_packed), &corpora.wiki_like)
 }

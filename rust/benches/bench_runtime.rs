@@ -9,8 +9,8 @@
 mod harness;
 
 use harness::{bench, black_box};
-use nsds::infer::{fused_matmul, Executor, NativeEngine, PackedMatrix,
-                  QuantizedModel};
+use nsds::infer::{fused_matmul, Executor, KvCache, ModelRef,
+                  NativeEngine, PackedMatrix, QuantizedModel};
 use nsds::model::{ModelConfig, Weights};
 use nsds::quant::{rtn, Backend, QuantSpec, DEFAULT_GROUP};
 use nsds::runtime::{Manifest, ModelEntry};
@@ -71,6 +71,79 @@ fn native_section() {
         black_box(
             exec.forward_packed(&entry, &tokens, b, &qm).unwrap());
     });
+}
+
+/// KV-cached decode benches: per-token `decode_step` cost at several
+/// prefix lengths (must be ~flat — the whole point of the cache: the
+/// full-sequence forward's per-token cost grows with the prefix), plus
+/// prefill-vs-decode throughput for the dense and fused-packed paths.
+fn decode_section() {
+    let cfg = ModelConfig::llama_s_synth();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(6);
+    let fp = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let bits = vec![4u8; cfg.n_layers];
+    let qm = QuantizedModel::quantize(&cfg, &fp, &bits, DEFAULT_GROUP,
+                                      Backend::Rtn, None,
+                                      default_workers());
+    let exec = NativeEngine::new();
+
+    println!("== KV-cached decode_step vs prefix length ==");
+    // Each measured iteration clones the prefilled cache once and runs
+    // STEPS decode steps, so the constant clone cost is amortized 8x and
+    // cannot mask a decode_step that secretly scales with the prefix.
+    const STEPS: usize = 8;
+    for (label, model) in [("dense", ModelRef::Dense(&fp)),
+                           ("packed-4bit", ModelRef::Packed(&qm))] {
+        let prefixes = [8usize, 32, 48]; // prefix + STEPS <= cap
+        let mut per_tok = Vec::new();
+        for &prefix in &prefixes {
+            let mut cache = KvCache::for_model(&cfg, cfg.seq);
+            for i in 0..prefix {
+                model
+                    .decode_step(&exec, &entry, &mut cache,
+                                 (i % cfg.vocab) as i32)
+                    .unwrap();
+            }
+            let r = bench(
+                &format!("decode {STEPS} steps {label} prefix={prefix}"),
+                || {
+                    let mut c = cache.clone();
+                    for j in 0..STEPS {
+                        black_box(
+                            model
+                                .decode_step(&exec, &entry, &mut c,
+                                             (j % cfg.vocab) as i32)
+                                .unwrap(),
+                        );
+                    }
+                },
+            );
+            per_tok.push(r.median_ns / STEPS as f64);
+        }
+        println!(
+            "  -> {label} per-token cost, prefix {} vs {}: {:.2}x \
+             (prefix-length-independent ≈ 1)",
+            prefixes[2], prefixes[0], per_tok[2] / per_tok[0]
+        );
+    }
+
+    println!("== prefill (full forward) vs decode throughput \
+              ({} tokens, dense) ==", cfg.seq);
+    let tokens: Vec<i32> =
+        (0..cfg.seq).map(|i| (i % cfg.vocab) as i32).collect();
+    let pre = bench(&format!("prefill fwd [1x{}]", cfg.seq), || {
+        black_box(exec.forward(&entry, &tokens, 1, &fp).unwrap());
+    });
+    let dec = bench(&format!("decode {} steps", cfg.seq), || {
+        let mut c = KvCache::for_model(&cfg, cfg.seq);
+        for &t in &tokens {
+            black_box(exec.decode_step(&entry, &mut c, t, &fp).unwrap());
+        }
+    });
+    let tok_s = |ns: f64| cfg.seq as f64 / (ns / 1e9);
+    println!("  -> prefill {:.0} tok/s vs decode {:.0} tok/s",
+             tok_s(pre.median_ns), tok_s(dec.median_ns));
 }
 
 fn pipeline_section() -> anyhow::Result<()> {
@@ -160,6 +233,7 @@ fn pjrt_kernel_section(
 
 fn main() -> anyhow::Result<()> {
     native_section();
+    decode_section();
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
         println!("bench_runtime: no artifacts (run `make artifacts`); \

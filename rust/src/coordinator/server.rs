@@ -22,9 +22,11 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::Result;
 
 use crate::eval::ppl::batch_nll;
-use crate::infer::{Executor, QuantizedModel};
+use crate::infer::{generate, Executor, GenConfig, Generation, ModelRef,
+                   QuantizedModel};
 use crate::model::Weights;
 use crate::runtime::ModelEntry;
+use crate::util::pool::parallel_map;
 
 /// A deployable weight variant: dense f32 or packed 2/4-bit codes.
 pub enum ServedWeights {
@@ -45,10 +47,19 @@ impl ServedWeights {
             }
         }
     }
+
+    /// Borrowed dispatch handle for the decode/generation paths.
+    pub fn model_ref(&self) -> ModelRef<'_> {
+        match self {
+            ServedWeights::Dense(w) => ModelRef::Dense(w),
+            ServedWeights::Packed(qm) => ModelRef::Packed(qm),
+        }
+    }
 }
 
 enum Msg {
     Infer(Request),
+    Generate(GenRequest),
     Swap(Box<ServedWeights>),
     Stop,
 }
@@ -56,6 +67,14 @@ enum Msg {
 struct Request {
     tokens: Vec<i32>,
     reply: std::sync::mpsc::Sender<(f64, usize)>,
+}
+
+/// One queued generation request (KV-cached autoregressive decode on the
+/// currently deployed variant).
+struct GenRequest {
+    prompt: Vec<i32>,
+    cfg: GenConfig,
+    reply: std::sync::mpsc::Sender<Result<Generation>>,
 }
 
 /// Shared queue + stats between clients and the engine thread.
@@ -67,6 +86,8 @@ pub struct ServerQueue {
     pub served: AtomicU64,
     pub batches: AtomicU64,
     pub padded_rows: AtomicU64,
+    pub gen_served: AtomicU64,
+    pub gen_tokens: AtomicU64,
 }
 
 impl ServerQueue {
@@ -79,13 +100,15 @@ impl ServerQueue {
             served: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             padded_rows: AtomicU64::new(0),
+            gen_served: AtomicU64::new(0),
+            gen_tokens: AtomicU64::new(0),
         })
     }
 
     fn push(&self, msg: Msg) {
         let mut q = self.queue.lock().unwrap();
-        // Control messages bypass backpressure; inference respects it.
-        if matches!(msg, Msg::Infer(_)) {
+        // Control messages bypass backpressure; work messages respect it.
+        if matches!(msg, Msg::Infer(_) | Msg::Generate(_)) {
             while q.len() >= self.max_queue {
                 q = self.cv.wait(q).unwrap();
             }
@@ -100,6 +123,14 @@ impl ServerQueue {
             self.served.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.padded_rows.load(Ordering::Relaxed),
+        )
+    }
+
+    /// (generation requests served, total new tokens emitted).
+    pub fn gen_stats(&self) -> (u64, u64) {
+        (
+            self.gen_served.load(Ordering::Relaxed),
+            self.gen_tokens.load(Ordering::Relaxed),
         )
     }
 }
@@ -135,6 +166,27 @@ impl Client {
         rx.recv().map_err(|_| anyhow::anyhow!("server dropped request"))
     }
 
+    /// Submit one generation request (prompt of ANY length — generation
+    /// is KV-cached, not bound to the server's [batch, seq] shape);
+    /// blocks under backpressure. Returns the reply channel.
+    pub fn submit_generate(&self, prompt: Vec<i32>, cfg: GenConfig)
+        -> Result<std::sync::mpsc::Receiver<Result<Generation>>> {
+        anyhow::ensure!(!prompt.is_empty(), "empty generation prompt");
+        anyhow::ensure!(!self.q.stopped.load(Ordering::Acquire),
+                        "server stopped");
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.q.push(Msg::Generate(GenRequest { prompt, cfg, reply: tx }));
+        Ok(rx)
+    }
+
+    /// Submit a generation request and wait for the finished generation.
+    pub fn generate(&self, prompt: Vec<i32>, cfg: GenConfig)
+        -> Result<Generation> {
+        let rx = self.submit_generate(prompt, cfg)?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("server dropped request"))?
+    }
+
     /// Queue a zero-downtime dense weight swap (ordered with inference).
     pub fn swap_weights(&self, w: Weights) {
         self.q.push(Msg::Swap(Box::new(ServedWeights::Dense(w))));
@@ -154,25 +206,37 @@ impl Client {
 
 /// Run the batching serve loop on the thread that owns the executor.
 /// Returns when a `Stop` message is consumed.
-pub fn serve(exec: &dyn Executor, entry: &ModelEntry, batch: usize,
-             mut weights: ServedWeights, q: &ServerQueue) -> Result<()> {
+///
+/// NLL requests execute as padded [batch, seq] forwards on this thread;
+/// generation requests run KV-cached decode loops fanned across
+/// `util::pool` workers (up to `batch` concurrent generations, each with
+/// its own cache), which is why the executor must be `Sync` — the native
+/// engine is; the PJRT engine (not `Sync`, and without a decode path)
+/// keeps using the single-threaded `forward` flow via `Pipeline`.
+pub fn serve(exec: &(dyn Executor + Sync), entry: &ModelEntry,
+             batch: usize, mut weights: ServedWeights, q: &ServerQueue)
+             -> Result<()> {
     let seq = entry.config.seq;
     let v = entry.config.vocab;
     loop {
-        // Collect up to `batch` inference requests; handle control
-        // messages inline (they are ordered barriers).
+        // Collect up to `batch` of each work kind; handle control
+        // messages inline (they are ordered barriers: a Swap applies only
+        // between flushed batches, so every drained request runs on one
+        // consistent variant).
         let mut reqs: Vec<Request> = Vec::with_capacity(batch);
+        let mut gens: Vec<GenRequest> = Vec::new();
         let mut stop = false;
         {
             let mut guard = q.queue.lock().unwrap();
             while guard.is_empty() {
                 guard = q.cv.wait(guard).unwrap();
             }
-            while reqs.len() < batch {
+            while reqs.len() < batch && gens.len() < batch {
                 match guard.pop_front() {
                     Some(Msg::Infer(r)) => reqs.push(r),
+                    Some(Msg::Generate(g)) => gens.push(g),
                     Some(Msg::Swap(w)) => {
-                        if reqs.is_empty() {
+                        if reqs.is_empty() && gens.is_empty() {
                             weights = *w;
                         } else {
                             // Keep ordering: put it back, flush batch first.
@@ -189,6 +253,20 @@ pub fn serve(exec: &dyn Executor, entry: &ModelEntry, batch: usize,
             }
         }
         q.cv.notify_all(); // wake submitters blocked on backpressure
+        if !gens.is_empty() {
+            let results = parallel_map(gens.len(), batch.max(1), |i| {
+                generate(exec, entry, weights.model_ref(),
+                         &gens[i].prompt, &gens[i].cfg)
+            });
+            for (g, res) in gens.into_iter().zip(results) {
+                if let Ok(r) = &res {
+                    q.gen_served.fetch_add(1, Ordering::Relaxed);
+                    q.gen_tokens.fetch_add(r.tokens.len() as u64,
+                                           Ordering::Relaxed);
+                }
+                let _ = g.reply.send(res);
+            }
+        }
         if !reqs.is_empty() {
             let rows = reqs.len();
             let mut tokens = vec![0i32; batch * seq];

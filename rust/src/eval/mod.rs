@@ -1,14 +1,16 @@
-//! Evaluation harness: perplexity on the held-out corpora and the six
-//! reasoning tasks, all executed THROUGH an `infer::Executor` (the same
-//! path a production deployment serves — native engine by default, PJRT
-//! behind the `xla` feature).
+//! Evaluation harness: perplexity on the held-out corpora, the six
+//! reasoning tasks, and (optionally) generation-level scoring through
+//! the KV-cached decode path — all executed THROUGH an `infer::Executor`
+//! (the same path a production deployment serves — native engine by
+//! default, PJRT behind the `xla` feature).
 
+pub mod gen;
 pub mod ppl;
 pub mod tasks;
 
 use anyhow::Result;
 
-use crate::infer::Executor;
+use crate::infer::{Executor, ModelRef};
 use crate::model::Weights;
 use crate::runtime::{Manifest, ModelEntry};
 
@@ -49,18 +51,37 @@ pub struct EvalOptions {
     pub max_ppl_batches: usize,
     /// Max items per reasoning task.
     pub max_task_items: usize,
+    /// Corpus windows for generation-level scoring through the KV-cached
+    /// decode path (`eval::gen::continuation_match` on wiki_like, greedy,
+    /// prompt = seq/2, continuation = seq/4). 0 disables it — the
+    /// teacher-forced default workload.
+    pub gen_windows: usize,
 }
 
 impl Default for EvalOptions {
     fn default() -> Self {
-        EvalOptions { max_ppl_batches: 16, max_task_items: 32 }
+        EvalOptions {
+            max_ppl_batches: 16,
+            max_task_items: 32,
+            gen_windows: 0,
+        }
     }
 }
 
 impl EvalOptions {
     /// Reduced workload for wide parameter sweeps (Fig. 3).
     pub fn fast() -> Self {
-        EvalOptions { max_ppl_batches: 6, max_task_items: 16 }
+        EvalOptions {
+            max_ppl_batches: 6,
+            max_task_items: 16,
+            gen_windows: 0,
+        }
+    }
+
+    /// Enable generation-level scoring over `n` corpus windows.
+    pub fn with_gen_windows(mut self, n: usize) -> Self {
+        self.gen_windows = n;
+        self
     }
 }
 
@@ -81,6 +102,13 @@ pub fn evaluate(exec: &dyn Executor, man: &Manifest, entry: &ModelEntry,
         let a = tasks::accuracy(exec, man, entry, weights, t,
                                 opts.max_task_items)?;
         acc_rows.push((t.name.clone(), a));
+    }
+    if opts.gen_windows > 0 {
+        let s = entry.config.seq;
+        let m = gen::continuation_match(
+            exec, entry, ModelRef::Dense(weights), &corpora.wiki_like,
+            (s / 2).max(1), (s / 4).max(1), opts.gen_windows)?;
+        acc_rows.push(("gen_match".to_string(), 100.0 * m));
     }
     Ok(EvalResult { ppl: ppl_rows, acc: acc_rows })
 }

@@ -1,0 +1,200 @@
+//! Per-request KV cache for incremental (autoregressive) decoding.
+//!
+//! One `KvCache` holds, for every layer, a ring buffer of the roped K and
+//! raw V rows of the tokens decoded so far, in the GQA head layout
+//! (`n_kv · d_head` columns — query heads share their group's KV rows, so
+//! the cache stores `n_kv` heads, not `n_heads`). `decode_step` appends
+//! the current token's K/V to every layer and attends over the window,
+//! which is what makes per-token cost independent of the prefix length
+//! (the full-sequence `forward` recomputes the whole prefix every call).
+//!
+//! Capacity is fixed at construction. While `pos < cap` the cache is
+//! exact: attention sees every previous token and incremental decode
+//! matches the full forward bit-for-bit (see
+//! `rust/tests/decode_equivalence.rs`). Once `pos` reaches `cap` the ring
+//! wraps and the oldest entries are evicted — sliding-window attention
+//! over the last `cap` positions (keys keep their absolute RoPE phases,
+//! the StreamingLLM-style regime without sink tokens).
+
+use crate::model::ModelConfig;
+
+/// Ring-buffered K/V rows for all layers of one decoding request.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    nkv: usize,
+    dh: usize,
+    cap: usize,
+    /// Absolute position of the NEXT token to be decoded (== number of
+    /// tokens fully appended so far).
+    pos: usize,
+    /// Per layer: roped keys, [cap, nkv·dh] ring (row = position % cap).
+    k: Vec<Vec<f32>>,
+    /// Per layer: values, same layout.
+    v: Vec<Vec<f32>>,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, nkv: usize, dh: usize, cap: usize) -> Self {
+        assert!(cap > 0, "KvCache capacity must be positive");
+        assert!(n_layers > 0 && nkv > 0 && dh > 0);
+        let w = cap * nkv * dh;
+        KvCache {
+            nkv,
+            dh,
+            cap,
+            pos: 0,
+            k: (0..n_layers).map(|_| vec![0.0; w]).collect(),
+            v: (0..n_layers).map(|_| vec![0.0; w]).collect(),
+        }
+    }
+
+    /// Cache sized for a model config with an explicit context capacity
+    /// (use `cfg.seq` to mirror the full-forward context window).
+    pub fn for_model(cfg: &ModelConfig, cap: usize) -> Self {
+        KvCache::new(cfg.n_layers, cfg.n_kv, cfg.d_head, cap)
+    }
+
+    /// Whether this cache was laid out for `cfg`'s KV geometry.
+    pub fn matches(&self, cfg: &ModelConfig) -> bool {
+        self.k.len() == cfg.n_layers
+            && self.nkv == cfg.n_kv
+            && self.dh == cfg.d_head
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Absolute position of the next token (RoPE phase of the token the
+    /// next `decode_step` will consume).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Reset to an empty cache (buffers are reused, not zeroed — every
+    /// slot is overwritten before attention can read it).
+    pub fn clear(&mut self) {
+        self.pos = 0;
+    }
+
+    /// Write the current token's K/V rows for layer `l` into the ring
+    /// slot for `pos`. Called once per layer per step; `advance` commits
+    /// the position after the last layer.
+    pub fn append(&mut self, l: usize, krow: &[f32], vrow: &[f32]) {
+        let w = self.nkv * self.dh;
+        debug_assert_eq!(krow.len(), w, "k row width");
+        debug_assert_eq!(vrow.len(), w, "v row width");
+        let slot = self.pos % self.cap;
+        self.k[l][slot * w..(slot + 1) * w].copy_from_slice(krow);
+        self.v[l][slot * w..(slot + 1) * w].copy_from_slice(vrow);
+    }
+
+    /// Commit the current step: the next `append`/`step_slots` refer to
+    /// the following position.
+    pub fn advance(&mut self) {
+        self.pos += 1;
+    }
+
+    /// Raw (k, v) ring buffers of layer `l` ([cap, nkv·dh] row-major).
+    pub fn layer(&self, l: usize) -> (&[f32], &[f32]) {
+        (&self.k[l], &self.v[l])
+    }
+
+    /// Ring slots the current step's attention reads, oldest → newest,
+    /// INCLUDING the slot of the token being decoded (append first, then
+    /// attend — causal attention sees itself). Identical for every layer
+    /// of a step, so callers compute it once.
+    pub fn step_slots(&self) -> Vec<usize> {
+        let hi = self.pos; // current token's logical position (inclusive)
+        let lo = (hi + 1).saturating_sub(self.cap);
+        (lo..=hi).map(|p| p % self.cap).collect()
+    }
+
+    /// Bytes resident in this cache's K/V buffers.
+    pub fn bytes(&self) -> usize {
+        self.k.len() * 2 * self.cap * self.nkv * self.dh * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> KvCache {
+        KvCache::new(2, 2, 4, 4)
+    }
+
+    #[test]
+    fn append_advance_and_slots() {
+        let mut c = tiny();
+        assert_eq!(c.pos(), 0);
+        assert_eq!(c.step_slots(), vec![0]);
+        let krow: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let vrow: Vec<f32> = (0..8).map(|i| -(i as f32)).collect();
+        c.append(0, &krow, &vrow);
+        c.append(1, &krow, &vrow);
+        c.advance();
+        assert_eq!(c.pos(), 1);
+        assert_eq!(c.step_slots(), vec![0, 1]);
+        let (k0, v0) = c.layer(0);
+        assert_eq!(&k0[..8], krow.as_slice());
+        assert_eq!(&v0[..8], vrow.as_slice());
+    }
+
+    #[test]
+    fn ring_wraps_and_window_saturates() {
+        let mut c = tiny();
+        for p in 0..6 {
+            let row = vec![p as f32; 8];
+            c.append(0, &row, &row);
+            c.append(1, &row, &row);
+            c.advance();
+        }
+        // pos=6: window is the last cap=4 logical positions 3,4,5,6 —
+        // slot order 3, 0, 1, 2.
+        assert_eq!(c.step_slots(), vec![3, 0, 1, 2]);
+        // Slot 0 holds position 4 (4 % 4 == 0), overwriting position 0.
+        let (k0, _) = c.layer(0);
+        assert_eq!(k0[0], 4.0);
+    }
+
+    #[test]
+    fn clear_resets_position() {
+        let mut c = tiny();
+        c.append(0, &[1.0; 8], &[1.0; 8]);
+        c.advance();
+        c.clear();
+        assert_eq!(c.pos(), 0);
+        assert_eq!(c.step_slots(), vec![0]);
+    }
+
+    #[test]
+    fn matches_config_geometry() {
+        let cfg = ModelConfig::test_config();
+        let c = KvCache::for_model(&cfg, cfg.seq);
+        assert!(c.matches(&cfg));
+        assert_eq!(c.n_layers(), cfg.n_layers);
+        assert_eq!(c.capacity(), cfg.seq);
+        assert!(c.bytes() > 0);
+        let other = KvCache::new(cfg.n_layers, cfg.n_kv + 1, cfg.d_head,
+                                 cfg.seq);
+        assert!(!other.matches(&cfg));
+    }
+
+    #[test]
+    fn clone_is_independent() {
+        let mut a = tiny();
+        a.append(0, &[2.0; 8], &[2.0; 8]);
+        a.advance();
+        let b = a.clone();
+        a.append(0, &[9.0; 8], &[9.0; 8]);
+        a.advance();
+        assert_eq!(b.pos(), 1);
+        assert_eq!(a.pos(), 2);
+        assert_eq!(b.layer(0).0[8], 0.0); // slot 1 untouched in the clone
+    }
+}

@@ -1,0 +1,256 @@
+//! Autoregressive generation over `Executor::decode_step`: greedy and
+//! temperature/top-k sampling (seeded `util::rng`, fully deterministic),
+//! stop conditions, and per-request `GenStats` (prefill vs decode time,
+//! tokens/sec). Executor- and variant-generic: a `ModelRef` dispatches to
+//! the dense or fused-packed decode path, so the same loop generates from
+//! FP32 weights and from packed 2/4-bit `QuantizedModel`s.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use super::{Executor, KvCache, ModelRef};
+use crate::runtime::ModelEntry;
+use crate::util::rng::Rng;
+
+/// Next-token selection rule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sampling {
+    /// Argmax (ties → lowest token id). Deterministic, ignores the seed.
+    Greedy,
+    /// Sample from the softmax of the `k` highest logits at the given
+    /// temperature (k is clamped to the vocabulary; temperature to a
+    /// small positive floor).
+    TopK { k: usize, temperature: f32 },
+}
+
+/// Generation request knobs.
+#[derive(Clone, Debug)]
+pub struct GenConfig {
+    /// Maximum number of new tokens to emit.
+    pub max_new: usize,
+    pub sampling: Sampling,
+    /// PRNG seed for `TopK` (ignored by `Greedy`). Same seed + same
+    /// model ⇒ same output, regardless of thread or batching.
+    pub seed: u64,
+    /// Emitting any of these tokens ends the generation (the stop token
+    /// is included in the output).
+    pub stop: Vec<i32>,
+    /// KV-cache capacity; 0 sizes it to `prompt.len() + max_new`, which
+    /// keeps incremental decode exact (no ring eviction).
+    pub cap: usize,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        GenConfig {
+            max_new: 16,
+            sampling: Sampling::Greedy,
+            seed: 0,
+            stop: Vec::new(),
+            cap: 0,
+        }
+    }
+}
+
+/// Why a generation ended.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StopReason {
+    MaxNew,
+    StopToken(i32),
+}
+
+/// Per-request timing/throughput counters.
+#[derive(Clone, Debug)]
+pub struct GenStats {
+    pub prompt_tokens: usize,
+    pub gen_tokens: usize,
+    /// Wall time consuming the prompt (cache build-up).
+    pub prefill_s: f64,
+    /// Wall time of the new-token decode loop.
+    pub decode_s: f64,
+}
+
+impl GenStats {
+    pub fn total_s(&self) -> f64 {
+        self.prefill_s + self.decode_s
+    }
+
+    /// New tokens per second over the decode loop.
+    pub fn decode_tok_per_s(&self) -> f64 {
+        if self.decode_s > 0.0 {
+            self.gen_tokens as f64 / self.decode_s
+        } else {
+            0.0
+        }
+    }
+}
+
+/// One finished generation.
+#[derive(Clone, Debug)]
+pub struct Generation {
+    /// The newly generated tokens (prompt not included).
+    pub tokens: Vec<i32>,
+    pub stats: GenStats,
+    pub stopped: StopReason,
+}
+
+/// Pick the next token from a logits row.
+pub fn sample(logits: &[f32], sampling: &Sampling, rng: &mut Rng) -> i32 {
+    match *sampling {
+        Sampling::Greedy => argmax(logits),
+        Sampling::TopK { k, temperature } => {
+            let k = k.clamp(1, logits.len());
+            if k == 1 {
+                return argmax(logits);
+            }
+            let temp = temperature.max(1e-6);
+            // Indices of the k largest logits (desc by logit, ties asc by
+            // id — a total order, so the selection is deterministic).
+            // O(V) partition first; only the k winners get sorted.
+            let cmp = |a: &usize, b: &usize| {
+                logits[*b]
+                    .partial_cmp(&logits[*a])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(a.cmp(b))
+            };
+            let mut idx: Vec<usize> = (0..logits.len()).collect();
+            if k < idx.len() {
+                idx.select_nth_unstable_by(k - 1, cmp);
+                idx.truncate(k);
+            }
+            idx.sort_unstable_by(cmp);
+            let mx = logits[idx[0]];
+            let ws: Vec<f64> = idx
+                .iter()
+                .map(|&i| (((logits[i] - mx) / temp) as f64).exp())
+                .collect();
+            let total: f64 = ws.iter().sum();
+            let mut r = rng.f64() * total;
+            for (&i, w) in idx.iter().zip(&ws) {
+                r -= w;
+                if r <= 0.0 {
+                    return i as i32;
+                }
+            }
+            idx[k - 1] as i32 // fp slack: fall back to the least likely
+        }
+    }
+}
+
+fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &x) in logits.iter().enumerate() {
+        if x > logits[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Generate up to `gc.max_new` tokens after `prompt` through any
+/// executor's KV-cached decode path. The prompt is prefetched token by
+/// token into a fresh cache (same per-token cost as cached decode), then
+/// the decode loop samples and feeds back until a stop condition.
+pub fn generate(exec: &dyn Executor, entry: &ModelEntry, model: ModelRef,
+                prompt: &[i32], gc: &GenConfig) -> Result<Generation> {
+    ensure!(!prompt.is_empty(), "generate: empty prompt");
+    let cfg = &entry.config;
+    let cap = if gc.cap > 0 {
+        gc.cap
+    } else {
+        prompt.len() + gc.max_new
+    };
+    let mut cache = KvCache::for_model(cfg, cap);
+    let mut rng = Rng::new(gc.seed);
+
+    let t0 = Instant::now();
+    let mut last = model.decode_step(exec, entry, &mut cache, prompt[0])?;
+    for &t in &prompt[1..] {
+        last = model.decode_step(exec, entry, &mut cache, t)?;
+    }
+    let prefill_s = t0.elapsed().as_secs_f64();
+
+    let t1 = Instant::now();
+    let mut tokens = Vec::with_capacity(gc.max_new);
+    let mut stopped = StopReason::MaxNew;
+    while tokens.len() < gc.max_new {
+        let next = sample(last.data(), &gc.sampling, &mut rng);
+        tokens.push(next);
+        if gc.stop.contains(&next) {
+            stopped = StopReason::StopToken(next);
+            break;
+        }
+        if tokens.len() == gc.max_new {
+            break; // final logits would be unused
+        }
+        last = model.decode_step(exec, entry, &mut cache, next)?;
+    }
+    let decode_s = t1.elapsed().as_secs_f64();
+
+    Ok(Generation {
+        stats: GenStats {
+            prompt_tokens: prompt.len(),
+            gen_tokens: tokens.len(),
+            prefill_s,
+            decode_s,
+        },
+        tokens,
+        stopped,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_ties_pick_lowest_id() {
+        assert_eq!(argmax(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn top1_equals_greedy() {
+        let logits = vec![0.1f32, 2.0, -0.5, 1.9];
+        let mut rng = Rng::new(9);
+        for _ in 0..10 {
+            let s = Sampling::TopK { k: 1, temperature: 1.0 };
+            assert_eq!(sample(&logits, &s, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn topk_only_emits_topk_tokens() {
+        let logits = vec![5.0f32, 4.0, -10.0, 3.0, -20.0];
+        let mut rng = Rng::new(11);
+        let s = Sampling::TopK { k: 3, temperature: 1.0 };
+        for _ in 0..200 {
+            let t = sample(&logits, &s, &mut rng);
+            assert!(matches!(t, 0 | 1 | 3), "sampled non-top-k token {t}");
+        }
+    }
+
+    #[test]
+    fn low_temperature_concentrates_on_argmax() {
+        let logits = vec![1.0f32, 1.5, 0.5, 1.4];
+        let mut rng = Rng::new(13);
+        let s = Sampling::TopK { k: 4, temperature: 1e-4 };
+        for _ in 0..50 {
+            assert_eq!(sample(&logits, &s, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn sampling_is_seed_deterministic() {
+        let logits = vec![0.3f32, 0.1, 0.2, 0.35, 0.05];
+        let s = Sampling::TopK { k: 4, temperature: 0.8 };
+        let seq = |seed: u64| -> Vec<i32> {
+            let mut rng = Rng::new(seed);
+            (0..32).map(|_| sample(&logits, &s, &mut rng)).collect()
+        };
+        assert_eq!(seq(42), seq(42));
+        // Different seeds should (for this spread) disagree somewhere.
+        assert_ne!(seq(42), seq(43));
+    }
+}

@@ -6,6 +6,8 @@
 //! the coordinator, eval harness and server are executor-generic.
 //! See DESIGN.md "Executor trait".
 
+pub mod cache;
+pub mod generate;
 pub mod native;
 pub mod qmat;
 
@@ -18,8 +20,12 @@ use crate::model::Weights;
 use crate::runtime::ModelEntry;
 use crate::tensor::Tensor;
 
+pub use cache::KvCache;
+pub use generate::{generate, GenConfig, GenStats, Generation, Sampling,
+                   StopReason};
 pub use native::NativeEngine;
-pub use qmat::{fused_matmul, PackedMatrix, QMat, QuantizedModel};
+pub use qmat::{fused_matmul, fused_vecmat, PackedMatrix, QMat,
+               QuantizedModel};
 
 /// Calibration activations from one probe batch, in the layout the
 /// baselines consume: per-layer `[B·S, X]` row matrices (row = b·S + s).
@@ -81,6 +87,68 @@ pub trait Executor {
         anyhow::bail!("{}: gradient collection not supported (enable \
                        the `xla` feature for the grad artifact)",
                       self.platform())
+    }
+
+    /// Whether `decode_step`/`decode_step_packed` are implemented
+    /// (optional capability, like packed serving).
+    fn supports_decode(&self) -> bool {
+        false
+    }
+
+    /// KV-cached incremental decode, dense weights: consume ONE token at
+    /// the cache's current position, append its K/V rows to every layer
+    /// of `cache`, advance it, and return the next-token logits as a 1-D
+    /// `[vocab]` tensor. Per-token cost must not depend on the prefix
+    /// length. Contract details in DESIGN.md "Incremental decoding".
+    fn decode_step(&self, entry: &ModelEntry, cache: &mut KvCache,
+                   token: i32, weights: &Weights) -> Result<Tensor> {
+        let _ = (entry, cache, token, weights);
+        anyhow::bail!("{}: incremental decode not supported",
+                      self.platform())
+    }
+
+    /// `decode_step` over packed 2/4-bit codes (fused dequant-matmul on
+    /// single-row inputs), without materializing f32 weights.
+    fn decode_step_packed(&self, entry: &ModelEntry, cache: &mut KvCache,
+                          token: i32, model: &QuantizedModel)
+                          -> Result<Tensor> {
+        let _ = (entry, cache, token, model);
+        anyhow::bail!("{}: packed incremental decode not supported",
+                      self.platform())
+    }
+}
+
+/// A borrowed deployable weight variant: the generation loop and the
+/// serve loop dispatch through this to the dense or fused-packed decode
+/// path without owning the weights.
+#[derive(Clone, Copy)]
+pub enum ModelRef<'a> {
+    Dense(&'a Weights),
+    Packed(&'a QuantizedModel),
+}
+
+impl ModelRef<'_> {
+    pub fn decode_step(&self, exec: &dyn Executor, entry: &ModelEntry,
+                       cache: &mut KvCache, token: i32) -> Result<Tensor> {
+        match self {
+            ModelRef::Dense(w) => {
+                exec.decode_step(entry, cache, token, w)
+            }
+            ModelRef::Packed(qm) => {
+                exec.decode_step_packed(entry, cache, token, qm)
+            }
+        }
+    }
+
+    /// Full-sequence forward of the same variant (prefill / scoring).
+    pub fn forward(&self, exec: &dyn Executor, entry: &ModelEntry,
+                   tokens: &[i32], batch: usize) -> Result<Tensor> {
+        match self {
+            ModelRef::Dense(w) => exec.forward(entry, tokens, batch, w),
+            ModelRef::Packed(qm) => {
+                exec.forward_packed(entry, tokens, batch, qm)
+            }
+        }
     }
 }
 

@@ -11,7 +11,9 @@
 
 use anyhow::{ensure, Result};
 
-use super::qmat::{fused_matmul, PackedMatrix, QMat, QuantizedModel};
+use super::cache::KvCache;
+use super::qmat::{fused_matmul, fused_vecmat, PackedMatrix, QMat,
+                  QuantizedModel};
 use super::{Executor, Probes};
 use crate::model::{ModelConfig, Weights};
 use crate::runtime::ModelEntry;
@@ -72,13 +74,36 @@ impl Executor for NativeEngine {
             run_batch(&prep, tokens, batch, self.workers, true)?;
         Ok(probes.expect("collect=true returns probes"))
     }
+
+    fn supports_decode(&self) -> bool {
+        true
+    }
+
+    fn decode_step(&self, entry: &ModelEntry, cache: &mut KvCache,
+                   token: i32, weights: &Weights) -> Result<Tensor> {
+        // Borrowing prepare: per-step setup is O(layers) views, no weight
+        // copies, so the per-token cost stays prefix- AND weight-copy-free.
+        let prep = prepare_dense_ref(&entry.config, weights);
+        decode_with(&prep, cache, token)
+    }
+
+    fn decode_step_packed(&self, entry: &ModelEntry, cache: &mut KvCache,
+                          token: i32, model: &QuantizedModel)
+                          -> Result<Tensor> {
+        let prep = prepare_packed(&entry.config, model);
+        decode_with(&prep, cache, token)
+    }
 }
 
-/// One projection operand: dense f32 (owned slice or borrowed from a
-/// quantized model's fallback store) or packed codes (fused path).
+/// One projection operand: dense f32 (owned slice, borrowed from a
+/// quantized model's fallback store, or a borrowed layer of the stacked
+/// [L, K, N] store) or packed codes (fused path).
 enum PMat<'a> {
     Dense(Tensor),
     DenseRef(&'a Tensor),
+    /// Layer `l` of a stacked [L, K, N] weight, without copying it out —
+    /// the zero-copy prepare used by the per-token decode path.
+    Stacked(&'a Tensor, usize),
     Packed(&'a PackedMatrix),
 }
 
@@ -89,9 +114,45 @@ impl PMat<'_> {
         match self {
             PMat::Dense(w) => matmul(x, w),
             PMat::DenseRef(w) => matmul(x, w),
-            PMat::Packed(p) => fused_matmul(x, p, 1),
+            PMat::Stacked(t, l) => stacked_matmul(x, t, *l),
+            PMat::Packed(p) => {
+                if x.rows() == 1 {
+                    Tensor::new(fused_vecmat(x.data(), p), vec![1, p.n])
+                } else {
+                    fused_matmul(x, p, 1)
+                }
+            }
         }
     }
+}
+
+/// `x [M, K] @ stacked[l] [K, N]` over a borrowed slice of a [L, K, N]
+/// tensor. Plain ikj loop with k ascending — the same accumulation order
+/// as `tensor::matmul`'s K panels, so results are bit-identical to a
+/// matmul against the copied-out layer.
+fn stacked_matmul(x: &Tensor, stacked: &Tensor, l: usize) -> Tensor {
+    let dims = stacked.dims();
+    debug_assert_eq!(dims.len(), 3, "stacked weight must be [L, K, N]");
+    let (k, n) = (dims[1], dims[2]);
+    let m = x.rows();
+    assert_eq!(x.cols(), k, "stacked_matmul: x cols {} != K {k}", x.cols());
+    let wd = &stacked.data()[l * k * n..(l + 1) * k * n];
+    let xd = x.data();
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let xrow = &xd[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &aik) in xrow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let wrow = &wd[kk * n..(kk + 1) * n];
+            for (o, wv) in orow.iter_mut().zip(wrow) {
+                *o += aik * wv;
+            }
+        }
+    }
+    Tensor::new(out, vec![m, n])
 }
 
 struct PLayer<'a> {
@@ -134,6 +195,34 @@ fn prepare_dense<'a>(cfg: &'a ModelConfig, w: &'a Weights) -> Prepared<'a> {
             wgate: PMat::Dense(w.layer_matrix("wgate", l)),
             wup: PMat::Dense(w.layer_matrix("wup", l)),
             wdown: PMat::Dense(w.layer_matrix("wdown", l)),
+        })
+        .collect();
+    Prepared {
+        cfg,
+        embed: w.get("embed"),
+        unembed: w.get("unembed"),
+        lnf: w.get("lnf"),
+        layers,
+    }
+}
+
+/// Borrowing variant of `prepare_dense` for the per-token decode path:
+/// projections are `PMat::Stacked` views into the stacked store (only the
+/// tiny per-layer norm gains are copied), so building it costs O(layers)
+/// per step instead of O(parameters).
+fn prepare_dense_ref<'a>(cfg: &'a ModelConfig, w: &'a Weights)
+    -> Prepared<'a> {
+    let layers = (0..cfg.n_layers)
+        .map(|l| PLayer {
+            ln1: w.get("ln1").slice0(l),
+            ln2: w.get("ln2").slice0(l),
+            wq: PMat::Stacked(w.get("wq"), l),
+            wk: PMat::Stacked(w.get("wk"), l),
+            wv: PMat::Stacked(w.get("wv"), l),
+            wo: PMat::Stacked(w.get("wo"), l),
+            wgate: PMat::Stacked(w.get("wgate"), l),
+            wup: PMat::Stacked(w.get("wup"), l),
+            wdown: PMat::Stacked(w.get("wdown"), l),
         })
         .collect();
     Prepared {
@@ -257,16 +346,7 @@ fn forward_seq(prep: &Prepared, tokens: &[i32], collect: bool)
     let half = dh / 2;
 
     // RoPE tables, shared by q and k at every layer.
-    let mut rope_cos = vec![0.0f32; s * half];
-    let mut rope_sin = vec![0.0f32; s * half];
-    for si in 0..s {
-        for j in 0..half {
-            let inv = ROPE_BASE.powf(-(j as f32) / half as f32);
-            let ang = si as f32 * inv;
-            rope_cos[si * half + j] = ang.cos();
-            rope_sin[si * half + j] = ang.sin();
-        }
-    }
+    let (rope_cos, rope_sin) = rope_tables(0, s, half);
 
     // h = embed[tokens]  [s, d]
     let mut h = Tensor::zeros(vec![s, d]);
@@ -323,6 +403,25 @@ fn forward_seq(prep: &Prepared, tokens: &[i32], collect: bool)
     (logits.into_data(), probes)
 }
 
+/// cos/sin rows for absolute positions `start..start + len` (one row of
+/// `half` frequencies per position). The full forward uses `start = 0`;
+/// the decode path asks for the single row at the cache position, with
+/// bit-identical float math.
+fn rope_tables(start: usize, len: usize, half: usize)
+    -> (Vec<f32>, Vec<f32>) {
+    let mut cos = vec![0.0f32; len * half];
+    let mut sin = vec![0.0f32; len * half];
+    for si in 0..len {
+        for j in 0..half {
+            let inv = ROPE_BASE.powf(-(j as f32) / half as f32);
+            let ang = (start + si) as f32 * inv;
+            cos[si * half + j] = ang.cos();
+            sin[si * half + j] = ang.sin();
+        }
+    }
+    (cos, sin)
+}
+
 /// Row-wise RMSNorm: `x · rsqrt(mean(x²) + eps) · g`.
 fn rmsnorm(x: &Tensor, g: &Tensor) -> Tensor {
     let (rows, d) = (x.rows(), x.cols());
@@ -366,18 +465,20 @@ fn rope(x: &mut Tensor, heads: usize, dh: usize, cos: &[f32],
 }
 
 /// Causal GQA attention: q [s, nh·dh], k/v [s, nkv·dh] -> ctx [s, nh·dh].
-/// Query head `hi` attends with kv head `hi / (nh/nkv)`.
+/// Query head `hi` attends with kv head `hi·nkv/nh` — identical to the
+/// reference `hi / (nh/nkv)` grouping whenever nkv divides nh (every zoo
+/// model), and well-defined for a non-divisible tail: the first
+/// `nh mod nkv` kv heads serve one extra query head.
 fn attention(q: &Tensor, k: &Tensor, v: &Tensor, nh: usize, nkv: usize,
              dh: usize) -> Tensor {
     let s = q.rows();
-    let rep = nh / nkv;
     let scale = 1.0 / (dh as f32).sqrt();
     let (qw, kw) = (nh * dh, nkv * dh);
     let (qd, kd, vd) = (q.data(), k.data(), v.data());
     let mut ctx = vec![0.0f32; s * qw];
     let mut scores = vec![0.0f32; s];
     for hi in 0..nh {
-        let kv = hi / rep;
+        let kv = hi * nkv / nh;
         for i in 0..s {
             let qrow = &qd[i * qw + hi * dh..i * qw + (hi + 1) * dh];
             // Scores over the causal window j <= i.
@@ -415,6 +516,107 @@ fn attention(q: &Tensor, k: &Tensor, v: &Tensor, nh: usize, nkv: usize,
 #[inline]
 fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
+}
+
+/// Single-query causal GQA attention over a KV cache window: q [nh·dh],
+/// kc/vc are ring buffers [cap, nkv·dh], `slots` the window's ring rows
+/// oldest → newest (chronological, so the score/weight accumulation
+/// order matches the full-sequence `attention` and results agree to fp
+/// rounding). Same head mapping as `attention`.
+fn decode_attention(q: &[f32], kc: &[f32], vc: &[f32], slots: &[usize],
+                    nh: usize, nkv: usize, dh: usize) -> Vec<f32> {
+    let scale = 1.0 / (dh as f32).sqrt();
+    let kw = nkv * dh;
+    let mut ctx = vec![0.0f32; nh * dh];
+    let mut scores = vec![0.0f32; slots.len()];
+    for hi in 0..nh {
+        let kv = hi * nkv / nh;
+        let qrow = &q[hi * dh..(hi + 1) * dh];
+        let mut mx = f32::NEG_INFINITY;
+        for (j, &slot) in slots.iter().enumerate() {
+            let krow = &kc[slot * kw + kv * dh..slot * kw + (kv + 1) * dh];
+            let dot: f32 =
+                qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+            let sc = dot * scale;
+            scores[j] = sc;
+            mx = mx.max(sc);
+        }
+        let mut denom = 0.0f32;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - mx).exp();
+            denom += *sc;
+        }
+        let inv = 1.0 / denom;
+        let crow = &mut ctx[hi * dh..(hi + 1) * dh];
+        for (j, &slot) in slots.iter().enumerate() {
+            let wgt = scores[j] * inv;
+            let vrow = &vc[slot * kw + kv * dh..slot * kw + (kv + 1) * dh];
+            for (c, vv) in crow.iter_mut().zip(vrow) {
+                *c += wgt * vv;
+            }
+        }
+    }
+    ctx
+}
+
+/// One KV-cached decode step over a prepared (dense-ref or packed) model:
+/// single-row versions of the exact kernels `forward_seq` runs (RMSNorm,
+/// RoPE at the cache's absolute position, GQA attention over the cache
+/// window, SwiGLU), appending this token's K/V to every layer and
+/// advancing the cache. Returns next-token logits [vocab].
+fn decode_with(prep: &Prepared, cache: &mut KvCache, token: i32)
+    -> Result<Tensor> {
+    let cfg = prep.cfg;
+    let d = cfg.d_model;
+    let (nh, nkv, dh) = (cfg.n_heads, cfg.n_kv, cfg.d_head);
+    let half = dh / 2;
+    ensure!(token >= 0 && (token as usize) < cfg.vocab,
+            "token id {token} out of range (vocab {})", cfg.vocab);
+    ensure!(cache.matches(cfg),
+            "KV cache geometry does not match model '{}' \
+             (layers {} kv {} dh {})",
+            cfg.name, cfg.n_layers, nkv, dh);
+
+    let pos = cache.pos();
+    let (cos, sin) = rope_tables(pos, 1, half);
+    // Ring slots this step's attention reads (the current token's slot is
+    // written by `append` below before any layer attends).
+    let slots = cache.step_slots();
+
+    let mut h = Tensor::new(prep.embed.row(token as usize).to_vec(),
+                            vec![1, d]);
+    for (l, layer) in prep.layers.iter().enumerate() {
+        // Attention block on the single row.
+        let x1 = rmsnorm(&h, &layer.ln1);
+        let mut q = layer.wq.apply(&x1); // [1, nh·dh]
+        let mut km = layer.wk.apply(&x1); // [1, nkv·dh]
+        let vm = layer.wv.apply(&x1); // [1, nkv·dh]
+        rope(&mut q, nh, dh, &cos, &sin);
+        rope(&mut km, nkv, dh, &cos, &sin);
+        cache.append(l, km.data(), vm.data());
+        let (kc, vc) = cache.layer(l);
+        let ctx = Tensor::new(
+            decode_attention(q.data(), kc, vc, &slots, nh, nkv, dh),
+            vec![1, nh * dh],
+        );
+        let attn_out = layer.wo.apply(&ctx);
+        h = h.add(&attn_out);
+        // FFN block (SwiGLU).
+        let x2 = rmsnorm(&h, &layer.ln2);
+        let gate = layer.wgate.apply(&x2);
+        let up = layer.wup.apply(&x2);
+        let mut mid = gate;
+        for (g, u) in mid.data_mut().iter_mut().zip(up.data()) {
+            *g = silu(*g) * u;
+        }
+        let down = layer.wdown.apply(&mid);
+        h = h.add(&down);
+    }
+    cache.advance();
+
+    let hf = rmsnorm(&h, prep.lnf);
+    let logits = matmul(&hf, prep.unembed);
+    Ok(logits.reshape(vec![cfg.vocab]))
 }
 
 #[cfg(test)]
@@ -542,6 +744,80 @@ mod tests {
         let bad = vec![cfg.vocab as i32; cfg.seq];
         assert!(e.forward(&entry, &bad, 1, &w).is_err());
         assert!(e.forward(&entry, &[0i32; 3], 1, &w).is_err());
+    }
+
+    #[test]
+    fn stacked_matmul_matches_copied_layer_matmul() {
+        let mut rng = Rng::new(56);
+        let stacked = Tensor::randn(vec![3, 10, 7], &mut rng);
+        let x = Tensor::randn(vec![4, 10], &mut rng);
+        for l in 0..3 {
+            let a = stacked_matmul(&x, &stacked, l);
+            let b = matmul(&x, &stacked.slice0(l));
+            assert_eq!(a, b, "layer {l}"); // bit-identical by design
+        }
+    }
+
+    #[test]
+    fn decode_attention_matches_full_attention_last_row() {
+        let mut rng = Rng::new(57);
+        let (s, nh, nkv, dh) = (6, 4, 2, 4);
+        let q = Tensor::randn(vec![s, nh * dh], &mut rng);
+        let k = Tensor::randn(vec![s, nkv * dh], &mut rng);
+        let v = Tensor::randn(vec![s, nkv * dh], &mut rng);
+        let full = attention(&q, &k, &v, nh, nkv, dh);
+        // Cache layout == contiguous rows when cap >= s and no wrap.
+        let slots: Vec<usize> = (0..s).collect();
+        let dec = decode_attention(&q.data()[(s - 1) * nh * dh..],
+                                   k.data(), v.data(), &slots,
+                                   nh, nkv, dh);
+        for (a, b) in dec.iter().zip(full.row(s - 1)) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn decode_steps_match_forward_logits() {
+        let entry = tiny_entry();
+        let cfg = entry.config.clone();
+        let mut rng = Rng::new(58);
+        let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        let e = NativeEngine::with_workers(1);
+        let tokens: Vec<i32> = (0..cfg.seq)
+            .map(|_| rng.below(cfg.vocab) as i32)
+            .collect();
+        let full = e.forward(&entry, &tokens, 1, &w).unwrap();
+        let mut cache = KvCache::for_model(&cfg, cfg.seq);
+        for (si, &t) in tokens.iter().enumerate() {
+            let step = e.decode_step(&entry, &mut cache, t, &w).unwrap();
+            assert_eq!(step.dims(), &[cfg.vocab]);
+            let frow = &full.data()[si * cfg.vocab..(si + 1) * cfg.vocab];
+            let mx = step
+                .data()
+                .iter()
+                .zip(frow)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0f32, f32::max);
+            assert!(mx < 1e-4, "pos {si}: max abs diff {mx}");
+        }
+        assert_eq!(cache.pos(), cfg.seq);
+    }
+
+    #[test]
+    fn decode_step_validates_token_and_cache() {
+        let entry = tiny_entry();
+        let cfg = entry.config.clone();
+        let mut rng = Rng::new(59);
+        let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        let e = NativeEngine::with_workers(1);
+        let mut cache = KvCache::for_model(&cfg, cfg.seq);
+        assert!(e
+            .decode_step(&entry, &mut cache, cfg.vocab as i32, &w)
+            .is_err());
+        let mut wrong = KvCache::new(cfg.n_layers + 1, cfg.n_kv,
+                                     cfg.d_head, cfg.seq);
+        assert!(e.decode_step(&entry, &mut wrong, 0, &w).is_err());
+        assert!(e.supports_decode());
     }
 
     #[test]

@@ -142,6 +142,37 @@ fn fused_rows(xd: &[f32], r0: usize, r1: usize, pm: &PackedMatrix)
     out
 }
 
+/// Single-row fused dequant-dot: `x [K] @ dequant(pm) -> [N]`, the
+/// decode-path kernel. Skips the K-panel staging buffer entirely (for one
+/// row there is no reuse to amortize it) and accumulates k-ascending with
+/// the same `s·(code − z)` grouping as `fused_rows`, so the result is
+/// bit-identical to `fused_matmul` on a [1, K] input.
+pub fn fused_vecmat(x: &[f32], pm: &PackedMatrix) -> Vec<f32> {
+    let (k, n) = (pm.k, pm.n);
+    assert_eq!(x.len(), k, "fused_vecmat: x len {} != packed K {k}",
+               x.len());
+    let bits = pm.bits as usize;
+    let per = 8 / bits;
+    let mask = (1u8 << pm.bits) - 1;
+    let mut out = vec![0.0f32; n];
+    for (kk, &a) in x.iter().enumerate() {
+        if a == 0.0 {
+            continue;
+        }
+        let byte_row = kk / per;
+        let shift = (bits * (kk % per)) as u32;
+        let gr = kk / pm.group;
+        let srow = &pm.scale[gr * n..gr * n + n];
+        let zrow = &pm.zero[gr * n..gr * n + n];
+        let brow = &pm.packed[byte_row * n..byte_row * n + n];
+        for c in 0..n {
+            let code = (brow[c] >> shift) & mask;
+            out[c] += a * (srow[c] * (code as f32 - zrow[c]));
+        }
+    }
+    out
+}
+
 /// One projection of a quantized model: packed when the bit width has a
 /// serving layout (2/4-bit), dense f32 fallback otherwise.
 #[derive(Clone, Debug)]
@@ -299,6 +330,27 @@ mod tests {
             let err = fused.sub(&reference).frob_norm()
                 / reference.frob_norm().max(1e-6);
             prop_ensure!(err < 1e-5, "rel err {err} (bits {bits})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_vecmat_matches_fused_matmul_row() {
+        check("fused_vecmat == fused_matmul[1,K]", 20, |rng| {
+            let bits = if rng.f64() < 0.5 { 2u8 } else { 4u8 };
+            let k = 8 * (1 + rng.below(16));
+            let n = 1 + rng.below(20);
+            let g = quant::fit_group(k, 8 * (1 + rng.below(4)));
+            let w = Tensor::randn(vec![k, n], rng);
+            let mut x = Tensor::randn(vec![1, k], rng);
+            x.data_mut()[rng.below(k)] = 0.0; // exercise the zero skip
+            let q = rtn::quantize(&w, QuantSpec::new(bits, g));
+            let pm = PackedMatrix::from_quantized(&q);
+            let vec_out = fused_vecmat(x.data(), &pm);
+            let mat_out = fused_matmul(&x, &pm, 1);
+            prop_ensure!(vec_out == mat_out.data(),
+                         "vecmat diverged from fused_matmul \
+                          ({k}x{n}@{bits}b g={g})");
             Ok(())
         });
     }

@@ -1,0 +1,165 @@
+//! The tentpole acceptance property: KV-cached token-by-token decoding
+//! must produce the same logits as the full-sequence `forward`, within
+//! 1e-4, on randomly shaped tiny models — for the dense path and the
+//! fused-packed (2/4-bit) path. Shapes deliberately sweep the GQA
+//! space, including kv_heads < heads with a non-divisible group tail.
+
+use nsds::infer::{Executor, KvCache, ModelRef, NativeEngine,
+                  QuantizedModel};
+use nsds::model::{ModelConfig, Weights};
+use nsds::prop_ensure;
+use nsds::quant::Backend;
+use nsds::runtime::ModelEntry;
+use nsds::util::prop::check;
+use nsds::util::rng::Rng;
+
+/// Random tiny model shape; the head counts are drawn independently so
+/// the cases cover MHA (nkv == nh), grouped (nkv | nh) and ragged GQA.
+/// Every projection's K dim (d_model, nh·dh, d_ffn) stays a multiple of
+/// 4, the 2-bit packing granularity, so the same shapes serve packed.
+fn random_config(rng: &mut Rng) -> ModelConfig {
+    let n_heads = 1 + rng.below(6);
+    let n_kv = 1 + rng.below(n_heads);
+    ModelConfig {
+        name: "prop".into(),
+        vocab: 16 + rng.below(32),
+        d_model: 8 + 4 * rng.below(5),
+        n_heads,
+        n_kv,
+        d_head: 4 * (1 + rng.below(2)),
+        d_ffn: 8 * (1 + rng.below(4)),
+        n_layers: 1 + rng.below(3),
+        seq: 4 + rng.below(9),
+    }
+}
+
+fn random_tokens(rng: &mut Rng, n: usize, vocab: usize) -> Vec<i32> {
+    (0..n).map(|_| rng.below(vocab) as i32).collect()
+}
+
+/// Max |a-b| over matching positions, relative to the max magnitude.
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Run the full forward and the incremental decode over the same tokens
+/// and return the largest per-position logit deviation.
+fn decode_vs_forward(exec: &NativeEngine, entry: &ModelEntry,
+                     model: ModelRef, tokens: &[i32])
+                     -> anyhow::Result<f32> {
+    let cfg = &entry.config;
+    let full = model.forward(exec, entry, tokens, 1)?;
+    let mut cache = KvCache::for_model(cfg, cfg.seq);
+    let v = cfg.vocab;
+    let mut worst = 0.0f32;
+    for (si, &t) in tokens.iter().enumerate() {
+        let step = model.decode_step(exec, entry, &mut cache, t)?;
+        assert_eq!(step.dims(), &[v]);
+        let frow = &full.data()[si * v..(si + 1) * v];
+        worst = worst.max(max_abs_diff(step.data(), frow));
+    }
+    Ok(worst)
+}
+
+#[test]
+fn dense_decode_matches_forward() {
+    check("dense decode == forward", 14, |rng| {
+        let cfg = random_config(rng);
+        let entry = ModelEntry::synthetic(cfg.clone());
+        let w = Weights::synth(&cfg, rng, &[], &[]);
+        let exec = NativeEngine::with_workers(1 + rng.below(3));
+        let tokens = random_tokens(rng, cfg.seq, cfg.vocab);
+        let worst = decode_vs_forward(&exec, &entry,
+                                      ModelRef::Dense(&w), &tokens)
+            .map_err(|e| e.to_string())?;
+        prop_ensure!(worst < 1e-4,
+                     "dense decode diverged: {worst} \
+                      (nh={} nkv={} dh={} L={} seq={})",
+                     cfg.n_heads, cfg.n_kv, cfg.d_head, cfg.n_layers,
+                     cfg.seq);
+        Ok(())
+    });
+}
+
+#[test]
+fn packed_decode_matches_packed_forward() {
+    check("packed decode == forward_packed", 8, |rng| {
+        let cfg = random_config(rng);
+        let entry = ModelEntry::synthetic(cfg.clone());
+        let w = Weights::synth(&cfg, rng, &[], &[]);
+        let bits: Vec<u8> = (0..cfg.n_layers)
+            .map(|_| if rng.f64() < 0.5 { 2 } else { 4 })
+            .collect();
+        let backend =
+            if rng.f64() < 0.5 { Backend::Rtn } else { Backend::Hqq };
+        let qm = QuantizedModel::quantize(&cfg, &w, &bits, 8, backend,
+                                          None, 1);
+        let exec = NativeEngine::with_workers(1 + rng.below(3));
+        let tokens = random_tokens(rng, cfg.seq, cfg.vocab);
+        let worst = decode_vs_forward(&exec, &entry,
+                                      ModelRef::Packed(&qm), &tokens)
+            .map_err(|e| e.to_string())?;
+        prop_ensure!(worst < 1e-4,
+                     "packed decode diverged: {worst} (bits {bits:?}, \
+                      nh={} nkv={} dh={})",
+                     cfg.n_heads, cfg.n_kv, cfg.d_head);
+        Ok(())
+    });
+}
+
+/// The same property through the trait-object surface the serving stack
+/// uses (`&dyn Executor`), at a fixed divisible-GQA shape.
+#[test]
+fn decode_through_dyn_executor() {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(80);
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let engine = NativeEngine::with_workers(2);
+    let exec: &dyn Executor = &engine;
+    assert!(exec.supports_decode());
+    let tokens: Vec<i32> = (0..cfg.seq)
+        .map(|_| rng.below(cfg.vocab) as i32)
+        .collect();
+    let full = exec.forward(&entry, &tokens, 1, &w).unwrap();
+    let mut cache = KvCache::for_model(&cfg, cfg.seq);
+    for (si, &t) in tokens.iter().enumerate() {
+        let step = exec.decode_step(&entry, &mut cache, t, &w).unwrap();
+        let frow =
+            &full.data()[si * cfg.vocab..(si + 1) * cfg.vocab];
+        assert!(max_abs_diff(step.data(), frow) < 1e-4, "pos {si}");
+    }
+}
+
+/// Ring eviction: decoding past the cache capacity must keep producing
+/// finite logits (sliding-window attention), and the positions BEFORE
+/// any eviction still match the full forward exactly.
+#[test]
+fn ring_eviction_is_finite_and_exact_before_wrap() {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(81);
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let exec = NativeEngine::with_workers(1);
+    let cap = cfg.seq / 2;
+    let mut cache = KvCache::for_model(&cfg, cap);
+    let tokens: Vec<i32> = (0..2 * cfg.seq)
+        .map(|_| rng.below(cfg.vocab) as i32)
+        .collect();
+    let full = exec.forward(&entry, &tokens[..cfg.seq], 1, &w).unwrap();
+    for (si, &t) in tokens.iter().enumerate() {
+        let step = exec.decode_step(&entry, &mut cache, t, &w).unwrap();
+        assert!(step.data().iter().all(|x| x.is_finite()),
+                "non-finite logits at pos {si}");
+        if si < cap {
+            let frow =
+                &full.data()[si * cfg.vocab..(si + 1) * cfg.vocab];
+            assert!(max_abs_diff(step.data(), frow) < 1e-4,
+                    "pre-wrap pos {si} diverged");
+        }
+    }
+    assert_eq!(cache.pos(), 2 * cfg.seq);
+}

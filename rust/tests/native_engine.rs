@@ -233,6 +233,73 @@ fn serve_packed_end_to_end() {
             "packed {packed_nll} vs dense {dense_nll}");
 }
 
+/// GQA shape edge case: kv_heads < heads with a NON-divisible group
+/// tail (nh=5, nkv=3 → query-head groups of sizes 2, 2, 1). The engine
+/// must agree with the independent naive reference, stay causal, and
+/// its KV-cached decode must match the full forward — the shapes the
+/// original `hi / (nh/nkv)` mapping indexed out of bounds on.
+#[test]
+fn gqa_non_divisible_group_tail() {
+    let cfg = ModelConfig {
+        name: "gqa-ragged".into(),
+        vocab: 24,
+        d_model: 20,
+        n_heads: 5,
+        n_kv: 3,
+        d_head: 4,
+        d_ffn: 16,
+        n_layers: 2,
+        seq: 10,
+    };
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(75);
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let e = NativeEngine::with_workers(2);
+    let b = 2;
+    let tokens: Vec<i32> = (0..b * cfg.seq)
+        .map(|_| rng.below(cfg.vocab) as i32)
+        .collect();
+    let logits = e.forward(&entry, &tokens, b, &w).unwrap();
+    assert!(logits.data().iter().all(|x| x.is_finite()));
+    for bi in 0..b {
+        let naive = naive_forward(&cfg, &w,
+                                  &tokens[bi * cfg.seq..(bi + 1) * cfg.seq]);
+        let got = Tensor::new(
+            logits.data()[bi * cfg.seq * cfg.vocab
+                          ..(bi + 1) * cfg.seq * cfg.vocab].to_vec(),
+            vec![cfg.seq, cfg.vocab]);
+        let want = Tensor::new(naive, vec![cfg.seq, cfg.vocab]);
+        let err = rel_err(&got, &want);
+        assert!(err < 1e-4, "batch row {bi}: rel err {err}");
+    }
+    // Incremental decode agrees on the ragged shape too.
+    let mut cache = nsds::infer::KvCache::for_model(&cfg, cfg.seq);
+    for (si, &t) in tokens[..cfg.seq].iter().enumerate() {
+        let step = e.decode_step(&entry, &mut cache, t, &w).unwrap();
+        let frow = &logits.data()[si * cfg.vocab..(si + 1) * cfg.vocab];
+        let mx = step
+            .data()
+            .iter()
+            .zip(frow)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(mx < 1e-4, "decode pos {si}: max abs diff {mx}");
+    }
+    // Divisible tail still maps exactly like the reference grouping
+    // (nh=6, nkv=3 → hi/2): spot-check group boundaries via causality.
+    let cfg2 = ModelConfig { n_heads: 6, name: "gqa-even".into(), ..cfg };
+    let entry2 = ModelEntry::synthetic(cfg2.clone());
+    let w2 = Weights::synth(&cfg2, &mut rng, &[], &[]);
+    let mut a: Vec<i32> = (0..cfg2.seq)
+        .map(|i| (i % cfg2.vocab) as i32)
+        .collect();
+    let la = e.forward(&entry2, &a, 1, &w2).unwrap();
+    a[cfg2.seq - 1] = (a[cfg2.seq - 1] + 1) % cfg2.vocab as i32;
+    let lb = e.forward(&entry2, &a, 1, &w2).unwrap();
+    let prefix = (cfg2.seq - 1) * cfg2.vocab;
+    assert_eq!(la.data()[..prefix], lb.data()[..prefix]);
+}
+
 /// Fused packed forward parity against the dense engine on the
 /// dequantized weights (whole-model version of the matmul property).
 #[test]
@@ -305,11 +372,13 @@ fn naive_forward(cfg: &ModelConfig, w: &Weights, tokens: &[i32])
                 naive_rope(&mut row[hi * dh..(hi + 1) * dh], pos);
             }
         }
-        let rep = nh / nkv;
         let mut ctx: Vec<Vec<f32>> = vec![vec![0.0; nh * dh]; s];
         for i in 0..s {
             for hi in 0..nh {
-                let kv = hi / rep;
+                // Same generalized GQA mapping as the engine: identical
+                // to hi / (nh/nkv) when nkv divides nh, well-defined for
+                // a ragged tail otherwise.
+                let kv = hi * nkv / nh;
                 let qh = &q[i][hi * dh..(hi + 1) * dh];
                 let raw: Vec<f32> = (0..=i)
                     .map(|j| {

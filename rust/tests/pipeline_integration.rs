@@ -80,7 +80,8 @@ fn nsds_budget_endpoints_ordered() {
     //    it (error-compensation effect).
     let Some(p) = pipeline() else { return };
     let model = "llama-s";
-    let opts = EvalOptions { max_ppl_batches: 8, max_task_items: 8 };
+    let opts = EvalOptions { max_ppl_batches: 8, max_task_items: 8,
+                             gen_windows: 0 };
     let mut ppls = Vec::new();
     for budget in [2.0, 3.0, 4.0] {
         let bits = p
@@ -131,7 +132,8 @@ fn calibration_shapes_consistent() {
 fn gptq_backend_beats_rtn_end_to_end() {
     let Some(p) = pipeline() else { return };
     let model = "llama-s";
-    let opts = EvalOptions { max_ppl_batches: 8, max_task_items: 4 };
+    let opts = EvalOptions { max_ppl_batches: 8, max_task_items: 4,
+                             gen_windows: 0 };
     let bits = p
         .allocate(Method::Nsds(Ablation::Full), model, 3.0)
         .unwrap();
