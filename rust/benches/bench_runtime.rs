@@ -9,8 +9,8 @@
 mod harness;
 
 use harness::{bench, black_box};
-use nsds::infer::{fused_matmul, Executor, KvCache, ModelRef,
-                  NativeEngine, PackedMatrix, QuantizedModel};
+use nsds::infer::{fused_matmul, Executor, KvCache, KvCachePool,
+                  ModelRef, NativeEngine, PackedMatrix, QuantizedModel};
 use nsds::model::{ModelConfig, Weights};
 use nsds::quant::{rtn, Backend, QuantSpec, DEFAULT_GROUP};
 use nsds::runtime::{Manifest, ModelEntry};
@@ -146,6 +146,89 @@ fn decode_section() {
              tok_s(pre.median_ns), tok_s(dec.median_ns));
 }
 
+/// Continuous-batching decode: per-token cost vs batch size. The packed
+/// path is the headline — the fused small-batch GEMM dequantizes each
+/// weight group once per STEP, so per-token dequant + weight traffic is
+/// divided by the number of concurrently decoding sequences and
+/// tokens/s must scale with B. The dense path shares weight reads too
+/// (one stacked GEMM per projection), just without the dequant term.
+fn batch_decode_section() {
+    let cfg = ModelConfig::llama_s_synth();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(7);
+    let fp = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let bits = vec![4u8; cfg.n_layers];
+    let qm = QuantizedModel::quantize(&cfg, &fp, &bits, DEFAULT_GROUP,
+                                      Backend::Rtn, None,
+                                      default_workers());
+    let exec = NativeEngine::new();
+
+    println!("== continuous-batching decode: per-token cost vs batch \
+              size ==");
+    const STEPS: usize = 8;
+    let prefix = 16usize; // prefix + STEPS <= cap for exact decode
+    for (label, model) in [("dense", ModelRef::Dense(&fp)),
+                           ("packed-4bit", ModelRef::Packed(&qm))] {
+        let batches = [1usize, 2, 4, 8];
+        let mut per_tok = Vec::new();
+        for &b in &batches {
+            // B prefilled sequences in one pool.
+            let mut pool = KvCachePool::for_model(&cfg, b);
+            let slots: Vec<usize> =
+                (0..b).map(|_| pool.admit(cfg.seq).unwrap()).collect();
+            for i in 0..prefix {
+                let active: Vec<(usize, i32)> = slots
+                    .iter()
+                    .map(|&s| (s, ((i + s) % cfg.vocab) as i32))
+                    .collect();
+                model
+                    .decode_batch(&exec, &entry, &mut pool, &active)
+                    .unwrap();
+            }
+            // The timed closure mutates the prefilled pool directly (no
+            // per-iteration clone — its cost scales with B and would
+            // bias the B-scaling comparison): positions keep advancing
+            // and the attention window saturates at `cap`, identically
+            // for every B.
+            let mut p = pool;
+            let r = bench(
+                &format!("decode_batch {STEPS} steps {label} B={b}"),
+                || {
+                    for j in 0..STEPS {
+                        let active: Vec<(usize, i32)> = slots
+                            .iter()
+                            .map(|&s| {
+                                (s, ((j + s) % cfg.vocab) as i32)
+                            })
+                            .collect();
+                        black_box(
+                            model
+                                .decode_batch(&exec, &entry, &mut p,
+                                              &active)
+                                .unwrap(),
+                        );
+                    }
+                },
+            );
+            per_tok.push(r.median_ns / (STEPS * b) as f64);
+        }
+        let b0 = per_tok[0];
+        for (&b, &ns) in batches.iter().zip(&per_tok) {
+            println!(
+                "  -> {label} B={b}: {:.0} ns/token ({:.2}x vs B=1, \
+                 {:.0} tok/s aggregate)",
+                ns, ns / b0, 1e9 / ns
+            );
+        }
+        println!(
+            "  -> {label} per-token cost B={} vs B=1: {:.2}x \
+             (continuous batching amortizes per-step weight traffic)",
+            batches[batches.len() - 1],
+            per_tok[per_tok.len() - 1] / b0
+        );
+    }
+}
+
 fn pipeline_section() -> anyhow::Result<()> {
     use nsds::baselines::Method;
     use nsds::coordinator::Pipeline;
@@ -234,6 +317,7 @@ fn pjrt_kernel_section(
 fn main() -> anyhow::Result<()> {
     native_section();
     decode_section();
+    batch_decode_section();
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
         println!("bench_runtime: no artifacts (run `make artifacts`); \

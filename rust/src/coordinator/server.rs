@@ -1,19 +1,30 @@
 //! Serving front-end: a dynamic batcher over the weight-swappable
 //! executor — the vLLM-router-shaped piece of the L3 coordinator.
 //!
-//! Requests (token windows wanting NLL scores) arrive on a bounded queue
-//! from any number of client threads; the *engine thread* (PJRT handles
-//! are not `Send`; the native engine keeps the same discipline) runs
-//! `serve`, packing requests into the executor's fixed [batch, seq]
-//! shape (padding the tail), executing, and resolving per-request
-//! replies. Backpressure: submitters block while the queue is at
-//! `max_queue`.
+//! Requests arrive on a bounded queue from any number of client threads;
+//! the *engine thread* (PJRT handles are not `Send`; the native engine
+//! keeps the same discipline) runs `serve`. NLL requests (token windows
+//! wanting scores) are packed into the executor's fixed [batch, seq]
+//! shape (padding the tail). Generation requests all flow through ONE
+//! shared continuous-batching scheduler (`infer::BatchEngine`) per
+//! deployed model: each serve-loop iteration admits queued prompts into
+//! free KV-cache slots and advances every in-flight generation by one
+//! batched decode step, so concurrent generations share each weight
+//! read (one fused dequant per group per step on the packed path)
+//! instead of fanning whole generations across pool workers. Scheduler
+//! intake is bounded (about two batches of generations), so excess
+//! requests stay in the bounded queue.
+//! Backpressure: submitters block while the queue is at `max_queue`.
 //!
 //! Weight swap is a queued control message, so deploying a new quantized
 //! variant is ordered with respect to in-flight requests and requires NO
-//! recompilation. Variants deploy either as dense f32 weights or as a
-//! packed 2/4-bit `QuantizedModel`, which the native executor serves via
-//! the fused dequant-matmul without ever materializing f32 weights.
+//! recompilation: a swap first *drains* the scheduler (generations
+//! submitted before it finish on the old variant; no admission straddles
+//! the swap), then applies — zero downtime, and every request runs on
+//! one consistent variant. Variants deploy either as dense f32 weights
+//! or as a packed 2/4-bit `QuantizedModel`, which the native executor
+//! serves via the fused dequant-matmul without ever materializing f32
+//! weights.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -22,11 +33,10 @@ use std::sync::{Arc, Condvar, Mutex};
 use anyhow::Result;
 
 use crate::eval::ppl::batch_nll;
-use crate::infer::{generate, Executor, GenConfig, Generation, ModelRef,
-                   QuantizedModel};
+use crate::infer::{BatchEngine, Executor, GenConfig, Generation,
+                   ModelRef, QuantizedModel};
 use crate::model::Weights;
 use crate::runtime::ModelEntry;
-use crate::util::pool::parallel_map;
 
 /// A deployable weight variant: dense f32 or packed 2/4-bit codes.
 pub enum ServedWeights {
@@ -107,10 +117,21 @@ impl ServerQueue {
 
     fn push(&self, msg: Msg) {
         let mut q = self.queue.lock().unwrap();
-        // Control messages bypass backpressure; work messages respect it.
+        // Control messages bypass backpressure; work messages respect it
+        // (and stop waiting if the server shuts down underneath them).
         if matches!(msg, Msg::Infer(_) | Msg::Generate(_)) {
-            while q.len() >= self.max_queue {
+            while q.len() >= self.max_queue
+                && !self.stopped.load(Ordering::Acquire)
+            {
                 q = self.cv.wait(q).unwrap();
+            }
+            // A stopped server never drains the queue again: dropping
+            // the message here closes its reply channel, so the caller's
+            // recv fails loudly ("server dropped request") instead of
+            // hanging — the submit-side `stopped` check can race with
+            // the serve loop's (fatal-error) shutdown.
+            if self.stopped.load(Ordering::Acquire) {
+                return;
             }
         }
         q.push_back(msg);
@@ -204,69 +225,148 @@ impl Client {
     }
 }
 
+/// Per-request tag the shared scheduler carries: the reply channel a
+/// finished generation resolves.
+type GenReply = std::sync::mpsc::Sender<Result<Generation>>;
+
 /// Run the batching serve loop on the thread that owns the executor.
-/// Returns when a `Stop` message is consumed.
+/// Returns when a `Stop` message is consumed and all earlier work has
+/// drained.
 ///
-/// NLL requests execute as padded [batch, seq] forwards on this thread;
-/// generation requests run KV-cached decode loops fanned across
-/// `util::pool` workers (up to `batch` concurrent generations, each with
-/// its own cache), which is why the executor must be `Sync` — the native
-/// engine is; the PJRT engine (not `Sync`, and without a decode path)
-/// keeps using the single-threaded `forward` flow via `Pipeline`.
+/// NLL requests execute as padded [batch, seq] forwards on this thread.
+/// Generation requests feed ONE shared `BatchEngine` scheduler (up to
+/// `batch` concurrent sequences): each loop iteration drains the queue
+/// into the scheduler and advances it by one batched decode step, so
+/// requests admit into free slots and retire without stalling the rest —
+/// continuous batching, not request-level fan-out. Outputs are
+/// independent of co-batching (see `BatchEngine` on determinism), so a
+/// served generation is identical to a direct `generate` call.
+///
+/// `Swap`/`Stop` are ordered barriers: on either, the loop stops
+/// consuming messages, drains the scheduler's in-flight batch (and the
+/// already-collected NLL rows), then applies the swap (or returns). The
+/// executor stays `Sync` for API compatibility with callers that spawn
+/// the serve thread; the PJRT engine (not `Sync`, and without a decode
+/// path) keeps using the single-threaded `forward` flow via `Pipeline`.
 pub fn serve(exec: &(dyn Executor + Sync), entry: &ModelEntry,
-             batch: usize, mut weights: ServedWeights, q: &ServerQueue)
+             batch: usize, weights: ServedWeights, q: &ServerQueue)
              -> Result<()> {
+    let mut engine: BatchEngine<GenReply> =
+        BatchEngine::new(&entry.config, batch.max(1));
+    let res = serve_loop(exec, entry, batch, weights, q, &mut engine);
+    if let Err(e) = &res {
+        // Fatal engine/forward error (e.g. a malformed variant was
+        // swapped in): fail every scheduled generation loudly, drop the
+        // queued messages (closing their reply channels), and mark the
+        // server stopped so new submissions error instead of hanging on
+        // replies that will never come.
+        for reply in engine.abort_all() {
+            let _ = reply.send(Err(anyhow::anyhow!(
+                "server failed: {e:#}")));
+        }
+        q.stopped.store(true, Ordering::Release);
+        q.queue.lock().unwrap().clear();
+        q.cv.notify_all();
+    }
+    res
+}
+
+fn serve_loop(exec: &(dyn Executor + Sync), entry: &ModelEntry,
+              batch: usize, mut weights: ServedWeights,
+              q: &ServerQueue, engine: &mut BatchEngine<GenReply>)
+              -> Result<()> {
     let seq = entry.config.seq;
     let v = entry.config.vocab;
+    let mut stopping = false;
     loop {
-        // Collect up to `batch` of each work kind; handle control
-        // messages inline (they are ordered barriers: a Swap applies only
-        // between flushed batches, so every drained request runs on one
-        // consistent variant).
+        // Collect up to `batch` NLL rows and feed the scheduler; handle
+        // control messages inline. Messages the loop cannot take yet are
+        // DEFERRED — put back at the queue head in their original order —
+        // so: throttled generations don't starve NLL rows queued behind
+        // them, and a Swap/Stop barrier simply stays at the head (nothing
+        // past it is consumed) until the scheduler has drained.
         let mut reqs: Vec<Request> = Vec::with_capacity(batch);
-        let mut gens: Vec<GenRequest> = Vec::new();
-        let mut stop = false;
         {
             let mut guard = q.queue.lock().unwrap();
-            while guard.is_empty() {
+            // Block only when there is truly nothing to do.
+            while guard.is_empty() && engine.is_idle() && !stopping {
                 guard = q.cv.wait(guard).unwrap();
             }
-            while reqs.len() < batch && gens.len() < batch {
-                match guard.pop_front() {
-                    Some(Msg::Infer(r)) => reqs.push(r),
-                    Some(Msg::Generate(g)) => gens.push(g),
-                    Some(Msg::Swap(w)) => {
-                        if reqs.is_empty() && gens.is_empty() {
-                            weights = *w;
-                        } else {
-                            // Keep ordering: put it back, flush batch first.
-                            guard.push_front(Msg::Swap(w));
+            // Generation intake is bounded: at most one batch in flight
+            // plus one batch queued inside the scheduler; the rest stay
+            // in the bounded ServerQueue so `max_queue` backpressure
+            // engages for generation traffic too. (`in_flight` cannot
+            // shrink during this drain, so deferred generations keep
+            // their relative order.)
+            let gen_cap = 2 * engine.slots();
+            let mut deferred: VecDeque<Msg> = VecDeque::new();
+            if !stopping {
+                while reqs.len() < batch {
+                    match guard.pop_front() {
+                        Some(Msg::Infer(r)) => reqs.push(r),
+                        Some(Msg::Generate(g)) => {
+                            if engine.in_flight() >= gen_cap {
+                                deferred.push_back(Msg::Generate(g));
+                                continue;
+                            }
+                            // A bad prompt fails ITS request, not the
+                            // shared batch: submit hands the reply tag
+                            // back with the error.
+                            if let Err((reply, e)) = engine.submit(
+                                g.reply, g.prompt, g.cfg)
+                            {
+                                let _ = reply.send(Err(e));
+                            }
+                        }
+                        Some(Msg::Swap(w)) => {
+                            // Applies only once everything submitted
+                            // before it has drained; otherwise it is a
+                            // barrier and intake stops here.
+                            if reqs.is_empty()
+                                && engine.is_idle()
+                                && deferred.is_empty()
+                            {
+                                weights = *w;
+                            } else {
+                                deferred.push_back(Msg::Swap(w));
+                                break;
+                            }
+                        }
+                        Some(Msg::Stop) => {
+                            // Same barrier rule: deferred generations
+                            // were submitted before the Stop and must
+                            // still run.
+                            if deferred.is_empty() {
+                                stopping = true;
+                            } else {
+                                deferred.push_back(Msg::Stop);
+                            }
                             break;
                         }
+                        None => break,
                     }
-                    Some(Msg::Stop) => {
-                        stop = true;
-                        break;
-                    }
-                    None => break,
                 }
+            }
+            while let Some(m) = deferred.pop_back() {
+                guard.push_front(m);
             }
         }
         q.cv.notify_all(); // wake submitters blocked on backpressure
-        if !gens.is_empty() {
-            let results = parallel_map(gens.len(), batch.max(1), |i| {
-                generate(exec, entry, weights.model_ref(),
-                         &gens[i].prompt, &gens[i].cfg)
-            });
-            for (g, res) in gens.into_iter().zip(results) {
-                if let Ok(r) = &res {
-                    q.gen_served.fetch_add(1, Ordering::Relaxed);
-                    q.gen_tokens.fetch_add(r.tokens.len() as u64,
-                                           Ordering::Relaxed);
-                }
-                let _ = g.reply.send(res);
+
+        // One scheduler step: admit pending prompts into free slots,
+        // batch-decode one token for every in-flight generation, retire
+        // finished sequences.
+        if !engine.is_idle() {
+            let done =
+                engine.step(exec, entry, weights.model_ref())?;
+            for (reply, gen) in done {
+                q.gen_served.fetch_add(1, Ordering::Relaxed);
+                q.gen_tokens.fetch_add(gen.tokens.len() as u64,
+                                       Ordering::Relaxed);
+                let _ = reply.send(Ok(gen));
             }
         }
+
         if !reqs.is_empty() {
             let rows = reqs.len();
             let mut tokens = vec![0i32; batch * seq];
@@ -288,8 +388,15 @@ pub fn serve(exec: &(dyn Executor + Sync), entry: &ModelEntry,
                 let _ = r.reply.send(res);
             }
         }
-        if stop {
+
+        // Stop completes once the scheduler has drained (a deferred
+        // Swap barrier re-applies itself from the queue head instead).
+        if stopping && engine.is_idle() {
             q.stopped.store(true, Ordering::Release);
+            // Messages that slipped in behind the Stop will never be
+            // drained; dropping them closes their reply channels so
+            // waiting clients fail instead of hanging.
+            q.queue.lock().unwrap().clear();
             q.cv.notify_all();
             return Ok(());
         }

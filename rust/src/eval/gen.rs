@@ -13,8 +13,28 @@
 
 use anyhow::{ensure, Result};
 
-use crate::infer::{generate, Executor, GenConfig, ModelRef, Sampling};
+use crate::infer::{generate_batch, Executor, GenConfig, Generation,
+                   ModelRef, Sampling};
 use crate::runtime::ModelEntry;
+
+/// Concurrent sequences per scoring stream: windows decode as one
+/// continuous batch (weight reads shared across windows) instead of N
+/// serial generations. Greedy decoding is batch-invariant, so the
+/// metrics are identical to the sequential values.
+const SCORE_SLOTS: usize = 8;
+
+/// Greedy-decode every window's prompt in one batched stream.
+fn batch_greedy(exec: &dyn Executor, entry: &ModelEntry, model: ModelRef,
+                wins: &[(&[i32], &[i32])], gen_len: usize)
+                -> Result<Vec<Generation>> {
+    let cfg = greedy_cfg(gen_len);
+    let reqs: Vec<(Vec<i32>, GenConfig)> = wins
+        .iter()
+        .map(|(p, _)| (p.to_vec(), cfg.clone()))
+        .collect();
+    generate_batch(exec, entry, model, &reqs,
+                   SCORE_SLOTS.min(reqs.len().max(1)))
+}
 
 /// Cut `corpus` into non-overlapping (prompt, continuation) windows.
 fn windows(corpus: &[i32], prompt_len: usize, gen_len: usize,
@@ -47,15 +67,14 @@ pub fn continuation_match(exec: &dyn Executor, entry: &ModelEntry,
     let wins = windows(corpus, prompt_len, gen_len, max_prompts);
     ensure!(!wins.is_empty(),
             "corpus too short for a {prompt_len}+{gen_len} window");
-    let cfg = greedy_cfg(gen_len);
+    let gens = batch_greedy(exec, entry, model, &wins, gen_len)?;
     let mut hits = 0usize;
     let mut total = 0usize;
-    for (prompt, truth) in wins {
-        let g = generate(exec, entry, model, prompt, &cfg)?;
+    for (g, (_, truth)) in gens.iter().zip(&wins) {
         hits += g
             .tokens
             .iter()
-            .zip(truth)
+            .zip(*truth)
             .filter(|(a, b)| a == b)
             .count();
         total += truth.len();
@@ -73,12 +92,11 @@ pub fn greedy_agreement(exec: &dyn Executor, entry: &ModelEntry,
     let wins = windows(corpus, prompt_len, gen_len, max_prompts);
     ensure!(!wins.is_empty(),
             "corpus too short for a {prompt_len}+{gen_len} window");
-    let cfg = greedy_cfg(gen_len);
+    let gens_a = batch_greedy(exec, entry, a, &wins, gen_len)?;
+    let gens_b = batch_greedy(exec, entry, b, &wins, gen_len)?;
     let mut agree = 0usize;
     let mut total = 0usize;
-    for (prompt, _) in wins {
-        let ga = generate(exec, entry, a, prompt, &cfg)?;
-        let gb = generate(exec, entry, b, prompt, &cfg)?;
+    for (ga, gb) in gens_a.iter().zip(&gens_b) {
         agree += ga
             .tokens
             .iter()

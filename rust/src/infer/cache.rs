@@ -1,28 +1,36 @@
-//! Per-request KV cache for incremental (autoregressive) decoding.
+//! KV caches for incremental (autoregressive) decoding: a multi-sequence
+//! `KvCachePool` for continuous-batching decode, plus the single-sequence
+//! `KvCache` wrapper (one permanently-admitted pool slot) the B=1 paths
+//! keep using.
 //!
-//! One `KvCache` holds, for every layer, a ring buffer of the roped K and
+//! One pool slot holds, for every layer, a ring buffer of the roped K and
 //! raw V rows of the tokens decoded so far, in the GQA head layout
 //! (`n_kv · d_head` columns — query heads share their group's KV rows, so
-//! the cache stores `n_kv` heads, not `n_heads`). `decode_step` appends
-//! the current token's K/V to every layer and attends over the window,
-//! which is what makes per-token cost independent of the prefix length
-//! (the full-sequence `forward` recomputes the whole prefix every call).
+//! the cache stores `n_kv` heads, not `n_heads`). `decode_batch` appends
+//! each active sequence's K/V to every layer and attends over that slot's
+//! window, which is what makes per-token cost independent of the prefix
+//! length (the full-sequence `forward` recomputes the whole prefix every
+//! call).
 //!
-//! Capacity is fixed at construction. While `pos < cap` the cache is
-//! exact: attention sees every previous token and incremental decode
-//! matches the full forward bit-for-bit (see
-//! `rust/tests/decode_equivalence.rs`). Once `pos` reaches `cap` the ring
-//! wraps and the oldest entries are evicted — sliding-window attention
-//! over the last `cap` positions (keys keep their absolute RoPE phases,
-//! the StreamingLLM-style regime without sink tokens).
+//! Slots are independent: each has its own position, its own ring
+//! capacity (fixed at `admit`), and its own eviction. While a slot's
+//! `pos < cap` it is exact: attention sees every previous token of that
+//! sequence and incremental decode matches the full forward bit-for-bit
+//! (see `rust/tests/decode_equivalence.rs` and
+//! `rust/tests/batch_decode.rs`). Once `pos` reaches `cap` the ring wraps
+//! and the oldest entries are evicted — sliding-window attention over the
+//! last `cap` positions (keys keep their absolute RoPE phases, the
+//! StreamingLLM-style regime without sink tokens).
+//!
+//! Admission/retirement (`admit` / `retire`) reuse slot indices through a
+//! free list, so a long-running batch scheduler keeps stable slot ids as
+//! sequences join and leave mid-stream.
 
 use crate::model::ModelConfig;
 
-/// Ring-buffered K/V rows for all layers of one decoding request.
+/// Ring-buffered K/V rows for all layers of ONE decoding sequence.
 #[derive(Clone, Debug)]
-pub struct KvCache {
-    nkv: usize,
-    dh: usize,
+struct SlotCache {
     cap: usize,
     /// Absolute position of the NEXT token to be decoded (== number of
     /// tokens fully appended so far).
@@ -33,19 +41,178 @@ pub struct KvCache {
     v: Vec<Vec<f32>>,
 }
 
+/// Multi-sequence KV cache: up to `max_slots` concurrently active
+/// sequences sharing one GQA layout, each with an independent ring.
+#[derive(Clone, Debug)]
+pub struct KvCachePool {
+    n_layers: usize,
+    nkv: usize,
+    dh: usize,
+    slots: Vec<Option<SlotCache>>,
+}
+
+impl KvCachePool {
+    pub fn new(n_layers: usize, nkv: usize, dh: usize,
+               max_slots: usize) -> Self {
+        assert!(n_layers > 0 && nkv > 0 && dh > 0);
+        assert!(max_slots > 0, "KvCachePool needs at least one slot");
+        KvCachePool {
+            n_layers,
+            nkv,
+            dh,
+            slots: (0..max_slots).map(|_| None).collect(),
+        }
+    }
+
+    /// Pool sized for a model config's KV geometry.
+    pub fn for_model(cfg: &ModelConfig, max_slots: usize) -> Self {
+        KvCachePool::new(cfg.n_layers, cfg.n_kv, cfg.d_head, max_slots)
+    }
+
+    /// Whether this pool was laid out for `cfg`'s KV geometry.
+    pub fn matches(&self, cfg: &ModelConfig) -> bool {
+        self.n_layers == cfg.n_layers
+            && self.nkv == cfg.n_kv
+            && self.dh == cfg.d_head
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    pub fn max_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Number of currently admitted sequences.
+    pub fn active_count(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn free_count(&self) -> usize {
+        self.max_slots() - self.active_count()
+    }
+
+    pub fn is_active(&self, slot: usize) -> bool {
+        slot < self.slots.len() && self.slots[slot].is_some()
+    }
+
+    /// Admit a new sequence with ring capacity `cap`: returns its slot id,
+    /// or `None` when every slot is occupied (the scheduler keeps the
+    /// request pending and admits it when a sequence retires).
+    pub fn admit(&mut self, cap: usize) -> Option<usize> {
+        assert!(cap > 0, "slot capacity must be positive");
+        let slot = self.slots.iter().position(|s| s.is_none())?;
+        let w = cap * self.nkv * self.dh;
+        self.slots[slot] = Some(SlotCache {
+            cap,
+            pos: 0,
+            k: (0..self.n_layers).map(|_| vec![0.0; w]).collect(),
+            v: (0..self.n_layers).map(|_| vec![0.0; w]).collect(),
+        });
+        Some(slot)
+    }
+
+    /// Retire a finished sequence, freeing its slot for the next
+    /// admission. The other slots are untouched — no positions shift.
+    pub fn retire(&mut self, slot: usize) {
+        assert!(self.is_active(slot), "retire of inactive slot {slot}");
+        self.slots[slot] = None;
+    }
+
+    fn slot(&self, slot: usize) -> &SlotCache {
+        self.slots
+            .get(slot)
+            .and_then(|s| s.as_ref())
+            .unwrap_or_else(|| panic!("inactive slot {slot}"))
+    }
+
+    fn slot_mut(&mut self, slot: usize) -> &mut SlotCache {
+        self.slots
+            .get_mut(slot)
+            .and_then(|s| s.as_mut())
+            .unwrap_or_else(|| panic!("inactive slot {slot}"))
+    }
+
+    /// Absolute position of the slot's next token (RoPE phase of the
+    /// token the next decode step will consume).
+    pub fn pos(&self, slot: usize) -> usize {
+        self.slot(slot).pos
+    }
+
+    /// Ring capacity the slot was admitted with.
+    pub fn capacity(&self, slot: usize) -> usize {
+        self.slot(slot).cap
+    }
+
+    /// Reset a slot to an empty sequence (buffers are reused, not zeroed
+    /// — every ring row is overwritten before attention can read it).
+    pub fn reset(&mut self, slot: usize) {
+        self.slot_mut(slot).pos = 0;
+    }
+
+    /// Write the current token's K/V rows for layer `l` into the slot's
+    /// ring row for its position. Called once per layer per step;
+    /// `advance` commits the position after the last layer.
+    pub fn append(&mut self, slot: usize, l: usize, krow: &[f32],
+                  vrow: &[f32]) {
+        let w = self.nkv * self.dh;
+        debug_assert_eq!(krow.len(), w, "k row width");
+        debug_assert_eq!(vrow.len(), w, "v row width");
+        let s = self.slot_mut(slot);
+        let row = s.pos % s.cap;
+        s.k[l][row * w..(row + 1) * w].copy_from_slice(krow);
+        s.v[l][row * w..(row + 1) * w].copy_from_slice(vrow);
+    }
+
+    /// Commit the slot's current step: the next `append`/`window_rows`
+    /// refer to the following position.
+    pub fn advance(&mut self, slot: usize) {
+        self.slot_mut(slot).pos += 1;
+    }
+
+    /// Raw (k, v) ring buffers of layer `l` for a slot
+    /// ([cap, nkv·dh] row-major).
+    pub fn layer(&self, l: usize, slot: usize) -> (&[f32], &[f32]) {
+        let s = self.slot(slot);
+        (&s.k[l], &s.v[l])
+    }
+
+    /// Ring rows the slot's current step's attention reads, oldest →
+    /// newest, INCLUDING the row of the token being decoded (append
+    /// first, then attend — causal attention sees itself). Identical for
+    /// every layer of a step, so callers compute it once per slot.
+    pub fn window_rows(&self, slot: usize) -> Vec<usize> {
+        let s = self.slot(slot);
+        let hi = s.pos; // current token's logical position (inclusive)
+        let lo = (hi + 1).saturating_sub(s.cap);
+        (lo..=hi).map(|p| p % s.cap).collect()
+    }
+
+    /// Bytes resident in the active slots' K/V buffers.
+    pub fn bytes(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .map(|s| self.n_layers * 2 * s.cap * self.nkv * self.dh * 4)
+            .sum()
+    }
+}
+
+/// Single-sequence KV cache: one permanently-admitted slot of a
+/// `KvCachePool`. This is the B=1 view the `decode_step` paths and the
+/// benches use; `decode_step` itself runs as a one-row `decode_batch`.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pool: KvCachePool,
+}
+
 impl KvCache {
     pub fn new(n_layers: usize, nkv: usize, dh: usize, cap: usize) -> Self {
         assert!(cap > 0, "KvCache capacity must be positive");
-        assert!(n_layers > 0 && nkv > 0 && dh > 0);
-        let w = cap * nkv * dh;
-        KvCache {
-            nkv,
-            dh,
-            cap,
-            pos: 0,
-            k: (0..n_layers).map(|_| vec![0.0; w]).collect(),
-            v: (0..n_layers).map(|_| vec![0.0; w]).collect(),
-        }
+        let mut pool = KvCachePool::new(n_layers, nkv, dh, 1);
+        pool.admit(cap).expect("fresh pool has a free slot");
+        KvCache { pool }
     }
 
     /// Cache sized for a model config with an explicit context capacity
@@ -56,67 +223,67 @@ impl KvCache {
 
     /// Whether this cache was laid out for `cfg`'s KV geometry.
     pub fn matches(&self, cfg: &ModelConfig) -> bool {
-        self.k.len() == cfg.n_layers
-            && self.nkv == cfg.n_kv
-            && self.dh == cfg.d_head
+        self.pool.matches(cfg)
     }
 
     pub fn n_layers(&self) -> usize {
-        self.k.len()
+        self.pool.n_layers()
     }
 
     /// Absolute position of the next token (RoPE phase of the token the
     /// next `decode_step` will consume).
     pub fn pos(&self) -> usize {
-        self.pos
+        self.pool.pos(0)
     }
 
     pub fn capacity(&self) -> usize {
-        self.cap
+        self.pool.capacity(0)
     }
 
     /// Reset to an empty cache (buffers are reused, not zeroed — every
     /// slot is overwritten before attention can read it).
     pub fn clear(&mut self) {
-        self.pos = 0;
+        self.pool.reset(0);
     }
 
     /// Write the current token's K/V rows for layer `l` into the ring
     /// slot for `pos`. Called once per layer per step; `advance` commits
     /// the position after the last layer.
     pub fn append(&mut self, l: usize, krow: &[f32], vrow: &[f32]) {
-        let w = self.nkv * self.dh;
-        debug_assert_eq!(krow.len(), w, "k row width");
-        debug_assert_eq!(vrow.len(), w, "v row width");
-        let slot = self.pos % self.cap;
-        self.k[l][slot * w..(slot + 1) * w].copy_from_slice(krow);
-        self.v[l][slot * w..(slot + 1) * w].copy_from_slice(vrow);
+        self.pool.append(0, l, krow, vrow);
     }
 
     /// Commit the current step: the next `append`/`step_slots` refer to
     /// the following position.
     pub fn advance(&mut self) {
-        self.pos += 1;
+        self.pool.advance(0);
     }
 
     /// Raw (k, v) ring buffers of layer `l` ([cap, nkv·dh] row-major).
     pub fn layer(&self, l: usize) -> (&[f32], &[f32]) {
-        (&self.k[l], &self.v[l])
+        self.pool.layer(l, 0)
     }
 
     /// Ring slots the current step's attention reads, oldest → newest,
-    /// INCLUDING the slot of the token being decoded (append first, then
-    /// attend — causal attention sees itself). Identical for every layer
-    /// of a step, so callers compute it once.
+    /// INCLUDING the slot of the token being decoded. See
+    /// `KvCachePool::window_rows`.
     pub fn step_slots(&self) -> Vec<usize> {
-        let hi = self.pos; // current token's logical position (inclusive)
-        let lo = (hi + 1).saturating_sub(self.cap);
-        (lo..=hi).map(|p| p % self.cap).collect()
+        self.pool.window_rows(0)
     }
 
     /// Bytes resident in this cache's K/V buffers.
     pub fn bytes(&self) -> usize {
-        self.k.len() * 2 * self.cap * self.nkv * self.dh * 4
+        self.pool.bytes()
+    }
+
+    /// The underlying one-slot pool (the sequence lives in slot 0) — how
+    /// `decode_step` routes through the batched decode path.
+    pub fn pool_mut(&mut self) -> &mut KvCachePool {
+        &mut self.pool
+    }
+
+    pub fn pool(&self) -> &KvCachePool {
+        &self.pool
     }
 }
 
@@ -196,5 +363,75 @@ mod tests {
         assert_eq!(b.pos(), 1);
         assert_eq!(a.pos(), 2);
         assert_eq!(b.layer(0).0[8], 0.0); // slot 1 untouched in the clone
+    }
+
+    #[test]
+    fn pool_admit_retire_reuses_slots() {
+        let mut p = KvCachePool::new(2, 2, 4, 3);
+        assert_eq!(p.max_slots(), 3);
+        assert_eq!(p.active_count(), 0);
+        let a = p.admit(4).unwrap();
+        let b = p.admit(6).unwrap();
+        let c = p.admit(2).unwrap();
+        assert_eq!((a, b, c), (0, 1, 2));
+        assert!(p.admit(4).is_none(), "pool full");
+        assert_eq!(p.free_count(), 0);
+        // Heterogeneous per-slot capacities.
+        assert_eq!(p.capacity(b), 6);
+        assert_eq!(p.capacity(c), 2);
+        p.retire(b);
+        assert!(!p.is_active(b));
+        assert_eq!(p.free_count(), 1);
+        // The freed index is reused; survivors are untouched.
+        let d = p.admit(8).unwrap();
+        assert_eq!(d, b);
+        assert_eq!(p.pos(d), 0);
+        assert_eq!(p.capacity(d), 8);
+        assert!(p.is_active(a) && p.is_active(c));
+    }
+
+    #[test]
+    fn pool_slots_are_independent() {
+        let mut p = KvCachePool::new(1, 2, 4, 2);
+        let a = p.admit(4).unwrap();
+        let b = p.admit(4).unwrap();
+        for i in 0..3 {
+            p.append(a, 0, &[i as f32; 8], &[i as f32; 8]);
+            p.advance(a);
+        }
+        p.append(b, 0, &[9.0; 8], &[9.0; 8]);
+        p.advance(b);
+        assert_eq!(p.pos(a), 3);
+        assert_eq!(p.pos(b), 1);
+        assert_eq!(p.window_rows(a), vec![0, 1, 2, 3]);
+        assert_eq!(p.window_rows(b), vec![0, 1]);
+        let (ka, _) = p.layer(0, a);
+        let (kb, _) = p.layer(0, b);
+        assert_eq!(ka[8], 1.0);
+        assert_eq!(kb[0], 9.0);
+    }
+
+    #[test]
+    fn pool_per_slot_ring_eviction() {
+        let mut p = KvCachePool::new(1, 1, 2, 2);
+        let small = p.admit(2).unwrap(); // evicts past 2 tokens
+        let big = p.admit(8).unwrap(); // exact for the whole stream
+        for i in 0..5 {
+            for s in [small, big] {
+                p.append(s, 0, &[i as f32; 2], &[i as f32; 2]);
+                p.advance(s);
+            }
+        }
+        // Small slot: window is the last 2 positions (4, 5-to-be).
+        assert_eq!(p.window_rows(small).len(), 2);
+        // Big slot: still exact, all 6 positions visible.
+        assert_eq!(p.window_rows(big), vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "inactive slot")]
+    fn pool_rejects_inactive_slot_access() {
+        let p = KvCachePool::new(1, 1, 2, 2);
+        let _ = p.pos(0);
     }
 }

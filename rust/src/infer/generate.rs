@@ -1,15 +1,22 @@
-//! Autoregressive generation over `Executor::decode_step`: greedy and
-//! temperature/top-k sampling (seeded `util::rng`, fully deterministic),
-//! stop conditions, and per-request `GenStats` (prefill vs decode time,
-//! tokens/sec). Executor- and variant-generic: a `ModelRef` dispatches to
-//! the dense or fused-packed decode path, so the same loop generates from
-//! FP32 weights and from packed 2/4-bit `QuantizedModel`s.
+//! Autoregressive generation over the batched KV-cached decode path:
+//! `BatchEngine` is a step-driven continuous-batching scheduler — each
+//! step admits pending requests into free cache-pool slots, feeds every
+//! active sequence one token through `Executor::decode_batch`, samples
+//! per slot (greedy or seeded temperature/top-k via `util::rng`, fully
+//! deterministic per request seed), and retires finished sequences
+//! without stalling the rest. `generate` is the B=1 case; `generate_batch`
+//! runs a whole request set through one engine. Executor- and
+//! variant-generic: a `ModelRef` dispatches to the dense or fused-packed
+//! decode path, so the same engine generates from FP32 weights and from
+//! packed 2/4-bit `QuantizedModel`s.
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
-use super::{Executor, KvCache, ModelRef};
+use super::{Executor, KvCachePool, ModelRef};
+use crate::model::ModelConfig;
 use crate::runtime::ModelEntry;
 use crate::util::rng::Rng;
 
@@ -61,6 +68,14 @@ pub enum StopReason {
 }
 
 /// Per-request timing/throughput counters.
+///
+/// Times are wall-clock spans of the request's life inside its engine
+/// (admission → last prompt token → retirement). In a B=1 engine
+/// (`generate`) that is the dedicated per-request cost, as before; in a
+/// shared continuous batch (`generate_batch`, the server scheduler) the
+/// spans include co-batched sequences' work and anything else the serve
+/// loop interleaves, so they measure observed latency, not isolated
+/// decode cost. Aggregate throughput across a batch is what improves.
 #[derive(Clone, Debug)]
 pub struct GenStats {
     pub prompt_tokens: usize,
@@ -148,56 +163,264 @@ fn argmax(logits: &[f32]) -> i32 {
     best as i32
 }
 
+/// A request queued in a `BatchEngine`, waiting for a free cache slot.
+struct Pending<T> {
+    tag: T,
+    prompt: Vec<i32>,
+    gc: GenConfig,
+}
+
+/// One admitted sequence: its slot, sampling state, and timings.
+struct Active<T> {
+    tag: T,
+    slot: usize,
+    prompt: Vec<i32>,
+    gc: GenConfig,
+    rng: Rng,
+    /// Tokens the model has consumed so far (prompt, then fed-back
+    /// samples). The token fed at step `fed` is `prompt[fed]` while
+    /// `fed < prompt.len()`, else `tokens[fed - prompt.len()]`.
+    fed: usize,
+    /// Sampled new tokens (the generation output).
+    tokens: Vec<i32>,
+    t_admit: Instant,
+    t_prefill_done: Option<Instant>,
+}
+
+/// Step-driven continuous-batching generation engine over one
+/// `Executor::decode_batch` stream. Submit any number of requests; each
+/// `step` admits pending requests into free slots, decodes ONE token for
+/// every active sequence in a single batched call, samples per slot with
+/// that request's own seeded RNG, and retires finished sequences (freeing
+/// their slots for the next admission) without stalling the rest.
+///
+/// Determinism: a request's trajectory depends only on the model and its
+/// own `GenConfig` — batched decode rows are bit-identical to
+/// single-sequence `decode_step` and each request samples from its own
+/// `Rng::new(seed)` — so outputs are independent of what else shares the
+/// batch, of admission timing, and of slot placement. The serving
+/// scheduler (`coordinator::server`) relies on this to keep batched
+/// serving reproducible.
+///
+/// `T` is an opaque per-request tag returned with the finished
+/// `Generation` (an index for `generate_batch`, a reply channel for the
+/// server).
+pub struct BatchEngine<T> {
+    cfg: ModelConfig,
+    pool: KvCachePool,
+    pending: VecDeque<Pending<T>>,
+    active: Vec<Active<T>>,
+}
+
+impl<T> BatchEngine<T> {
+    /// An engine decoding up to `slots` concurrent sequences of `cfg`'s
+    /// geometry.
+    pub fn new(cfg: &ModelConfig, slots: usize) -> Self {
+        assert!(slots > 0, "BatchEngine needs at least one slot");
+        BatchEngine {
+            cfg: cfg.clone(),
+            pool: KvCachePool::for_model(cfg, slots),
+            pending: VecDeque::new(),
+            active: Vec::new(),
+        }
+    }
+
+    /// Validate a prompt without submitting it (the server routes a bad
+    /// prompt's error to its reply channel instead of poisoning the
+    /// shared batch).
+    pub fn check(&self, prompt: &[i32]) -> Result<()> {
+        ensure!(!prompt.is_empty(), "generate: empty prompt");
+        let v = self.cfg.vocab;
+        ensure!(prompt.iter().all(|&t| t >= 0 && (t as usize) < v),
+                "generate: prompt token out of range (vocab {v})");
+        Ok(())
+    }
+
+    /// Queue a request. It is admitted into a cache slot by a later
+    /// `step` as capacity frees up. On a rejected prompt the tag comes
+    /// back with the error, so the server can fail that request's reply
+    /// channel rather than silently dropping it.
+    pub fn submit(&mut self, tag: T, prompt: Vec<i32>, gc: GenConfig)
+        -> Result<(), (T, anyhow::Error)> {
+        if let Err(e) = self.check(&prompt) {
+            return Err((tag, e));
+        }
+        self.pending.push_back(Pending { tag, prompt, gc });
+        Ok(())
+    }
+
+    /// No requests pending or in flight.
+    pub fn is_idle(&self) -> bool {
+        self.pending.is_empty() && self.active.is_empty()
+    }
+
+    /// Requests submitted but not yet finished.
+    pub fn in_flight(&self) -> usize {
+        self.pending.len() + self.active.len()
+    }
+
+    pub fn slots(&self) -> usize {
+        self.pool.max_slots()
+    }
+
+    /// One engine step: admit, batch-decode one token per active
+    /// sequence, sample, retire. Returns the requests that finished this
+    /// step (possibly empty). A no-op returning `[]` when idle.
+    pub fn step(&mut self, exec: &dyn Executor, entry: &ModelEntry,
+                model: ModelRef) -> Result<Vec<(T, Generation)>> {
+        // Admit pending requests into free slots. Per-request cache
+        // capacity mirrors the single-sequence policy: `gc.cap`, or
+        // prompt + max_new (exact decode, no ring eviction) when 0.
+        while !self.pending.is_empty() && self.pool.free_count() > 0 {
+            let p = self.pending.pop_front().expect("non-empty");
+            let cap = if p.gc.cap > 0 {
+                p.gc.cap
+            } else {
+                p.prompt.len() + p.gc.max_new
+            };
+            let slot =
+                self.pool.admit(cap.max(1)).expect("free slot checked");
+            let rng = Rng::new(p.gc.seed);
+            self.active.push(Active {
+                tag: p.tag,
+                slot,
+                prompt: p.prompt,
+                gc: p.gc,
+                rng,
+                fed: 0,
+                tokens: Vec::new(),
+                t_admit: Instant::now(),
+                t_prefill_done: None,
+            });
+        }
+        if self.active.is_empty() {
+            return Ok(Vec::new());
+        }
+
+        // One token per active sequence, in one batched decode.
+        let batch: Vec<(usize, i32)> = self
+            .active
+            .iter()
+            .map(|a| {
+                let t = if a.fed < a.prompt.len() {
+                    a.prompt[a.fed]
+                } else {
+                    a.tokens[a.fed - a.prompt.len()]
+                };
+                (a.slot, t)
+            })
+            .collect();
+        let logits =
+            model.decode_batch(exec, entry, &mut self.pool, &batch)?;
+        let v = self.cfg.vocab;
+
+        // Sample / retire per row.
+        let mut done = Vec::new();
+        let mut keep = Vec::with_capacity(self.active.len());
+        for (ri, mut a) in
+            std::mem::take(&mut self.active).into_iter().enumerate()
+        {
+            a.fed += 1;
+            if a.fed < a.prompt.len() {
+                keep.push(a); // still prefilling
+                continue;
+            }
+            if a.fed == a.prompt.len() {
+                a.t_prefill_done = Some(Instant::now());
+            }
+            let mut stopped = None;
+            if a.gc.max_new == 0 {
+                // Nothing to sample; the prefill itself was the request.
+                stopped = Some(StopReason::MaxNew);
+            } else {
+                let row = &logits.data()[ri * v..(ri + 1) * v];
+                let next = sample(row, &a.gc.sampling, &mut a.rng);
+                a.tokens.push(next);
+                if a.gc.stop.contains(&next) {
+                    stopped = Some(StopReason::StopToken(next));
+                } else if a.tokens.len() >= a.gc.max_new {
+                    stopped = Some(StopReason::MaxNew);
+                }
+            }
+            match stopped {
+                None => keep.push(a),
+                Some(stopped) => {
+                    self.pool.retire(a.slot);
+                    let t_pre =
+                        a.t_prefill_done.expect("set at prefill end");
+                    done.push((a.tag, Generation {
+                        stats: GenStats {
+                            prompt_tokens: a.prompt.len(),
+                            gen_tokens: a.tokens.len(),
+                            prefill_s: (t_pre - a.t_admit)
+                                .as_secs_f64(),
+                            decode_s: t_pre.elapsed().as_secs_f64(),
+                        },
+                        tokens: a.tokens,
+                        stopped,
+                    }));
+                }
+            }
+        }
+        self.active = keep;
+        Ok(done)
+    }
+
+    /// Abort every pending and in-flight request, freeing all slots,
+    /// and return their tags — the server fails their reply channels
+    /// loudly when a fatal error ends the serve loop.
+    pub fn abort_all(&mut self) -> Vec<T> {
+        let mut tags: Vec<T> =
+            self.pending.drain(..).map(|p| p.tag).collect();
+        for a in self.active.drain(..) {
+            self.pool.retire(a.slot);
+            tags.push(a.tag);
+        }
+        tags
+    }
+
+    /// Step until every submitted request has finished.
+    pub fn run(&mut self, exec: &dyn Executor, entry: &ModelEntry,
+               model: ModelRef) -> Result<Vec<(T, Generation)>> {
+        let mut out = Vec::new();
+        while !self.is_idle() {
+            out.extend(self.step(exec, entry, model)?);
+        }
+        Ok(out)
+    }
+}
+
+/// Run a set of requests through one continuous-batching engine with up
+/// to `slots` concurrent sequences; results come back in request order.
+/// Each request's output is identical to what `generate` returns for it
+/// alone (see `BatchEngine` on determinism) — batching changes
+/// throughput, never tokens.
+pub fn generate_batch(exec: &dyn Executor, entry: &ModelEntry,
+                      model: ModelRef, reqs: &[(Vec<i32>, GenConfig)],
+                      slots: usize) -> Result<Vec<Generation>> {
+    let mut engine: BatchEngine<usize> =
+        BatchEngine::new(&entry.config, slots.max(1));
+    for (i, (prompt, gc)) in reqs.iter().enumerate() {
+        engine
+            .submit(i, prompt.clone(), gc.clone())
+            .map_err(|(_, e)| e)?;
+    }
+    let mut done = engine.run(exec, entry, model)?;
+    debug_assert_eq!(done.len(), reqs.len());
+    done.sort_unstable_by_key(|(i, _)| *i);
+    Ok(done.into_iter().map(|(_, g)| g).collect())
+}
+
 /// Generate up to `gc.max_new` tokens after `prompt` through any
-/// executor's KV-cached decode path. The prompt is prefetched token by
-/// token into a fresh cache (same per-token cost as cached decode), then
-/// the decode loop samples and feeds back until a stop condition.
+/// executor's KV-cached batched decode path — the B=1 case of
+/// `generate_batch`: the prompt is fed token by token into a fresh cache
+/// slot (same per-token cost as cached decode), then the decode loop
+/// samples and feeds back until a stop condition.
 pub fn generate(exec: &dyn Executor, entry: &ModelEntry, model: ModelRef,
                 prompt: &[i32], gc: &GenConfig) -> Result<Generation> {
-    ensure!(!prompt.is_empty(), "generate: empty prompt");
-    let cfg = &entry.config;
-    let cap = if gc.cap > 0 {
-        gc.cap
-    } else {
-        prompt.len() + gc.max_new
-    };
-    let mut cache = KvCache::for_model(cfg, cap);
-    let mut rng = Rng::new(gc.seed);
-
-    let t0 = Instant::now();
-    let mut last = model.decode_step(exec, entry, &mut cache, prompt[0])?;
-    for &t in &prompt[1..] {
-        last = model.decode_step(exec, entry, &mut cache, t)?;
-    }
-    let prefill_s = t0.elapsed().as_secs_f64();
-
-    let t1 = Instant::now();
-    let mut tokens = Vec::with_capacity(gc.max_new);
-    let mut stopped = StopReason::MaxNew;
-    while tokens.len() < gc.max_new {
-        let next = sample(last.data(), &gc.sampling, &mut rng);
-        tokens.push(next);
-        if gc.stop.contains(&next) {
-            stopped = StopReason::StopToken(next);
-            break;
-        }
-        if tokens.len() == gc.max_new {
-            break; // final logits would be unused
-        }
-        last = model.decode_step(exec, entry, &mut cache, next)?;
-    }
-    let decode_s = t1.elapsed().as_secs_f64();
-
-    Ok(Generation {
-        stats: GenStats {
-            prompt_tokens: prompt.len(),
-            gen_tokens: tokens.len(),
-            prefill_s,
-            decode_s,
-        },
-        tokens,
-        stopped,
-    })
+    let reqs = [(prompt.to_vec(), gc.clone())];
+    let mut out = generate_batch(exec, entry, model, &reqs, 1)?;
+    Ok(out.pop().expect("one request in, one generation out"))
 }
 
 #[cfg(test)]

@@ -20,9 +20,9 @@ use crate::model::Weights;
 use crate::runtime::ModelEntry;
 use crate::tensor::Tensor;
 
-pub use cache::KvCache;
-pub use generate::{generate, GenConfig, GenStats, Generation, Sampling,
-                   StopReason};
+pub use cache::{KvCache, KvCachePool};
+pub use generate::{generate, generate_batch, BatchEngine, GenConfig,
+                   GenStats, Generation, Sampling, StopReason};
 pub use native::NativeEngine;
 pub use qmat::{fused_matmul, fused_vecmat, PackedMatrix, QMat,
                QuantizedModel};
@@ -89,7 +89,8 @@ pub trait Executor {
                       self.platform())
     }
 
-    /// Whether `decode_step`/`decode_step_packed` are implemented
+    /// Whether the KV-cached decode family (`decode_step`,
+    /// `decode_batch` and their packed variants) is implemented
     /// (optional capability, like packed serving).
     fn supports_decode(&self) -> bool {
         false
@@ -116,6 +117,39 @@ pub trait Executor {
         anyhow::bail!("{}: packed incremental decode not supported",
                       self.platform())
     }
+
+    /// Batched KV-cached decode over a multi-sequence cache pool: each
+    /// `(slot, token)` pair consumes ONE token at that slot's position
+    /// (a slot may appear at most once per step), appends its K/V rows,
+    /// and advances the slot. Returns logits `[active.len(), vocab]`,
+    /// rows in `active` order. Row `i` must equal what `decode_step` on
+    /// slot `active[i].0` alone would return — `decode_step` is the B=1
+    /// case. The decode capability is one family: an executor claiming
+    /// `supports_decode` must implement this alongside `decode_step`,
+    /// since the whole generation stack (`generate`, `generate_batch`,
+    /// the server scheduler) routes through it. Contract details in
+    /// DESIGN.md "Continuous batching".
+    fn decode_batch(&self, entry: &ModelEntry, pool: &mut KvCachePool,
+                    active: &[(usize, i32)], weights: &Weights)
+                    -> Result<Tensor> {
+        let _ = (entry, pool, active, weights);
+        anyhow::bail!("{}: batched incremental decode not supported",
+                      self.platform())
+    }
+
+    /// `decode_batch` over packed 2/4-bit codes. The native engine's
+    /// fused small-batch GEMM dequantizes each weight group once per
+    /// step and applies it to all active rows, dividing per-token weight
+    /// traffic by the batch size — the continuous-batching win on
+    /// weight-bandwidth-bound low-bit decode.
+    fn decode_batch_packed(&self, entry: &ModelEntry,
+                           pool: &mut KvCachePool,
+                           active: &[(usize, i32)],
+                           model: &QuantizedModel) -> Result<Tensor> {
+        let _ = (entry, pool, active, model);
+        anyhow::bail!("{}: packed batched decode not supported",
+                      self.platform())
+    }
 }
 
 /// A borrowed deployable weight variant: the generation loop and the
@@ -136,6 +170,21 @@ impl ModelRef<'_> {
             }
             ModelRef::Packed(qm) => {
                 exec.decode_step_packed(entry, cache, token, qm)
+            }
+        }
+    }
+
+    /// Batched decode of the same variant over a multi-sequence cache
+    /// pool (see `Executor::decode_batch`).
+    pub fn decode_batch(&self, exec: &dyn Executor, entry: &ModelEntry,
+                        pool: &mut KvCachePool, active: &[(usize, i32)])
+                        -> Result<Tensor> {
+        match self {
+            ModelRef::Dense(w) => {
+                exec.decode_batch(entry, pool, active, w)
+            }
+            ModelRef::Packed(qm) => {
+                exec.decode_batch_packed(entry, pool, active, qm)
             }
         }
     }

@@ -11,9 +11,9 @@
 
 use anyhow::{ensure, Result};
 
-use super::cache::KvCache;
-use super::qmat::{fused_matmul, fused_vecmat, PackedMatrix, QMat,
-                  QuantizedModel};
+use super::cache::{KvCache, KvCachePool};
+use super::qmat::{fused_gemm_small, fused_matmul, fused_vecmat,
+                  PackedMatrix, QMat, QuantizedModel};
 use super::{Executor, Probes};
 use crate::model::{ModelConfig, Weights};
 use crate::runtime::ModelEntry;
@@ -61,7 +61,7 @@ impl Executor for NativeEngine {
     fn forward_packed(&self, entry: &ModelEntry, tokens: &[i32],
                       batch: usize, model: &QuantizedModel)
                       -> Result<Tensor> {
-        let prep = prepare_packed(&entry.config, model);
+        let prep = prepare_packed(&entry.config, model)?;
         let (logits, _) =
             run_batch(&prep, tokens, batch, self.workers, false)?;
         Ok(logits)
@@ -90,8 +90,23 @@ impl Executor for NativeEngine {
     fn decode_step_packed(&self, entry: &ModelEntry, cache: &mut KvCache,
                           token: i32, model: &QuantizedModel)
                           -> Result<Tensor> {
-        let prep = prepare_packed(&entry.config, model);
+        let prep = prepare_packed(&entry.config, model)?;
         decode_with(&prep, cache, token)
+    }
+
+    fn decode_batch(&self, entry: &ModelEntry, pool: &mut KvCachePool,
+                    active: &[(usize, i32)], weights: &Weights)
+                    -> Result<Tensor> {
+        let prep = prepare_dense_ref(&entry.config, weights);
+        decode_batch_with(&prep, pool, active)
+    }
+
+    fn decode_batch_packed(&self, entry: &ModelEntry,
+                           pool: &mut KvCachePool,
+                           active: &[(usize, i32)],
+                           model: &QuantizedModel) -> Result<Tensor> {
+        let prep = prepare_packed(&entry.config, model)?;
+        decode_batch_with(&prep, pool, active)
     }
 }
 
@@ -116,8 +131,12 @@ impl PMat<'_> {
             PMat::DenseRef(w) => matmul(x, w),
             PMat::Stacked(t, l) => stacked_matmul(x, t, *l),
             PMat::Packed(p) => {
+                // All three kernels are bit-identical per row; the split
+                // picks the blocking that fits the input's shape.
                 if x.rows() == 1 {
                     Tensor::new(fused_vecmat(x.data(), p), vec![1, p.n])
+                } else if x.rows() <= DECODE_BATCH_ROWS {
+                    fused_gemm_small(x, p)
                 } else {
                     fused_matmul(x, p, 1)
                 }
@@ -125,6 +144,11 @@ impl PMat<'_> {
         }
     }
 }
+
+/// Row-count threshold under which the packed path uses the small-batch
+/// `fused_gemm_small` (one weight-row decode shared by all rows) instead
+/// of the K-panel `fused_matmul`. Decode batches live well under this.
+const DECODE_BATCH_ROWS: usize = 16;
 
 /// `x [M, K] @ stacked[l] [K, N]` over a borrowed slice of a [L, K, N]
 /// tensor. Plain ikj loop with k ascending — the same accumulation order
@@ -235,35 +259,46 @@ fn prepare_dense_ref<'a>(cfg: &'a ModelConfig, w: &'a Weights)
 }
 
 fn prepare_packed<'a>(cfg: &'a ModelConfig, qm: &'a QuantizedModel)
-    -> Prepared<'a> {
+    -> Result<Prepared<'a>> {
     let w = &qm.weights;
-    let pick = |l: usize, name: &'static str| -> PMat<'a> {
+    ensure!(qm.mats.len() == cfg.n_layers,
+            "quantized model has {} layers but config '{}' expects {} — \
+             was it quantized for a different model?",
+            qm.mats.len(), cfg.name, cfg.n_layers);
+    let pick = |l: usize, name: &'static str| -> Result<PMat<'a>> {
         match qm.mats[l].get(name) {
-            Some(QMat::Packed(p)) => PMat::Packed(p),
-            Some(QMat::Dense(t)) => PMat::DenseRef(t),
-            None => panic!("quantized model missing {name} at layer {l}"),
+            Some(QMat::Packed(p)) => Ok(PMat::Packed(p)),
+            Some(QMat::Dense(t)) => Ok(PMat::DenseRef(t)),
+            // A malformed QuantizedModel must surface as a serving error,
+            // not abort the server (DESIGN.md "Packed serving format").
+            None => anyhow::bail!(
+                "quantized model for '{}' is missing projection '{name}' \
+                 at layer {l} (have: {:?})",
+                cfg.name,
+                qm.mats[l].keys().collect::<Vec<_>>()),
         }
     };
-    let layers = (0..cfg.n_layers)
-        .map(|l| PLayer {
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for l in 0..cfg.n_layers {
+        layers.push(PLayer {
             ln1: w.get("ln1").slice0(l),
             ln2: w.get("ln2").slice0(l),
-            wq: pick(l, "wq"),
-            wk: pick(l, "wk"),
-            wv: pick(l, "wv"),
-            wo: pick(l, "wo"),
-            wgate: pick(l, "wgate"),
-            wup: pick(l, "wup"),
-            wdown: pick(l, "wdown"),
-        })
-        .collect();
-    Prepared {
+            wq: pick(l, "wq")?,
+            wk: pick(l, "wk")?,
+            wv: pick(l, "wv")?,
+            wo: pick(l, "wo")?,
+            wgate: pick(l, "wgate")?,
+            wup: pick(l, "wup")?,
+            wdown: pick(l, "wdown")?,
+        });
+    }
+    Ok(Prepared {
         cfg,
         embed: w.get("embed"),
         unembed: w.get("unembed"),
         lnf: w.get("lnf"),
         layers,
-    }
+    })
 }
 
 /// Per-sequence probe activations (row-major [s, X] buffers).
@@ -405,16 +440,25 @@ fn forward_seq(prep: &Prepared, tokens: &[i32], collect: bool)
 
 /// cos/sin rows for absolute positions `start..start + len` (one row of
 /// `half` frequencies per position). The full forward uses `start = 0`;
-/// the decode path asks for the single row at the cache position, with
-/// bit-identical float math.
+/// the decode path asks for one row per active sequence at its cache
+/// position (`rope_tables_at`), with bit-identical float math.
 fn rope_tables(start: usize, len: usize, half: usize)
     -> (Vec<f32>, Vec<f32>) {
+    let positions: Vec<usize> = (start..start + len).collect();
+    rope_tables_at(&positions, half)
+}
+
+/// cos/sin rows for arbitrary absolute positions, one row per entry —
+/// the batched decode step's sequences each sit at their own position.
+fn rope_tables_at(positions: &[usize], half: usize)
+    -> (Vec<f32>, Vec<f32>) {
+    let len = positions.len();
     let mut cos = vec![0.0f32; len * half];
     let mut sin = vec![0.0f32; len * half];
-    for si in 0..len {
+    for (si, &p) in positions.iter().enumerate() {
         for j in 0..half {
             let inv = ROPE_BASE.powf(-(j as f32) / half as f32);
-            let ang = (start + si) as f32 * inv;
+            let ang = p as f32 * inv;
             cos[si * half + j] = ang.cos();
             sin[si * half + j] = ang.sin();
         }
@@ -559,46 +603,81 @@ fn decode_attention(q: &[f32], kc: &[f32], vc: &[f32], slots: &[usize],
     ctx
 }
 
-/// One KV-cached decode step over a prepared (dense-ref or packed) model:
-/// single-row versions of the exact kernels `forward_seq` runs (RMSNorm,
-/// RoPE at the cache's absolute position, GQA attention over the cache
-/// window, SwiGLU), appending this token's K/V to every layer and
-/// advancing the cache. Returns next-token logits [vocab].
+/// One KV-cached decode step over a prepared (dense-ref or packed) model
+/// — the B=1 case of `decode_batch_with` over the cache's one-slot pool.
+/// Returns next-token logits [vocab].
 fn decode_with(prep: &Prepared, cache: &mut KvCache, token: i32)
     -> Result<Tensor> {
+    let v = prep.cfg.vocab;
+    let logits = decode_batch_with(prep, cache.pool_mut(), &[(0, token)])?;
+    Ok(logits.reshape(vec![v]))
+}
+
+/// One batched KV-cached decode step over a prepared (dense-ref or
+/// packed) model: every `(slot, token)` pair in `active` consumes one
+/// token at that slot's position. The batch shares each projection —
+/// one (fused-dequant) GEMM applies the weights to all rows, so a packed
+/// weight group is decoded once per step instead of once per sequence —
+/// while RoPE phases, K/V appends and the attention window stay strictly
+/// per-slot. Row math is identical to the single-sequence step (same
+/// kernels, k-ascending accumulation), so row `i` of the result is
+/// bit-identical to running `decode_step` on slot `active[i].0` alone.
+/// All slots advance after the last layer. Returns logits
+/// [active.len(), vocab], rows in `active` order.
+fn decode_batch_with(prep: &Prepared, pool: &mut KvCachePool,
+                     active: &[(usize, i32)]) -> Result<Tensor> {
     let cfg = prep.cfg;
     let d = cfg.d_model;
     let (nh, nkv, dh) = (cfg.n_heads, cfg.n_kv, cfg.d_head);
     let half = dh / 2;
-    ensure!(token >= 0 && (token as usize) < cfg.vocab,
-            "token id {token} out of range (vocab {})", cfg.vocab);
-    ensure!(cache.matches(cfg),
-            "KV cache geometry does not match model '{}' \
+    let m = active.len();
+    ensure!(m > 0, "decode_batch: empty step");
+    ensure!(pool.matches(cfg),
+            "KV cache pool geometry does not match model '{}' \
              (layers {} kv {} dh {})",
             cfg.name, cfg.n_layers, nkv, dh);
+    for (i, &(slot, token)) in active.iter().enumerate() {
+        ensure!(token >= 0 && (token as usize) < cfg.vocab,
+                "token id {token} out of range (vocab {})", cfg.vocab);
+        ensure!(pool.is_active(slot),
+                "decode_batch: slot {slot} is not admitted");
+        ensure!(!active[..i].iter().any(|&(s, _)| s == slot),
+                "decode_batch: slot {slot} appears twice in one step");
+    }
 
-    let pos = cache.pos();
-    let (cos, sin) = rope_tables(pos, 1, half);
-    // Ring slots this step's attention reads (the current token's slot is
+    // Per-sequence RoPE rows (each slot sits at its own position) and
+    // attention windows (each slot's ring row for the current token is
     // written by `append` below before any layer attends).
-    let slots = cache.step_slots();
+    let positions: Vec<usize> =
+        active.iter().map(|&(s, _)| pool.pos(s)).collect();
+    let (cos, sin) = rope_tables_at(&positions, half);
+    let windows: Vec<Vec<usize>> =
+        active.iter().map(|&(s, _)| pool.window_rows(s)).collect();
 
-    let mut h = Tensor::new(prep.embed.row(token as usize).to_vec(),
-                            vec![1, d]);
+    // h = embed[tokens]  [m, d]
+    let mut h = Tensor::zeros(vec![m, d]);
+    for (ri, &(_, token)) in active.iter().enumerate() {
+        h.row_mut(ri).copy_from_slice(prep.embed.row(token as usize));
+    }
+
+    let qw = nh * dh;
     for (l, layer) in prep.layers.iter().enumerate() {
-        // Attention block on the single row.
+        // Attention block: shared projections, per-slot attention.
         let x1 = rmsnorm(&h, &layer.ln1);
-        let mut q = layer.wq.apply(&x1); // [1, nh·dh]
-        let mut km = layer.wk.apply(&x1); // [1, nkv·dh]
-        let vm = layer.wv.apply(&x1); // [1, nkv·dh]
+        let mut q = layer.wq.apply(&x1); // [m, nh·dh]
+        let mut km = layer.wk.apply(&x1); // [m, nkv·dh]
+        let vm = layer.wv.apply(&x1); // [m, nkv·dh]
         rope(&mut q, nh, dh, &cos, &sin);
         rope(&mut km, nkv, dh, &cos, &sin);
-        cache.append(l, km.data(), vm.data());
-        let (kc, vc) = cache.layer(l);
-        let ctx = Tensor::new(
-            decode_attention(q.data(), kc, vc, &slots, nh, nkv, dh),
-            vec![1, nh * dh],
-        );
+        let mut ctx = vec![0.0f32; m * qw];
+        for (ri, &(slot, _)) in active.iter().enumerate() {
+            pool.append(slot, l, km.row(ri), vm.row(ri));
+            let (kc, vc) = pool.layer(l, slot);
+            let c = decode_attention(q.row(ri), kc, vc, &windows[ri],
+                                     nh, nkv, dh);
+            ctx[ri * qw..(ri + 1) * qw].copy_from_slice(&c);
+        }
+        let ctx = Tensor::new(ctx, vec![m, qw]);
         let attn_out = layer.wo.apply(&ctx);
         h = h.add(&attn_out);
         // FFN block (SwiGLU).
@@ -612,11 +691,12 @@ fn decode_with(prep: &Prepared, cache: &mut KvCache, token: i32)
         let down = layer.wdown.apply(&mid);
         h = h.add(&down);
     }
-    cache.advance();
+    for &(slot, _) in active {
+        pool.advance(slot);
+    }
 
     let hf = rmsnorm(&h, prep.lnf);
-    let logits = matmul(&hf, prep.unembed);
-    Ok(logits.reshape(vec![cfg.vocab]))
+    Ok(matmul(&hf, prep.unembed))
 }
 
 #[cfg(test)]
@@ -818,6 +898,115 @@ mod tests {
                                      cfg.d_head, cfg.seq);
         assert!(e.decode_step(&entry, &mut wrong, 0, &w).is_err());
         assert!(e.supports_decode());
+    }
+
+    #[test]
+    fn decode_batch_rows_match_single_steps() {
+        // Three sequences decoded as one batch must produce, row for
+        // row, the logits of three independent single-sequence decodes.
+        let entry = tiny_entry();
+        let cfg = entry.config.clone();
+        let mut rng = Rng::new(60);
+        let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        let e = NativeEngine::with_workers(1);
+        let streams: Vec<Vec<i32>> = (0..3)
+            .map(|_| {
+                (0..cfg.seq)
+                    .map(|_| rng.below(cfg.vocab) as i32)
+                    .collect()
+            })
+            .collect();
+        // Sequential reference.
+        let mut seq_logits: Vec<Vec<Tensor>> = Vec::new();
+        for s in &streams {
+            let mut cache = KvCache::for_model(&cfg, cfg.seq);
+            seq_logits.push(
+                s.iter()
+                    .map(|&t| {
+                        e.decode_step(&entry, &mut cache, t, &w).unwrap()
+                    })
+                    .collect(),
+            );
+        }
+        // Batched.
+        let mut pool = KvCachePool::for_model(&cfg, 3);
+        let slots: Vec<usize> =
+            (0..3).map(|_| pool.admit(cfg.seq).unwrap()).collect();
+        for step in 0..cfg.seq {
+            let active: Vec<(usize, i32)> = slots
+                .iter()
+                .zip(&streams)
+                .map(|(&slot, s)| (slot, s[step]))
+                .collect();
+            let logits =
+                e.decode_batch(&entry, &mut pool, &active, &w).unwrap();
+            assert_eq!(logits.dims(), &[3, cfg.vocab]);
+            for (ri, per_seq) in seq_logits.iter().enumerate() {
+                assert_eq!(logits.row(ri), per_seq[step].data(),
+                           "row {ri} step {step} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_batch_validates_slots_and_tokens() {
+        let entry = tiny_entry();
+        let cfg = entry.config.clone();
+        let mut rng = Rng::new(61);
+        let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        let e = NativeEngine::with_workers(1);
+        let mut pool = KvCachePool::for_model(&cfg, 2);
+        let s0 = pool.admit(cfg.seq).unwrap();
+        // Empty step.
+        assert!(e.decode_batch(&entry, &mut pool, &[], &w).is_err());
+        // Unadmitted slot.
+        assert!(e
+            .decode_batch(&entry, &mut pool, &[(s0 + 1, 0)], &w)
+            .is_err());
+        // Duplicate slot in one step.
+        assert!(e
+            .decode_batch(&entry, &mut pool, &[(s0, 0), (s0, 1)], &w)
+            .is_err());
+        // Out-of-range token.
+        assert!(e
+            .decode_batch(&entry, &mut pool, &[(s0, cfg.vocab as i32)],
+                          &w)
+            .is_err());
+        // Geometry mismatch.
+        let mut wrong = KvCachePool::new(cfg.n_layers + 1, cfg.n_kv,
+                                         cfg.d_head, 1);
+        wrong.admit(cfg.seq).unwrap();
+        assert!(e.decode_batch(&entry, &mut wrong, &[(0, 0)], &w)
+            .is_err());
+        // A failed step must not advance any slot.
+        assert_eq!(pool.pos(s0), 0);
+    }
+
+    #[test]
+    fn malformed_quantized_model_errors_instead_of_panicking() {
+        use crate::quant::Backend;
+        let entry = tiny_entry();
+        let cfg = entry.config.clone();
+        let mut rng = Rng::new(62);
+        let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        let mut qm = QuantizedModel::quantize(
+            &cfg, &w, &vec![4u8; cfg.n_layers], 8, Backend::Rtn, None, 1);
+        qm.mats[1].remove("wo");
+        let e = NativeEngine::with_workers(1);
+        let tokens = vec![0i32; cfg.seq];
+        let err = e
+            .forward_packed(&entry, &tokens, 1, &qm)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("missing projection 'wo' at layer 1"),
+                "unexpected error: {err}");
+        let mut cache = KvCache::for_model(&cfg, cfg.seq);
+        assert!(e
+            .decode_step_packed(&entry, &mut cache, 0, &qm)
+            .is_err());
+        // Wrong layer count is also an error, not a panic.
+        qm.mats.pop();
+        assert!(e.forward_packed(&entry, &tokens, 1, &qm).is_err());
     }
 
     #[test]

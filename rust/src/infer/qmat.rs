@@ -66,6 +66,27 @@ impl PackedMatrix {
 /// blocking so the two paths accumulate in the same order).
 const BK: usize = 64;
 
+/// Decode coordinates of packed weight row `kk`, shared by every fused
+/// kernel: (packed byte row, sub-byte shift, scale row, zero row). The
+/// kernels' per-row bit-identity contract depends on them all reading
+/// the layout identically — keep this the single source of truth.
+#[inline]
+fn row_decode(pm: &PackedMatrix, kk: usize)
+    -> (&[u8], u32, &[f32], &[f32]) {
+    let bits = pm.bits as usize;
+    let per = 8 / bits;
+    let n = pm.n;
+    let byte_row = kk / per;
+    let shift = (bits * (kk % per)) as u32;
+    let gr = kk / pm.group;
+    (
+        &pm.packed[byte_row * n..byte_row * n + n],
+        shift,
+        &pm.scale[gr * n..gr * n + n],
+        &pm.zero[gr * n..gr * n + n],
+    )
+}
+
 /// Fused dequant-matmul: `x [M, K] @ dequant(pm) -> [M, N]` without ever
 /// materializing the f32 weight. Each K panel of `BK` rows is decoded
 /// once into a small cache-resident buffer and reused across all M rows;
@@ -101,8 +122,6 @@ pub fn fused_matmul(x: &Tensor, pm: &PackedMatrix, workers: usize)
 fn fused_rows(xd: &[f32], r0: usize, r1: usize, pm: &PackedMatrix)
     -> Vec<f32> {
     let (k, n) = (pm.k, pm.n);
-    let bits = pm.bits as usize;
-    let per = 8 / bits;
     let mask = (1u8 << pm.bits) - 1;
     let rows = r1 - r0;
     let mut out = vec![0.0f32; rows * n];
@@ -113,12 +132,7 @@ fn fused_rows(xd: &[f32], r0: usize, r1: usize, pm: &PackedMatrix)
         let k1 = (k0 + BK).min(k);
         // Decode this K panel once: panel[kk-k0] = s·(code − z).
         for kk in k0..k1 {
-            let byte_row = kk / per;
-            let shift = (bits * (kk % per)) as u32;
-            let gr = kk / pm.group;
-            let srow = &pm.scale[gr * n..gr * n + n];
-            let zrow = &pm.zero[gr * n..gr * n + n];
-            let brow = &pm.packed[byte_row * n..byte_row * n + n];
+            let (brow, shift, srow, zrow) = row_decode(pm, kk);
             let prow = &mut panel[(kk - k0) * n..(kk - k0 + 1) * n];
             for c in 0..n {
                 let code = (brow[c] >> shift) & mask;
@@ -151,26 +165,69 @@ pub fn fused_vecmat(x: &[f32], pm: &PackedMatrix) -> Vec<f32> {
     let (k, n) = (pm.k, pm.n);
     assert_eq!(x.len(), k, "fused_vecmat: x len {} != packed K {k}",
                x.len());
-    let bits = pm.bits as usize;
-    let per = 8 / bits;
     let mask = (1u8 << pm.bits) - 1;
     let mut out = vec![0.0f32; n];
     for (kk, &a) in x.iter().enumerate() {
         if a == 0.0 {
             continue;
         }
-        let byte_row = kk / per;
-        let shift = (bits * (kk % per)) as u32;
-        let gr = kk / pm.group;
-        let srow = &pm.scale[gr * n..gr * n + n];
-        let zrow = &pm.zero[gr * n..gr * n + n];
-        let brow = &pm.packed[byte_row * n..byte_row * n + n];
+        let (brow, shift, srow, zrow) = row_decode(pm, kk);
         for c in 0..n {
             let code = (brow[c] >> shift) & mask;
             out[c] += a * (srow[c] * (code as f32 - zrow[c]));
         }
     }
     out
+}
+
+/// Small-batch fused dequant-GEMM — the continuous-batching decode
+/// kernel: `x [M, K] @ dequant(pm) -> [M, N]`, decoding each packed
+/// weight row ONCE per call and applying it to every row of `x`, so the
+/// per-token dequant + weight traffic of a decode step is divided by the
+/// number of concurrently active sequences. (Running `fused_vecmat` per
+/// sequence decodes the same weights M times.)
+///
+/// Unlike `fused_matmul` there is no K-panel staging buffer: one
+/// dequantized weight row (`[N]` floats) stays cache-resident while it is
+/// accumulated into all M output rows — the right blocking for the small
+/// M (≤ ~16) of a decode batch, where a BK×N panel would evict the
+/// output rows. Accumulation is k-ascending per output row with the same
+/// `s·(code − z)` grouping, so each row is bit-identical to
+/// `fused_vecmat` on that row (and to `fused_matmul`).
+pub fn fused_gemm_small(x: &Tensor, pm: &PackedMatrix) -> Tensor {
+    let (m, k) = (x.rows(), x.cols());
+    assert_eq!(k, pm.k, "fused_gemm_small: x cols {k} != packed K {}",
+               pm.k);
+    let n = pm.n;
+    let mask = (1u8 << pm.bits) - 1;
+    let xd = x.data();
+    let mut out = vec![0.0f32; m * n];
+    let mut wrow = vec![0.0f32; n];
+    for kk in 0..k {
+        // Skip the decode when no row consumes this weight row (mirrors
+        // the zero-skip in `fused_vecmat`, which never decodes it).
+        if xd[kk..].iter().step_by(k).all(|&a| a == 0.0) {
+            continue;
+        }
+        let (brow, shift, srow, zrow) = row_decode(pm, kk);
+        // Dequantize weight row kk once...
+        for c in 0..n {
+            let code = (brow[c] >> shift) & mask;
+            wrow[c] = srow[c] * (code as f32 - zrow[c]);
+        }
+        // ...and apply it to every active row.
+        for i in 0..m {
+            let a = xd[i * k + kk];
+            if a == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, w) in orow.iter_mut().zip(&wrow) {
+                *o += a * w;
+            }
+        }
+    }
+    Tensor::new(out, vec![m, n])
 }
 
 /// One projection of a quantized model: packed when the bit width has a
@@ -353,6 +410,44 @@ mod tests {
                           ({k}x{n}@{bits}b g={g})");
             Ok(())
         });
+    }
+
+    #[test]
+    fn fused_gemm_small_matches_fused_matmul_exactly() {
+        check("fused_gemm_small == fused_matmul", 20, |rng| {
+            let bits = if rng.f64() < 0.5 { 2u8 } else { 4u8 };
+            let k = 8 * (1 + rng.below(16));
+            let n = 1 + rng.below(20);
+            let m = 1 + rng.below(8); // the small-batch decode regime
+            let g = quant::fit_group(k, 8 * (1 + rng.below(4)));
+            let w = Tensor::randn(vec![k, n], rng);
+            let mut x = Tensor::randn(vec![m, k], rng);
+            // Exercise both skips: a zero coefficient in one row, and a
+            // weight row no row consumes (whole column of x zeroed).
+            x.data_mut()[rng.below(m * k)] = 0.0;
+            let dead_k = rng.below(k);
+            for i in 0..m {
+                x.data_mut()[i * k + dead_k] = 0.0;
+            }
+            let small = fused_gemm_small(&x, &pm_of(&w, bits, g));
+            let pm = pm_of(&w, bits, g);
+            let full = fused_matmul(&x, &pm, 1);
+            prop_ensure!(small == full,
+                         "small-batch GEMM diverged from fused_matmul \
+                          ({m}x{k}x{n}@{bits}b g={g})");
+            // Per-row bit-identity with the single-row kernel.
+            for i in 0..m {
+                let row = fused_vecmat(x.row(i), &pm);
+                prop_ensure!(row.as_slice() == small.row(i),
+                             "row {i} diverged from fused_vecmat");
+            }
+            Ok(())
+        });
+    }
+
+    fn pm_of(w: &Tensor, bits: u8, g: usize) -> PackedMatrix {
+        PackedMatrix::from_quantized(&rtn::quantize(
+            w, QuantSpec::new(bits, g)))
     }
 
     #[test]

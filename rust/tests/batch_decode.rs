@@ -1,0 +1,335 @@
+//! Continuous-batching acceptance property: batched decode over a
+//! multi-sequence cache pool must produce, per sequence and per step,
+//! the same logits as running `decode_step` on a private single-sequence
+//! cache — within 1e-4 — on the dense AND fused-packed paths, on random
+//! ragged-GQA shapes, with staggered admission/retirement (sequences
+//! join and leave mid-stream, slots are reused) and ring eviction
+//! triggered in at least one slot. Plus the generation-level property:
+//! `generate_batch` returns token-for-token what sequential `generate`
+//! returns for each request, regardless of co-batching.
+
+use nsds::infer::{generate, generate_batch, BatchEngine, GenConfig,
+                  KvCache, KvCachePool, ModelRef, NativeEngine,
+                  QuantizedModel, Sampling};
+use nsds::model::{ModelConfig, Weights};
+use nsds::prop_ensure;
+use nsds::quant::Backend;
+use nsds::runtime::ModelEntry;
+use nsds::util::prop::check;
+use nsds::util::rng::Rng;
+
+/// Random tiny model shape; the head counts are drawn independently so
+/// the cases cover MHA (nkv == nh), grouped (nkv | nh) and ragged GQA.
+/// Every projection's K dim stays a multiple of 4, the 2-bit packing
+/// granularity, so the same shapes serve packed.
+fn random_config(rng: &mut Rng) -> ModelConfig {
+    let n_heads = 1 + rng.below(6);
+    let n_kv = 1 + rng.below(n_heads);
+    ModelConfig {
+        name: "prop".into(),
+        vocab: 16 + rng.below(32),
+        d_model: 8 + 4 * rng.below(5),
+        n_heads,
+        n_kv,
+        d_head: 4 * (1 + rng.below(2)),
+        d_ffn: 8 * (1 + rng.below(4)),
+        n_layers: 1 + rng.below(3),
+        seq: 4 + rng.below(9),
+    }
+}
+
+fn random_tokens(rng: &mut Rng, n: usize, vocab: usize) -> Vec<i32> {
+    (0..n).map(|_| rng.below(vocab) as i32).collect()
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// One decoding request: a token stream and its ring capacity (caps
+/// smaller than the stream trigger sliding-window eviction — in BOTH
+/// drivers, which must agree on the evicted regime too).
+struct Stream {
+    tokens: Vec<i32>,
+    cap: usize,
+}
+
+/// Ground truth: each stream decoded alone through `decode_step` on its
+/// own single-sequence cache. Returns per-stream, per-step logits.
+fn sequential_logits(exec: &NativeEngine, entry: &ModelEntry,
+                     model: ModelRef, streams: &[Stream])
+                     -> anyhow::Result<Vec<Vec<Vec<f32>>>> {
+    let cfg = &entry.config;
+    let mut out = Vec::with_capacity(streams.len());
+    for s in streams {
+        let mut cache = KvCache::new(cfg.n_layers, cfg.n_kv, cfg.d_head,
+                                     s.cap);
+        let mut rows = Vec::with_capacity(s.tokens.len());
+        for &t in &s.tokens {
+            let l = model.decode_step(exec, entry, &mut cache, t)?;
+            rows.push(l.into_data());
+        }
+        out.push(rows);
+    }
+    Ok(out)
+}
+
+/// The batched driver: a pool with FEWER slots than streams, admission
+/// staggered by `stagger` steps, retirement as each stream ends — so
+/// sequences join and leave mid-stream and freed slots are reused by
+/// later admissions while survivors keep decoding uninterrupted.
+fn batched_logits(exec: &NativeEngine, entry: &ModelEntry,
+                  model: ModelRef, streams: &[Stream], max_slots: usize,
+                  stagger: usize)
+                  -> anyhow::Result<Vec<Vec<Vec<f32>>>> {
+    let cfg = &entry.config;
+    let v = cfg.vocab;
+    let mut pool = KvCachePool::for_model(cfg, max_slots);
+    let mut out: Vec<Vec<Vec<f32>>> =
+        streams.iter().map(|_| Vec::new()).collect();
+    // (stream index, slot, tokens fed so far)
+    let mut active: Vec<(usize, usize, usize)> = Vec::new();
+    let mut next_admit = 0usize;
+    let mut step = 0usize;
+    let mut saw_mixed_batch = false;
+    while next_admit < streams.len() || !active.is_empty() {
+        while next_admit < streams.len()
+            && step >= next_admit * stagger
+            && pool.free_count() > 0
+        {
+            let slot = pool.admit(streams[next_admit].cap).unwrap();
+            active.push((next_admit, slot, 0));
+            next_admit += 1;
+        }
+        step += 1;
+        if active.is_empty() {
+            continue; // stagger gap before the next admission is due
+        }
+        saw_mixed_batch |= active.len() > 1;
+        let batch: Vec<(usize, i32)> = active
+            .iter()
+            .map(|&(si, slot, fed)| (slot, streams[si].tokens[fed]))
+            .collect();
+        let logits = model.decode_batch(exec, entry, &mut pool, &batch)?;
+        assert_eq!(logits.dims(), &[batch.len(), v]);
+        let mut keep = Vec::with_capacity(active.len());
+        for (ri, (si, slot, fed)) in active.drain(..).enumerate() {
+            out[si].push(logits.row(ri).to_vec());
+            if fed + 1 == streams[si].tokens.len() {
+                pool.retire(slot); // leave mid-stream; slot is reusable
+            } else {
+                keep.push((si, slot, fed + 1));
+            }
+        }
+        active = keep;
+    }
+    assert!(saw_mixed_batch || streams.len() == 1,
+            "driver never batched >1 sequence");
+    assert_eq!(pool.active_count(), 0);
+    Ok(out)
+}
+
+/// Random streams: varied lengths, slots scarcer than streams, and
+/// stream 0 capped below its length so its ring evicts mid-run.
+fn random_streams(rng: &mut Rng, cfg: &ModelConfig) -> Vec<Stream> {
+    let n = 3 + rng.below(3); // 3..=5 sequences over 2 slots
+    (0..n)
+        .map(|i| {
+            let len = cfg.seq + rng.below(cfg.seq.max(2));
+            let tokens = random_tokens(rng, len, cfg.vocab);
+            // Eviction in at least one slot; exact decode in the rest.
+            let cap = if i == 0 { (len / 2).max(1) } else { len };
+            Stream { tokens, cap }
+        })
+        .collect()
+}
+
+fn compare(seq: &[Vec<Vec<f32>>], bat: &[Vec<Vec<f32>>]) -> f32 {
+    let mut worst = 0.0f32;
+    for (s, b) in seq.iter().zip(bat) {
+        assert_eq!(s.len(), b.len(), "step-count mismatch");
+        for (srow, brow) in s.iter().zip(b) {
+            worst = worst.max(max_abs_diff(srow, brow));
+        }
+    }
+    worst
+}
+
+#[test]
+fn batched_decode_matches_sequential_dense() {
+    check("batched == sequential decode (dense)", 10, |rng| {
+        let cfg = random_config(rng);
+        let entry = ModelEntry::synthetic(cfg.clone());
+        let w = Weights::synth(&cfg, rng, &[], &[]);
+        let exec = NativeEngine::with_workers(1 + rng.below(3));
+        let streams = random_streams(rng, &cfg);
+        let stagger = 1 + rng.below(3);
+        let seq = sequential_logits(&exec, &entry, ModelRef::Dense(&w),
+                                    &streams)
+            .map_err(|e| e.to_string())?;
+        let bat = batched_logits(&exec, &entry, ModelRef::Dense(&w),
+                                 &streams, 2, stagger)
+            .map_err(|e| e.to_string())?;
+        let worst = compare(&seq, &bat);
+        prop_ensure!(worst < 1e-4,
+                     "dense batched decode diverged: {worst} \
+                      (nh={} nkv={} dh={} L={} streams={} stagger={})",
+                     cfg.n_heads, cfg.n_kv, cfg.d_head, cfg.n_layers,
+                     streams.len(), stagger);
+        Ok(())
+    });
+}
+
+#[test]
+fn batched_decode_matches_sequential_packed() {
+    check("batched == sequential decode (packed)", 6, |rng| {
+        let cfg = random_config(rng);
+        let entry = ModelEntry::synthetic(cfg.clone());
+        let w = Weights::synth(&cfg, rng, &[], &[]);
+        let bits: Vec<u8> = (0..cfg.n_layers)
+            .map(|_| if rng.f64() < 0.5 { 2 } else { 4 })
+            .collect();
+        let backend =
+            if rng.f64() < 0.5 { Backend::Rtn } else { Backend::Hqq };
+        let qm = QuantizedModel::quantize(&cfg, &w, &bits, 8, backend,
+                                          None, 1);
+        let exec = NativeEngine::with_workers(1 + rng.below(3));
+        let streams = random_streams(rng, &cfg);
+        let stagger = 1 + rng.below(3);
+        let seq = sequential_logits(&exec, &entry, ModelRef::Packed(&qm),
+                                    &streams)
+            .map_err(|e| e.to_string())?;
+        let bat = batched_logits(&exec, &entry, ModelRef::Packed(&qm),
+                                 &streams, 2, stagger)
+            .map_err(|e| e.to_string())?;
+        let worst = compare(&seq, &bat);
+        prop_ensure!(worst < 1e-4,
+                     "packed batched decode diverged: {worst} \
+                      (bits {bits:?}, nh={} nkv={} dh={} stagger={})",
+                     cfg.n_heads, cfg.n_kv, cfg.d_head, stagger);
+        Ok(())
+    });
+}
+
+/// Generation-level: a continuous batch with more requests than slots
+/// (mixed greedy / seeded top-k, a stop token, an evicting cap) must
+/// reproduce each request's sequential `generate` output exactly.
+#[test]
+fn generate_batch_matches_sequential_generate() {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(70);
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let qm = QuantizedModel::quantize(&cfg, &w,
+                                      &vec![4u8; cfg.n_layers], 8,
+                                      Backend::Hqq, None, 1);
+    let exec = NativeEngine::with_workers(2);
+    for model in [ModelRef::Dense(&w), ModelRef::Packed(&qm)] {
+        let reqs: Vec<(Vec<i32>, GenConfig)> = (0..7)
+            .map(|i| {
+                let plen = 1 + rng.below(5);
+                let prompt = random_tokens(&mut rng, plen, cfg.vocab);
+                let sampling = if i % 2 == 0 {
+                    Sampling::Greedy
+                } else {
+                    Sampling::TopK { k: 4, temperature: 1.1 }
+                };
+                let gc = GenConfig {
+                    max_new: 3 + rng.below(6),
+                    sampling,
+                    seed: 40 + i as u64,
+                    stop: if i == 2 { vec![1] } else { Vec::new() },
+                    // One request decodes in the evicted regime.
+                    cap: if i == 3 { 2 } else { 0 },
+                };
+                (prompt, gc)
+            })
+            .collect();
+        let direct: Vec<_> = reqs
+            .iter()
+            .map(|(p, gc)| generate(&exec, &entry, model, p, gc).unwrap())
+            .collect();
+        // 3 slots for 7 requests: admissions wait for retirements.
+        let batched =
+            generate_batch(&exec, &entry, model, &reqs, 3).unwrap();
+        assert_eq!(batched.len(), direct.len());
+        for (i, (b, d)) in batched.iter().zip(&direct).enumerate() {
+            assert_eq!(b.tokens, d.tokens,
+                       "request {i}: batched generation diverged");
+            assert_eq!(b.stopped, d.stopped, "request {i}: stop reason");
+            assert_eq!(b.stats.prompt_tokens, d.stats.prompt_tokens);
+            assert_eq!(b.stats.gen_tokens, d.stats.gen_tokens);
+        }
+    }
+}
+
+/// The engine surface the server schedules through: submissions while
+/// the engine is mid-stream are admitted as slots free up, outputs are
+/// unaffected by what co-batches, and bad prompts are rejected upfront.
+#[test]
+fn batch_engine_mid_stream_submission_and_validation() {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(71);
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let exec = NativeEngine::with_workers(1);
+    let model = ModelRef::Dense(&w);
+
+    let mk = |seed: u64, plen: usize, rng: &mut Rng| {
+        let prompt = random_tokens(rng, plen, cfg.vocab);
+        let gc = GenConfig {
+            max_new: 5,
+            sampling: Sampling::TopK { k: 3, temperature: 0.9 },
+            seed,
+            ..GenConfig::default()
+        };
+        (prompt, gc)
+    };
+    let a = mk(1, 3, &mut rng);
+    let b = mk(2, 5, &mut rng);
+    let c = mk(3, 2, &mut rng);
+    let direct: Vec<_> = [&a, &b, &c]
+        .iter()
+        .map(|(p, gc)| generate(&exec, &entry, model, p, gc).unwrap())
+        .collect();
+
+    let mut engine: BatchEngine<&'static str> =
+        BatchEngine::new(&cfg, 2);
+    assert!(engine.check(&[]).is_err());
+    assert!(engine.check(&[cfg.vocab as i32]).is_err());
+    assert!(engine
+        .submit("bad", vec![-1], GenConfig::default())
+        .is_err());
+    assert!(engine.is_idle());
+
+    engine.submit("a", a.0.clone(), a.1.clone()).unwrap();
+    engine.submit("b", b.0.clone(), b.1.clone()).unwrap();
+    let mut finished = Vec::new();
+    // Run a few steps with both slots occupied, then submit c
+    // mid-stream — it must wait for a retirement, then join.
+    for _ in 0..3 {
+        finished.extend(engine.step(&exec, &entry, model).unwrap());
+    }
+    assert_eq!(engine.in_flight(), 2);
+    engine.submit("c", c.0.clone(), c.1.clone()).unwrap();
+    assert_eq!(engine.in_flight(), 3);
+    while !engine.is_idle() {
+        finished.extend(engine.step(&exec, &entry, model).unwrap());
+    }
+    assert_eq!(finished.len(), 3);
+    for (tag, gen) in finished {
+        let want = match tag {
+            "a" => &direct[0],
+            "b" => &direct[1],
+            "c" => &direct[2],
+            _ => unreachable!(),
+        };
+        assert_eq!(gen.tokens, want.tokens, "request {tag}");
+        assert_eq!(gen.stopped, want.stopped, "request {tag}");
+    }
+    // Idle engine steps are no-ops.
+    assert!(engine.step(&exec, &entry, model).unwrap().is_empty());
+}

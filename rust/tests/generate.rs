@@ -287,6 +287,45 @@ fn concurrent_generation_through_server_matches_direct() {
 }
 
 #[test]
+fn fatal_serve_error_fails_clients_loudly_instead_of_hanging() {
+    // Swapping in a malformed packed model (missing projection) makes
+    // the next decode step fail. serve must return the error, resolve
+    // every scheduled generation's reply with an error (not leave it
+    // hanging), and mark the queue stopped so later submissions error.
+    let (entry, w) = tiny_model(95);
+    let cfg = entry.config.clone();
+    let mut bad = QuantizedModel::quantize(&cfg, &w, &[4, 4, 4], 8,
+                                           Backend::Rtn, None, 1);
+    bad.mats[0].remove("wq");
+    let queue = ServerQueue::new(4);
+    let client = Client::new(queue.clone(), cfg.seq);
+
+    let bad2 = bad.clone();
+    let client2 = client.clone();
+    let t = std::thread::spawn(move || {
+        client2.swap_packed(bad2);
+        let res = client2.generate(vec![1, 2, 3], GenConfig::default());
+        assert!(res.is_err(), "generation on a malformed variant must \
+                               fail, not hang");
+        res.unwrap_err().to_string()
+    });
+
+    let exec = NativeEngine::with_workers(1);
+    let serve_res = serve(&exec, &entry, 2,
+                          ServedWeights::Dense(w.clone()), &queue);
+    assert!(serve_res.is_err(), "serve must surface the fatal error");
+    let client_err = t.join().unwrap();
+    assert!(client_err.contains("server failed")
+                || client_err.contains("server dropped request"),
+            "unexpected client error: {client_err}");
+    // The queue is stopped: new submissions fail fast.
+    assert!(client.submit(vec![0; cfg.seq]).is_err());
+    assert!(client
+        .submit_generate(vec![0], GenConfig::default())
+        .is_err());
+}
+
+#[test]
 fn server_rejects_empty_prompt_and_swaps_apply_to_generation() {
     let (entry, w) = tiny_model(94);
     let cfg = entry.config.clone();
