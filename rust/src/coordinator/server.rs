@@ -11,7 +11,11 @@
 //! free KV-cache slots and advances every in-flight generation by one
 //! batched decode step, so concurrent generations share each weight
 //! read (one fused dequant per group per step on the packed path)
-//! instead of fanning whole generations across pool workers. Scheduler
+//! instead of fanning whole generations across pool workers. Admission
+//! is prefix-aware over the paged KV pool: a request whose prompt
+//! shares a tokenized prefix with a resident sequence references the
+//! resident pages copy-on-write and only prefills the tail
+//! (`gen_shared_tokens` counts the prefill work saved). Scheduler
 //! intake is bounded (about two batches of generations), so excess
 //! requests stay in the bounded queue.
 //! Backpressure: submitters block while the queue is at `max_queue`.
@@ -98,6 +102,9 @@ pub struct ServerQueue {
     pub padded_rows: AtomicU64,
     pub gen_served: AtomicU64,
     pub gen_tokens: AtomicU64,
+    /// Prompt tokens admitted by shared-prefix page reference instead
+    /// of prefill (paged KV cache; see `KvCachePool::admit_shared`).
+    pub gen_shared_tokens: AtomicU64,
 }
 
 impl ServerQueue {
@@ -112,6 +119,7 @@ impl ServerQueue {
             padded_rows: AtomicU64::new(0),
             gen_served: AtomicU64::new(0),
             gen_tokens: AtomicU64::new(0),
+            gen_shared_tokens: AtomicU64::new(0),
         })
     }
 
@@ -153,6 +161,12 @@ impl ServerQueue {
             self.gen_served.load(Ordering::Relaxed),
             self.gen_tokens.load(Ordering::Relaxed),
         )
+    }
+
+    /// Prompt tokens the scheduler admitted by referencing resident
+    /// prefix pages instead of prefilling them.
+    pub fn gen_shared(&self) -> u64 {
+        self.gen_shared_tokens.load(Ordering::Relaxed)
     }
 }
 
@@ -359,6 +373,8 @@ fn serve_loop(exec: &(dyn Executor + Sync), entry: &ModelEntry,
         if !engine.is_idle() {
             let done =
                 engine.step(exec, entry, weights.model_ref())?;
+            q.gen_shared_tokens.store(engine.shared_prefix_tokens(),
+                                      Ordering::Relaxed);
             for (reply, gen) in done {
                 q.gen_served.fetch_add(1, Ordering::Relaxed);
                 q.gen_tokens.fetch_add(gen.tokens.len() as u64,

@@ -10,6 +10,15 @@
 //!   variants (e.g. FP32 vs a packed 2/4-bit model) on the same prompts;
 //!   the data-free check that an NSDS allocation preserves downstream
 //!   generation behavior, not just logit closeness.
+//!
+//! Both have `*_in_context` variants that condition every window on one
+//! shared context (e.g. a few-shot preamble): the windows decode as one
+//! batched stream, and the engine's prefix-aware admission over the
+//! paged KV pool means the context is prefilled ONCE and resident ONCE —
+//! later windows reference the first window's context pages
+//! copy-on-write instead of re-prefilling and re-storing them. That is
+//! the cheap-repeated-forward-pass regime data-free sensitivity sweeps
+//! (many scoring windows over one context) live in.
 
 use anyhow::{ensure, Result};
 
@@ -23,14 +32,21 @@ use crate::runtime::ModelEntry;
 /// metrics are identical to the sequential values.
 const SCORE_SLOTS: usize = 8;
 
-/// Greedy-decode every window's prompt in one batched stream.
+/// Greedy-decode every window's prompt — prefixed by the shared
+/// `context`, which the batched engine's prefix-aware admission keeps
+/// resident as ONE set of pages — in one batched stream.
 fn batch_greedy(exec: &dyn Executor, entry: &ModelEntry, model: ModelRef,
-                wins: &[(&[i32], &[i32])], gen_len: usize)
-                -> Result<Vec<Generation>> {
+                context: &[i32], wins: &[(&[i32], &[i32])],
+                gen_len: usize) -> Result<Vec<Generation>> {
     let cfg = greedy_cfg(gen_len);
     let reqs: Vec<(Vec<i32>, GenConfig)> = wins
         .iter()
-        .map(|(p, _)| (p.to_vec(), cfg.clone()))
+        .map(|(p, _)| {
+            let mut prompt = Vec::with_capacity(context.len() + p.len());
+            prompt.extend_from_slice(context);
+            prompt.extend_from_slice(p);
+            (prompt, cfg.clone())
+        })
         .collect();
     generate_batch(exec, entry, model, &reqs,
                    SCORE_SLOTS.min(reqs.len().max(1)))
@@ -63,11 +79,24 @@ pub fn continuation_match(exec: &dyn Executor, entry: &ModelEntry,
                           model: ModelRef, corpus: &[i32],
                           prompt_len: usize, gen_len: usize,
                           max_prompts: usize) -> Result<f64> {
+    continuation_match_in_context(exec, entry, model, &[], corpus,
+                                  prompt_len, gen_len, max_prompts)
+}
+
+/// `continuation_match` with every window conditioned on one shared
+/// `context` prefix. The context's KV pages are prefilled once and
+/// shared across all windows (copy-on-write), so scoring cost scales
+/// with the windows, not windows × context.
+#[allow(clippy::too_many_arguments)]
+pub fn continuation_match_in_context(
+    exec: &dyn Executor, entry: &ModelEntry, model: ModelRef,
+    context: &[i32], corpus: &[i32], prompt_len: usize, gen_len: usize,
+    max_prompts: usize) -> Result<f64> {
     ensure!(prompt_len > 0 && gen_len > 0, "empty window");
     let wins = windows(corpus, prompt_len, gen_len, max_prompts);
     ensure!(!wins.is_empty(),
             "corpus too short for a {prompt_len}+{gen_len} window");
-    let gens = batch_greedy(exec, entry, model, &wins, gen_len)?;
+    let gens = batch_greedy(exec, entry, model, context, &wins, gen_len)?;
     let mut hits = 0usize;
     let mut total = 0usize;
     for (g, (_, truth)) in gens.iter().zip(&wins) {
@@ -84,16 +113,29 @@ pub fn continuation_match(exec: &dyn Executor, entry: &ModelEntry,
 
 /// Token-level agreement between two variants' greedy generations on the
 /// same corpus prompts (1.0 = identical decoding behavior).
+#[allow(clippy::too_many_arguments)]
 pub fn greedy_agreement(exec: &dyn Executor, entry: &ModelEntry,
                         a: ModelRef, b: ModelRef, corpus: &[i32],
                         prompt_len: usize, gen_len: usize,
                         max_prompts: usize) -> Result<f64> {
+    greedy_agreement_in_context(exec, entry, a, b, &[], corpus,
+                                prompt_len, gen_len, max_prompts)
+}
+
+/// `greedy_agreement` with every window conditioned on one shared
+/// `context` prefix (prefilled once per variant, pages shared across
+/// that variant's windows).
+#[allow(clippy::too_many_arguments)]
+pub fn greedy_agreement_in_context(
+    exec: &dyn Executor, entry: &ModelEntry, a: ModelRef, b: ModelRef,
+    context: &[i32], corpus: &[i32], prompt_len: usize, gen_len: usize,
+    max_prompts: usize) -> Result<f64> {
     ensure!(prompt_len > 0 && gen_len > 0, "empty window");
     let wins = windows(corpus, prompt_len, gen_len, max_prompts);
     ensure!(!wins.is_empty(),
             "corpus too short for a {prompt_len}+{gen_len} window");
-    let gens_a = batch_greedy(exec, entry, a, &wins, gen_len)?;
-    let gens_b = batch_greedy(exec, entry, b, &wins, gen_len)?;
+    let gens_a = batch_greedy(exec, entry, a, context, &wins, gen_len)?;
+    let gens_b = batch_greedy(exec, entry, b, context, &wins, gen_len)?;
     let mut agree = 0usize;
     let mut total = 0usize;
     for (ga, gb) in gens_a.iter().zip(&gens_b) {

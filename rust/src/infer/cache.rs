@@ -1,54 +1,136 @@
 //! KV caches for incremental (autoregressive) decoding: a multi-sequence
-//! `KvCachePool` for continuous-batching decode, plus the single-sequence
-//! `KvCache` wrapper (one permanently-admitted pool slot) the B=1 paths
-//! keep using.
+//! **paged** `KvCachePool` for continuous-batching decode, plus the
+//! single-sequence `KvCache` wrapper (one permanently-admitted pool
+//! slot) the B=1 paths keep using.
 //!
-//! One pool slot holds, for every layer, a ring buffer of the roped K and
-//! raw V rows of the tokens decoded so far, in the GQA head layout
-//! (`n_kv · d_head` columns — query heads share their group's KV rows, so
-//! the cache stores `n_kv` heads, not `n_heads`). `decode_batch` appends
-//! each active sequence's K/V to every layer and attends over that slot's
-//! window, which is what makes per-token cost independent of the prefix
-//! length (the full-sequence `forward` recomputes the whole prefix every
-//! call).
+//! Storage is a pool-global page arena, not per-slot buffers. A **page**
+//! holds `PAGE_SIZE` positions of roped-K and raw-V rows for EVERY layer
+//! in the GQA head layout (`n_kv · d_head` columns — query heads share
+//! their group's KV rows, so the cache stores `n_kv` heads, not
+//! `n_heads`). Each slot maps its logical ring rows to pages through a
+//! **block table**; pages are allocated lazily on first write, so
+//! resident memory scales with the tokens a sequence actually holds, not
+//! with the worst-case capacity it was admitted with. Freed pages go to
+//! a free list and are recycled across slots.
 //!
-//! Slots are independent: each has its own position, its own ring
-//! capacity (fixed at `admit`), and its own eviction. While a slot's
-//! `pos < cap` it is exact: attention sees every previous token of that
-//! sequence and incremental decode matches the full forward bit-for-bit
-//! (see `rust/tests/decode_equivalence.rs` and
-//! `rust/tests/batch_decode.rs`). Once `pos` reaches `cap` the ring wraps
-//! and the oldest entries are evicted — sliding-window attention over the
-//! last `cap` positions (keys keep their absolute RoPE phases, the
-//! StreamingLLM-style regime without sink tokens).
+//! Pages are **reference counted** and shared copy-on-write:
+//! `admit_shared` admits a new sequence whose prompt prefix is already
+//! resident in a donor slot by referencing the donor's pages (full pages
+//! by refcount bump, the partial tail page by copy), and the first
+//! divergent `append` into a shared page copies it first — so identical
+//! prompt prefixes are prefilled once and resident once, however many
+//! sequences extend them.
 //!
-//! Admission/retirement (`admit` / `retire`) reuse slot indices through a
-//! free list, so a long-running batch scheduler keeps stable slot ids as
-//! sequences join and leave mid-stream.
+//! Logical semantics are unchanged from the contiguous pool: each slot
+//! has its own position and its own ring capacity (fixed at `admit`,
+//! heterogeneous caps coexist). While a slot's `pos < cap` it is exact:
+//! attention sees every previous token of that sequence and incremental
+//! decode matches the full forward bit-for-bit (see
+//! `rust/tests/decode_equivalence.rs` and `rust/tests/batch_decode.rs`).
+//! Once `pos` reaches `cap` the ring wraps and the oldest entries are
+//! evicted — sliding-window attention over the last `cap` positions
+//! (keys keep their absolute RoPE phases, the StreamingLLM-style regime
+//! without sink tokens) — implemented as block recycle: the wrapped ring
+//! row overwrites its block in place (copy-on-write first if the block
+//! is shared), so eviction never grows the arena.
+//!
+//! Admission/retirement (`admit` / `retire`) reuse slot indices through
+//! a free list, so a long-running batch scheduler keeps stable slot ids
+//! as sequences join and leave mid-stream.
 
 use crate::model::ModelConfig;
 
-/// Ring-buffered K/V rows for all layers of ONE decoding sequence.
+/// Positions per page. The trade: a smaller page wastes less on short
+/// sequences (a slot's minimum footprint is one page) and copies less on
+/// a copy-on-write fault, a larger one keeps block tables shorter and
+/// lets shared prefixes share more of their length (only FULL pages are
+/// shared by reference; the partial tail is copied). 16 positions keeps
+/// the per-slot minimum small against the tiny eval shapes while
+/// matching the block size block-table serving systems typically use.
+pub const PAGE_SIZE: usize = 16;
+
+/// Per-slot state: ring geometry plus the block table mapping logical
+/// ring rows to arena pages.
 #[derive(Clone, Debug)]
 struct SlotCache {
     cap: usize,
     /// Absolute position of the NEXT token to be decoded (== number of
     /// tokens fully appended so far).
     pos: usize,
-    /// Per layer: roped keys, [cap, nkv·dh] ring (row = position % cap).
-    k: Vec<Vec<f32>>,
-    /// Per layer: values, same layout.
-    v: Vec<Vec<f32>>,
+    /// Entry `b` backs ring rows `[b·PAGE_SIZE, (b+1)·PAGE_SIZE)`;
+    /// `None` until the slot first writes into that block.
+    table: Vec<Option<usize>>,
 }
 
-/// Multi-sequence KV cache: up to `max_slots` concurrently active
-/// sequences sharing one GQA layout, each with an independent ring.
+/// Multi-sequence paged KV cache: up to `max_slots` concurrently active
+/// sequences sharing one GQA layout and ONE page arena, each with an
+/// independent logical ring mapped through its block table.
 #[derive(Clone, Debug)]
 pub struct KvCachePool {
     n_layers: usize,
     nkv: usize,
     dh: usize,
     slots: Vec<Option<SlotCache>>,
+    /// Page arena, keys: page `p`, layer `l`, in-page row `r` lives at
+    /// `((p·n_layers + l)·PAGE_SIZE + r)·w .. +w`, `w = nkv·dh`.
+    k: Vec<f32>,
+    /// Page arena, values: same layout.
+    v: Vec<f32>,
+    /// Per-page reference counts; 0 ⇔ the page is on the free list.
+    refcount: Vec<u32>,
+    free: Vec<usize>,
+}
+
+/// Read-only view of one layer of one slot's K/V: resolves logical ring
+/// rows through the slot's block table into the shared page arena. This
+/// is what `decode_batch` gathers attention reads through — rows of one
+/// window may live on non-adjacent pages (and on pages shared with
+/// other slots).
+pub struct LayerKv<'a> {
+    k: &'a [f32],
+    v: &'a [f32],
+    table: &'a [Option<usize>],
+    n_layers: usize,
+    l: usize,
+    w: usize,
+}
+
+impl<'a> LayerKv<'a> {
+    /// Arena word offset of a ring row's K (and V) span. Hoist per-row
+    /// offsets out of per-head attention loops with this.
+    #[inline]
+    pub fn offset(&self, ring_row: usize) -> usize {
+        let page = self.table[ring_row / PAGE_SIZE].unwrap_or_else(|| {
+            panic!("attention read of unwritten ring row {ring_row} \
+                    (layer {})", self.l)
+        });
+        ((page * self.n_layers + self.l) * PAGE_SIZE
+         + ring_row % PAGE_SIZE) * self.w
+    }
+
+    /// K row (`nkv·dh` wide) at an `offset()` value.
+    #[inline]
+    pub fn k_at(&self, offset: usize) -> &'a [f32] {
+        &self.k[offset..offset + self.w]
+    }
+
+    /// V row (`nkv·dh` wide) at an `offset()` value.
+    #[inline]
+    pub fn v_at(&self, offset: usize) -> &'a [f32] {
+        &self.v[offset..offset + self.w]
+    }
+
+    /// K row of a logical ring row.
+    #[inline]
+    pub fn k_row(&self, ring_row: usize) -> &'a [f32] {
+        self.k_at(self.offset(ring_row))
+    }
+
+    /// V row of a logical ring row.
+    #[inline]
+    pub fn v_row(&self, ring_row: usize) -> &'a [f32] {
+        self.v_at(self.offset(ring_row))
+    }
 }
 
 impl KvCachePool {
@@ -61,6 +143,10 @@ impl KvCachePool {
             nkv,
             dh,
             slots: (0..max_slots).map(|_| None).collect(),
+            k: Vec::new(),
+            v: Vec::new(),
+            refcount: Vec::new(),
+            free: Vec::new(),
         }
     }
 
@@ -97,41 +183,175 @@ impl KvCachePool {
         slot < self.slots.len() && self.slots[slot].is_some()
     }
 
-    /// Admit a new sequence with ring capacity `cap`: returns its slot id,
-    /// or `None` when every slot is occupied (the scheduler keeps the
-    /// request pending and admits it when a sequence retires).
+    fn kv_width(&self) -> usize {
+        self.nkv * self.dh
+    }
+
+    /// f32 words one page occupies in EACH of the K and V arenas.
+    fn page_words(&self) -> usize {
+        self.n_layers * PAGE_SIZE * self.kv_width()
+    }
+
+    /// Pages ever allocated in the arena (in use + on the free list).
+    pub fn page_count(&self) -> usize {
+        self.refcount.len()
+    }
+
+    /// Pages currently referenced by at least one block table.
+    pub fn pages_in_use(&self) -> usize {
+        self.refcount.len() - self.free.len()
+    }
+
+    fn alloc_page(&mut self) -> usize {
+        if let Some(p) = self.free.pop() {
+            self.refcount[p] = 1;
+            return p;
+        }
+        let p = self.refcount.len();
+        self.refcount.push(1);
+        let words = self.page_words();
+        self.k.resize((p + 1) * words, 0.0);
+        self.v.resize((p + 1) * words, 0.0);
+        p
+    }
+
+    fn release_page(&mut self, page: usize) {
+        debug_assert!(self.refcount[page] > 0, "double free of page {page}");
+        self.refcount[page] -= 1;
+        if self.refcount[page] == 0 {
+            self.free.push(page);
+        }
+    }
+
+    /// Admit a new sequence with ring capacity `cap`: returns its slot
+    /// id, or `None` when every slot is occupied (the scheduler keeps
+    /// the request pending and admits it when a sequence retires). No
+    /// pages are allocated until the sequence appends — memory follows
+    /// tokens actually held, not the admitted capacity.
     pub fn admit(&mut self, cap: usize) -> Option<usize> {
-        assert!(cap > 0, "slot capacity must be positive");
+        assert!(cap > 0,
+                "admit: slot capacity must be positive (pool: {}/{} \
+                 slots active, {} pages in use)",
+                self.active_count(), self.max_slots(), self.pages_in_use());
         let slot = self.slots.iter().position(|s| s.is_none())?;
-        let w = cap * self.nkv * self.dh;
+        let blocks = cap.div_ceil(PAGE_SIZE);
         self.slots[slot] = Some(SlotCache {
             cap,
             pos: 0,
-            k: (0..self.n_layers).map(|_| vec![0.0; w]).collect(),
-            v: (0..self.n_layers).map(|_| vec![0.0; w]).collect(),
+            table: vec![None; blocks],
         });
         Some(slot)
     }
 
+    /// Admit a new sequence whose first `shared` positions are already
+    /// resident in `donor` (same tokens at the same absolute positions,
+    /// so the roped K rows are valid verbatim): full pages of the shared
+    /// prefix are referenced (refcount bump, copy-on-write on the first
+    /// divergent append), the partial tail page is copied, and the new
+    /// slot starts at `pos == shared` — only the un-shared remainder
+    /// needs prefilling. `shared == 0` degrades to a plain `admit`.
+    ///
+    /// The donor must still hold those positions exactly: `shared` may
+    /// not exceed the donor's appended position count, the donor's ring
+    /// must not have wrapped (wrapping evicts the prefix), and `shared`
+    /// must fit the new slot's own capacity.
+    pub fn admit_shared(&mut self, cap: usize, donor: usize,
+                        shared: usize) -> Option<usize> {
+        if shared == 0 {
+            return self.admit(cap);
+        }
+        assert!(cap > 0,
+                "admit_shared: slot capacity must be positive (pool: \
+                 {}/{} slots active)",
+                self.active_count(), self.max_slots());
+        assert!(self.is_active(donor),
+                "admit_shared: donor slot {donor} is not admitted \
+                 (pool: {}/{} slots active)",
+                self.active_count(), self.max_slots());
+        let (dpos, dcap) = (self.pos(donor), self.capacity(donor));
+        assert!(shared <= dpos,
+                "admit_shared: donor slot {donor} holds {dpos} \
+                 positions, cannot share {shared}");
+        assert!(dpos <= dcap,
+                "admit_shared: donor slot {donor} wrapped its ring \
+                 (pos {dpos} > cap {dcap}) — its prefix is evicted");
+        assert!(shared <= cap,
+                "admit_shared: shared prefix {shared} exceeds the new \
+                 slot's capacity {cap}");
+        let slot = self.slots.iter().position(|s| s.is_none())?;
+        let donor_table =
+            self.slots[donor].as_ref().expect("checked active")
+                .table.clone();
+        let full = shared / PAGE_SIZE;
+        let tail = shared % PAGE_SIZE;
+        let blocks = cap.div_ceil(PAGE_SIZE);
+        let mut table = vec![None; blocks];
+        for (b, entry) in table.iter_mut().enumerate().take(full) {
+            let page = donor_table[b]
+                .expect("donor block below pos must be mapped");
+            self.refcount[page] += 1;
+            *entry = Some(page);
+        }
+        if tail > 0 {
+            let src = donor_table[full]
+                .expect("donor tail block below pos must be mapped");
+            let dst = self.alloc_page();
+            let words = self.page_words();
+            // Whole-page copy: the rows past `tail` carry donor data
+            // the new slot overwrites before it can ever read them
+            // (attention windows stop at `pos`).
+            self.k.copy_within(src * words..(src + 1) * words,
+                               dst * words);
+            self.v.copy_within(src * words..(src + 1) * words,
+                               dst * words);
+            table[full] = Some(dst);
+        }
+        self.slots[slot] = Some(SlotCache { cap, pos: shared, table });
+        Some(slot)
+    }
+
     /// Retire a finished sequence, freeing its slot for the next
-    /// admission. The other slots are untouched — no positions shift.
+    /// admission and releasing its pages (a page shared with a survivor
+    /// stays resident until its last holder retires). The other slots
+    /// are untouched — no positions shift.
     pub fn retire(&mut self, slot: usize) {
-        assert!(self.is_active(slot), "retire of inactive slot {slot}");
-        self.slots[slot] = None;
+        assert!(self.is_active(slot),
+                "retire of inactive slot {slot} (pool: {}/{} slots \
+                 active, {} pages in use)",
+                self.active_count(), self.max_slots(), self.pages_in_use());
+        let table = self.slots[slot].take().expect("checked active").table;
+        for page in table.into_iter().flatten() {
+            self.release_page(page);
+        }
     }
 
     fn slot(&self, slot: usize) -> &SlotCache {
-        self.slots
-            .get(slot)
-            .and_then(|s| s.as_ref())
-            .unwrap_or_else(|| panic!("inactive slot {slot}"))
+        if slot >= self.slots.len() {
+            panic!("slot {slot} out of range (pool has {} slots)",
+                   self.slots.len());
+        }
+        match &self.slots[slot] {
+            Some(s) => s,
+            None => panic!(
+                "slot {slot} is not admitted (pool: {}/{} slots active, \
+                 {} pages in use)",
+                self.active_count(), self.max_slots(),
+                self.pages_in_use()),
+        }
     }
 
     fn slot_mut(&mut self, slot: usize) -> &mut SlotCache {
-        self.slots
-            .get_mut(slot)
-            .and_then(|s| s.as_mut())
-            .unwrap_or_else(|| panic!("inactive slot {slot}"))
+        if slot >= self.slots.len() {
+            panic!("slot {slot} out of range (pool has {} slots)",
+                   self.slots.len());
+        }
+        if self.slots[slot].is_none() {
+            panic!("slot {slot} is not admitted (pool: {}/{} slots \
+                    active, {} pages in use)",
+                   self.active_count(), self.max_slots(),
+                   self.pages_in_use());
+        }
+        self.slots[slot].as_mut().expect("checked above")
     }
 
     /// Absolute position of the slot's next token (RoPE phase of the
@@ -145,10 +365,45 @@ impl KvCachePool {
         self.slot(slot).cap
     }
 
-    /// Reset a slot to an empty sequence (buffers are reused, not zeroed
-    /// — every ring row is overwritten before attention can read it).
+    /// Reset a slot to an empty sequence, releasing its pages back to
+    /// the free list (page buffers are recycled pool-wide, not zeroed —
+    /// every row is overwritten before attention can read it).
     pub fn reset(&mut self, slot: usize) {
-        self.slot_mut(slot).pos = 0;
+        let s = self.slot_mut(slot);
+        s.pos = 0;
+        let pages: Vec<usize> =
+            s.table.iter_mut().filter_map(|e| e.take()).collect();
+        for p in pages {
+            self.release_page(p);
+        }
+    }
+
+    /// Page backing `block` of `slot`, private to the slot: allocated on
+    /// first write, copied on write while shared (refcount > 1) — the
+    /// copy-on-write point for shared prefix pages and the recycle point
+    /// for ring eviction (a wrapped row overwrites its block in place).
+    fn writable_block(&mut self, slot: usize, block: usize) -> usize {
+        let current = self.slot(slot).table[block];
+        match current {
+            None => {
+                let p = self.alloc_page();
+                self.slot_mut(slot).table[block] = Some(p);
+                p
+            }
+            Some(p) if self.refcount[p] > 1 => {
+                // First divergent write into a shared page.
+                let q = self.alloc_page();
+                let words = self.page_words();
+                self.k.copy_within(p * words..(p + 1) * words,
+                                   q * words);
+                self.v.copy_within(p * words..(p + 1) * words,
+                                   q * words);
+                self.release_page(p); // other holders keep the original
+                self.slot_mut(slot).table[block] = Some(q);
+                q
+            }
+            Some(p) => p,
+        }
     }
 
     /// Write the current token's K/V rows for layer `l` into the slot's
@@ -156,13 +411,18 @@ impl KvCachePool {
     /// `advance` commits the position after the last layer.
     pub fn append(&mut self, slot: usize, l: usize, krow: &[f32],
                   vrow: &[f32]) {
-        let w = self.nkv * self.dh;
+        let w = self.kv_width();
         debug_assert_eq!(krow.len(), w, "k row width");
         debug_assert_eq!(vrow.len(), w, "v row width");
-        let s = self.slot_mut(slot);
-        let row = s.pos % s.cap;
-        s.k[l][row * w..(row + 1) * w].copy_from_slice(krow);
-        s.v[l][row * w..(row + 1) * w].copy_from_slice(vrow);
+        let row = {
+            let s = self.slot(slot);
+            s.pos % s.cap
+        };
+        let page = self.writable_block(slot, row / PAGE_SIZE);
+        let off = ((page * self.n_layers + l) * PAGE_SIZE
+                   + row % PAGE_SIZE) * w;
+        self.k[off..off + w].copy_from_slice(krow);
+        self.v[off..off + w].copy_from_slice(vrow);
     }
 
     /// Commit the slot's current step: the next `append`/`window_rows`
@@ -171,11 +431,19 @@ impl KvCachePool {
         self.slot_mut(slot).pos += 1;
     }
 
-    /// Raw (k, v) ring buffers of layer `l` for a slot
-    /// ([cap, nkv·dh] row-major).
-    pub fn layer(&self, l: usize, slot: usize) -> (&[f32], &[f32]) {
+    /// View of layer `l`'s K/V for a slot, gathering through its block
+    /// table (see `LayerKv`).
+    pub fn layer_view(&self, l: usize, slot: usize) -> LayerKv<'_> {
+        debug_assert!(l < self.n_layers, "layer {l} out of range");
         let s = self.slot(slot);
-        (&s.k[l], &s.v[l])
+        LayerKv {
+            k: &self.k,
+            v: &self.v,
+            table: &s.table,
+            n_layers: self.n_layers,
+            l,
+            w: self.kv_width(),
+        }
     }
 
     /// Ring rows the slot's current step's attention reads, oldest →
@@ -189,13 +457,78 @@ impl KvCachePool {
         (lo..=hi).map(|p| p % s.cap).collect()
     }
 
-    /// Bytes resident in the active slots' K/V buffers.
+    /// Number of the slot's mapped pages currently shared with another
+    /// slot (refcount > 1) — the copy-on-write observable the
+    /// shared-prefix tests assert on.
+    pub fn shared_page_count(&self, slot: usize) -> usize {
+        self.slot(slot)
+            .table
+            .iter()
+            .flatten()
+            .filter(|&&p| self.refcount[p] > 1)
+            .count()
+    }
+
+    /// Bytes resident in referenced K/V pages. Pages on the free list
+    /// are excluded: they are reusable arena capacity, not sequence
+    /// state. Compare `contiguous_bytes`.
     pub fn bytes(&self) -> usize {
+        self.pages_in_use() * 2 * self.page_words() * 4
+    }
+
+    /// Bytes the pre-paging contiguous layout would hold resident for
+    /// the currently admitted slots (every slot pre-allocated at its
+    /// full capacity) — the memory-over-allocation baseline the paged
+    /// bench section reports against.
+    pub fn contiguous_bytes(&self) -> usize {
         self.slots
             .iter()
             .flatten()
-            .map(|s| self.n_layers * 2 * s.cap * self.nkv * self.dh * 4)
+            .map(|s| self.n_layers * 2 * s.cap * self.kv_width() * 4)
             .sum()
+    }
+
+    /// Block-accounting invariant, checked exhaustively: every page is
+    /// referenced by block tables exactly `refcount` times, and sits on
+    /// the free list exactly once iff its refcount is 0 — no leaks, no
+    /// double frees, no dangling references. Test hook for the paged
+    /// property suite; O(pages + mapped blocks).
+    pub fn check_page_accounting(&self) -> Result<(), String> {
+        let mut refs = vec![0u32; self.refcount.len()];
+        for (si, s) in self.slots.iter().enumerate() {
+            let Some(s) = s else { continue };
+            for (b, page) in s.table.iter().enumerate() {
+                if let Some(p) = *page {
+                    if p >= refs.len() {
+                        return Err(format!(
+                            "slot {si} block {b} maps unknown page {p}"));
+                    }
+                    refs[p] += 1;
+                }
+            }
+        }
+        let mut on_free = vec![0u32; self.refcount.len()];
+        for &p in &self.free {
+            if p >= on_free.len() {
+                return Err(format!("free list holds unknown page {p}"));
+            }
+            on_free[p] += 1;
+        }
+        for p in 0..self.refcount.len() {
+            if refs[p] != self.refcount[p] {
+                return Err(format!(
+                    "page {p}: refcount {} but {} block-table references",
+                    self.refcount[p], refs[p]));
+            }
+            let want = u32::from(self.refcount[p] == 0);
+            if on_free[p] != want {
+                return Err(format!(
+                    "page {p}: refcount {} but on the free list {} \
+                     times",
+                    self.refcount[p], on_free[p]));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -240,14 +573,15 @@ impl KvCache {
         self.pool.capacity(0)
     }
 
-    /// Reset to an empty cache (buffers are reused, not zeroed — every
-    /// slot is overwritten before attention can read it).
+    /// Reset to an empty cache (pages return to the pool's free list
+    /// and are recycled, not zeroed — every row is overwritten before
+    /// attention can read it).
     pub fn clear(&mut self) {
         self.pool.reset(0);
     }
 
     /// Write the current token's K/V rows for layer `l` into the ring
-    /// slot for `pos`. Called once per layer per step; `advance` commits
+    /// row for `pos`. Called once per layer per step; `advance` commits
     /// the position after the last layer.
     pub fn append(&mut self, l: usize, krow: &[f32], vrow: &[f32]) {
         self.pool.append(0, l, krow, vrow);
@@ -259,19 +593,19 @@ impl KvCache {
         self.pool.advance(0);
     }
 
-    /// Raw (k, v) ring buffers of layer `l` ([cap, nkv·dh] row-major).
-    pub fn layer(&self, l: usize) -> (&[f32], &[f32]) {
-        self.pool.layer(l, 0)
+    /// View of layer `l`'s K/V, gathered through the block table.
+    pub fn layer_view(&self, l: usize) -> LayerKv<'_> {
+        self.pool.layer_view(l, 0)
     }
 
-    /// Ring slots the current step's attention reads, oldest → newest,
-    /// INCLUDING the slot of the token being decoded. See
+    /// Ring rows the current step's attention reads, oldest → newest,
+    /// INCLUDING the row of the token being decoded. See
     /// `KvCachePool::window_rows`.
     pub fn step_slots(&self) -> Vec<usize> {
         self.pool.window_rows(0)
     }
 
-    /// Bytes resident in this cache's K/V buffers.
+    /// Bytes resident in this cache's referenced K/V pages.
     pub fn bytes(&self) -> usize {
         self.pool.bytes()
     }
@@ -307,9 +641,11 @@ mod tests {
         c.advance();
         assert_eq!(c.pos(), 1);
         assert_eq!(c.step_slots(), vec![0, 1]);
-        let (k0, v0) = c.layer(0);
-        assert_eq!(&k0[..8], krow.as_slice());
-        assert_eq!(&v0[..8], vrow.as_slice());
+        for l in 0..2 {
+            let view = c.layer_view(l);
+            assert_eq!(view.k_row(0), krow.as_slice(), "layer {l}");
+            assert_eq!(view.v_row(0), vrow.as_slice(), "layer {l}");
+        }
     }
 
     #[test]
@@ -322,30 +658,45 @@ mod tests {
             c.advance();
         }
         // pos=6: window is the last cap=4 logical positions 3,4,5,6 —
-        // slot order 3, 0, 1, 2.
+        // ring-row order 3, 0, 1, 2.
         assert_eq!(c.step_slots(), vec![3, 0, 1, 2]);
-        // Slot 0 holds position 4 (4 % 4 == 0), overwriting position 0.
-        let (k0, _) = c.layer(0);
-        assert_eq!(k0[0], 4.0);
+        // Ring row 0 holds position 4 (4 % 4 == 0), overwriting
+        // position 0 — eviction recycled the block in place, so the
+        // cache still occupies a single page.
+        assert_eq!(c.layer_view(0).k_row(0)[0], 4.0);
+        assert_eq!(c.pool().pages_in_use(), 1);
+        c.pool().check_page_accounting().unwrap();
     }
 
     #[test]
-    fn clear_resets_position() {
+    fn clear_resets_position_and_releases_pages() {
         let mut c = tiny();
         c.append(0, &[1.0; 8], &[1.0; 8]);
         c.advance();
+        assert_eq!(c.pool().pages_in_use(), 1);
         c.clear();
         assert_eq!(c.pos(), 0);
         assert_eq!(c.step_slots(), vec![0]);
+        assert_eq!(c.pool().pages_in_use(), 0);
+        assert_eq!(c.bytes(), 0);
+        c.pool().check_page_accounting().unwrap();
     }
 
     #[test]
     fn matches_config_geometry() {
         let cfg = ModelConfig::test_config();
-        let c = KvCache::for_model(&cfg, cfg.seq);
+        let mut c = KvCache::for_model(&cfg, cfg.seq);
         assert!(c.matches(&cfg));
         assert_eq!(c.n_layers(), cfg.n_layers);
         assert_eq!(c.capacity(), cfg.seq);
+        // Paged: admission alone holds no memory; the first append
+        // makes one page resident.
+        assert_eq!(c.bytes(), 0);
+        let w = cfg.n_kv * cfg.d_head;
+        for l in 0..cfg.n_layers {
+            c.append(l, &vec![0.5; w], &vec![0.5; w]);
+        }
+        c.advance();
         assert!(c.bytes() > 0);
         let other = KvCache::new(cfg.n_layers, cfg.n_kv + 1, cfg.d_head,
                                  cfg.seq);
@@ -362,7 +713,10 @@ mod tests {
         a.advance();
         assert_eq!(b.pos(), 1);
         assert_eq!(a.pos(), 2);
-        assert_eq!(b.layer(0).0[8], 0.0); // slot 1 untouched in the clone
+        // The clone deep-copies the arena: a's second append is not
+        // visible through b's view of row 0 (nor anywhere else in b).
+        assert_eq!(b.layer_view(0).k_row(0)[0], 2.0);
+        assert_eq!(a.layer_view(0).k_row(1)[0], 9.0);
     }
 
     #[test]
@@ -388,6 +742,7 @@ mod tests {
         assert_eq!(p.pos(d), 0);
         assert_eq!(p.capacity(d), 8);
         assert!(p.is_active(a) && p.is_active(c));
+        p.check_page_accounting().unwrap();
     }
 
     #[test]
@@ -405,10 +760,12 @@ mod tests {
         assert_eq!(p.pos(b), 1);
         assert_eq!(p.window_rows(a), vec![0, 1, 2, 3]);
         assert_eq!(p.window_rows(b), vec![0, 1]);
-        let (ka, _) = p.layer(0, a);
-        let (kb, _) = p.layer(0, b);
-        assert_eq!(ka[8], 1.0);
-        assert_eq!(kb[0], 9.0);
+        assert_eq!(p.layer_view(0, a).k_row(1)[0], 1.0);
+        assert_eq!(p.layer_view(0, b).k_row(0)[0], 9.0);
+        // Two independent (unshared) slots occupy two distinct pages.
+        assert_eq!(p.pages_in_use(), 2);
+        assert_eq!(p.shared_page_count(a), 0);
+        p.check_page_accounting().unwrap();
     }
 
     #[test]
@@ -426,12 +783,128 @@ mod tests {
         assert_eq!(p.window_rows(small).len(), 2);
         // Big slot: still exact, all 6 positions visible.
         assert_eq!(p.window_rows(big), vec![0, 1, 2, 3, 4, 5]);
+        // Eviction recycles the small slot's block in place: the pool
+        // still holds one page per slot.
+        assert_eq!(p.pages_in_use(), 2);
+        p.check_page_accounting().unwrap();
     }
 
     #[test]
-    #[should_panic(expected = "inactive slot")]
+    fn pages_allocate_lazily_and_follow_tokens_held() {
+        // cap spans 4 pages, but memory follows appends, page by page.
+        let mut p = KvCachePool::new(2, 1, 2, 1);
+        let s = p.admit(4 * PAGE_SIZE).unwrap();
+        assert_eq!(p.bytes(), 0);
+        assert!(p.contiguous_bytes() > 0, "contiguous pre-allocates");
+        for i in 0..PAGE_SIZE + 1 {
+            for l in 0..2 {
+                p.append(s, l, &[i as f32; 2], &[i as f32; 2]);
+            }
+            p.advance(s);
+        }
+        // PAGE_SIZE + 1 positions touch exactly two pages.
+        assert_eq!(p.pages_in_use(), 2);
+        assert!(p.bytes() < p.contiguous_bytes());
+        p.retire(s);
+        assert_eq!(p.pages_in_use(), 0);
+        p.check_page_accounting().unwrap();
+    }
+
+    #[test]
+    fn shared_prefix_pages_and_copy_on_write() {
+        let mut p = KvCachePool::new(1, 1, 2, 2);
+        let cap = 2 * PAGE_SIZE;
+        let a = p.admit(cap).unwrap();
+        // Donor holds PAGE_SIZE + 2 positions: one full page + a tail.
+        let held = PAGE_SIZE + 2;
+        for i in 0..held {
+            p.append(a, 0, &[i as f32; 2], &[-(i as f32); 2]);
+            p.advance(a);
+        }
+        assert_eq!(p.pages_in_use(), 2);
+        // Share the whole resident prefix: the full page is referenced,
+        // the 2-row tail is copied into a fresh page.
+        let b = p.admit_shared(cap, a, held).unwrap();
+        assert_eq!(p.pos(b), held);
+        assert_eq!(p.pages_in_use(), 3); // 1 shared + donor tail + copy
+        assert_eq!(p.shared_page_count(a), 1);
+        assert_eq!(p.shared_page_count(b), 1);
+        p.check_page_accounting().unwrap();
+        // Both views read identical prefix rows (same page for block 0).
+        for r in 0..held {
+            assert_eq!(p.layer_view(0, a).k_row(r),
+                       p.layer_view(0, b).k_row(r), "row {r}");
+        }
+        // b appends through its own tail page: no copy-on-write yet.
+        p.append(b, 0, &[99.0; 2], &[99.0; 2]);
+        p.advance(b);
+        assert_eq!(p.shared_page_count(a), 1);
+        // Fill b to capacity, then one more: the ring wraps into the
+        // SHARED block 0 — first divergent write, copy-on-write.
+        for _ in held + 1..cap {
+            p.append(b, 0, &[0.5; 2], &[0.5; 2]);
+            p.advance(b);
+        }
+        p.append(b, 0, &[7.0; 2], &[7.0; 2]);
+        p.advance(b);
+        assert_eq!(p.shared_page_count(a), 0, "page was copied");
+        assert_eq!(p.shared_page_count(b), 0);
+        // Donor's row 0 is untouched; b's row 0 holds the new write.
+        assert_eq!(p.layer_view(0, a).k_row(0)[0], 0.0);
+        assert_eq!(p.layer_view(0, b).k_row(0)[0], 7.0);
+        p.check_page_accounting().unwrap();
+        // Retiring the donor keeps b's referenced pages alive.
+        p.retire(a);
+        assert!(p.check_page_accounting().is_ok());
+        p.retire(b);
+        assert_eq!(p.pages_in_use(), 0);
+    }
+
+    #[test]
+    fn retired_donor_pages_survive_for_sharer() {
+        let mut p = KvCachePool::new(1, 1, 2, 2);
+        let a = p.admit(PAGE_SIZE).unwrap();
+        for i in 0..PAGE_SIZE {
+            p.append(a, 0, &[i as f32; 2], &[i as f32; 2]);
+            p.advance(a);
+        }
+        let b = p.admit_shared(PAGE_SIZE, a, PAGE_SIZE).unwrap();
+        p.retire(a);
+        p.check_page_accounting().unwrap();
+        // The shared page now belongs to b alone.
+        assert_eq!(p.pages_in_use(), 1);
+        assert_eq!(p.shared_page_count(b), 0);
+        assert_eq!(p.layer_view(0, b).k_row(3)[0], 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not admitted")]
     fn pool_rejects_inactive_slot_access() {
         let p = KvCachePool::new(1, 1, 2, 2);
         let _ = p.pos(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn pool_rejects_out_of_range_slot_access() {
+        let p = KvCachePool::new(1, 1, 2, 2);
+        let _ = p.pos(5);
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be positive")]
+    fn pool_rejects_zero_capacity_admit() {
+        let mut p = KvCachePool::new(1, 1, 2, 2);
+        let _ = p.admit(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot share")]
+    fn admit_shared_rejects_overlong_prefix() {
+        let mut p = KvCachePool::new(1, 1, 2, 2);
+        let a = p.admit(8).unwrap();
+        p.append(a, 0, &[1.0; 2], &[1.0; 2]);
+        p.advance(a);
+        let _ = p.admit_shared(8, a, 2); // donor holds only 1 position
     }
 }

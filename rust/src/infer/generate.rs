@@ -4,17 +4,21 @@
 //! active sequence one token through `Executor::decode_batch`, samples
 //! per slot (greedy or seeded temperature/top-k via `util::rng`, fully
 //! deterministic per request seed), and retires finished sequences
-//! without stalling the rest. `generate` is the B=1 case; `generate_batch`
-//! runs a whole request set through one engine. Executor- and
-//! variant-generic: a `ModelRef` dispatches to the dense or fused-packed
-//! decode path, so the same engine generates from FP32 weights and from
-//! packed 2/4-bit `QuantizedModel`s.
+//! without stalling the rest. Admission is prefix-aware over the paged
+//! pool: a prompt sharing a tokenized prefix with a resident sequence
+//! references that sequence's pages copy-on-write and prefills only the
+//! tail. `generate` is the B=1 case; `generate_batch` runs a whole
+//! request set through one engine. Executor- and variant-generic: a
+//! `ModelRef` dispatches to the dense or fused-packed decode path, so
+//! the same engine generates from FP32 weights and from packed 2/4-bit
+//! `QuantizedModel`s.
 
 use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
+use super::cache::PAGE_SIZE;
 use super::{Executor, KvCachePool, ModelRef};
 use crate::model::ModelConfig;
 use crate::runtime::ModelEntry;
@@ -170,6 +174,31 @@ struct Pending<T> {
     gc: GenConfig,
 }
 
+/// Token at index `i` of a request's consumed stream: prompt tokens
+/// first, then the fed-back samples.
+fn stream_token(prompt: &[i32], tokens: &[i32], i: usize) -> i32 {
+    if i < prompt.len() {
+        prompt[i]
+    } else {
+        tokens[i - prompt.len()]
+    }
+}
+
+/// Longest shared prefix between `prompt` and a donor's committed
+/// stream (its prompt plus already-sampled tokens), capped at `limit`.
+fn common_prefix(prompt: &[i32], d_prompt: &[i32], d_tokens: &[i32],
+                 limit: usize) -> usize {
+    let committed = d_prompt.len() + d_tokens.len();
+    let mut n = 0;
+    while n < limit.min(prompt.len()).min(committed) {
+        if stream_token(d_prompt, d_tokens, n) != prompt[n] {
+            break;
+        }
+        n += 1;
+    }
+    n
+}
+
 /// One admitted sequence: its slot, sampling state, and timings.
 struct Active<T> {
     tag: T,
@@ -202,6 +231,14 @@ struct Active<T> {
 /// scheduler (`coordinator::server`) relies on this to keep batched
 /// serving reproducible.
 ///
+/// Prefix sharing preserves this: when a prompt admits by referencing a
+/// resident sequence's prefix pages (`KvCachePool::admit_shared`), the
+/// referenced K/V rows were produced by the SAME deterministic decode
+/// for the SAME tokens at the SAME absolute positions under an unwrapped
+/// ring, so they are bit-identical to what the request's own prefill
+/// would have appended — sharing changes memory and prefill work, never
+/// tokens (pinned by `rust/tests/batch_decode.rs` shared-prefix tests).
+///
 /// `T` is an opaque per-request tag returned with the finished
 /// `Generation` (an index for `generate_batch`, a reply channel for the
 /// server).
@@ -210,6 +247,7 @@ pub struct BatchEngine<T> {
     pool: KvCachePool,
     pending: VecDeque<Pending<T>>,
     active: Vec<Active<T>>,
+    shared_tokens: u64,
 }
 
 impl<T> BatchEngine<T> {
@@ -222,7 +260,20 @@ impl<T> BatchEngine<T> {
             pool: KvCachePool::for_model(cfg, slots),
             pending: VecDeque::new(),
             active: Vec::new(),
+            shared_tokens: 0,
         }
+    }
+
+    /// The engine's paged cache pool (read-only: page/sharing state for
+    /// stats and tests).
+    pub fn pool(&self) -> &KvCachePool {
+        &self.pool
+    }
+
+    /// Prompt tokens admitted by shared-prefix page reference instead
+    /// of prefill, cumulative over the engine's life.
+    pub fn shared_prefix_tokens(&self) -> u64 {
+        self.shared_tokens
     }
 
     /// Validate a prompt without submitting it (the server routes a bad
@@ -271,15 +322,68 @@ impl<T> BatchEngine<T> {
         // Admit pending requests into free slots. Per-request cache
         // capacity mirrors the single-sequence policy: `gc.cap`, or
         // prompt + max_new (exact decode, no ring eviction) when 0.
-        while !self.pending.is_empty() && self.pool.free_count() > 0 {
-            let p = self.pending.pop_front().expect("non-empty");
+        //
+        // Admission is prefix-aware: a prompt sharing a tokenized
+        // prefix with a resident sequence admits by referencing that
+        // sequence's pages (`admit_shared`, copy-on-write) and starts
+        // prefilling at the first un-shared position. When a resident
+        // donor has committed (prompt + sampled) a common prefix of at
+        // least one full page that it has not finished APPENDING yet,
+        // the request is DEFERRED (kept pending, in order): the donor
+        // appends one position per step, so waiting a few steps turns
+        // the whole prefix into referenced pages instead of re-prefill.
+        // Progress is guaranteed — the appended prefix grows every step
+        // until it covers the committed one, and a retired donor simply
+        // drops out of consideration next step. Sub-page overlaps never
+        // defer (they admit at once, sharing whatever is resident).
+        // Sharing never changes outputs: shared rows are bit-identical
+        // to what the request's own prefill would append (see the
+        // determinism note below).
+        let mut deferred: Vec<Pending<T>> = Vec::new();
+        while self.pool.free_count() > 0 {
+            let Some(p) = self.pending.pop_front() else { break };
             let cap = if p.gc.cap > 0 {
                 p.gc.cap
             } else {
                 p.prompt.len() + p.gc.max_new
+            }
+            .max(1);
+            // Shareable length: leave at least the last prompt token to
+            // feed (its logits seed sampling) and fit the new ring.
+            let limit = (p.prompt.len() - 1).min(cap);
+            let mut best: Option<(usize, usize)> = None; // (slot, now)
+            let mut best_later = 0usize;
+            for a in &self.active {
+                // A wrapped donor has evicted its own prefix.
+                if self.pool.pos(a.slot) > self.pool.capacity(a.slot) {
+                    continue;
+                }
+                let committed = common_prefix(
+                    &p.prompt, &a.prompt, &a.tokens,
+                    limit.min(self.pool.capacity(a.slot)));
+                let now = committed.min(a.fed);
+                best_later = best_later.max(committed);
+                if now > best.map_or(0, |(_, s)| s) {
+                    best = Some((a.slot, now));
+                }
+            }
+            let now = best.map_or(0, |(_, s)| s);
+            if best_later >= PAGE_SIZE && best_later > now {
+                deferred.push(p);
+                continue;
+            }
+            let (slot, shared) = match best {
+                Some((donor, s)) if s > 0 => {
+                    let slot = self
+                        .pool
+                        .admit_shared(cap, donor, s)
+                        .expect("free slot checked");
+                    (slot, s)
+                }
+                _ => (self.pool.admit(cap).expect("free slot checked"),
+                      0),
             };
-            let slot =
-                self.pool.admit(cap.max(1)).expect("free slot checked");
+            self.shared_tokens += shared as u64;
             let rng = Rng::new(p.gc.seed);
             self.active.push(Active {
                 tag: p.tag,
@@ -287,11 +391,15 @@ impl<T> BatchEngine<T> {
                 prompt: p.prompt,
                 gc: p.gc,
                 rng,
-                fed: 0,
+                fed: shared,
                 tokens: Vec::new(),
                 t_admit: Instant::now(),
                 t_prefill_done: None,
             });
+        }
+        // Deferred requests keep their original queue position.
+        for p in deferred.into_iter().rev() {
+            self.pending.push_front(p);
         }
         if self.active.is_empty() {
             return Ok(Vec::new());

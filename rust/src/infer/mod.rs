@@ -20,7 +20,7 @@ use crate::model::Weights;
 use crate::runtime::ModelEntry;
 use crate::tensor::Tensor;
 
-pub use cache::{KvCache, KvCachePool};
+pub use cache::{KvCache, KvCachePool, LayerKv, PAGE_SIZE};
 pub use generate::{generate, generate_batch, BatchEngine, GenConfig,
                    GenStats, Generation, Sampling, StopReason};
 pub use native::NativeEngine;

@@ -11,7 +11,7 @@
 
 use anyhow::{ensure, Result};
 
-use super::cache::{KvCache, KvCachePool};
+use super::cache::{KvCache, KvCachePool, LayerKv};
 use super::qmat::{fused_gemm_small, fused_matmul, fused_vecmat,
                   PackedMatrix, QMat, QuantizedModel};
 use super::{Executor, Probes};
@@ -563,22 +563,24 @@ fn silu(x: f32) -> f32 {
 }
 
 /// Single-query causal GQA attention over a KV cache window: q [nh·dh],
-/// kc/vc are ring buffers [cap, nkv·dh], `slots` the window's ring rows
-/// oldest → newest (chronological, so the score/weight accumulation
-/// order matches the full-sequence `attention` and results agree to fp
-/// rounding). Same head mapping as `attention`.
-fn decode_attention(q: &[f32], kc: &[f32], vc: &[f32], slots: &[usize],
+/// `kv` the paged layer view (K/V rows gathered through the slot's
+/// block table), `rows` the window's ring rows oldest → newest
+/// (chronological, so the score/weight accumulation order matches the
+/// full-sequence `attention` and results agree to fp rounding). Same
+/// head mapping as `attention`. Page-table lookups are hoisted out of
+/// the per-head loops: one arena offset per window row.
+fn decode_attention(q: &[f32], kv: &LayerKv, rows: &[usize],
                     nh: usize, nkv: usize, dh: usize) -> Vec<f32> {
     let scale = 1.0 / (dh as f32).sqrt();
-    let kw = nkv * dh;
+    let offs: Vec<usize> = rows.iter().map(|&r| kv.offset(r)).collect();
     let mut ctx = vec![0.0f32; nh * dh];
-    let mut scores = vec![0.0f32; slots.len()];
+    let mut scores = vec![0.0f32; rows.len()];
     for hi in 0..nh {
-        let kv = hi * nkv / nh;
+        let kvh = hi * nkv / nh;
         let qrow = &q[hi * dh..(hi + 1) * dh];
         let mut mx = f32::NEG_INFINITY;
-        for (j, &slot) in slots.iter().enumerate() {
-            let krow = &kc[slot * kw + kv * dh..slot * kw + (kv + 1) * dh];
+        for (j, &off) in offs.iter().enumerate() {
+            let krow = &kv.k_at(off)[kvh * dh..(kvh + 1) * dh];
             let dot: f32 =
                 qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
             let sc = dot * scale;
@@ -592,9 +594,9 @@ fn decode_attention(q: &[f32], kc: &[f32], vc: &[f32], slots: &[usize],
         }
         let inv = 1.0 / denom;
         let crow = &mut ctx[hi * dh..(hi + 1) * dh];
-        for (j, &slot) in slots.iter().enumerate() {
+        for (j, &off) in offs.iter().enumerate() {
             let wgt = scores[j] * inv;
-            let vrow = &vc[slot * kw + kv * dh..slot * kw + (kv + 1) * dh];
+            let vrow = &kv.v_at(off)[kvh * dh..(kvh + 1) * dh];
             for (c, vv) in crow.iter_mut().zip(vrow) {
                 *c += wgt * vv;
             }
@@ -672,8 +674,8 @@ fn decode_batch_with(prep: &Prepared, pool: &mut KvCachePool,
         let mut ctx = vec![0.0f32; m * qw];
         for (ri, &(slot, _)) in active.iter().enumerate() {
             pool.append(slot, l, km.row(ri), vm.row(ri));
-            let (kc, vc) = pool.layer(l, slot);
-            let c = decode_attention(q.row(ri), kc, vc, &windows[ri],
+            let view = pool.layer_view(l, slot);
+            let c = decode_attention(q.row(ri), &view, &windows[ri],
                                      nh, nkv, dh);
             ctx[ri * qw..(ri + 1) * qw].copy_from_slice(&c);
         }
@@ -846,11 +848,18 @@ mod tests {
         let k = Tensor::randn(vec![s, nkv * dh], &mut rng);
         let v = Tensor::randn(vec![s, nkv * dh], &mut rng);
         let full = attention(&q, &k, &v, nh, nkv, dh);
-        // Cache layout == contiguous rows when cap >= s and no wrap.
-        let slots: Vec<usize> = (0..s).collect();
+        // Ring rows == positions when cap >= s and no wrap; the paged
+        // view gathers them back out of the arena.
+        let mut pool = KvCachePool::new(1, nkv, dh, 1);
+        let slot = pool.admit(s).unwrap();
+        for j in 0..s {
+            pool.append(slot, 0, k.row(j), v.row(j));
+            pool.advance(slot);
+        }
+        let rows: Vec<usize> = (0..s).collect();
+        let view = pool.layer_view(0, slot);
         let dec = decode_attention(&q.data()[(s - 1) * nh * dh..],
-                                   k.data(), v.data(), &slots,
-                                   nh, nkv, dh);
+                                   &view, &rows, nh, nkv, dh);
         for (a, b) in dec.iter().zip(full.row(s - 1)) {
             assert!((a - b).abs() < 1e-6, "{a} vs {b}");
         }

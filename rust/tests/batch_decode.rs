@@ -7,10 +7,21 @@
 //! triggered in at least one slot. Plus the generation-level property:
 //! `generate_batch` returns token-for-token what sequential `generate`
 //! returns for each request, regardless of co-batching.
+//!
+//! Paged-pool acceptance rides on the same drivers (the pool IS paged
+//! now — every equivalence case also exercises block tables, lazy page
+//! allocation and eviction-as-block-recycle), plus dedicated coverage:
+//! a block-accounting property (after ANY interleaving of
+//! admit/admit_shared/append/evict/reset/retire, every page is
+//! referenced exactly `refcount` times and free-listed iff refcount 0),
+//! a shared-prefix decode test (two sequences admitted from one prompt
+//! share prefix pages — refcount > 1 — until the first divergent write
+//! copies, with outputs IDENTICAL to unshared decoding), and the
+//! engine-level prefix-aware admission test.
 
 use nsds::infer::{generate, generate_batch, BatchEngine, GenConfig,
                   KvCache, KvCachePool, ModelRef, NativeEngine,
-                  QuantizedModel, Sampling};
+                  QuantizedModel, Sampling, PAGE_SIZE};
 use nsds::model::{ModelConfig, Weights};
 use nsds::prop_ensure;
 use nsds::quant::Backend;
@@ -125,10 +136,16 @@ fn batched_logits(exec: &NativeEngine, entry: &ModelEntry,
             }
         }
         active = keep;
+        // The paged pool's block accounting must hold at every step of
+        // the interleaving, not just at the end.
+        pool.check_page_accounting()
+            .map_err(|e| anyhow::anyhow!("page accounting: {e}"))?;
     }
     assert!(saw_mixed_batch || streams.len() == 1,
             "driver never batched >1 sequence");
     assert_eq!(pool.active_count(), 0);
+    assert_eq!(pool.pages_in_use(), 0,
+               "retiring every slot must release every page");
     Ok(out)
 }
 
@@ -264,6 +281,225 @@ fn generate_batch_matches_sequential_generate() {
             assert_eq!(b.stats.gen_tokens, d.stats.gen_tokens);
         }
     }
+}
+
+/// Block accounting: after ANY interleaving of admit / shared admit /
+/// append-bursts (driving lazy allocation, ring eviction and
+/// copy-on-write) / reset / retire, every page is referenced by block
+/// tables exactly `refcount` times and sits on the free list iff its
+/// refcount is 0 — no leaks, no double frees — and retiring every slot
+/// returns every page.
+#[test]
+fn paged_block_accounting_over_random_interleavings() {
+    check("page accounting invariant", 12, |rng| {
+        let n_layers = 1 + rng.below(3);
+        let nkv = 1 + rng.below(2);
+        let dh = 2 * (1 + rng.below(2));
+        let max_slots = 2 + rng.below(3);
+        let mut pool = KvCachePool::new(n_layers, nkv, dh, max_slots);
+        let w = nkv * dh;
+        let mut held: Vec<usize> = Vec::new();
+        for _ in 0..200 {
+            match rng.below(10) {
+                0 | 1 => {
+                    let cap = 1 + rng.below(3 * PAGE_SIZE);
+                    if let Some(s) = pool.admit(cap) {
+                        held.push(s);
+                    }
+                }
+                2 | 3 => {
+                    // Shared admission from a random eligible donor.
+                    if !held.is_empty() {
+                        let donor = held[rng.below(held.len())];
+                        let dpos = pool.pos(donor);
+                        if dpos > 0 && dpos <= pool.capacity(donor) {
+                            let shared = 1 + rng.below(dpos);
+                            let cap = shared + rng.below(2 * PAGE_SIZE);
+                            if let Some(s) =
+                                pool.admit_shared(cap, donor, shared)
+                            {
+                                held.push(s);
+                            }
+                        }
+                    }
+                }
+                4 => {
+                    if !held.is_empty() {
+                        let i = rng.below(held.len());
+                        pool.retire(held.swap_remove(i));
+                    }
+                }
+                5 => {
+                    if !held.is_empty() {
+                        pool.reset(held[rng.below(held.len())]);
+                    }
+                }
+                _ => {
+                    // Append burst: drives lazy page allocation, wraps
+                    // small rings (eviction = block recycle) and forces
+                    // copy-on-write into shared pages.
+                    if !held.is_empty() {
+                        let s = held[rng.below(held.len())];
+                        for _ in 0..1 + rng.below(PAGE_SIZE) {
+                            for l in 0..n_layers {
+                                pool.append(s, l, &vec![1.0; w],
+                                            &vec![2.0; w]);
+                            }
+                            pool.advance(s);
+                        }
+                    }
+                }
+            }
+            pool.check_page_accounting()?;
+        }
+        for s in held {
+            pool.retire(s);
+        }
+        pool.check_page_accounting()?;
+        prop_ensure!(pool.pages_in_use() == 0,
+                     "pages leaked after retiring every slot: {}",
+                     pool.pages_in_use());
+        Ok(())
+    });
+}
+
+/// Shared-prefix acceptance: stream B admitted from stream A's resident
+/// prompt prefix must (1) reference A's full prefix pages (refcount >
+/// 1) until the first divergent write, (2) copy on that write leaving
+/// A's rows intact, and (3) produce logits IDENTICAL — bitwise, not
+/// just within tolerance — to decoding B in its own unshared pool,
+/// through the tail AND through the ring-wrap/eviction regime.
+#[test]
+fn shared_prefix_decode_identical_to_unshared() {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(72);
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let exec = NativeEngine::with_workers(1);
+    let model = ModelRef::Dense(&w);
+    let prefix_len = PAGE_SIZE + 4; // one full shared page + a tail
+    let cap = prefix_len + 8; // tails push past cap → wrap → CoW
+    let tail_len = 10;
+    let prefix = random_tokens(&mut rng, prefix_len, cfg.vocab);
+    let tails: Vec<Vec<i32>> = (0..2)
+        .map(|_| random_tokens(&mut rng, tail_len, cfg.vocab))
+        .collect();
+
+    // Unshared references: each stream decoded alone in its own pool.
+    let mut refs: Vec<Vec<Vec<f32>>> = Vec::new();
+    for tail in &tails {
+        let mut pool = KvCachePool::for_model(&cfg, 1);
+        let s = pool.admit(cap).unwrap();
+        let mut rows = Vec::new();
+        for &t in prefix.iter().chain(tail) {
+            let l = model
+                .decode_batch(&exec, &entry, &mut pool, &[(s, t)])
+                .unwrap();
+            rows.push(l.into_data());
+        }
+        refs.push(rows);
+    }
+
+    // Shared: decode A through the prefix, fork B from A's pages.
+    let mut pool = KvCachePool::for_model(&cfg, 2);
+    let a = pool.admit(cap).unwrap();
+    for (i, &t) in prefix.iter().enumerate() {
+        let l = model
+            .decode_batch(&exec, &entry, &mut pool, &[(a, t)])
+            .unwrap();
+        assert_eq!(l.row(0), refs[0][i].as_slice(), "prefill step {i}");
+    }
+    let b = pool.admit_shared(cap, a, prefix_len).unwrap();
+    assert_eq!(pool.pos(b), prefix_len);
+    assert_eq!(pool.shared_page_count(a), 1,
+               "the full prefix page must be shared");
+    assert_eq!(pool.shared_page_count(b), 1);
+    // One full page shared + donor tail + copied tail = 3 pages, vs 4
+    // for two unshared prefixes.
+    assert_eq!(pool.pages_in_use(), 3);
+    pool.check_page_accounting().unwrap();
+
+    let mut saw_cow = false;
+    for step in 0..tail_len {
+        let active = [(a, tails[0][step]), (b, tails[1][step])];
+        let l = model
+            .decode_batch(&exec, &entry, &mut pool, &active)
+            .unwrap();
+        for (ri, r) in refs.iter().enumerate() {
+            assert_eq!(l.row(ri), r[prefix_len + step].as_slice(),
+                       "stream {ri} diverged at tail step {step}");
+        }
+        pool.check_page_accounting().unwrap();
+        // Once a ring wraps into the shared page, copy-on-write must
+        // have split it.
+        if pool.pos(a) > cap {
+            saw_cow = true;
+            assert_eq!(pool.shared_page_count(a), 0,
+                       "divergent write left the page shared");
+        }
+    }
+    assert!(saw_cow, "test never exercised the copy-on-write wrap");
+    pool.retire(a);
+    pool.check_page_accounting().unwrap();
+    pool.retire(b);
+    assert_eq!(pool.pages_in_use(), 0);
+}
+
+/// Engine-level prefix-aware admission: two requests with the same
+/// prompt through one `BatchEngine` must share prefix pages (the second
+/// admits by reference after the first prefills), save at least a
+/// page's worth of prefill, and still generate token-for-token what
+/// each request generates alone.
+#[test]
+fn batch_engine_shared_prefix_admission_matches_solo() {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(73);
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let exec = NativeEngine::with_workers(1);
+    let model = ModelRef::Dense(&w);
+    // Longer than one page, so the engine defers the second request
+    // until the first has the shared prefix resident, then admits it by
+    // page reference.
+    let prompt = random_tokens(&mut rng, PAGE_SIZE + 6, cfg.vocab);
+    let mk = |seed: u64| GenConfig {
+        max_new: 5,
+        sampling: Sampling::TopK { k: 3, temperature: 0.9 },
+        seed,
+        ..GenConfig::default()
+    };
+    let direct: Vec<_> = [11u64, 12]
+        .iter()
+        .map(|&s| {
+            generate(&exec, &entry, model, &prompt, &mk(s)).unwrap()
+        })
+        .collect();
+
+    let mut engine: BatchEngine<usize> = BatchEngine::new(&cfg, 2);
+    engine.submit(0, prompt.clone(), mk(11)).unwrap();
+    engine.submit(1, prompt.clone(), mk(12)).unwrap();
+    let mut saw_shared_pages = false;
+    let mut done = Vec::new();
+    while !engine.is_idle() {
+        done.extend(engine.step(&exec, &entry, model).unwrap());
+        let pool = engine.pool();
+        saw_shared_pages |= (0..pool.max_slots()).any(|s| {
+            pool.is_active(s) && pool.shared_page_count(s) > 0
+        });
+        pool.check_page_accounting().unwrap();
+    }
+    assert!(saw_shared_pages, "identical prompts never shared a page");
+    assert!(engine.shared_prefix_tokens() as usize >= PAGE_SIZE,
+            "only {} prompt tokens admitted by reference",
+            engine.shared_prefix_tokens());
+    done.sort_unstable_by_key(|(i, _)| *i);
+    assert_eq!(done.len(), 2);
+    for ((i, g), d) in done.iter().zip(&direct) {
+        assert_eq!(g.tokens, d.tokens,
+                   "request {i} diverged under prefix sharing");
+        assert_eq!(g.stopped, d.stopped, "request {i} stop reason");
+    }
+    assert_eq!(engine.pool().pages_in_use(), 0);
 }
 
 /// The engine surface the server schedules through: submissions while

@@ -10,7 +10,7 @@ use nsds::coordinator::server::{serve, Client, ServedWeights,
                                 ServerQueue};
 use nsds::infer::{generate, Executor, GenConfig, Generation, KvCache,
                   ModelRef, NativeEngine, QuantizedModel, Sampling,
-                  StopReason};
+                  StopReason, PAGE_SIZE};
 use nsds::model::{ModelConfig, Weights, WEIGHT_NAMES};
 use nsds::quant::Backend;
 use nsds::runtime::ModelEntry;
@@ -179,6 +179,74 @@ fn packed_and_dense_variants_generate_identically_here() {
         &exec, &entry, ModelRef::Dense(&w), &corpus, 6, 4, 6)
     .unwrap();
     assert!((0.0..=1.0).contains(&cm));
+}
+
+#[test]
+fn in_context_scoring_matches_plain_with_empty_context() {
+    let (entry, w) = tiny_model(96);
+    let cfg = entry.config.clone();
+    let exec = NativeEngine::with_workers(1);
+    let mut rng = Rng::new(7);
+    let corpus: Vec<i32> = (0..8 * cfg.seq)
+        .map(|_| rng.below(cfg.vocab) as i32)
+        .collect();
+    let plain = nsds::eval::gen::continuation_match(
+        &exec, &entry, ModelRef::Dense(&w), &corpus, 6, 4, 6)
+    .unwrap();
+    let empty_ctx = nsds::eval::gen::continuation_match_in_context(
+        &exec, &entry, ModelRef::Dense(&w), &[], &corpus, 6, 4, 6)
+    .unwrap();
+    assert_eq!(plain, empty_ctx);
+    // A real shared context (longer than one page, so the batched
+    // engine keeps it resident once and shares its pages — the page
+    // mechanics themselves are pinned in batch_decode.rs): the metric
+    // stays a valid fraction, and a variant always agrees with itself.
+    let ctx: Vec<i32> = (0..PAGE_SIZE + 4)
+        .map(|_| rng.below(cfg.vocab) as i32)
+        .collect();
+    let with_ctx = nsds::eval::gen::continuation_match_in_context(
+        &exec, &entry, ModelRef::Dense(&w), &ctx, &corpus, 6, 4, 6)
+    .unwrap();
+    assert!((0.0..=1.0).contains(&with_ctx));
+    let ga = nsds::eval::gen::greedy_agreement_in_context(
+        &exec, &entry, ModelRef::Dense(&w), ModelRef::Dense(&w), &ctx,
+        &corpus, 6, 4, 4)
+    .unwrap();
+    assert_eq!(ga, 1.0, "a variant must agree with itself in context");
+}
+
+#[test]
+fn server_shares_prefix_pages_across_identical_prompts() {
+    // Two identical prompts queued before the serve loop starts: the
+    // scheduler admits the first, defers the second until the shared
+    // prefix is resident, then admits it by page reference — outputs
+    // unchanged, and the saved prefill shows up in gen_shared().
+    let (entry, w) = tiny_model(97);
+    let cfg = entry.config.clone();
+    let queue = ServerQueue::new(8);
+    let client = Client::new(queue.clone(), cfg.seq);
+    let prompt: Vec<i32> = (0..PAGE_SIZE + 6)
+        .map(|i| ((i * 3) % cfg.vocab) as i32)
+        .collect();
+    let gc = GenConfig { max_new: 4, ..GenConfig::default() };
+    let exec = NativeEngine::with_workers(1);
+    let direct = generate(&exec, &entry, ModelRef::Dense(&w), &prompt,
+                          &gc)
+        .unwrap()
+        .tokens;
+    let rx1 = client.submit_generate(prompt.clone(), gc.clone()).unwrap();
+    let rx2 = client.submit_generate(prompt.clone(), gc.clone()).unwrap();
+    client.stop();
+    serve(&exec, &entry, 2, ServedWeights::Dense(w.clone()), &queue)
+        .unwrap();
+    let g1 = rx1.recv().unwrap().unwrap();
+    let g2 = rx2.recv().unwrap().unwrap();
+    assert_eq!(g1.tokens, direct);
+    assert_eq!(g2.tokens, direct,
+               "prefix sharing changed a served generation");
+    assert!(queue.gen_shared() as usize >= PAGE_SIZE,
+            "server admitted only {} prompt tokens by page reference",
+            queue.gen_shared());
 }
 
 #[test]
