@@ -52,9 +52,11 @@ fn generation_demo(exec: &dyn Executor, entry: &ModelEntry,
             let g = generate(exec, entry, model, prompt, &gc)?;
             println!(
                 "  {label:6} {mode:6} -> {:2} tokens  prefill {:6.2}ms  \
-                 decode {:6.2}ms  {:7.0} tok/s  first: {:?}",
+                 ttft {:6.2}ms  decode {:6.2}ms  {:7.0} tok/s  \
+                 first: {:?}",
                 g.tokens.len(),
                 g.stats.prefill_s * 1e3,
+                g.stats.ttft_s * 1e3,
                 g.stats.decode_s * 1e3,
                 g.stats.decode_tok_per_s(),
                 &g.tokens[..g.tokens.len().min(6)]

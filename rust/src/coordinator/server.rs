@@ -8,16 +8,19 @@
 //! shape (padding the tail). Generation requests all flow through ONE
 //! shared continuous-batching scheduler (`infer::BatchEngine`) per
 //! deployed model: each serve-loop iteration admits queued prompts into
-//! free KV-cache slots and advances every in-flight generation by one
-//! batched decode step, so concurrent generations share each weight
-//! read (one fused dequant per group per step on the packed path)
-//! instead of fanning whole generations across pool workers. Admission
-//! is prefix-aware over the paged KV pool: a request whose prompt
-//! shares a tokenized prefix with a resident sequence references the
-//! resident pages copy-on-write and only prefills the tail
-//! (`gen_shared_tokens` counts the prefill work saved). Scheduler
-//! intake is bounded (about two batches of generations), so excess
-//! requests stay in the bounded queue.
+//! free KV-cache slots, pushes one chunked-prefill window per
+//! still-prefilling prompt (whole prompt windows per step — the
+//! time-to-first-token lever for long prompts; `gen_latency` reports
+//! per-request prefill work and TTFT), and advances every in-flight
+//! generation by one batched decode step, so concurrent generations
+//! share each weight read (one fused dequant per group per step on the
+//! packed path) instead of fanning whole generations across pool
+//! workers. Admission is prefix-aware over the paged KV pool: a request
+//! whose prompt shares a tokenized prefix with a resident sequence
+//! references the resident pages copy-on-write and only chunk-prefills
+//! the tail (`gen_shared_tokens` counts the prefill work saved).
+//! Scheduler intake is bounded (about two batches of generations), so
+//! excess requests stay in the bounded queue.
 //! Backpressure: submitters block while the queue is at `max_queue`.
 //!
 //! Weight swap is a queued control message, so deploying a new quantized
@@ -105,6 +108,16 @@ pub struct ServerQueue {
     /// Prompt tokens admitted by shared-prefix page reference instead
     /// of prefill (paged KV cache; see `KvCachePool::admit_shared`).
     pub gen_shared_tokens: AtomicU64,
+    /// Nanoseconds of true per-request prefill work over finished
+    /// generations: each request's own chunked-prefill spans, excluding
+    /// co-batched decode work (see `GenStats::prefill_s`).
+    pub gen_prefill_ns: AtomicU64,
+    /// Nanoseconds of time-to-first-token over finished generations:
+    /// scheduler submission → first sampled token, slot queueing,
+    /// prefix-donor deferral and co-batched steps included — the
+    /// latency clients observe before output starts (minus any wait in
+    /// the bounded queue upstream of the scheduler).
+    pub gen_ttft_ns: AtomicU64,
 }
 
 impl ServerQueue {
@@ -120,6 +133,8 @@ impl ServerQueue {
             gen_served: AtomicU64::new(0),
             gen_tokens: AtomicU64::new(0),
             gen_shared_tokens: AtomicU64::new(0),
+            gen_prefill_ns: AtomicU64::new(0),
+            gen_ttft_ns: AtomicU64::new(0),
         })
     }
 
@@ -167,6 +182,18 @@ impl ServerQueue {
     /// prefix pages instead of prefilling them.
     pub fn gen_shared(&self) -> u64 {
         self.gen_shared_tokens.load(Ordering::Relaxed)
+    }
+
+    /// (cumulative per-request prefill seconds, cumulative
+    /// time-to-first-token seconds) over finished generations — divide
+    /// by `gen_stats().0` for per-request averages. Prefill counts only
+    /// each request's own chunked-prefill work; TTFT spans scheduler
+    /// submission → first sampled token, queueing/deferral included.
+    pub fn gen_latency(&self) -> (f64, f64) {
+        (
+            self.gen_prefill_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            self.gen_ttft_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        )
     }
 }
 
@@ -379,6 +406,12 @@ fn serve_loop(exec: &(dyn Executor + Sync), entry: &ModelEntry,
                 q.gen_served.fetch_add(1, Ordering::Relaxed);
                 q.gen_tokens.fetch_add(gen.tokens.len() as u64,
                                        Ordering::Relaxed);
+                q.gen_prefill_ns.fetch_add(
+                    (gen.stats.prefill_s * 1e9) as u64,
+                    Ordering::Relaxed);
+                q.gen_ttft_ns.fetch_add(
+                    (gen.stats.ttft_s * 1e9) as u64,
+                    Ordering::Relaxed);
                 let _ = reply.send(Ok(gen));
             }
         }

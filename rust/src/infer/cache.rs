@@ -11,7 +11,10 @@
 //! **block table**; pages are allocated lazily on first write, so
 //! resident memory scales with the tokens a sequence actually holds, not
 //! with the worst-case capacity it was admitted with. Freed pages go to
-//! a free list and are recycled across slots.
+//! a free list and are recycled across slots. Chunked prefill writes in
+//! bulk: `alloc_range` maps (and copy-on-write privatizes) a window's
+//! blocks up front, `append_rows` lands whole page segments per layer,
+//! and `advance_by` commits the window as one position jump.
 //!
 //! Pages are **reference counted** and shared copy-on-write:
 //! `admit_shared` admits a new sequence whose prompt prefix is already
@@ -411,12 +414,24 @@ impl KvCachePool {
     /// `advance` commits the position after the last layer.
     pub fn append(&mut self, slot: usize, l: usize, krow: &[f32],
                   vrow: &[f32]) {
+        self.append_row_ahead(slot, l, 0, krow, vrow);
+    }
+
+    /// Write one K/V row for layer `l` at `ahead` positions past the
+    /// slot's current (uncommitted) position — `ahead == 0` is `append`.
+    /// The evicting-regime chunked prefill uses this to keep the
+    /// per-token append→attend interleaving while the chunk's position
+    /// commit stays a single `advance_by` after the last layer.
+    pub fn append_row_ahead(&mut self, slot: usize, l: usize,
+                            ahead: usize, krow: &[f32], vrow: &[f32]) {
         let w = self.kv_width();
         debug_assert_eq!(krow.len(), w, "k row width");
         debug_assert_eq!(vrow.len(), w, "v row width");
         let row = {
             let s = self.slot(slot);
-            s.pos % s.cap
+            debug_assert!(ahead < s.cap,
+                          "append_row_ahead past the ring capacity");
+            (s.pos + ahead) % s.cap
         };
         let page = self.writable_block(slot, row / PAGE_SIZE);
         let off = ((page * self.n_layers + l) * PAGE_SIZE
@@ -425,10 +440,94 @@ impl KvCachePool {
         self.v[off..off + w].copy_from_slice(vrow);
     }
 
+    /// Map — and privatize — every block the slot's next `n` positions
+    /// will write, up front: unmapped blocks allocate, and blocks shared
+    /// with another slot copy-on-write NOW (the range overwrites them;
+    /// other holders keep the original, so a donor's rows are never
+    /// touched). Chunked prefill calls this once per chunk so page
+    /// allocation and copy-on-write faults happen before any compute,
+    /// and the per-layer appends then land in private, pre-mapped pages.
+    /// `n` must fit the ring — a longer range would overwrite its own
+    /// rows.
+    pub fn alloc_range(&mut self, slot: usize, n: usize) {
+        assert!(n > 0, "alloc_range: empty range for slot {slot}");
+        let (pos, cap) = {
+            let s = self.slot(slot);
+            (s.pos, s.cap)
+        };
+        assert!(n <= cap,
+                "alloc_range: {n} positions exceed slot {slot}'s ring \
+                 capacity {cap}");
+        let end = pos + n;
+        let mut q = pos;
+        while q < end {
+            let row = q % cap;
+            self.writable_block(slot, row / PAGE_SIZE);
+            // Jump to the next block boundary or the ring wrap,
+            // whichever comes first.
+            let step = (PAGE_SIZE - row % PAGE_SIZE).min(cap - row);
+            q += step.min(end - q);
+        }
+    }
+
+    /// Bulk append: write `krows.len() / width` consecutive positions of
+    /// layer `l` starting at the slot's current position, in one call —
+    /// one block-table lookup and one `copy_from_slice` per touched page
+    /// segment instead of per row. Does NOT advance the position
+    /// (`advance_by` commits after the last layer, mirroring
+    /// `append`/`advance`). Writes route through the copy-on-write
+    /// check, so pre-mapping with `alloc_range` is an optimization, not
+    /// a requirement. Caller contract: nothing may read a ring row this
+    /// range overwrites between this call and the commit — in the
+    /// evicting regime (`pos + rows > cap`) chunked prefill therefore
+    /// uses `append_row_ahead` per row instead (see
+    /// `Executor::prefill_chunk`).
+    pub fn append_rows(&mut self, slot: usize, l: usize, krows: &[f32],
+                       vrows: &[f32]) {
+        let w = self.kv_width();
+        assert_eq!(krows.len(), vrows.len(),
+                   "append_rows: k/v length mismatch");
+        assert!(!krows.is_empty() && krows.len() % w == 0,
+                "append_rows: rows must be non-empty multiples of the \
+                 kv width {w} (got {})", krows.len());
+        let rows = krows.len() / w;
+        let (pos, cap) = {
+            let s = self.slot(slot);
+            (s.pos, s.cap)
+        };
+        assert!(rows <= cap,
+                "append_rows: {rows} rows exceed slot {slot}'s ring \
+                 capacity {cap}");
+        let mut done = 0usize;
+        while done < rows {
+            let row = (pos + done) % cap;
+            let in_page = row % PAGE_SIZE;
+            // Longest run of positions contiguous in this page: stops at
+            // the page boundary, the ring wrap, or the end of the input.
+            let seg = (PAGE_SIZE - in_page)
+                .min(cap - row)
+                .min(rows - done);
+            let page = self.writable_block(slot, row / PAGE_SIZE);
+            let off = ((page * self.n_layers + l) * PAGE_SIZE + in_page)
+                * w;
+            self.k[off..off + seg * w]
+                .copy_from_slice(&krows[done * w..(done + seg) * w]);
+            self.v[off..off + seg * w]
+                .copy_from_slice(&vrows[done * w..(done + seg) * w]);
+            done += seg;
+        }
+    }
+
     /// Commit the slot's current step: the next `append`/`window_rows`
     /// refer to the following position.
     pub fn advance(&mut self, slot: usize) {
         self.slot_mut(slot).pos += 1;
+    }
+
+    /// Commit `n` positions at once — the chunked-prefill counterpart of
+    /// `advance`, called once after the last layer's bulk append.
+    pub fn advance_by(&mut self, slot: usize, n: usize) {
+        self.slot_mut(slot).pos += n;
     }
 
     /// View of layer `l`'s K/V for a slot, gathering through its block
@@ -451,10 +550,18 @@ impl KvCachePool {
     /// first, then attend — causal attention sees itself). Identical for
     /// every layer of a step, so callers compute it once per slot.
     pub fn window_rows(&self, slot: usize) -> Vec<usize> {
-        let s = self.slot(slot);
-        let hi = s.pos; // current token's logical position (inclusive)
-        let lo = (hi + 1).saturating_sub(s.cap);
-        (lo..=hi).map(|p| p % s.cap).collect()
+        self.window_rows_at(slot, self.slot(slot).pos)
+    }
+
+    /// Ring rows attention reads for a token at absolute position `pos`
+    /// of this slot (oldest → newest, including `pos` itself — the
+    /// causal window inside a chunk). `window_rows` is the
+    /// current-position case; chunked prefill asks for every chunk row's
+    /// window up front, before any append.
+    pub fn window_rows_at(&self, slot: usize, pos: usize) -> Vec<usize> {
+        let cap = self.slot(slot).cap;
+        let lo = (pos + 1).saturating_sub(cap);
+        (lo..=pos).map(|p| p % cap).collect()
     }
 
     /// Number of the slot's mapped pages currently shared with another
@@ -875,6 +982,136 @@ mod tests {
         assert_eq!(p.pages_in_use(), 1);
         assert_eq!(p.shared_page_count(b), 0);
         assert_eq!(p.layer_view(0, b).k_row(3)[0], 3.0);
+    }
+
+    /// Distinct per-(position, layer, salt) row so bulk/per-token
+    /// comparisons catch any misplaced write (`salt` separates K from V).
+    fn row_of(pos: usize, l: usize, salt: usize, w: usize) -> Vec<f32> {
+        (0..w)
+            .map(|c| (pos * 1000 + l * 100 + salt * 10 + c) as f32)
+            .collect()
+    }
+
+    #[test]
+    fn alloc_range_premaps_pages_up_front() {
+        let mut p = KvCachePool::new(2, 1, 2, 1);
+        let s = p.admit(3 * PAGE_SIZE).unwrap();
+        assert_eq!(p.pages_in_use(), 0);
+        // A range spanning one full page plus a partial second maps
+        // both pages before any append.
+        p.alloc_range(s, PAGE_SIZE + 3);
+        assert_eq!(p.pages_in_use(), 2);
+        p.check_page_accounting().unwrap();
+        // Re-mapping the same range is a no-op.
+        p.alloc_range(s, PAGE_SIZE + 3);
+        assert_eq!(p.pages_in_use(), 2);
+        p.check_page_accounting().unwrap();
+    }
+
+    #[test]
+    fn bulk_append_matches_per_token_appends() {
+        // Same writes through append/advance and through
+        // alloc_range/append_rows/advance_by must leave bit-identical
+        // rows — including a second chunk that wraps the ring (the
+        // segment copy crosses the page boundary AND the ring wrap).
+        let (layers, w, cap) = (2, 2, PAGE_SIZE + 4);
+        let mut a = KvCachePool::new(layers, 1, w, 1);
+        let mut b = KvCachePool::new(layers, 1, w, 1);
+        let sa = a.admit(cap).unwrap();
+        let sb = b.admit(cap).unwrap();
+        let chunks = [PAGE_SIZE + 1, 5]; // second chunk wraps past cap
+        let mut pos = 0usize;
+        for &n in &chunks {
+            for l in 0..layers {
+                let mut ks = Vec::new();
+                let mut vs = Vec::new();
+                for i in 0..n {
+                    ks.extend(row_of(pos + i, l, 0, w));
+                    vs.extend(row_of(pos + i, l, 1, w));
+                }
+                b.append_rows(sb, l, &ks, &vs);
+            }
+            b.advance_by(sb, n);
+            for i in 0..n {
+                for l in 0..layers {
+                    a.append(sa, l, &row_of(pos + i, l, 0, w),
+                             &row_of(pos + i, l, 1, w));
+                }
+                a.advance(sa);
+            }
+            pos += n;
+        }
+        assert_eq!(a.pos(sa), b.pos(sb));
+        for l in 0..layers {
+            for r in 0..cap {
+                assert_eq!(a.layer_view(l, sa).k_row(r),
+                           b.layer_view(l, sb).k_row(r),
+                           "k layer {l} row {r}");
+                assert_eq!(a.layer_view(l, sa).v_row(r),
+                           b.layer_view(l, sb).v_row(r),
+                           "v layer {l} row {r}");
+            }
+        }
+        a.check_page_accounting().unwrap();
+        b.check_page_accounting().unwrap();
+    }
+
+    #[test]
+    fn alloc_range_copies_shared_blocks_and_leaves_donor_intact() {
+        // A sharer whose ring wraps back into the shared page: the
+        // up-front alloc_range must copy-on-write that block (donor
+        // keeps its rows) BEFORE any bulk append lands.
+        let mut p = KvCachePool::new(1, 1, 2, 2);
+        let a = p.admit(PAGE_SIZE).unwrap();
+        for i in 0..PAGE_SIZE {
+            p.append(a, 0, &[i as f32; 2], &[i as f32; 2]);
+            p.advance(a);
+        }
+        let b = p.admit_shared(PAGE_SIZE, a, PAGE_SIZE).unwrap();
+        assert_eq!(p.shared_page_count(a), 1);
+        assert_eq!(p.pages_in_use(), 1);
+        // b's next 3 positions wrap into the shared block 0.
+        p.alloc_range(b, 3);
+        assert_eq!(p.shared_page_count(a), 0, "block must be copied");
+        assert_eq!(p.pages_in_use(), 2);
+        p.check_page_accounting().unwrap();
+        p.append_rows(b, 0, &[99.0; 6], &[99.0; 6]);
+        p.advance_by(b, 3);
+        // Donor rows untouched; sharer's copy holds the new rows and
+        // still reads the un-overwritten prefix verbatim.
+        assert_eq!(p.layer_view(0, a).k_row(0)[0], 0.0);
+        assert_eq!(p.layer_view(0, b).k_row(0)[0], 99.0);
+        assert_eq!(p.layer_view(0, b).k_row(3)[0], 3.0);
+        p.check_page_accounting().unwrap();
+    }
+
+    #[test]
+    fn window_rows_at_matches_window_rows() {
+        let mut p = KvCachePool::new(1, 1, 2, 1);
+        let s = p.admit(4).unwrap();
+        for i in 0..6 {
+            assert_eq!(p.window_rows(s), p.window_rows_at(s, i));
+            p.append(s, 0, &[0.0; 2], &[0.0; 2]);
+            p.advance(s);
+        }
+        // Future positions: the windows chunked prefill asks for.
+        assert_eq!(p.window_rows_at(s, 7), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed slot")]
+    fn append_rows_rejects_ranges_longer_than_the_ring() {
+        let mut p = KvCachePool::new(1, 1, 2, 1);
+        let s = p.admit(2).unwrap();
+        p.append_rows(s, 0, &[0.0; 6], &[0.0; 6]); // 3 rows, cap 2
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed slot")]
+    fn alloc_range_rejects_ranges_longer_than_the_ring() {
+        let mut p = KvCachePool::new(1, 1, 2, 1);
+        let s = p.admit(2).unwrap();
+        p.alloc_range(s, 3);
     }
 
     #[test]

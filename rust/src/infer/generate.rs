@@ -1,17 +1,19 @@
 //! Autoregressive generation over the batched KV-cached decode path:
 //! `BatchEngine` is a step-driven continuous-batching scheduler — each
-//! step admits pending requests into free cache-pool slots, feeds every
-//! active sequence one token through `Executor::decode_batch`, samples
-//! per slot (greedy or seeded temperature/top-k via `util::rng`, fully
-//! deterministic per request seed), and retires finished sequences
-//! without stalling the rest. Admission is prefix-aware over the paged
-//! pool: a prompt sharing a tokenized prefix with a resident sequence
-//! references that sequence's pages copy-on-write and prefills only the
-//! tail. `generate` is the B=1 case; `generate_batch` runs a whole
-//! request set through one engine. Executor- and variant-generic: a
-//! `ModelRef` dispatches to the dense or fused-packed decode path, so
-//! the same engine generates from FP32 weights and from packed 2/4-bit
-//! `QuantizedModel`s.
+//! step admits pending requests into free cache-pool slots, pushes one
+//! PAGE_SIZE-aligned chunk of every still-prefilling prompt through
+//! `Executor::prefill_chunk` (whole windows per step, not one token),
+//! feeds every decoding sequence one token through
+//! `Executor::decode_batch`, samples per slot (greedy or seeded
+//! temperature/top-k via `util::rng`, fully deterministic per request
+//! seed), and retires finished sequences without stalling the rest.
+//! Admission is prefix-aware over the paged pool: a prompt sharing a
+//! tokenized prefix with a resident sequence references that sequence's
+//! pages copy-on-write and chunk-prefills only the tail. `generate` is
+//! the B=1 case; `generate_batch` runs a whole request set through one
+//! engine. Executor- and variant-generic: a `ModelRef` dispatches to
+//! the dense or fused-packed path, so the same engine generates from
+//! FP32 weights and from packed 2/4-bit `QuantizedModel`s.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -73,26 +75,44 @@ pub enum StopReason {
 
 /// Per-request timing/throughput counters.
 ///
-/// Times are wall-clock spans of the request's life inside its engine
-/// (admission → last prompt token → retirement). In a B=1 engine
-/// (`generate`) that is the dedicated per-request cost, as before; in a
-/// shared continuous batch (`generate_batch`, the server scheduler) the
-/// spans include co-batched sequences' work and anything else the serve
-/// loop interleaves, so they measure observed latency, not isolated
-/// decode cost. Aggregate throughput across a batch is what improves.
+/// `prefill_s` is the request's OWN prefill cost: each chunked-prefill
+/// call serves exactly one request, so summing those spans excludes
+/// co-batched decode work and scheduler waiting. Prompt tokens that
+/// cost the request nothing attributable contribute nothing: tokens
+/// admitted by shared-prefix page reference, and a lone final prompt
+/// token that rides the shared decode batch (so a 1-token prompt, or a
+/// sharer whose whole tail is one token, reports `prefill_s == 0`).
+/// `ttft_s` and `decode_s` are wall-clock spans of the request's life
+/// inside its engine: in a B=1 engine (`generate`) they are dedicated
+/// per-request cost; in a shared continuous batch (`generate_batch`,
+/// the server scheduler) they include co-batched sequences' work and
+/// anything else the serve loop interleaves — observed latency, not
+/// isolated decode cost. Aggregate throughput across a batch is what
+/// improves.
 #[derive(Clone, Debug)]
 pub struct GenStats {
     pub prompt_tokens: usize,
     pub gen_tokens: usize,
-    /// Wall time consuming the prompt (cache build-up).
+    /// Wall time of this request's own prefill chunks (cache build-up
+    /// work actually spent on this prompt; see the struct docs).
     pub prefill_s: f64,
-    /// Wall time of the new-token decode loop.
+    /// Time-to-first-token: wall clock from SUBMISSION to the engine to
+    /// the first sampled token (prefill end when `max_new == 0`) —
+    /// queueing for a slot, deferral for a prefix donor, and co-batched
+    /// steps all included; this is the latency a caller observes before
+    /// output starts. (The server submits when its serve loop drains
+    /// the queue, so bounded-queue wait upstream of the scheduler adds
+    /// on top.)
+    pub ttft_s: f64,
+    /// Wall time of the new-token decode loop (prefill end →
+    /// retirement).
     pub decode_s: f64,
 }
 
 impl GenStats {
+    /// Observed request latency: submission → retirement.
     pub fn total_s(&self) -> f64 {
-        self.prefill_s + self.decode_s
+        self.ttft_s + self.decode_s
     }
 
     /// New tokens per second over the decode loop.
@@ -167,11 +187,46 @@ fn argmax(logits: &[f32]) -> i32 {
     best as i32
 }
 
+/// Most prompt positions one engine step prefills per sequence — the
+/// chunk-size trade: a bigger chunk amortizes each weight read (and, on
+/// the packed path, each dequant) over more prompt rows and finishes
+/// prefill in fewer steps, but a step's in-flight decoders wait for the
+/// whole chunk, so it bounds the per-step latency a long prompt can
+/// impose on co-batched decode traffic. Two pages keeps the chunk GEMMs
+/// comfortably multi-row while a step stays a small multiple of a
+/// decode step.
+pub const PREFILL_CHUNK: usize = 2 * PAGE_SIZE;
+
+/// Length of the next prefill chunk for a slot whose next position is
+/// `pos` with `remaining` prompt tokens left. Chunks end on
+/// PAGE_SIZE-aligned absolute positions (so bulk appends fill whole
+/// pages and a misaligned shared-tail start realigns after one chunk),
+/// are capped at `PREFILL_CHUNK`, and never exceed the ring capacity —
+/// an overlong prompt prefills through the evicting regime chunk by
+/// chunk. The final chunk takes whatever remains.
+fn chunk_len(pos: usize, remaining: usize, cap: usize) -> usize {
+    debug_assert!(remaining > 0);
+    let max = PREFILL_CHUNK.min(cap).max(1);
+    if remaining <= max {
+        return remaining;
+    }
+    let to_boundary = PAGE_SIZE - pos % PAGE_SIZE;
+    if max < to_boundary {
+        max
+    } else {
+        to_boundary + (max - to_boundary) / PAGE_SIZE * PAGE_SIZE
+    }
+}
+
 /// A request queued in a `BatchEngine`, waiting for a free cache slot.
 struct Pending<T> {
     tag: T,
     prompt: Vec<i32>,
     gc: GenConfig,
+    /// When the request entered the engine — time-to-first-token counts
+    /// from here, so slot queueing and prefix-donor deferral are part
+    /// of the reported latency.
+    t_submit: Instant,
 }
 
 /// Token at index `i` of a request's consumed stream: prompt tokens
@@ -207,21 +262,65 @@ struct Active<T> {
     gc: GenConfig,
     rng: Rng,
     /// Tokens the model has consumed so far (prompt, then fed-back
-    /// samples). The token fed at step `fed` is `prompt[fed]` while
-    /// `fed < prompt.len()`, else `tokens[fed - prompt.len()]`.
+    /// samples) — always equal to the slot's cache position. While
+    /// `fed < prompt.len()` the sequence is prefilling (in chunks);
+    /// after that, the token fed at step `fed` is
+    /// `tokens[fed - prompt.len()]`.
     fed: usize,
     /// Sampled new tokens (the generation output).
     tokens: Vec<i32>,
-    t_admit: Instant,
+    /// Carried from `Pending`: when the request entered the engine.
+    t_submit: Instant,
     t_prefill_done: Option<Instant>,
+    /// Wall time spent in THIS request's own prefill chunks.
+    prefill_work_s: f64,
+    /// Submission → first sampled token (set when prefill completes).
+    ttft_s: f64,
+    /// Stop decision made during the current step; the sequence retires
+    /// at the end of the step.
+    finished: Option<StopReason>,
+}
+
+impl<T> Active<T> {
+    /// Consume one logits row for this sequence: sample the next token,
+    /// record any stop condition, and — when `first` marks the step
+    /// that consumed the last prompt token (from a chunk's final row or
+    /// a decode-batch rider row alike) — stamp prefill-done and TTFT.
+    /// `max_new == 0` on that step means there is nothing to sample:
+    /// the prefill itself was the request. ONE body for both the
+    /// chunk-completion and decode paths, so stop/TTFT semantics cannot
+    /// drift between them.
+    fn consume_row(&mut self, row: &[f32], first: bool) {
+        if first {
+            self.t_prefill_done = Some(Instant::now());
+        }
+        if first && self.gc.max_new == 0 {
+            self.finished = Some(StopReason::MaxNew);
+        } else {
+            let next = sample(row, &self.gc.sampling, &mut self.rng);
+            self.tokens.push(next);
+            if self.gc.stop.contains(&next) {
+                self.finished = Some(StopReason::StopToken(next));
+            } else if self.tokens.len() >= self.gc.max_new {
+                self.finished = Some(StopReason::MaxNew);
+            }
+        }
+        if first {
+            self.ttft_s = self.t_submit.elapsed().as_secs_f64();
+        }
+    }
 }
 
 /// Step-driven continuous-batching generation engine over one
 /// `Executor::decode_batch` stream. Submit any number of requests; each
-/// `step` admits pending requests into free slots, decodes ONE token for
-/// every active sequence in a single batched call, samples per slot with
-/// that request's own seeded RNG, and retires finished sequences (freeing
-/// their slots for the next admission) without stalling the rest.
+/// `step` admits pending requests into free slots, prefills ONE
+/// PAGE_SIZE-aligned chunk for every sequence with a multi-token prompt
+/// window left (`Executor::prefill_chunk` — whole windows per step, the
+/// time-to-first-token lever for long prompts), feeds everything else —
+/// decoders and lone final prompt tokens — one token in a single
+/// batched `decode_batch` call, samples per slot with that request's
+/// own seeded RNG, and retires finished sequences (freeing their slots
+/// for the next admission) without stalling the rest.
 ///
 /// Determinism: a request's trajectory depends only on the model and its
 /// own `GenConfig` — batched decode rows are bit-identical to
@@ -296,7 +395,12 @@ impl<T> BatchEngine<T> {
         if let Err(e) = self.check(&prompt) {
             return Err((tag, e));
         }
-        self.pending.push_back(Pending { tag, prompt, gc });
+        self.pending.push_back(Pending {
+            tag,
+            prompt,
+            gc,
+            t_submit: Instant::now(),
+        });
         Ok(())
     }
 
@@ -314,9 +418,11 @@ impl<T> BatchEngine<T> {
         self.pool.max_slots()
     }
 
-    /// One engine step: admit, batch-decode one token per active
-    /// sequence, sample, retire. Returns the requests that finished this
-    /// step (possibly empty). A no-op returning `[]` when idle.
+    /// One engine step: admit pending requests, push one prefill chunk
+    /// per still-prefilling sequence, batch-decode one token per
+    /// decoding sequence, sample, retire. Returns the requests that
+    /// finished this step (possibly empty). A no-op returning `[]` when
+    /// idle.
     pub fn step(&mut self, exec: &dyn Executor, entry: &ModelEntry,
                 model: ModelRef) -> Result<Vec<(T, Generation)>> {
         // Admit pending requests into free slots. Per-request cache
@@ -330,8 +436,11 @@ impl<T> BatchEngine<T> {
         // donor has committed (prompt + sampled) a common prefix of at
         // least one full page that it has not finished APPENDING yet,
         // the request is DEFERRED (kept pending, in order): the donor
-        // appends one position per step, so waiting a few steps turns
-        // the whole prefix into referenced pages instead of re-prefill.
+        // appends a whole chunk per step while prefilling (one position
+        // per step once decoding), so a step or two of waiting turns
+        // the whole prefix into referenced pages instead of re-prefill
+        // — and the deferred sharer's own un-shared tail then admits as
+        // one chunked prefill instead of per-step tokens.
         // Progress is guaranteed — the appended prefix grows every step
         // until it covers the committed one, and a retired donor simply
         // drops out of consideration next step. Sub-page overlaps never
@@ -393,8 +502,11 @@ impl<T> BatchEngine<T> {
                 rng,
                 fed: shared,
                 tokens: Vec::new(),
-                t_admit: Instant::now(),
+                t_submit: p.t_submit,
                 t_prefill_done: None,
+                prefill_work_s: 0.0,
+                ttft_s: 0.0,
+                finished: None,
             });
         }
         // Deferred requests keep their original queue position.
@@ -405,52 +517,91 @@ impl<T> BatchEngine<T> {
             return Ok(Vec::new());
         }
 
-        // One token per active sequence, in one batched decode.
-        let batch: Vec<(usize, i32)> = self
+        // Split the step's work BEFORE anything mutates: multi-token
+        // prompt windows get a dedicated prefill chunk; everything else
+        // — decoders AND any sequence with exactly ONE prompt token
+        // left — rides the shared decode batch. A lone final token has
+        // no multi-row amortization to gain from a chunk call and no
+        // TTFT to win (one step either way), but a dedicated call would
+        // cost it a full weight stream of its own; in the shared batch
+        // it shares the step's weight reads like any decode row. (This
+        // is also every shared-prefix sharer whose un-shared tail is a
+        // single token — the common identical-prompt case.) A sequence
+        // whose chunk completes its prompt this step samples its first
+        // token from the chunk's last logits row and joins the decode
+        // batch next step — the same cadence the per-token flow had.
+        let decoding: Vec<usize> = self
             .active
             .iter()
-            .map(|a| {
-                let t = if a.fed < a.prompt.len() {
-                    a.prompt[a.fed]
-                } else {
-                    a.tokens[a.fed - a.prompt.len()]
-                };
-                (a.slot, t)
+            .enumerate()
+            .filter(|(_, a)| a.fed + 1 >= a.prompt.len())
+            .map(|(i, _)| i)
+            .collect();
+        // (active index, prompt offset, chunk length); `a.fed` is the
+        // slot's cache position, so it also picks the chunk alignment.
+        let prefills: Vec<(usize, usize, usize)> = self
+            .active
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.fed + 1 < a.prompt.len())
+            .map(|(i, a)| {
+                let cap = self.pool.capacity(a.slot);
+                let n =
+                    chunk_len(a.fed, a.prompt.len() - a.fed, cap);
+                (i, a.fed, n)
             })
             .collect();
-        let logits =
-            model.decode_batch(exec, entry, &mut self.pool, &batch)?;
-        let v = self.cfg.vocab;
 
-        // Sample / retire per row.
+        // Chunked prefill: ONE aligned chunk per still-prefilling
+        // sequence per step — a long prompt advances a whole window per
+        // step (instead of one token) while in-flight decoders still
+        // get exactly one batched step below, so prefill never stalls
+        // them for more than a chunk's worth of work.
+        for (i, from, n) in prefills {
+            let slot = self.active[i].slot;
+            let t0 = Instant::now();
+            let logits = model.prefill_chunk(
+                exec, entry, &mut self.pool, slot,
+                &self.active[i].prompt[from..from + n])?;
+            let a = &mut self.active[i];
+            a.prefill_work_s += t0.elapsed().as_secs_f64();
+            a.fed += n;
+            if a.fed < a.prompt.len() {
+                continue; // more chunks next step
+            }
+            // First sample comes from the chunk's last row — the same
+            // logits the last prompt token's decode step would have
+            // returned (rows are bit-identical).
+            a.consume_row(logits.row(n - 1), true);
+        }
+
+        // One token per batch rider — decoders feed their previous
+        // sample, a rider finishing its prompt feeds its last prompt
+        // token — in one batched decode.
+        if !decoding.is_empty() {
+            let batch: Vec<(usize, i32)> = decoding
+                .iter()
+                .map(|&i| {
+                    let a = &self.active[i];
+                    (a.slot, stream_token(&a.prompt, &a.tokens, a.fed))
+                })
+                .collect();
+            let logits =
+                model.decode_batch(exec, entry, &mut self.pool, &batch)?;
+            let v = self.cfg.vocab;
+            for (ri, &i) in decoding.iter().enumerate() {
+                let a = &mut self.active[i];
+                a.fed += 1;
+                a.consume_row(&logits.data()[ri * v..(ri + 1) * v],
+                              a.fed == a.prompt.len());
+            }
+        }
+
+        // Retire finished sequences, freeing their slots.
         let mut done = Vec::new();
         let mut keep = Vec::with_capacity(self.active.len());
-        for (ri, mut a) in
-            std::mem::take(&mut self.active).into_iter().enumerate()
-        {
-            a.fed += 1;
-            if a.fed < a.prompt.len() {
-                keep.push(a); // still prefilling
-                continue;
-            }
-            if a.fed == a.prompt.len() {
-                a.t_prefill_done = Some(Instant::now());
-            }
-            let mut stopped = None;
-            if a.gc.max_new == 0 {
-                // Nothing to sample; the prefill itself was the request.
-                stopped = Some(StopReason::MaxNew);
-            } else {
-                let row = &logits.data()[ri * v..(ri + 1) * v];
-                let next = sample(row, &a.gc.sampling, &mut a.rng);
-                a.tokens.push(next);
-                if a.gc.stop.contains(&next) {
-                    stopped = Some(StopReason::StopToken(next));
-                } else if a.tokens.len() >= a.gc.max_new {
-                    stopped = Some(StopReason::MaxNew);
-                }
-            }
-            match stopped {
+        for a in std::mem::take(&mut self.active) {
+            match a.finished {
                 None => keep.push(a),
                 Some(stopped) => {
                     self.pool.retire(a.slot);
@@ -460,8 +611,8 @@ impl<T> BatchEngine<T> {
                         stats: GenStats {
                             prompt_tokens: a.prompt.len(),
                             gen_tokens: a.tokens.len(),
-                            prefill_s: (t_pre - a.t_admit)
-                                .as_secs_f64(),
+                            prefill_s: a.prefill_work_s,
+                            ttft_s: a.ttft_s,
                             decode_s: t_pre.elapsed().as_secs_f64(),
                         },
                         tokens: a.tokens,
@@ -521,9 +672,9 @@ pub fn generate_batch(exec: &dyn Executor, entry: &ModelEntry,
 
 /// Generate up to `gc.max_new` tokens after `prompt` through any
 /// executor's KV-cached batched decode path — the B=1 case of
-/// `generate_batch`: the prompt is fed token by token into a fresh cache
-/// slot (same per-token cost as cached decode), then the decode loop
-/// samples and feeds back until a stop condition.
+/// `generate_batch`: the prompt prefills in aligned chunks into a fresh
+/// cache slot, then the decode loop samples and feeds back until a stop
+/// condition.
 pub fn generate(exec: &dyn Executor, entry: &ModelEntry, model: ModelRef,
                 prompt: &[i32], gc: &GenConfig) -> Result<Generation> {
     let reqs = [(prompt.to_vec(), gc.clone())];
@@ -569,6 +720,36 @@ mod tests {
         let s = Sampling::TopK { k: 4, temperature: 1e-4 };
         for _ in 0..50 {
             assert_eq!(sample(&logits, &s, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn chunk_lengths_align_to_pages_and_respect_caps() {
+        // Aligned start, plenty remaining: a full two-page chunk.
+        assert_eq!(chunk_len(0, 1000, 1000), PREFILL_CHUNK);
+        // Chunk boundaries land on PAGE_SIZE-aligned positions: a
+        // misaligned start (e.g. a shared-prefix tail) realigns first.
+        let n = chunk_len(PAGE_SIZE + 5, 1000, 1000);
+        assert_eq!((PAGE_SIZE + 5 + n) % PAGE_SIZE, 0);
+        assert!(n <= PREFILL_CHUNK);
+        // The final chunk takes exactly what remains, aligned or not.
+        assert_eq!(chunk_len(3, 7, 1000), 7);
+        // A tiny ring bounds the chunk (overlong prompts evict); a
+        // page boundary inside the bound still ends the chunk there.
+        assert_eq!(chunk_len(0, 1000, 5), 5);
+        assert_eq!(chunk_len(12, 1000, 5), 4);
+        // Walking any prompt always terminates with aligned interior
+        // boundaries.
+        let (mut pos, mut rem) = (PAGE_SIZE - 1, 3 * PAGE_SIZE + 7);
+        while rem > 0 {
+            let n = chunk_len(pos, rem, 2 * PAGE_SIZE + 3);
+            assert!(n >= 1 && n <= rem && n <= 2 * PAGE_SIZE + 3);
+            if n < rem && n < PREFILL_CHUNK {
+                assert_eq!((pos + n) % PAGE_SIZE, 0,
+                           "interior chunk at pos {pos} not aligned");
+            }
+            pos += n;
+            rem -= n;
         }
     }
 

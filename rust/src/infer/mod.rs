@@ -22,7 +22,8 @@ use crate::tensor::Tensor;
 
 pub use cache::{KvCache, KvCachePool, LayerKv, PAGE_SIZE};
 pub use generate::{generate, generate_batch, BatchEngine, GenConfig,
-                   GenStats, Generation, Sampling, StopReason};
+                   GenStats, Generation, Sampling, StopReason,
+                   PREFILL_CHUNK};
 pub use native::NativeEngine;
 pub use qmat::{fused_matmul, fused_vecmat, PackedMatrix, QMat,
                QuantizedModel};
@@ -90,8 +91,8 @@ pub trait Executor {
     }
 
     /// Whether the KV-cached decode family (`decode_step`,
-    /// `decode_batch` and their packed variants) is implemented
-    /// (optional capability, like packed serving).
+    /// `decode_batch`, `prefill_chunk` and their packed variants) is
+    /// implemented (optional capability, like packed serving).
     fn supports_decode(&self) -> bool {
         false
     }
@@ -150,6 +151,41 @@ pub trait Executor {
         anyhow::bail!("{}: packed batched decode not supported",
                       self.platform())
     }
+
+    /// Chunked prefill: consume a whole window of prompt `tokens` for
+    /// ONE slot at its current position — multi-row projections, causal
+    /// attention inside the chunk, bulk K/V page writes — and advance
+    /// the slot by the chunk length. Returns logits
+    /// `[tokens.len(), vocab]`; row `i` MUST be bit-identical to what
+    /// feeding `tokens[i]` through `decode_batch` at that position
+    /// would return (chunking changes wall clock, never bits — pinned
+    /// by `rust/tests/prefill_equivalence.rs`). The chunk may not
+    /// exceed the slot's ring capacity; callers split longer prompts
+    /// (overlong prompts prefill through the evicting regime chunk by
+    /// chunk). Part of the decode capability family
+    /// (`supports_decode`): the generation stack feeds every prompt
+    /// through this path before joining the decode batch.
+    fn prefill_chunk(&self, entry: &ModelEntry, pool: &mut KvCachePool,
+                     slot: usize, tokens: &[i32], weights: &Weights)
+                     -> Result<Tensor> {
+        let _ = (entry, pool, slot, tokens, weights);
+        anyhow::bail!("{}: chunked prefill not supported",
+                      self.platform())
+    }
+
+    /// `prefill_chunk` over packed 2/4-bit codes: each projection is one
+    /// fused dequant-GEMM over the whole chunk, so a packed weight group
+    /// is decoded once per chunk instead of once per prompt token —
+    /// the prefill-side counterpart of `decode_batch_packed`'s
+    /// amortization.
+    fn prefill_chunk_packed(&self, entry: &ModelEntry,
+                            pool: &mut KvCachePool, slot: usize,
+                            tokens: &[i32], model: &QuantizedModel)
+                            -> Result<Tensor> {
+        let _ = (entry, pool, slot, tokens, model);
+        anyhow::bail!("{}: packed chunked prefill not supported",
+                      self.platform())
+    }
 }
 
 /// A borrowed deployable weight variant: the generation loop and the
@@ -185,6 +221,21 @@ impl ModelRef<'_> {
             }
             ModelRef::Packed(qm) => {
                 exec.decode_batch_packed(entry, pool, active, qm)
+            }
+        }
+    }
+
+    /// Chunked prefill of the same variant into one slot's pages (see
+    /// `Executor::prefill_chunk`).
+    pub fn prefill_chunk(&self, exec: &dyn Executor, entry: &ModelEntry,
+                         pool: &mut KvCachePool, slot: usize,
+                         tokens: &[i32]) -> Result<Tensor> {
+        match self {
+            ModelRef::Dense(w) => {
+                exec.prefill_chunk(entry, pool, slot, tokens, w)
+            }
+            ModelRef::Packed(qm) => {
+                exec.prefill_chunk_packed(entry, pool, slot, tokens, qm)
             }
         }
     }

@@ -108,6 +108,21 @@ impl Executor for NativeEngine {
         let prep = prepare_packed(&entry.config, model)?;
         decode_batch_with(&prep, pool, active)
     }
+
+    fn prefill_chunk(&self, entry: &ModelEntry, pool: &mut KvCachePool,
+                     slot: usize, tokens: &[i32], weights: &Weights)
+                     -> Result<Tensor> {
+        let prep = prepare_dense_ref(&entry.config, weights);
+        prefill_chunk_with(&prep, pool, slot, tokens)
+    }
+
+    fn prefill_chunk_packed(&self, entry: &ModelEntry,
+                            pool: &mut KvCachePool, slot: usize,
+                            tokens: &[i32], model: &QuantizedModel)
+                            -> Result<Tensor> {
+        let prep = prepare_packed(&entry.config, model)?;
+        prefill_chunk_with(&prep, pool, slot, tokens)
+    }
 }
 
 /// One projection operand: dense f32 (owned slice, borrowed from a
@@ -147,7 +162,9 @@ impl PMat<'_> {
 
 /// Row-count threshold under which the packed path uses the small-batch
 /// `fused_gemm_small` (one weight-row decode shared by all rows) instead
-/// of the K-panel `fused_matmul`. Decode batches live well under this.
+/// of the K-panel `fused_matmul`. Decode batches live well under this;
+/// prefill chunks can exceed it and take the K-panel kernel — all three
+/// kernels are per-row bit-identical, so the split never changes logits.
 const DECODE_BATCH_ROWS: usize = 16;
 
 /// `x [M, K] @ stacked[l] [K, N]` over a borrowed slice of a [L, K, N]
@@ -605,6 +622,49 @@ fn decode_attention(q: &[f32], kv: &LayerKv, rows: &[usize],
     ctx
 }
 
+/// Shared transformer stack for the KV-cached paths (`decode_batch_with`
+/// and `prefill_chunk_with`): takes the embedded input rows `h`, runs
+/// every layer — rmsnorm → shared q/k/v projections → RoPE at the
+/// caller's per-row tables → a caller-supplied append+attend pass (the
+/// ONLY place the two data flows differ: which slot each row appends to
+/// and which ring window it attends over, `fill_ctx(l, q, k, v) -> ctx`)
+/// → output projection → SwiGLU FFN — then the final norm + unembed.
+/// One body means a change to the forward math cannot silently split
+/// the "prefill rows bit-identical to decode rows" contract.
+fn kv_forward(prep: &Prepared, mut h: Tensor, cos: &[f32], sin: &[f32],
+              mut fill_ctx: impl FnMut(usize, &Tensor, &Tensor, &Tensor)
+                  -> Vec<f32>) -> Tensor {
+    let cfg = prep.cfg;
+    let (nh, nkv, dh) = (cfg.n_heads, cfg.n_kv, cfg.d_head);
+    let rows = h.rows();
+    let qw = nh * dh;
+    for (l, layer) in prep.layers.iter().enumerate() {
+        // Attention block: shared projections, per-row append+attend.
+        let x1 = rmsnorm(&h, &layer.ln1);
+        let mut q = layer.wq.apply(&x1); // [rows, nh·dh]
+        let mut km = layer.wk.apply(&x1); // [rows, nkv·dh]
+        let vm = layer.wv.apply(&x1); // [rows, nkv·dh]
+        rope(&mut q, nh, dh, cos, sin);
+        rope(&mut km, nkv, dh, cos, sin);
+        let ctx = Tensor::new(fill_ctx(l, &q, &km, &vm),
+                              vec![rows, qw]);
+        let attn_out = layer.wo.apply(&ctx);
+        h = h.add(&attn_out);
+        // FFN block (SwiGLU).
+        let x2 = rmsnorm(&h, &layer.ln2);
+        let gate = layer.wgate.apply(&x2);
+        let up = layer.wup.apply(&x2);
+        let mut mid = gate;
+        for (g, u) in mid.data_mut().iter_mut().zip(up.data()) {
+            *g = silu(*g) * u;
+        }
+        let down = layer.wdown.apply(&mid);
+        h = h.add(&down);
+    }
+    let hf = rmsnorm(&h, prep.lnf);
+    matmul(&hf, prep.unembed)
+}
+
 /// One KV-cached decode step over a prepared (dense-ref or packed) model
 /// — the B=1 case of `decode_batch_with` over the cache's one-slot pool.
 /// Returns next-token logits [vocab].
@@ -663,14 +723,9 @@ fn decode_batch_with(prep: &Prepared, pool: &mut KvCachePool,
     }
 
     let qw = nh * dh;
-    for (l, layer) in prep.layers.iter().enumerate() {
-        // Attention block: shared projections, per-slot attention.
-        let x1 = rmsnorm(&h, &layer.ln1);
-        let mut q = layer.wq.apply(&x1); // [m, nh·dh]
-        let mut km = layer.wk.apply(&x1); // [m, nkv·dh]
-        let vm = layer.wv.apply(&x1); // [m, nkv·dh]
-        rope(&mut q, nh, dh, &cos, &sin);
-        rope(&mut km, nkv, dh, &cos, &sin);
+    let logits = kv_forward(prep, h, &cos, &sin, |l, q, km, vm| {
+        // Each row appends to its own slot, then attends over its own
+        // ring window (the just-written row included).
         let mut ctx = vec![0.0f32; m * qw];
         for (ri, &(slot, _)) in active.iter().enumerate() {
             pool.append(slot, l, km.row(ri), vm.row(ri));
@@ -679,26 +734,111 @@ fn decode_batch_with(prep: &Prepared, pool: &mut KvCachePool,
                                      nh, nkv, dh);
             ctx[ri * qw..(ri + 1) * qw].copy_from_slice(&c);
         }
-        let ctx = Tensor::new(ctx, vec![m, qw]);
-        let attn_out = layer.wo.apply(&ctx);
-        h = h.add(&attn_out);
-        // FFN block (SwiGLU).
-        let x2 = rmsnorm(&h, &layer.ln2);
-        let gate = layer.wgate.apply(&x2);
-        let up = layer.wup.apply(&x2);
-        let mut mid = gate;
-        for (g, u) in mid.data_mut().iter_mut().zip(up.data()) {
-            *g = silu(*g) * u;
-        }
-        let down = layer.wdown.apply(&mid);
-        h = h.add(&down);
-    }
+        ctx
+    });
     for &(slot, _) in active {
         pool.advance(slot);
     }
+    Ok(logits)
+}
 
-    let hf = rmsnorm(&h, prep.lnf);
-    Ok(matmul(&hf, prep.unembed))
+/// Chunked prefill over a prepared (dense-ref or packed) model: consume
+/// a whole window of `tokens` for ONE slot at its current position —
+/// every projection runs as one multi-row (fused-dequant) GEMM over the
+/// chunk instead of one single-row kernel per token, and K/V rows land
+/// in the slot's pages in bulk. Causality INSIDE the chunk is per-row
+/// attention windows: chunk row `i` (absolute position `pos + i`)
+/// attends over positions `pos + i + 1 - cap ..= pos + i`, which
+/// includes the chunk's own earlier rows. Row math reuses the decode
+/// step's kernels verbatim (row-independent, k-ascending accumulation),
+/// so row `i` is BIT-IDENTICAL to feeding `tokens[i]` through
+/// `decode_batch` at that position — chunking changes wall clock, never
+/// bits (pinned by `rust/tests/prefill_equivalence.rs`).
+///
+/// Page writes: the chunk's blocks are mapped — and copy-on-write
+/// privatized — up front via `alloc_range`, then each layer bulk-appends
+/// its K/V rows. In the exact regime (`pos + n <= cap`) the whole layer
+/// appends before any row attends: no chunk write lands on a ring row an
+/// earlier chunk row's window still reads. Past `cap` (an
+/// eviction-inducing overlong prompt) that no longer holds — the write
+/// for chunk row `j` recycles the block holding position `pos + j - cap`,
+/// which rows `i` in `(j - cap, j)` still read — so the evicting regime
+/// interleaves append→attend per row, preserving the per-token order
+/// (identical results in both regimes; the split is purely about when
+/// overwrites become visible).
+///
+/// The slot advances by the whole chunk after the last layer. Returns
+/// logits `[tokens.len(), vocab]`, row `i` for position `pos + i`; the
+/// caller samples from the last row when the chunk ends the prompt.
+/// `tokens.len()` must not exceed the slot's ring capacity (a longer
+/// chunk would overwrite its own rows — callers split at `cap`).
+fn prefill_chunk_with(prep: &Prepared, pool: &mut KvCachePool,
+                      slot: usize, tokens: &[i32]) -> Result<Tensor> {
+    let cfg = prep.cfg;
+    let d = cfg.d_model;
+    let (nh, nkv, dh) = (cfg.n_heads, cfg.n_kv, cfg.d_head);
+    let half = dh / 2;
+    let n = tokens.len();
+    ensure!(n > 0, "prefill_chunk: empty chunk");
+    ensure!(pool.matches(cfg),
+            "KV cache pool geometry does not match model '{}' \
+             (layers {} kv {} dh {})",
+            cfg.name, cfg.n_layers, nkv, dh);
+    ensure!(pool.is_active(slot),
+            "prefill_chunk: slot {slot} is not admitted");
+    let cap = pool.capacity(slot);
+    ensure!(n <= cap,
+            "prefill_chunk: chunk of {n} tokens exceeds slot {slot}'s \
+             ring capacity {cap} — split the chunk");
+    for &t in tokens {
+        ensure!(t >= 0 && (t as usize) < cfg.vocab,
+                "token id {t} out of range (vocab {})", cfg.vocab);
+    }
+
+    let pos = pool.pos(slot);
+    let positions: Vec<usize> = (pos..pos + n).collect();
+    let (cos, sin) = rope_tables_at(&positions, half);
+    let windows: Vec<Vec<usize>> = positions
+        .iter()
+        .map(|&p| pool.window_rows_at(slot, p))
+        .collect();
+    // Map (and CoW-privatize) every block the chunk writes, up front.
+    pool.alloc_range(slot, n);
+    let bulk = pos + n <= cap; // see the regime note above
+
+    // h = embed[tokens]  [n, d]
+    let mut h = Tensor::zeros(vec![n, d]);
+    for (ri, &t) in tokens.iter().enumerate() {
+        h.row_mut(ri).copy_from_slice(prep.embed.row(t as usize));
+    }
+
+    let qw = nh * dh;
+    let logits = kv_forward(prep, h, &cos, &sin, |l, q, km, vm| {
+        // Whole-chunk bulk append when safe, per-row interleave in the
+        // evicting regime (see the regime note above); attention is
+        // per-row over that row's own causal window either way.
+        let mut ctx = vec![0.0f32; n * qw];
+        if bulk {
+            pool.append_rows(slot, l, km.data(), vm.data());
+            let view = pool.layer_view(l, slot);
+            for i in 0..n {
+                let c = decode_attention(q.row(i), &view, &windows[i],
+                                         nh, nkv, dh);
+                ctx[i * qw..(i + 1) * qw].copy_from_slice(&c);
+            }
+        } else {
+            for i in 0..n {
+                pool.append_row_ahead(slot, l, i, km.row(i), vm.row(i));
+                let view = pool.layer_view(l, slot);
+                let c = decode_attention(q.row(i), &view, &windows[i],
+                                         nh, nkv, dh);
+                ctx[i * qw..(i + 1) * qw].copy_from_slice(&c);
+            }
+        }
+        ctx
+    });
+    pool.advance_by(slot, n);
+    Ok(logits)
 }
 
 #[cfg(test)]
@@ -989,6 +1129,86 @@ mod tests {
             .is_err());
         // A failed step must not advance any slot.
         assert_eq!(pool.pos(s0), 0);
+    }
+
+    #[test]
+    fn prefill_chunk_rows_match_per_token_decode_exactly() {
+        // One chunk covering a whole prompt must reproduce, bit for
+        // bit, the per-token decode logits AND leave a cache that
+        // decodes the continuation identically.
+        let entry = tiny_entry();
+        let cfg = entry.config.clone();
+        let mut rng = Rng::new(63);
+        let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        let e = NativeEngine::with_workers(1);
+        let tokens: Vec<i32> = (0..cfg.seq + 2)
+            .map(|_| rng.below(cfg.vocab) as i32)
+            .collect();
+        let cap = tokens.len() + 2;
+        let split = cfg.seq; // prompt prefix; the rest decodes after
+        let mut ref_pool = KvCachePool::for_model(&cfg, 1);
+        let rs = ref_pool.admit(cap).unwrap();
+        let mut ref_rows = Vec::new();
+        for &t in &tokens {
+            let l = e
+                .decode_batch(&entry, &mut ref_pool, &[(rs, t)], &w)
+                .unwrap();
+            ref_rows.push(l.into_data());
+        }
+        let mut pool = KvCachePool::for_model(&cfg, 1);
+        let s = pool.admit(cap).unwrap();
+        let chunk = e
+            .prefill_chunk(&entry, &mut pool, s, &tokens[..split], &w)
+            .unwrap();
+        assert_eq!(chunk.dims(), &[split, cfg.vocab]);
+        for (i, r) in ref_rows.iter().enumerate().take(split) {
+            assert_eq!(chunk.row(i), r.as_slice(),
+                       "chunk row {i} diverged from per-token decode");
+        }
+        assert_eq!(pool.pos(s), split);
+        for (i, &t) in tokens.iter().enumerate().skip(split) {
+            let l = e
+                .decode_batch(&entry, &mut pool, &[(s, t)], &w)
+                .unwrap();
+            assert_eq!(l.data(), ref_rows[i].as_slice(),
+                       "post-chunk decode step {i} diverged");
+        }
+        pool.check_page_accounting().unwrap();
+    }
+
+    #[test]
+    fn prefill_chunk_validates_before_mutating() {
+        let entry = tiny_entry();
+        let cfg = entry.config.clone();
+        let mut rng = Rng::new(64);
+        let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        let e = NativeEngine::with_workers(1);
+        let mut pool = KvCachePool::for_model(&cfg, 2);
+        let s = pool.admit(4).unwrap();
+        // Empty chunk.
+        assert!(e.prefill_chunk(&entry, &mut pool, s, &[], &w).is_err());
+        // Unadmitted slot.
+        assert!(e
+            .prefill_chunk(&entry, &mut pool, s + 1, &[0], &w)
+            .is_err());
+        // Out-of-range token.
+        assert!(e
+            .prefill_chunk(&entry, &mut pool, s,
+                           &[cfg.vocab as i32], &w)
+            .is_err());
+        // Chunk longer than the slot's ring.
+        assert!(e
+            .prefill_chunk(&entry, &mut pool, s, &[0; 5], &w)
+            .is_err());
+        // Geometry mismatch.
+        let mut wrong = KvCachePool::new(cfg.n_layers + 1, cfg.n_kv,
+                                         cfg.d_head, 1);
+        wrong.admit(4).unwrap();
+        assert!(e.prefill_chunk(&entry, &mut wrong, 0, &[0], &w)
+            .is_err());
+        // No failed call advanced the slot or touched a page.
+        assert_eq!(pool.pos(s), 0);
+        assert_eq!(pool.pages_in_use(), 0);
     }
 
     #[test]

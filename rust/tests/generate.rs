@@ -149,8 +149,10 @@ fn stop_token_and_max_new_conditions() {
         .unwrap();
     assert_eq!(g2.tokens.len(), 4);
     assert_eq!(g2.stopped, StopReason::MaxNew);
-    // Stats sanity.
+    // Stats sanity: TTFT covers the request's own prefill work (its
+    // chunks all run inside the admission → first-token window).
     assert!(g2.stats.prefill_s >= 0.0 && g2.stats.decode_s >= 0.0);
+    assert!(g2.stats.ttft_s >= g2.stats.prefill_s);
     assert!(g2.stats.total_s() >= g2.stats.decode_s);
     assert!(g2.stats.decode_tok_per_s() >= 0.0);
 }
@@ -349,6 +351,12 @@ fn concurrent_generation_through_server_matches_direct() {
     assert_eq!(gen_served, reqs.len() as u64);
     let total: u64 = expected.iter().map(|t| t.len() as u64).sum();
     assert_eq!(gen_tokens, total);
+    // TTFT/prefill stats: every request did some prefill work of its
+    // own, and its observed time-to-first-token covers it.
+    let (prefill_s, ttft_s) = queue.gen_latency();
+    assert!(prefill_s > 0.0, "no prefill work recorded");
+    assert!(ttft_s >= prefill_s,
+            "ttft {ttft_s}s below summed prefill work {prefill_s}s");
     let (nll_served, batches, _) = queue.stats();
     assert_eq!(nll_served, reqs.len() as u64);
     assert!(batches > 0);

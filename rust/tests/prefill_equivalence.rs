@@ -1,0 +1,365 @@
+//! Prefill-equivalence acceptance harness: chunked prefill
+//! (`Executor::prefill_chunk`) must be BIT-IDENTICAL — `assert_eq!` on
+//! f32 slices, not within tolerance — to feeding the same prompt one
+//! token at a time through the batched decode path. Chunking is the
+//! only way prompts enter the paged pool now, so this harness carries
+//! the correctness of the whole prompt-ingestion path:
+//!
+//! * random ragged-GQA shapes, dense AND fused-packed weights;
+//! * random chunk splits whose boundaries straddle page boundaries
+//!   (nothing in the kernel may depend on alignment — alignment is a
+//!   scheduler optimization, not a correctness requirement);
+//! * shared-prefix tails (`admit_shared` + chunked tail prefill, donors
+//!   untouched);
+//! * eviction-inducing overlong prompts (chunks wrap the ring through
+//!   the per-row append→attend regime);
+//! * mixed prefill+decode engine steps (chunked prefill admitted
+//!   mid-stream, trajectories identical to solo runs);
+//!
+//! with `KvCachePool::check_page_accounting` asserted at every step and
+//! zero pages in use after retiring everything.
+
+use nsds::infer::{generate, BatchEngine, GenConfig, KvCachePool,
+                  ModelRef, NativeEngine, QuantizedModel, Sampling,
+                  PAGE_SIZE, PREFILL_CHUNK};
+use nsds::model::{ModelConfig, Weights};
+use nsds::prop_ensure;
+use nsds::quant::Backend;
+use nsds::runtime::ModelEntry;
+use nsds::util::prop::check;
+use nsds::util::rng::Rng;
+
+/// Random tiny model shape covering MHA, grouped and ragged GQA; K dims
+/// stay multiples of 4 (the 2-bit packing granularity) so the same
+/// shapes serve packed.
+fn random_config(rng: &mut Rng) -> ModelConfig {
+    let n_heads = 1 + rng.below(6);
+    let n_kv = 1 + rng.below(n_heads);
+    ModelConfig {
+        name: "prefill-prop".into(),
+        vocab: 16 + rng.below(32),
+        d_model: 8 + 4 * rng.below(5),
+        n_heads,
+        n_kv,
+        d_head: 4 * (1 + rng.below(2)),
+        d_ffn: 8 * (1 + rng.below(4)),
+        n_layers: 1 + rng.below(3),
+        seq: 4 + rng.below(9),
+    }
+}
+
+fn random_tokens(rng: &mut Rng, n: usize, vocab: usize) -> Vec<i32> {
+    (0..n).map(|_| rng.below(vocab) as i32).collect()
+}
+
+/// Random packed 2/4-bit variant of `w`.
+fn random_quantized(rng: &mut Rng, cfg: &ModelConfig, w: &Weights)
+    -> QuantizedModel {
+    let bits: Vec<u8> = (0..cfg.n_layers)
+        .map(|_| if rng.f64() < 0.5 { 2 } else { 4 })
+        .collect();
+    let backend =
+        if rng.f64() < 0.5 { Backend::Rtn } else { Backend::Hqq };
+    QuantizedModel::quantize(cfg, w, &bits, 8, backend, None, 1)
+}
+
+/// Ground truth: the prompt fed ONE token per `decode_batch` step into
+/// a private pool. Returns per-position logits rows.
+fn per_token_logits(exec: &NativeEngine, entry: &ModelEntry,
+                    model: ModelRef, prompt: &[i32], cap: usize)
+                    -> Vec<Vec<f32>> {
+    let mut pool = KvCachePool::for_model(&entry.config, 1);
+    let s = pool.admit(cap).unwrap();
+    prompt
+        .iter()
+        .map(|&t| {
+            model
+                .decode_batch(exec, entry, &mut pool, &[(s, t)])
+                .unwrap()
+                .into_data()
+        })
+        .collect()
+}
+
+/// Random chunk split of `len` positions with sizes in `1..=limit`:
+/// boundaries land anywhere, straddling page boundaries at will.
+fn random_chunks(rng: &mut Rng, len: usize, limit: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut left = len;
+    while left > 0 {
+        let n = (1 + rng.below(limit)).min(left);
+        out.push(n);
+        left -= n;
+    }
+    out
+}
+
+/// Drive chunked prefill over `splits` and compare every logits row —
+/// and a few post-prefill decode steps — bitwise against the per-token
+/// reference, with page accounting checked after every chunk.
+fn assert_chunked_matches(exec: &NativeEngine, entry: &ModelEntry,
+                          model: ModelRef, stream: &[i32],
+                          prompt_len: usize, cap: usize,
+                          splits: &[usize]) -> Result<(), String> {
+    let reference =
+        per_token_logits(exec, entry, model, stream, cap);
+    let mut pool = KvCachePool::for_model(&entry.config, 1);
+    let s = pool.admit(cap).unwrap();
+    let mut off = 0usize;
+    for &n in splits {
+        let logits = model
+            .prefill_chunk(exec, entry, &mut pool, s,
+                           &stream[off..off + n])
+            .map_err(|e| e.to_string())?;
+        for i in 0..n {
+            prop_ensure!(logits.row(i) == reference[off + i].as_slice(),
+                         "chunk row {} (chunk at {off}, len {n}) \
+                          diverged from per-token prefill", off + i);
+        }
+        off += n;
+        prop_ensure!(pool.pos(s) == off, "pos {} != fed {off}",
+                     pool.pos(s));
+        pool.check_page_accounting()?;
+    }
+    assert_eq!(off, prompt_len, "splits must cover the prompt");
+    // The cache state chunked prefill leaves behind must decode the
+    // continuation identically too.
+    for (i, &t) in stream.iter().enumerate().skip(prompt_len) {
+        let l = model
+            .decode_batch(exec, entry, &mut pool, &[(s, t)])
+            .map_err(|e| e.to_string())?;
+        prop_ensure!(l.data() == reference[i].as_slice(),
+                     "post-prefill decode step {i} diverged");
+        pool.check_page_accounting()?;
+    }
+    pool.retire(s);
+    pool.check_page_accounting()?;
+    prop_ensure!(pool.pages_in_use() == 0,
+                 "pages leaked after retire: {}", pool.pages_in_use());
+    Ok(())
+}
+
+#[test]
+fn chunked_prefill_bit_identical_dense() {
+    check("chunked == per-token prefill (dense)", 8, |rng| {
+        let cfg = random_config(rng);
+        let entry = ModelEntry::synthetic(cfg.clone());
+        let w = Weights::synth(&cfg, rng, &[], &[]);
+        let exec = NativeEngine::with_workers(1 + rng.below(3));
+        // Prompt spans several pages; a short decode tail follows.
+        let prompt_len = PAGE_SIZE + 1 + rng.below(2 * PAGE_SIZE + 8);
+        let stream =
+            random_tokens(rng, prompt_len + 3, cfg.vocab);
+        let cap = stream.len() + rng.below(PAGE_SIZE);
+        // Chunk sizes up to ~1.5 pages: boundaries straddle pages.
+        let splits = random_chunks(rng, prompt_len,
+                                   PAGE_SIZE + PAGE_SIZE / 2);
+        assert_chunked_matches(&exec, &entry, ModelRef::Dense(&w),
+                               &stream, prompt_len, cap, &splits)
+    });
+}
+
+#[test]
+fn chunked_prefill_bit_identical_packed() {
+    check("chunked == per-token prefill (packed)", 5, |rng| {
+        let cfg = random_config(rng);
+        let entry = ModelEntry::synthetic(cfg.clone());
+        let w = Weights::synth(&cfg, rng, &[], &[]);
+        let qm = random_quantized(rng, &cfg, &w);
+        let exec = NativeEngine::with_workers(1 + rng.below(3));
+        let prompt_len = PAGE_SIZE + 1 + rng.below(2 * PAGE_SIZE + 8);
+        let stream =
+            random_tokens(rng, prompt_len + 3, cfg.vocab);
+        let cap = stream.len() + rng.below(PAGE_SIZE);
+        // Include chunks above the small-GEMM threshold (>16 rows) so
+        // the packed path exercises all three fused kernels.
+        let splits =
+            random_chunks(rng, prompt_len, PREFILL_CHUNK);
+        assert_chunked_matches(&exec, &entry, ModelRef::Packed(&qm),
+                               &stream, prompt_len, cap, &splits)
+    });
+}
+
+#[test]
+fn chunked_prefill_overlong_prompt_evicts_identically() {
+    // Prompt longer than the ring: chunks wrap, old blocks recycle in
+    // place, and the evicting per-row append→attend regime must still
+    // be bit-identical to per-token prefill.
+    check("chunked == per-token prefill (evicting)", 6, |rng| {
+        let cfg = random_config(rng);
+        let entry = ModelEntry::synthetic(cfg.clone());
+        let w = Weights::synth(&cfg, rng, &[], &[]);
+        let exec = NativeEngine::with_workers(1);
+        // A cap that is NOT page-aligned half the time, smaller than
+        // the prompt, so prefill wraps the ring at least once.
+        let cap = PAGE_SIZE / 2 + rng.below(2 * PAGE_SIZE);
+        let prompt_len = cap + 1 + rng.below(2 * cap);
+        let stream = random_tokens(rng, prompt_len + 2, cfg.vocab);
+        // Chunks may not exceed the ring; sizes still random.
+        let splits = random_chunks(rng, prompt_len, cap);
+        if rng.f64() < 0.5 {
+            assert_chunked_matches(&exec, &entry, ModelRef::Dense(&w),
+                                   &stream, prompt_len, cap, &splits)
+        } else {
+            let qm = random_quantized(rng, &cfg, &w);
+            assert_chunked_matches(&exec, &entry,
+                                   ModelRef::Packed(&qm), &stream,
+                                   prompt_len, cap, &splits)
+        }
+    });
+}
+
+#[test]
+fn shared_prefix_tail_prefills_as_one_chunk() {
+    // A sharer admitted from a resident donor prefills ONLY its tail,
+    // in one chunk — logits bit-identical to prefilling the whole
+    // prompt alone, donor pages untouched (no copy-on-write from tail
+    // writes), page accounting clean throughout.
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(80);
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let exec = NativeEngine::with_workers(1);
+    let model = ModelRef::Dense(&w);
+    let prompt_len = 2 * PAGE_SIZE + 5;
+    let shared = PAGE_SIZE + 3; // one full shared page + copied tail
+    let cap = prompt_len + 4;
+    let prompt = random_tokens(&mut rng, prompt_len, cfg.vocab);
+
+    let reference =
+        per_token_logits(&exec, &entry, model, &prompt, cap);
+
+    let mut pool = KvCachePool::for_model(&cfg, 2);
+    let donor = pool.admit(cap).unwrap();
+    // Donor prefills its whole prompt in aligned chunks.
+    let mut off = 0;
+    while off < prompt_len {
+        let n = PREFILL_CHUNK.min(prompt_len - off);
+        let l = model
+            .prefill_chunk(&exec, &entry, &mut pool, donor,
+                           &prompt[off..off + n])
+            .unwrap();
+        for i in 0..n {
+            assert_eq!(l.row(i), reference[off + i].as_slice(),
+                       "donor chunk row {}", off + i);
+        }
+        off += n;
+    }
+    // Sharer references the donor's full page(s) and copies the tail.
+    let sharer = pool.admit_shared(cap, donor, shared).unwrap();
+    assert_eq!(pool.pos(sharer), shared);
+    assert_eq!(pool.shared_page_count(donor), 1);
+    pool.check_page_accounting().unwrap();
+    let before = pool.pages_in_use();
+    // The whole un-shared tail is ONE chunk.
+    let tail = model
+        .prefill_chunk(&exec, &entry, &mut pool, sharer,
+                       &prompt[shared..])
+        .unwrap();
+    for i in 0..prompt_len - shared {
+        assert_eq!(tail.row(i), reference[shared + i].as_slice(),
+                   "sharer tail row {} diverged", shared + i);
+    }
+    // Tail writes landed in the copied tail page + fresh pages: the
+    // donor's shared page stayed shared (no copy-on-write), so the
+    // donor is untouched.
+    assert_eq!(pool.shared_page_count(donor), 1,
+               "tail prefill must not copy the donor's shared page");
+    assert!(pool.pages_in_use() > before);
+    pool.check_page_accounting().unwrap();
+    pool.retire(donor);
+    pool.check_page_accounting().unwrap();
+    pool.retire(sharer);
+    assert_eq!(pool.pages_in_use(), 0);
+}
+
+/// Engine-level mixed load: chunked prefills and in-flight decodes
+/// share steps (long prompts submitted while short ones decode, one
+/// evicting cap, one pair of identical prompts driving shared-prefix
+/// admission of a chunked tail) — every request's tokens must equal its
+/// solo `generate` run, with page accounting checked every step.
+#[test]
+fn mixed_prefill_decode_engine_matches_solo() {
+    check("mixed prefill+decode == solo", 4, |rng| {
+        let cfg = random_config(rng);
+        let entry = ModelEntry::synthetic(cfg.clone());
+        let w = Weights::synth(&cfg, rng, &[], &[]);
+        let exec = NativeEngine::with_workers(1);
+        let model = ModelRef::Dense(&w);
+        let long = PREFILL_CHUNK + 1 + rng.below(PREFILL_CHUNK);
+        let shared_prompt =
+            random_tokens(rng, PAGE_SIZE + 2 + rng.below(8), cfg.vocab);
+        let mut reqs: Vec<(Vec<i32>, GenConfig)> = Vec::new();
+        for i in 0..5 {
+            let prompt = match i {
+                // Two identical prompts: defer + shared-tail chunk.
+                0 | 1 => shared_prompt.clone(),
+                // A multi-chunk long prompt.
+                2 => random_tokens(rng, long, cfg.vocab),
+                _ => random_tokens(rng, 1 + rng.below(6), cfg.vocab),
+            };
+            let gc = GenConfig {
+                max_new: 2 + rng.below(5),
+                sampling: if i % 2 == 0 {
+                    Sampling::Greedy
+                } else {
+                    Sampling::TopK { k: 4, temperature: 1.1 }
+                },
+                seed: 300 + i as u64,
+                stop: Vec::new(),
+                // Request 3 decodes (and prefills) in the evicted
+                // regime: its ring is smaller than prompt + max_new.
+                cap: if i == 3 { 3 } else { 0 },
+            };
+            reqs.push((prompt, gc));
+        }
+        let solo: Vec<Vec<i32>> = reqs
+            .iter()
+            .map(|(p, gc)| {
+                generate(&exec, &entry, model, p, gc).unwrap().tokens
+            })
+            .collect();
+
+        let mut engine: BatchEngine<usize> = BatchEngine::new(&cfg, 2);
+        // Three up front (more requests than slots), the rest join
+        // mid-stream while earlier ones are prefilling/decoding.
+        for (i, (p, gc)) in reqs.iter().take(3).enumerate() {
+            engine.submit(i, p.clone(), gc.clone()).unwrap();
+        }
+        let mut submitted = 3;
+        let mut done = Vec::new();
+        let mut steps = 0usize;
+        while !engine.is_idle() {
+            done.extend(
+                engine.step(&exec, &entry, model)
+                    .map_err(|e| e.to_string())?);
+            engine.pool().check_page_accounting()?;
+            steps += 1;
+            if steps == 2 && submitted < reqs.len() {
+                for (i, (p, gc)) in
+                    reqs.iter().enumerate().skip(submitted)
+                {
+                    engine.submit(i, p.clone(), gc.clone()).unwrap();
+                }
+                submitted = reqs.len();
+            }
+            prop_ensure!(steps < 10_000, "engine failed to drain");
+        }
+        prop_ensure!(done.len() == reqs.len(),
+                     "finished {} of {}", done.len(), reqs.len());
+        for (i, g) in &done {
+            prop_ensure!(g.tokens == solo[*i],
+                         "request {i} diverged under mixed \
+                          prefill+decode batching");
+            prop_ensure!(g.stats.ttft_s >= g.stats.prefill_s,
+                         "request {i}: ttft {} < own prefill work {}",
+                         g.stats.ttft_s, g.stats.prefill_s);
+            prop_ensure!(g.stats.prompt_tokens == reqs[*i].0.len(),
+                         "request {i}: prompt token count");
+        }
+        prop_ensure!(engine.pool().pages_in_use() == 0,
+                     "pages left after drain: {}",
+                     engine.pool().pages_in_use());
+        Ok(())
+    });
+}
