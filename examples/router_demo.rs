@@ -108,6 +108,9 @@ fn main() -> anyhow::Result<()> {
               -> {:.1} req/s, avg batch fill {:.1}%",
              served as f64 / dt,
              100.0 * served as f64 / (batches as f64 * batch as f64));
+    // Same data the JSON export serializes, rendered for eyes.
+    print!("{}",
+           nsds::telemetry::render_summary(&queue.metrics().snapshot()));
     for (cid, h) in handles.into_iter().enumerate() {
         let ppl = h.join().unwrap()?;
         println!("client {cid}: stream ppl {ppl:.3}");

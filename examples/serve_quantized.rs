@@ -20,6 +20,7 @@ use nsds::infer::{generate, Executor, GenConfig, ModelRef, NativeEngine,
 use nsds::model::{ModelConfig, Weights};
 use nsds::quant::Backend;
 use nsds::runtime::{run_forward, ModelEntry};
+use nsds::telemetry::{render_summary, MetricsRegistry};
 use nsds::util::rng::Rng;
 
 fn percentile(sorted: &[f64], p: f64) -> f64 {
@@ -28,10 +29,15 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
 }
 
 /// Generation showcase shared by both modes: greedy + top-k from every
-/// variant, with per-request stats and FP-vs-packed greedy agreement.
+/// variant, with per-request stats and FP-vs-packed greedy agreement,
+/// plus the telemetry snapshot summary the runs recorded.
 fn generation_demo(exec: &dyn Executor, entry: &ModelEntry,
                    fp: ModelRef, packed: ModelRef,
                    corpus: &[i32]) -> anyhow::Result<()> {
+    let reg = MetricsRegistry::new();
+    let h_ttft = reg.histogram("demo.gen.ttft_ns");
+    let h_decode = reg.histogram("demo.gen.decode_ns");
+    let n_tokens = reg.counter("demo.gen.tokens");
     let s = entry.config.seq;
     let prompt = &corpus[..(s / 2).max(1)];
     let max_new = (s / 2).max(1);
@@ -50,14 +56,17 @@ fn generation_demo(exec: &dyn Executor, entry: &ModelEntry,
                 ..GenConfig::default()
             };
             let g = generate(exec, entry, model, prompt, &gc)?;
+            h_ttft.record(g.stats.ttft_ns);
+            h_decode.record(g.stats.decode_ns);
+            n_tokens.add(g.tokens.len() as u64);
             println!(
                 "  {label:6} {mode:6} -> {:2} tokens  prefill {:6.2}ms  \
                  ttft {:6.2}ms  decode {:6.2}ms  {:7.0} tok/s  \
                  first: {:?}",
                 g.tokens.len(),
-                g.stats.prefill_s * 1e3,
-                g.stats.ttft_s * 1e3,
-                g.stats.decode_s * 1e3,
+                g.stats.prefill_s() * 1e3,
+                g.stats.ttft_s() * 1e3,
+                g.stats.decode_s() * 1e3,
                 g.stats.decode_tok_per_s(),
                 &g.tokens[..g.tokens.len().min(6)]
             );
@@ -67,6 +76,7 @@ fn generation_demo(exec: &dyn Executor, entry: &ModelEntry,
         exec, entry, fp, packed, corpus, (s / 2).max(1), (s / 4).max(1),
         8)?;
     println!("  FP32 vs packed greedy agreement: {:.1}%", agree * 100.0);
+    print!("{}", render_summary(&reg.snapshot()));
     Ok(())
 }
 

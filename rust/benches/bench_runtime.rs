@@ -4,6 +4,15 @@
 //! PJRT kernel section additionally needs the `xla` feature.
 //! These regenerate the latency/throughput side of every paper exhibit
 //! and the native-vs-PJRT comparison axis.
+//!
+//! Flags (after `--` under `cargo bench`):
+//!   --json    write every section's measurements as the versioned
+//!             `nsds.bench` schema to `BENCH_runtime.json` at the repo
+//!             root (then re-parse + validate it, failing loudly on a
+//!             schema mismatch — CI's gate)
+//!   --quick   ~25x shorter measurement target and reduced prefill
+//!             lengths: the CI smoke mode (plumbing check, not stable
+//!             numbers)
 
 #[path = "harness.rs"]
 mod harness;
@@ -250,9 +259,13 @@ fn prefill_section() {
     let exec = NativeEngine::new();
 
     println!("== chunked vs per-token prefill (time-to-first-token) ==");
+    // Quick mode trims the long prompts: the 1024-token per-token
+    // prefill alone would dominate the smoke run.
+    let plens: &[usize] =
+        if harness::quick() { &[32, 128] } else { &[32, 256, 1024] };
     for (label, model) in [("dense", ModelRef::Dense(&fp)),
                            ("packed-4bit", ModelRef::Packed(&qm))] {
-        for &plen in &[32usize, 256, 1024] {
+        for &plen in plens {
             let prompt: Vec<i32> =
                 (0..plen).map(|i| (i % cfg.vocab) as i32).collect();
             // Each iteration is one whole-prompt prefill into a fresh
@@ -477,17 +490,51 @@ fn pjrt_kernel_section(
     Ok(())
 }
 
+/// Write `take_results()` as the versioned bench document, then
+/// re-read and validate what landed on disk — the same check CI's
+/// bench-smoke job relies on (exit nonzero ⇔ the artifact is unusable).
+fn write_json_report() -> anyhow::Result<()> {
+    let entries = harness::take_results();
+    let doc = nsds::telemetry::bench_report("bench_runtime", &entries);
+    let path = "BENCH_runtime.json";
+    std::fs::write(path, format!("{doc}\n"))?;
+    let text = std::fs::read_to_string(path)?;
+    let parsed = nsds::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{path} re-parse failed: {e}"))?;
+    nsds::telemetry::validate_bench_report(&parsed)
+        .map_err(|e| anyhow::anyhow!("{path} schema-invalid: {e}"))?;
+    println!("wrote {path}: {} entries, schema v{}", entries.len(),
+             nsds::telemetry::SCHEMA_VERSION);
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    // `cargo bench` also passes harness flags like `--bench`; take
+    // what we know, ignore the rest.
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json = args.iter().any(|a| a == "--json");
+    harness::set_quick(args.iter().any(|a| a == "--quick"));
+
+    harness::set_section("native");
     native_section();
+    harness::set_section("decode");
     decode_section();
+    harness::set_section("batch_decode");
     batch_decode_section();
+    harness::set_section("prefill");
     prefill_section();
+    harness::set_section("paged_kv");
     paged_kv_section();
     let dir = Manifest::default_dir();
-    if !dir.join("manifest.json").exists() {
+    if dir.join("manifest.json").exists() {
+        harness::set_section("pipeline");
+        pipeline_section()?;
+    } else {
         println!("bench_runtime: no artifacts (run `make artifacts`); \
                   skipping pipeline benches");
-        return Ok(());
     }
-    pipeline_section()
+    if json {
+        write_json_report()?;
+    }
+    Ok(())
 }

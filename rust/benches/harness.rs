@@ -2,13 +2,22 @@
 //! offline — DESIGN.md "Environment deviations").
 //!
 //! Each bench target sets `harness = false` in Cargo.toml and calls
-//! `bench(name, || work)`: adaptive iteration count targeting ~0.5 s per
-//! measurement, reporting median / mean / p95 per-iteration time.
-//! Results append to `bench_results.tsv` (gitignored) so the perf pass
-//! can diff before/after.
+//! `bench(name, || work)`: adaptive iteration count targeting ~0.5 s
+//! per measurement (~0.02 s in `--quick` mode, the CI smoke setting),
+//! reporting median / mean / p95 per-iteration time. Results append to
+//! `bench_results.tsv` (gitignored) so the perf pass can diff
+//! before/after, and accumulate in memory tagged with the current
+//! `set_section` label — `take_results` hands them to the versioned
+//! `telemetry::bench_report` JSON export (`BENCH_runtime.json`).
+#![allow(dead_code)]
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
 use std::time::Instant;
 
+use nsds::telemetry::BenchEntry;
+
+#[derive(Clone)]
 pub struct BenchResult {
     pub name: String,
     pub iters: usize,
@@ -17,13 +26,39 @@ pub struct BenchResult {
     pub p95_ns: f64,
 }
 
+static QUICK: AtomicBool = AtomicBool::new(false);
+static SECTION: Mutex<String> = Mutex::new(String::new());
+static RESULTS: Mutex<Vec<BenchEntry>> = Mutex::new(Vec::new());
+
+/// Quick mode: ~25x shorter measurement target. CI's bench-smoke job
+/// uses this — it checks the harness + export plumbing, not the
+/// numbers' stability.
+pub fn set_quick(on: bool) {
+    QUICK.store(on, Ordering::Relaxed);
+}
+
+pub fn quick() -> bool {
+    QUICK.load(Ordering::Relaxed)
+}
+
+/// Label the bench section subsequent `bench` calls belong to (becomes
+/// the section name in `BENCH_runtime.json`).
+pub fn set_section(name: &str) {
+    *SECTION.lock().unwrap() = name.to_string();
+}
+
+/// Drain every result recorded so far, in run order.
+pub fn take_results() -> Vec<BenchEntry> {
+    std::mem::take(&mut *RESULTS.lock().unwrap())
+}
+
 /// Run `f` adaptively and report stats. Returns per-iter median ns.
 pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
     // Warm-up + calibration.
     let t0 = Instant::now();
     f();
     let once = t0.elapsed().as_secs_f64().max(1e-9);
-    let target = 0.5f64; // seconds of measurement
+    let target = if quick() { 0.02f64 } else { 0.5f64 };
     let iters = ((target / once) as usize).clamp(3, 10_000);
 
     let mut samples = Vec::with_capacity(iters);
@@ -50,6 +85,14 @@ pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
         r.name, r.iters, fmt_ns(median), fmt_ns(mean), fmt_ns(p95)
     );
     append_tsv(&r);
+    RESULTS.lock().unwrap().push(BenchEntry {
+        section: SECTION.lock().unwrap().clone(),
+        name: r.name.clone(),
+        iters: r.iters as u64,
+        median_ns: r.median_ns,
+        mean_ns: r.mean_ns,
+        p95_ns: r.p95_ns,
+    });
     r
 }
 

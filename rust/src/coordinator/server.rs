@@ -18,7 +18,11 @@
 //! workers. Admission is prefix-aware over the paged KV pool: a request
 //! whose prompt shares a tokenized prefix with a resident sequence
 //! references the resident pages copy-on-write and only chunk-prefills
-//! the tail (`gen_shared_tokens` counts the prefill work saved).
+//! the tail (the `serve.gen.shared_prefix_tokens` gauge counts the
+//! prefill work saved). Serving metrics — counters, gauges, and
+//! latency histograms — record into the queue's `MetricsRegistry`
+//! (see `ServerQueue`); snapshot it for the JSON export or the human
+//! summary.
 //! Scheduler intake is bounded (about two batches of generations), so
 //! excess requests stay in the bounded queue.
 //! Backpressure: submitters block while the queue is at `max_queue`.
@@ -34,8 +38,9 @@
 //! weights.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -44,6 +49,8 @@ use crate::infer::{BatchEngine, Executor, GenConfig, Generation,
                    ModelRef, QuantizedModel};
 use crate::model::Weights;
 use crate::runtime::ModelEntry;
+use crate::telemetry::registry::{Counter, Gauge, Histogram,
+                                 MetricsRegistry};
 
 /// A deployable weight variant: dense f32 or packed 2/4-bit codes.
 pub enum ServedWeights {
@@ -94,48 +101,83 @@ struct GenRequest {
     reply: std::sync::mpsc::Sender<Result<Generation>>,
 }
 
-/// Shared queue + stats between clients and the engine thread.
+/// Shared queue + telemetry between clients and the engine thread.
+///
+/// Serving metrics live in a `MetricsRegistry` (one per queue by
+/// default, so concurrent servers in one process never mix samples;
+/// pass a shared registry to `with_registry` to aggregate). The serve
+/// loop records through pre-registered handles — relaxed atomics, no
+/// locks or allocation per request — and the legacy accessor methods
+/// (`stats`, `gen_stats`, `gen_shared`, `gen_latency`) are thin views
+/// over the same cells. Registered metrics:
+///
+/// * `serve.nll.requests` / `serve.nll.batches` /
+///   `serve.nll.padded_rows` — counters for the padded-forward path.
+/// * `serve.gen.requests` / `serve.gen.tokens` — counters over
+///   finished generations.
+/// * `serve.gen.shared_prefix_tokens` — gauge: prompt tokens admitted
+///   by shared-prefix page reference instead of prefill
+///   (`KvCachePool::admit_shared`).
+/// * `serve.gen.prefill_ns` / `serve.gen.ttft_ns` /
+///   `serve.gen.decode_ns` — histograms over finished generations,
+///   recording each request's `GenStats` nanosecond fields verbatim
+///   (same integers, no float round trip — the histogram quantiles and
+///   per-request ground truth never disagree beyond one bucket).
+/// * `serve.engine.step_ns` — histogram of scheduler step wall time.
 pub struct ServerQueue {
     queue: Mutex<VecDeque<Msg>>,
     cv: Condvar,
     max_queue: usize,
     stopped: AtomicBool,
-    pub served: AtomicU64,
-    pub batches: AtomicU64,
-    pub padded_rows: AtomicU64,
-    pub gen_served: AtomicU64,
-    pub gen_tokens: AtomicU64,
-    /// Prompt tokens admitted by shared-prefix page reference instead
-    /// of prefill (paged KV cache; see `KvCachePool::admit_shared`).
-    pub gen_shared_tokens: AtomicU64,
-    /// Nanoseconds of true per-request prefill work over finished
-    /// generations: each request's own chunked-prefill spans, excluding
-    /// co-batched decode work (see `GenStats::prefill_s`).
-    pub gen_prefill_ns: AtomicU64,
-    /// Nanoseconds of time-to-first-token over finished generations:
-    /// scheduler submission → first sampled token, slot queueing,
-    /// prefix-donor deferral and co-batched steps included — the
-    /// latency clients observe before output starts (minus any wait in
-    /// the bounded queue upstream of the scheduler).
-    pub gen_ttft_ns: AtomicU64,
+    registry: Arc<MetricsRegistry>,
+    served: Counter,
+    batches: Counter,
+    padded_rows: Counter,
+    gen_served: Counter,
+    gen_tokens: Counter,
+    gen_shared_tokens: Gauge,
+    gen_prefill: Histogram,
+    gen_ttft: Histogram,
+    gen_decode: Histogram,
+    step_ns: Histogram,
 }
 
 impl ServerQueue {
+    /// A queue with its own private metrics registry.
     pub fn new(max_queue: usize) -> Arc<Self> {
+        ServerQueue::with_registry(max_queue, MetricsRegistry::new())
+    }
+
+    /// A queue recording into `registry` (e.g. `MetricsRegistry::
+    /// global()` to aggregate every server in the process). Handles are
+    /// resolved here, once — the serve loop never touches the registry
+    /// lock.
+    pub fn with_registry(max_queue: usize,
+                         registry: Arc<MetricsRegistry>) -> Arc<Self> {
         Arc::new(ServerQueue {
             queue: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             max_queue,
             stopped: AtomicBool::new(false),
-            served: AtomicU64::new(0),
-            batches: AtomicU64::new(0),
-            padded_rows: AtomicU64::new(0),
-            gen_served: AtomicU64::new(0),
-            gen_tokens: AtomicU64::new(0),
-            gen_shared_tokens: AtomicU64::new(0),
-            gen_prefill_ns: AtomicU64::new(0),
-            gen_ttft_ns: AtomicU64::new(0),
+            served: registry.counter("serve.nll.requests"),
+            batches: registry.counter("serve.nll.batches"),
+            padded_rows: registry.counter("serve.nll.padded_rows"),
+            gen_served: registry.counter("serve.gen.requests"),
+            gen_tokens: registry.counter("serve.gen.tokens"),
+            gen_shared_tokens:
+                registry.gauge("serve.gen.shared_prefix_tokens"),
+            gen_prefill: registry.histogram("serve.gen.prefill_ns"),
+            gen_ttft: registry.histogram("serve.gen.ttft_ns"),
+            gen_decode: registry.histogram("serve.gen.decode_ns"),
+            step_ns: registry.histogram("serve.engine.step_ns"),
+            registry,
         })
+    }
+
+    /// The registry this queue records into — snapshot it for the JSON
+    /// export or `telemetry::render_summary`.
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.registry
     }
 
     fn push(&self, msg: Msg) {
@@ -162,38 +204,37 @@ impl ServerQueue {
         self.cv.notify_all();
     }
 
+    /// (NLL requests served, batches run, padded rows) — thin view over
+    /// the `serve.nll.*` counters.
     pub fn stats(&self) -> (u64, u64, u64) {
-        (
-            self.served.load(Ordering::Relaxed),
-            self.batches.load(Ordering::Relaxed),
-            self.padded_rows.load(Ordering::Relaxed),
-        )
+        (self.served.get(), self.batches.get(),
+         self.padded_rows.get())
     }
 
-    /// (generation requests served, total new tokens emitted).
+    /// (generation requests served, total new tokens emitted) — thin
+    /// view over the `serve.gen.*` counters.
     pub fn gen_stats(&self) -> (u64, u64) {
-        (
-            self.gen_served.load(Ordering::Relaxed),
-            self.gen_tokens.load(Ordering::Relaxed),
-        )
+        (self.gen_served.get(), self.gen_tokens.get())
     }
 
     /// Prompt tokens the scheduler admitted by referencing resident
-    /// prefix pages instead of prefilling them.
+    /// prefix pages instead of prefilling them
+    /// (`serve.gen.shared_prefix_tokens`).
     pub fn gen_shared(&self) -> u64 {
-        self.gen_shared_tokens.load(Ordering::Relaxed)
+        self.gen_shared_tokens.get()
     }
 
     /// (cumulative per-request prefill seconds, cumulative
-    /// time-to-first-token seconds) over finished generations — divide
-    /// by `gen_stats().0` for per-request averages. Prefill counts only
-    /// each request's own chunked-prefill work; TTFT spans scheduler
-    /// submission → first sampled token, queueing/deferral included.
+    /// time-to-first-token seconds) over finished generations — the
+    /// `serve.gen.prefill_ns`/`serve.gen.ttft_ns` histogram SUMS (exact
+    /// integer nanosecond totals; bucketing only coarsens quantiles) —
+    /// divide by `gen_stats().0` for per-request averages. Prefill
+    /// counts only each request's own chunked-prefill work; TTFT spans
+    /// scheduler submission → first sampled token, queueing/deferral
+    /// included.
     pub fn gen_latency(&self) -> (f64, f64) {
-        (
-            self.gen_prefill_ns.load(Ordering::Relaxed) as f64 / 1e9,
-            self.gen_ttft_ns.load(Ordering::Relaxed) as f64 / 1e9,
-        )
+        (self.gen_prefill.sum() as f64 / 1e9,
+         self.gen_ttft.sum() as f64 / 1e9)
     }
 }
 
@@ -398,20 +439,19 @@ fn serve_loop(exec: &(dyn Executor + Sync), entry: &ModelEntry,
         // batch-decode one token for every in-flight generation, retire
         // finished sequences.
         if !engine.is_idle() {
+            let t0 = Instant::now();
             let done =
                 engine.step(exec, entry, weights.model_ref())?;
-            q.gen_shared_tokens.store(engine.shared_prefix_tokens(),
-                                      Ordering::Relaxed);
+            q.step_ns.record(t0.elapsed().as_nanos() as u64);
+            q.gen_shared_tokens.set(engine.shared_prefix_tokens());
             for (reply, gen) in done {
-                q.gen_served.fetch_add(1, Ordering::Relaxed);
-                q.gen_tokens.fetch_add(gen.tokens.len() as u64,
-                                       Ordering::Relaxed);
-                q.gen_prefill_ns.fetch_add(
-                    (gen.stats.prefill_s * 1e9) as u64,
-                    Ordering::Relaxed);
-                q.gen_ttft_ns.fetch_add(
-                    (gen.stats.ttft_s * 1e9) as u64,
-                    Ordering::Relaxed);
+                q.gen_served.inc();
+                q.gen_tokens.add(gen.tokens.len() as u64);
+                // The GenStats nanosecond fields verbatim — no
+                // seconds→nanos round trip anywhere in the path.
+                q.gen_prefill.record(gen.stats.prefill_ns);
+                q.gen_ttft.record(gen.stats.ttft_ns);
+                q.gen_decode.record(gen.stats.decode_ns);
                 let _ = reply.send(Ok(gen));
             }
         }
@@ -424,16 +464,15 @@ fn serve_loop(exec: &(dyn Executor + Sync), entry: &ModelEntry,
             }
             let logits =
                 weights.forward(exec, entry, &tokens, batch)?;
-            q.batches.fetch_add(1, Ordering::Relaxed);
-            q.padded_rows
-                .fetch_add((batch - rows) as u64, Ordering::Relaxed);
+            q.batches.inc();
+            q.padded_rows.add((batch - rows) as u64);
             for (i, r) in reqs.into_iter().enumerate() {
                 let row = crate::tensor::Tensor::new(
                     logits.data()[i * seq * v..(i + 1) * seq * v].to_vec(),
                     vec![1, seq, v],
                 );
                 let res = batch_nll(&row, &r.tokens, 1, seq);
-                q.served.fetch_add(1, Ordering::Relaxed);
+                q.served.inc();
                 let _ = r.reply.send(res);
             }
         }

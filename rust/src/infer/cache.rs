@@ -82,6 +82,9 @@ pub struct KvCachePool {
     /// Per-page reference counts; 0 ⇔ the page is on the free list.
     refcount: Vec<u32>,
     free: Vec<usize>,
+    /// Copy-on-write page splits performed over the pool's lifetime
+    /// (monotone; the engine's tracer emits per-step deltas).
+    cow_splits: u64,
 }
 
 /// Read-only view of one layer of one slot's K/V: resolves logical ring
@@ -150,6 +153,7 @@ impl KvCachePool {
             v: Vec::new(),
             refcount: Vec::new(),
             free: Vec::new(),
+            cow_splits: 0,
         }
     }
 
@@ -395,6 +399,7 @@ impl KvCachePool {
             }
             Some(p) if self.refcount[p] > 1 => {
                 // First divergent write into a shared page.
+                self.cow_splits += 1;
                 let q = self.alloc_page();
                 let words = self.page_words();
                 self.k.copy_within(p * words..(p + 1) * words,
@@ -574,6 +579,14 @@ impl KvCachePool {
             .flatten()
             .filter(|&&p| self.refcount[p] > 1)
             .count()
+    }
+
+    /// Copy-on-write page splits performed since construction: each is
+    /// one `writable_block` hit on a page with refcount > 1 (a sharer
+    /// diverging from its donor, or an evicting ring wrapping into a
+    /// still-shared block). Monotone — telemetry takes deltas.
+    pub fn cow_splits(&self) -> u64 {
+        self.cow_splits
     }
 
     /// Bytes resident in referenced K/V pages. Pages on the free list
@@ -956,6 +969,7 @@ mod tests {
         p.advance(b);
         assert_eq!(p.shared_page_count(a), 0, "page was copied");
         assert_eq!(p.shared_page_count(b), 0);
+        assert_eq!(p.cow_splits(), 1, "exactly one CoW split counted");
         // Donor's row 0 is untouched; b's row 0 holds the new write.
         assert_eq!(p.layer_view(0, a).k_row(0)[0], 0.0);
         assert_eq!(p.layer_view(0, b).k_row(0)[0], 7.0);

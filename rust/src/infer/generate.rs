@@ -24,6 +24,7 @@ use super::cache::PAGE_SIZE;
 use super::{Executor, KvCachePool, ModelRef};
 use crate::model::ModelConfig;
 use crate::runtime::ModelEntry;
+use crate::telemetry::trace::{Ev, StepTracer, TraceEvent};
 use crate::util::rng::Rng;
 
 /// Next-token selection rule.
@@ -73,16 +74,20 @@ pub enum StopReason {
     StopToken(i32),
 }
 
-/// Per-request timing/throughput counters.
+/// Per-request timing/throughput counters, recorded as INTEGER
+/// nanoseconds (`Instant::elapsed().as_nanos()`) — the same unit the
+/// telemetry histograms bucket (`serve.gen.*_ns`), so a server
+/// histogram quantile and a per-request `GenStats` value never disagree
+/// through a float round trip. Use the `*_s()` views for display.
 ///
-/// `prefill_s` is the request's OWN prefill cost: each chunked-prefill
+/// `prefill_ns` is the request's OWN prefill cost: each chunked-prefill
 /// call serves exactly one request, so summing those spans excludes
 /// co-batched decode work and scheduler waiting. Prompt tokens that
 /// cost the request nothing attributable contribute nothing: tokens
 /// admitted by shared-prefix page reference, and a lone final prompt
 /// token that rides the shared decode batch (so a 1-token prompt, or a
-/// sharer whose whole tail is one token, reports `prefill_s == 0`).
-/// `ttft_s` and `decode_s` are wall-clock spans of the request's life
+/// sharer whose whole tail is one token, reports `prefill_ns == 0`).
+/// `ttft_ns` and `decode_ns` are wall-clock spans of the request's life
 /// inside its engine: in a B=1 engine (`generate`) they are dedicated
 /// per-request cost; in a shared continuous batch (`generate_batch`,
 /// the server scheduler) they include co-batched sequences' work and
@@ -93,32 +98,52 @@ pub enum StopReason {
 pub struct GenStats {
     pub prompt_tokens: usize,
     pub gen_tokens: usize,
-    /// Wall time of this request's own prefill chunks (cache build-up
-    /// work actually spent on this prompt; see the struct docs).
-    pub prefill_s: f64,
-    /// Time-to-first-token: wall clock from SUBMISSION to the engine to
-    /// the first sampled token (prefill end when `max_new == 0`) —
+    /// Nanoseconds spent in this request's own prefill chunks (cache
+    /// build-up work actually spent on this prompt; see struct docs).
+    pub prefill_ns: u64,
+    /// Time-to-first-token: nanoseconds from SUBMISSION to the engine
+    /// to the first sampled token (prefill end when `max_new == 0`) —
     /// queueing for a slot, deferral for a prefix donor, and co-batched
     /// steps all included; this is the latency a caller observes before
     /// output starts. (The server submits when its serve loop drains
     /// the queue, so bounded-queue wait upstream of the scheduler adds
     /// on top.)
-    pub ttft_s: f64,
-    /// Wall time of the new-token decode loop (prefill end →
+    pub ttft_ns: u64,
+    /// Nanoseconds in the new-token decode loop (prefill end →
     /// retirement).
-    pub decode_s: f64,
+    pub decode_ns: u64,
 }
 
 impl GenStats {
+    /// Seconds view of `prefill_ns`.
+    pub fn prefill_s(&self) -> f64 {
+        self.prefill_ns as f64 / 1e9
+    }
+
+    /// Seconds view of `ttft_ns`.
+    pub fn ttft_s(&self) -> f64 {
+        self.ttft_ns as f64 / 1e9
+    }
+
+    /// Seconds view of `decode_ns`.
+    pub fn decode_s(&self) -> f64 {
+        self.decode_ns as f64 / 1e9
+    }
+
     /// Observed request latency: submission → retirement.
+    pub fn total_ns(&self) -> u64 {
+        self.ttft_ns + self.decode_ns
+    }
+
+    /// Seconds view of `total_ns`.
     pub fn total_s(&self) -> f64 {
-        self.ttft_s + self.decode_s
+        self.total_ns() as f64 / 1e9
     }
 
     /// New tokens per second over the decode loop.
     pub fn decode_tok_per_s(&self) -> f64 {
-        if self.decode_s > 0.0 {
-            self.gen_tokens as f64 / self.decode_s
+        if self.decode_ns > 0 {
+            self.gen_tokens as f64 * 1e9 / self.decode_ns as f64
         } else {
             0.0
         }
@@ -221,6 +246,9 @@ fn chunk_len(pos: usize, remaining: usize, cap: usize) -> usize {
 /// A request queued in a `BatchEngine`, waiting for a free cache slot.
 struct Pending<T> {
     tag: T,
+    /// Engine-local request id: monotone from 0 in submit order — the
+    /// identity trace events carry (`StepTracer::timeline`).
+    rid: u64,
     prompt: Vec<i32>,
     gc: GenConfig,
     /// When the request entered the engine — time-to-first-token counts
@@ -257,6 +285,8 @@ fn common_prefix(prompt: &[i32], d_prompt: &[i32], d_tokens: &[i32],
 /// One admitted sequence: its slot, sampling state, and timings.
 struct Active<T> {
     tag: T,
+    /// Carried from `Pending`: trace identity.
+    rid: u64,
     slot: usize,
     prompt: Vec<i32>,
     gc: GenConfig,
@@ -272,10 +302,11 @@ struct Active<T> {
     /// Carried from `Pending`: when the request entered the engine.
     t_submit: Instant,
     t_prefill_done: Option<Instant>,
-    /// Wall time spent in THIS request's own prefill chunks.
-    prefill_work_s: f64,
-    /// Submission → first sampled token (set when prefill completes).
-    ttft_s: f64,
+    /// Nanoseconds spent in THIS request's own prefill chunks.
+    prefill_work_ns: u64,
+    /// Submission → first sampled token, nanoseconds (set when prefill
+    /// completes).
+    ttft_ns: u64,
     /// Stop decision made during the current step; the sequence retires
     /// at the end of the step.
     finished: Option<StopReason>,
@@ -306,7 +337,7 @@ impl<T> Active<T> {
             }
         }
         if first {
-            self.ttft_s = self.t_submit.elapsed().as_secs_f64();
+            self.ttft_ns = self.t_submit.elapsed().as_nanos() as u64;
         }
     }
 }
@@ -347,6 +378,15 @@ pub struct BatchEngine<T> {
     pending: VecDeque<Pending<T>>,
     active: Vec<Active<T>>,
     shared_tokens: u64,
+    /// Opt-in flight recorder (`enable_trace`). `None` costs one branch
+    /// per emission site and allocates nothing; enabled or not, the
+    /// tracer only observes — tokens stay bit-identical (pinned by
+    /// `rust/tests/batch_decode.rs`).
+    tracer: Option<StepTracer>,
+    /// Steps executed (trace events stamp with this).
+    steps: u64,
+    /// Next request id handed out by `submit`.
+    next_rid: u64,
 }
 
 impl<T> BatchEngine<T> {
@@ -360,6 +400,38 @@ impl<T> BatchEngine<T> {
             pending: VecDeque::new(),
             active: Vec::new(),
             shared_tokens: 0,
+            tracer: None,
+            steps: 0,
+            next_rid: 0,
+        }
+    }
+
+    /// Start recording step events into a fresh ring of `capacity`
+    /// events (all storage allocated here, none on the hot path).
+    /// Replaces any previous tracer.
+    pub fn enable_trace(&mut self, capacity: usize) {
+        self.tracer = Some(StepTracer::new(capacity));
+    }
+
+    /// Stop tracing, returning the recorder for inspection.
+    pub fn disable_trace(&mut self) -> Option<StepTracer> {
+        self.tracer.take()
+    }
+
+    /// The flight recorder, when tracing is enabled.
+    pub fn tracer(&self) -> Option<&StepTracer> {
+        self.tracer.as_ref()
+    }
+
+    /// Steps executed so far (idle no-op calls don't count).
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    #[inline]
+    fn trace(&mut self, step: u64, ev: Ev) {
+        if let Some(t) = self.tracer.as_mut() {
+            t.push(TraceEvent { step, ev });
         }
     }
 
@@ -389,14 +461,19 @@ impl<T> BatchEngine<T> {
     /// Queue a request. It is admitted into a cache slot by a later
     /// `step` as capacity frees up. On a rejected prompt the tag comes
     /// back with the error, so the server can fail that request's reply
-    /// channel rather than silently dropping it.
+    /// channel rather than silently dropping it. Accepted requests get
+    /// the engine's next request id (monotone from 0 in submit order) —
+    /// the identity trace timelines are keyed by.
     pub fn submit(&mut self, tag: T, prompt: Vec<i32>, gc: GenConfig)
         -> Result<(), (T, anyhow::Error)> {
         if let Err(e) = self.check(&prompt) {
             return Err((tag, e));
         }
+        let rid = self.next_rid;
+        self.next_rid += 1;
         self.pending.push_back(Pending {
             tag,
+            rid,
             prompt,
             gc,
             t_submit: Instant::now(),
@@ -448,6 +525,8 @@ impl<T> BatchEngine<T> {
         // Sharing never changes outputs: shared rows are bit-identical
         // to what the request's own prefill would append (see the
         // determinism note below).
+        let step_no = self.steps;
+        let cow0 = self.pool.cow_splits();
         let mut deferred: Vec<Pending<T>> = Vec::new();
         while self.pool.free_count() > 0 {
             let Some(p) = self.pending.pop_front() else { break };
@@ -478,7 +557,12 @@ impl<T> BatchEngine<T> {
             }
             let now = best.map_or(0, |(_, s)| s);
             if best_later >= PAGE_SIZE && best_later > now {
+                let rid = p.rid;
                 deferred.push(p);
+                self.trace(step_no, Ev::Defer {
+                    rid,
+                    committed: best_later,
+                });
                 continue;
             }
             let (slot, shared) = match best {
@@ -493,9 +577,11 @@ impl<T> BatchEngine<T> {
                       0),
             };
             self.shared_tokens += shared as u64;
+            let prompt_len = p.prompt.len();
             let rng = Rng::new(p.gc.seed);
             self.active.push(Active {
                 tag: p.tag,
+                rid: p.rid,
                 slot,
                 prompt: p.prompt,
                 gc: p.gc,
@@ -504,9 +590,16 @@ impl<T> BatchEngine<T> {
                 tokens: Vec::new(),
                 t_submit: p.t_submit,
                 t_prefill_done: None,
-                prefill_work_s: 0.0,
-                ttft_s: 0.0,
+                prefill_work_ns: 0,
+                ttft_ns: 0,
                 finished: None,
+            });
+            let rid = self.active.last().expect("just pushed").rid;
+            self.trace(step_no, Ev::Admit {
+                rid,
+                slot,
+                prompt: prompt_len,
+                shared,
             });
         }
         // Deferred requests keep their original queue position.
@@ -516,6 +609,7 @@ impl<T> BatchEngine<T> {
         if self.active.is_empty() {
             return Ok(Vec::new());
         }
+        self.steps += 1;
 
         // Split the step's work BEFORE anything mutates: multi-token
         // prompt windows get a dedicated prefill chunk; everything else
@@ -557,6 +651,10 @@ impl<T> BatchEngine<T> {
         // step (instead of one token) while in-flight decoders still
         // get exactly one batched step below, so prefill never stalls
         // them for more than a chunk's worth of work.
+        // Ring rows recycled (evicted in place) this step: a position
+        // appended at `pos >= cap` overwrites the row holding
+        // `pos - cap`.
+        let mut recycled = 0usize;
         for (i, from, n) in prefills {
             let slot = self.active[i].slot;
             let t0 = Instant::now();
@@ -564,15 +662,24 @@ impl<T> BatchEngine<T> {
                 exec, entry, &mut self.pool, slot,
                 &self.active[i].prompt[from..from + n])?;
             let a = &mut self.active[i];
-            a.prefill_work_s += t0.elapsed().as_secs_f64();
+            a.prefill_work_ns += t0.elapsed().as_nanos() as u64;
             a.fed += n;
-            if a.fed < a.prompt.len() {
-                continue; // more chunks next step
+            let rid = a.rid;
+            if a.fed >= a.prompt.len() {
+                // First sample comes from the chunk's last row — the
+                // same logits the last prompt token's decode step would
+                // have returned (rows are bit-identical).
+                a.consume_row(logits.row(n - 1), true);
             }
-            // First sample comes from the chunk's last row — the same
-            // logits the last prompt token's decode step would have
-            // returned (rows are bit-identical).
-            a.consume_row(logits.row(n - 1), true);
+            recycled +=
+                (from + n).saturating_sub(self.pool.capacity(slot)
+                                          .max(from));
+            self.trace(step_no, Ev::PrefillChunk {
+                rid,
+                slot,
+                pos: from,
+                len: n,
+            });
         }
 
         // One token per batch rider — decoders feed their previous
@@ -591,10 +698,34 @@ impl<T> BatchEngine<T> {
             let v = self.cfg.vocab;
             for (ri, &i) in decoding.iter().enumerate() {
                 let a = &mut self.active[i];
+                // The appended position was `fed`; past the ring
+                // capacity it recycled the oldest row in place.
+                if a.fed >= self.pool.capacity(a.slot) {
+                    recycled += 1;
+                }
                 a.fed += 1;
                 a.consume_row(&logits.data()[ri * v..(ri + 1) * v],
                               a.fed == a.prompt.len());
             }
+            if self.tracer.is_some() {
+                let mut mask = 0u64;
+                for &(slot, _) in &batch {
+                    if slot < 64 {
+                        mask |= 1u64 << slot;
+                    }
+                }
+                self.trace(step_no, Ev::Decode {
+                    batch: batch.len(),
+                    slots_mask: mask,
+                });
+            }
+        }
+        let cow = self.pool.cow_splits() - cow0;
+        if cow > 0 {
+            self.trace(step_no, Ev::CowSplit { n: cow });
+        }
+        if recycled > 0 {
+            self.trace(step_no, Ev::Recycle { rows: recycled });
         }
 
         // Retire finished sequences, freeing their slots.
@@ -605,15 +736,21 @@ impl<T> BatchEngine<T> {
                 None => keep.push(a),
                 Some(stopped) => {
                     self.pool.retire(a.slot);
+                    self.trace(step_no, Ev::Retire {
+                        rid: a.rid,
+                        slot: a.slot,
+                        gen_tokens: a.tokens.len(),
+                    });
                     let t_pre =
                         a.t_prefill_done.expect("set at prefill end");
                     done.push((a.tag, Generation {
                         stats: GenStats {
                             prompt_tokens: a.prompt.len(),
                             gen_tokens: a.tokens.len(),
-                            prefill_s: a.prefill_work_s,
-                            ttft_s: a.ttft_s,
-                            decode_s: t_pre.elapsed().as_secs_f64(),
+                            prefill_ns: a.prefill_work_ns,
+                            ttft_ns: a.ttft_ns,
+                            decode_ns: t_pre.elapsed().as_nanos()
+                                as u64,
                         },
                         tokens: a.tokens,
                         stopped,

@@ -13,6 +13,8 @@
 //!   eval/               — perplexity + reasoning-task harness
 //!   coordinator/        — end-to-end pipeline + experiment drivers
 //!   report/             — tables/series for every paper exhibit
+//!   telemetry/          — metrics registry, step tracer, snapshot +
+//!                         bench JSON schema
 #![allow(clippy::needless_range_loop)]
 
 pub mod aggregate;
@@ -26,5 +28,6 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod sensitivity;
+pub mod telemetry;
 pub mod tensor;
 pub mod util;

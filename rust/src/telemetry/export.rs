@@ -1,0 +1,391 @@
+//! Snapshot + bench-registry schema: versioned JSON rendering of
+//! `RegistrySnapshot`s and bench results over the repo's hand-rolled
+//! `util::json` (serde is unreachable offline — DESIGN.md "Environment
+//! deviations"), plus the human summary the examples print.
+//!
+//! Versioning rules (DESIGN.md "Observability"): every document carries
+//! `schema_version` + `kind`. Adding fields is allowed WITHIN a
+//! version (readers ignore unknown keys); removing or re-typing a field
+//! bumps `SCHEMA_VERSION`, and readers reject versions they don't
+//! know (`!= SCHEMA_VERSION`) instead of misreading them. JSON numbers
+//! are f64, so u64 values above 2^53 (≈104 days of summed
+//! nanoseconds) round in the export — fine for the latency/throughput
+//! magnitudes recorded here.
+
+use std::collections::BTreeMap;
+
+use crate::telemetry::registry::{HistSnapshot, RegistrySnapshot};
+use crate::util::json::Json;
+
+/// Version of BOTH document kinds below (they evolve together with the
+/// registry types).
+pub const SCHEMA_VERSION: u32 = 1;
+/// `kind` of a metrics-registry snapshot document.
+pub const KIND_METRICS: &str = "nsds.metrics";
+/// `kind` of a bench-results document (`BENCH_*.json`).
+pub const KIND_BENCH: &str = "nsds.bench";
+
+fn num_map<T: Copy + Into<f64>>(m: &BTreeMap<String, T>) -> Json {
+    Json::Obj(
+        m.iter()
+            .map(|(k, v)| (k.clone(), Json::Num((*v).into())))
+            .collect(),
+    )
+}
+
+fn u64_json(v: u64) -> Json {
+    Json::Num(v as f64)
+}
+
+/// Render a registry snapshot as a versioned JSON document.
+pub fn snapshot_to_json(s: &RegistrySnapshot) -> Json {
+    let mut hists = BTreeMap::new();
+    for (name, h) in &s.histograms {
+        let mut o = BTreeMap::new();
+        o.insert("count".into(), u64_json(h.count));
+        o.insert("sum".into(), u64_json(h.sum));
+        o.insert("max".into(), u64_json(h.max));
+        o.insert(
+            "buckets".into(),
+            Json::Arr(
+                h.buckets
+                    .iter()
+                    .map(|&(lo, hi, n)| {
+                        Json::Arr(vec![u64_json(lo), u64_json(hi),
+                                       u64_json(n)])
+                    })
+                    .collect(),
+            ),
+        );
+        hists.insert(name.clone(), Json::Obj(o));
+    }
+    let mut doc = BTreeMap::new();
+    doc.insert("schema_version".into(),
+               Json::Num(SCHEMA_VERSION as f64));
+    doc.insert("kind".into(), Json::Str(KIND_METRICS.into()));
+    doc.insert("counters".into(),
+               num_map(&s.counters.iter()
+                   .map(|(k, &v)| (k.clone(), v as f64))
+                   .collect()));
+    doc.insert("gauges".into(),
+               num_map(&s.gauges.iter()
+                   .map(|(k, &v)| (k.clone(), v as f64))
+                   .collect()));
+    doc.insert("histograms".into(), Json::Obj(hists));
+    Json::Obj(doc)
+}
+
+/// Check a document's envelope: `kind` matches and `schema_version`
+/// is one this reader knows.
+fn check_envelope(j: &Json, kind: &str) -> Result<(), String> {
+    let k = j.get("kind").and_then(Json::as_str)
+        .ok_or("missing `kind`")?;
+    if k != kind {
+        return Err(format!("kind {k:?}, expected {kind:?}"));
+    }
+    let v = j.get("schema_version").and_then(Json::as_f64)
+        .ok_or("missing `schema_version`")? as u32;
+    if v != SCHEMA_VERSION {
+        return Err(format!(
+            "schema_version {v} not supported (reader knows \
+             {SCHEMA_VERSION}); refusing to misread"));
+    }
+    Ok(())
+}
+
+fn parse_u64_map(j: Option<&Json>, what: &str)
+    -> Result<BTreeMap<String, u64>, String> {
+    let obj = j.and_then(Json::as_obj)
+        .ok_or_else(|| format!("missing `{what}` object"))?;
+    obj.iter()
+        .map(|(k, v)| {
+            v.as_f64()
+                .map(|n| (k.clone(), n as u64))
+                .ok_or_else(|| format!("{what}.{k} not a number"))
+        })
+        .collect()
+}
+
+/// Parse a snapshot document back (round-trip of `snapshot_to_json`,
+/// modulo f64 rounding above 2^53).
+pub fn snapshot_from_json(j: &Json)
+    -> Result<RegistrySnapshot, String> {
+    check_envelope(j, KIND_METRICS)?;
+    let counters = parse_u64_map(j.get("counters"), "counters")?;
+    let gauges = parse_u64_map(j.get("gauges"), "gauges")?;
+    let mut histograms = BTreeMap::new();
+    let hs = j.get("histograms").and_then(Json::as_obj)
+        .ok_or("missing `histograms` object")?;
+    for (name, h) in hs {
+        let f = |k: &str| -> Result<u64, String> {
+            h.get(k).and_then(Json::as_f64).map(|n| n as u64)
+                .ok_or_else(|| format!("histograms.{name}.{k} missing"))
+        };
+        let mut buckets = Vec::new();
+        for (i, b) in h.get("buckets").and_then(Json::as_arr)
+            .ok_or_else(|| format!("histograms.{name}.buckets missing"))?
+            .iter().enumerate() {
+            let g = |k: usize| -> Result<u64, String> {
+                b.idx(k).and_then(Json::as_f64).map(|n| n as u64)
+                    .ok_or_else(|| format!(
+                        "histograms.{name}.buckets[{i}] malformed"))
+            };
+            buckets.push((g(0)?, g(1)?, g(2)?));
+        }
+        histograms.insert(name.clone(), HistSnapshot {
+            count: f("count")?,
+            sum: f("sum")?,
+            max: f("max")?,
+            buckets,
+        });
+    }
+    Ok(RegistrySnapshot { counters, gauges, histograms })
+}
+
+/// One bench measurement destined for a `BENCH_*.json` document.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchEntry {
+    /// Which bench section produced it (e.g. "prefill").
+    pub section: String,
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p95_ns: f64,
+}
+
+/// Render bench results as a versioned document, sections in
+/// first-seen order (an array, not an object — order is the bench
+/// program's narrative).
+pub fn bench_report(bench: &str, entries: &[BenchEntry]) -> Json {
+    let mut order: Vec<&str> = Vec::new();
+    for e in entries {
+        if !order.contains(&e.section.as_str()) {
+            order.push(&e.section);
+        }
+    }
+    let sections = order
+        .iter()
+        .map(|&sec| {
+            let rows = entries
+                .iter()
+                .filter(|e| e.section == sec)
+                .map(|e| {
+                    let mut o = BTreeMap::new();
+                    o.insert("name".into(), Json::Str(e.name.clone()));
+                    o.insert("iters".into(), u64_json(e.iters));
+                    o.insert("median_ns".into(), Json::Num(e.median_ns));
+                    o.insert("mean_ns".into(), Json::Num(e.mean_ns));
+                    o.insert("p95_ns".into(), Json::Num(e.p95_ns));
+                    Json::Obj(o)
+                })
+                .collect();
+            let mut o = BTreeMap::new();
+            o.insert("name".into(), Json::Str(sec.into()));
+            o.insert("entries".into(), Json::Arr(rows));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut doc = BTreeMap::new();
+    doc.insert("schema_version".into(),
+               Json::Num(SCHEMA_VERSION as f64));
+    doc.insert("kind".into(), Json::Str(KIND_BENCH.into()));
+    doc.insert("bench".into(), Json::Str(bench.into()));
+    doc.insert("sections".into(), Json::Arr(sections));
+    Json::Obj(doc)
+}
+
+/// Validate a bench document against the schema: envelope, a non-empty
+/// `sections` array, and well-typed entry rows. This is the CI gate
+/// (`bench_runtime --json` re-reads what it wrote through this before
+/// exiting 0).
+pub fn validate_bench_report(j: &Json) -> Result<(), String> {
+    check_envelope(j, KIND_BENCH)?;
+    j.get("bench").and_then(Json::as_str)
+        .ok_or("missing `bench` name")?;
+    let sections = j.get("sections").and_then(Json::as_arr)
+        .ok_or("missing `sections` array")?;
+    if sections.is_empty() {
+        return Err("empty `sections`".into());
+    }
+    for (i, s) in sections.iter().enumerate() {
+        let name = s.get("name").and_then(Json::as_str)
+            .ok_or_else(|| format!("sections[{i}] missing name"))?;
+        let entries = s.get("entries").and_then(Json::as_arr)
+            .ok_or_else(|| {
+                format!("section {name:?} missing entries array")
+            })?;
+        for (k, e) in entries.iter().enumerate() {
+            e.get("name").and_then(Json::as_str).ok_or_else(|| {
+                format!("{name}[{k}] missing name")
+            })?;
+            for field in ["iters", "median_ns", "mean_ns", "p95_ns"] {
+                let v = e.get(field).and_then(Json::as_f64)
+                    .ok_or_else(|| format!(
+                        "{name}[{k}] missing numeric {field}"))?;
+                if !(v >= 0.0) {
+                    return Err(format!(
+                        "{name}[{k}].{field} = {v} out of range"));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Humanize a value for display: nanosecond metrics (name suffix
+/// `_ns`) get time units, the rest plain integers.
+fn fmt_val(name: &str, v: f64) -> String {
+    if !name.ends_with("_ns") {
+        return format!("{v:.0}");
+    }
+    if v < 1e3 {
+        format!("{v:.0}ns")
+    } else if v < 1e6 {
+        format!("{:.2}µs", v / 1e3)
+    } else if v < 1e9 {
+        format!("{:.2}ms", v / 1e6)
+    } else {
+        format!("{:.3}s", v / 1e9)
+    }
+}
+
+/// Human summary of a snapshot — what `serve_quantized`/`router_demo`
+/// print. Same data as `snapshot_to_json`, rendered for eyes.
+pub fn render_summary(s: &RegistrySnapshot) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    let _ = writeln!(out, "telemetry snapshot (schema v{SCHEMA_VERSION})");
+    if !s.counters.is_empty() {
+        let _ = writeln!(out, "  counters:");
+        for (k, v) in &s.counters {
+            let _ = writeln!(out, "    {k:<40} {v:>12}");
+        }
+    }
+    if !s.gauges.is_empty() {
+        let _ = writeln!(out, "  gauges:");
+        for (k, v) in &s.gauges {
+            let _ = writeln!(out, "    {k:<40} {v:>12}");
+        }
+    }
+    if !s.histograms.is_empty() {
+        let _ = writeln!(
+            out,
+            "  {:<30} {:>8} {:>10} {:>10} {:>10} {:>10} {:>10}",
+            "histograms", "count", "p50", "p90", "p99", "max", "mean");
+        for (k, h) in &s.histograms {
+            let q = |p: f64| {
+                h.quantile(p)
+                    .map(|v| fmt_val(k, v as f64))
+                    .unwrap_or_else(|| "-".into())
+            };
+            let _ = writeln!(
+                out,
+                "  {:<30} {:>8} {:>10} {:>10} {:>10} {:>10} {:>10}",
+                k, h.count, q(0.5), q(0.9), q(0.99),
+                fmt_val(k, h.max as f64), fmt_val(k, h.mean()));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::registry::MetricsRegistry;
+
+    fn sample_snapshot() -> RegistrySnapshot {
+        let reg = MetricsRegistry::new();
+        reg.counter("serve.gen.requests").add(5);
+        reg.gauge("serve.gen.shared_prefix_tokens").set(48);
+        let h = reg.histogram("serve.gen.ttft_ns");
+        for v in [900u64, 1_200, 35_000, 35_500, 2_000_000] {
+            h.record(v);
+        }
+        reg.snapshot()
+    }
+
+    #[test]
+    fn snapshot_json_round_trips() {
+        let s = sample_snapshot();
+        let j = snapshot_to_json(&s);
+        let text = j.to_string();
+        let back = snapshot_from_json(&Json::parse(&text).unwrap())
+            .unwrap();
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn unknown_schema_version_is_rejected() {
+        let s = sample_snapshot();
+        let mut j = snapshot_to_json(&s);
+        if let Json::Obj(m) = &mut j {
+            m.insert("schema_version".into(),
+                     Json::Num((SCHEMA_VERSION + 1) as f64));
+        }
+        let err = snapshot_from_json(&j).unwrap_err();
+        assert!(err.contains("not supported"), "{err}");
+        // Wrong kind is rejected too.
+        let mut j2 = snapshot_to_json(&s);
+        if let Json::Obj(m) = &mut j2 {
+            m.insert("kind".into(), Json::Str("nsds.other".into()));
+        }
+        assert!(snapshot_from_json(&j2).is_err());
+    }
+
+    #[test]
+    fn bench_report_validates_and_rejects_corruption() {
+        let entries = vec![
+            BenchEntry {
+                section: "native".into(),
+                name: "fused 4bit".into(),
+                iters: 100,
+                median_ns: 1.5e6,
+                mean_ns: 1.6e6,
+                p95_ns: 2.0e6,
+            },
+            BenchEntry {
+                section: "prefill".into(),
+                name: "chunked len=256".into(),
+                iters: 12,
+                median_ns: 3.0e7,
+                mean_ns: 3.1e7,
+                p95_ns: 3.5e7,
+            },
+        ];
+        let j = bench_report("bench_runtime", &entries);
+        validate_bench_report(&j).unwrap();
+        // Round-trip through text, as CI consumes it.
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        validate_bench_report(&parsed).unwrap();
+        // Section order is first-seen, not alphabetical.
+        let names: Vec<&str> = parsed.get("sections").unwrap()
+            .as_arr().unwrap().iter()
+            .map(|s| s.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(names, vec!["native", "prefill"]);
+        // Corruptions fail loudly.
+        let mut bad = bench_report("bench_runtime", &entries);
+        if let Json::Obj(m) = &mut bad {
+            m.remove("sections");
+        }
+        assert!(validate_bench_report(&bad).is_err());
+        let bad2 = Json::parse(
+            r#"{"schema_version":1,"kind":"nsds.bench","bench":"b",
+                "sections":[{"name":"s","entries":[{"name":"x",
+                "iters":-1,"median_ns":1,"mean_ns":1,"p95_ns":1}]}]}"#,
+        ).unwrap();
+        assert!(validate_bench_report(&bad2).is_err());
+        assert!(validate_bench_report(&Json::Num(3.0)).is_err());
+    }
+
+    #[test]
+    fn summary_renders_every_metric_kind() {
+        let s = sample_snapshot();
+        let text = render_summary(&s);
+        assert!(text.contains("serve.gen.requests"));
+        assert!(text.contains("serve.gen.shared_prefix_tokens"));
+        assert!(text.contains("serve.gen.ttft_ns"));
+        assert!(text.contains("p99"));
+    }
+}

@@ -1,0 +1,35 @@
+//! Engine-wide telemetry: the observability layer between the serving
+//! core and everything that wants to judge it (benches, CI, the future
+//! HTTP `/metrics` front end, and NSDS variant comparisons — for a
+//! calibration-free method, runtime telemetry is the only empirical
+//! signal about a bit allocation's quality).
+//!
+//! Three pieces, one contract (DESIGN.md "Observability"):
+//!
+//! * [`registry`] — process- or instance-scoped [`MetricsRegistry`] of
+//!   named counters, gauges, and log-bucketed latency histograms.
+//!   Registration takes a lock once (cold); recording through the
+//!   returned handles is relaxed atomics only — no locks, no
+//!   allocation on the hot path.
+//! * [`trace`] — [`StepTracer`], a bounded ring of per-step engine
+//!   events (admit/defer/chunk/decode/CoW/recycle/retire) with a
+//!   per-request timeline view. O(capacity) memory, opt-in per
+//!   engine, observes without perturbing (tokens stay bit-identical).
+//! * [`export`] — the versioned JSON schema for registry snapshots
+//!   (`nsds.metrics`) and bench results (`nsds.bench`, the
+//!   `BENCH_runtime.json` perf trajectory), plus the human summary
+//!   renderer the examples print.
+
+pub mod export;
+pub mod registry;
+pub mod trace;
+
+pub use export::{
+    bench_report, render_summary, snapshot_from_json, snapshot_to_json,
+    validate_bench_report, BenchEntry, SCHEMA_VERSION,
+};
+pub use registry::{
+    Counter, Gauge, HistSnapshot, Histogram, MetricsRegistry,
+    RegistrySnapshot,
+};
+pub use trace::{Ev, StepTracer, TraceEvent};

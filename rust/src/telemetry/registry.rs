@@ -1,0 +1,373 @@
+//! Process-wide metrics registry: named counters, gauges, and
+//! log-linear latency histograms, recorded through cheap cloneable
+//! handles so hot paths (`BatchEngine::step`, the serve loop) touch
+//! nothing but atomics — no lock, no allocation, no formatting.
+//!
+//! Registration (name → cell) takes a mutex; it happens once per metric
+//! at wiring time. Recording goes through a handle that owns an `Arc`
+//! to the cell, so the hot path is one or two relaxed atomic RMW ops.
+//! `snapshot()` reads every cell without stopping writers — the result
+//! is a per-cell-consistent (not globally atomic) view, which is the
+//! standard contract for serving metrics.
+//!
+//! Histogram buckets are log-linear (HDR-style): values below
+//! `HIST_SUB` get exact unit buckets; above, each power-of-two octave
+//! splits into `HIST_SUB` equal sub-buckets, so a bucket's width is at
+//! most 1/`HIST_SUB` = 12.5% of its lower bound. Quantiles estimated
+//! from a snapshot therefore land in the SAME bucket as the exact
+//! nearest-rank sample quantile — a ≤12.5% relative error bound, with
+//! fixed memory (`HIST_BUCKETS` u64 cells) per histogram regardless of
+//! sample count. See DESIGN.md "Observability".
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Sub-buckets per power-of-two octave (and the bound below which
+/// values get exact unit buckets). Must be a power of two.
+pub const HIST_SUB: u64 = 8;
+const HIST_SUB_BITS: u32 = HIST_SUB.trailing_zeros();
+
+/// Total fixed bucket count: `HIST_SUB` unit buckets for values in
+/// `[0, HIST_SUB)`, then `HIST_SUB` sub-buckets for each of the
+/// `64 - HIST_SUB_BITS` octaves a u64 can occupy.
+pub const HIST_BUCKETS: usize =
+    HIST_SUB as usize + (64 - HIST_SUB_BITS as usize) * HIST_SUB as usize;
+
+/// Bucket index of a recorded value. Monotone in `v`; exact for
+/// `v < HIST_SUB`, ≤12.5%-wide log-linear buckets above.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    if v < HIST_SUB {
+        return v as usize;
+    }
+    let e = 63 - v.leading_zeros(); // e >= HIST_SUB_BITS
+    let sub = (v >> (e - HIST_SUB_BITS)) - HIST_SUB; // 0..HIST_SUB
+    ((e - HIST_SUB_BITS + 1) as u64 * HIST_SUB + sub) as usize
+}
+
+/// `[lo, hi)` value range of bucket `i` (inverse of `bucket_index`).
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    let i = i as u64;
+    if i < HIST_SUB {
+        return (i, i + 1);
+    }
+    let g = i / HIST_SUB - 1; // octave above the unit range
+    let sub = i % HIST_SUB;
+    let lo = (HIST_SUB + sub) << g;
+    let width = 1u64 << g;
+    (lo, lo.saturating_add(width))
+}
+
+/// One histogram's storage: fixed bucket array + running aggregates.
+struct HistCell {
+    buckets: Box<[AtomicU64]>,
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl HistCell {
+    fn new() -> Self {
+        let buckets: Vec<AtomicU64> =
+            (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect();
+        HistCell {
+            buckets: buckets.into_boxed_slice(),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Monotone counter handle. Clone freely; all clones share the cell.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins gauge handle (a level, not a rate).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Histogram handle: `record` is bucket + count + sum + max atomics.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistCell>);
+
+impl Histogram {
+    #[inline]
+    pub fn record(&self, v: u64) {
+        let c = &self.0;
+        c.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        c.count.fetch_add(1, Ordering::Relaxed);
+        c.sum.fetch_add(v, Ordering::Relaxed);
+        c.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all recorded values (e.g. total nanoseconds).
+    pub fn sum(&self) -> u64 {
+        self.0.sum.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot just this histogram (the registry-wide `snapshot` is
+    /// the usual route; this serves local registries and tests).
+    pub fn snapshot(&self) -> HistSnapshot {
+        let c = &self.0;
+        let buckets = c
+            .buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(i, b)| {
+                let n = b.load(Ordering::Relaxed);
+                if n == 0 {
+                    return None;
+                }
+                let (lo, hi) = bucket_bounds(i);
+                Some((lo, hi, n))
+            })
+            .collect();
+        HistSnapshot {
+            count: c.count.load(Ordering::Relaxed),
+            sum: c.sum.load(Ordering::Relaxed),
+            max: c.max.load(Ordering::Relaxed),
+            buckets,
+        }
+    }
+}
+
+/// Point-in-time view of one histogram: only non-empty buckets, as
+/// `(lo, hi, count)` with `lo` inclusive and `hi` exclusive, ascending.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+    pub buckets: Vec<(u64, u64, u64)>,
+}
+
+impl HistSnapshot {
+    /// Nearest-rank quantile estimate: the bucket holding the sample of
+    /// rank `round(q·(count-1))`, reported as that bucket's midpoint
+    /// (clamped to the observed max). `None` when empty. The estimate
+    /// lies in the same bucket as the exact sample quantile, so it is
+    /// within one bucket width (≤12.5% of the value) of it.
+    pub fn quantile(&self, q: f64) -> Option<u64> {
+        if self.count == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = (q * (self.count - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for &(lo, hi, n) in &self.buckets {
+            seen += n;
+            if seen > rank {
+                let mid = lo + (hi - 1 - lo) / 2;
+                // Clamp into the observed range but never out of the
+                // bucket (the max guard matters only for the bucket
+                // that holds the max itself).
+                return Some(mid.min(self.max).max(lo));
+            }
+        }
+        // Unreachable when bucket counts sum to `count`; be safe under
+        // a torn concurrent snapshot.
+        Some(self.max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// Point-in-time view of a whole registry (see `MetricsRegistry`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegistrySnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, u64>,
+    pub histograms: BTreeMap<String, HistSnapshot>,
+}
+
+#[derive(Default)]
+struct Cells {
+    counters: BTreeMap<String, Arc<AtomicU64>>,
+    gauges: BTreeMap<String, Arc<AtomicU64>>,
+    histograms: BTreeMap<String, Arc<HistCell>>,
+}
+
+/// Named-metric registry. Components take handles once at wiring time
+/// (`counter`/`gauge`/`histogram` get-or-create by name, so two callers
+/// naming the same metric share one cell) and record through them;
+/// `snapshot` renders the whole registry for export or display.
+///
+/// Scoping: `MetricsRegistry::global()` is the process-wide instance
+/// for single-deployment binaries; components that can be instantiated
+/// many times in one process (e.g. a `ServerQueue` per test) default to
+/// a private registry so concurrent instances never mix streams, and
+/// accept a shared one where aggregation is wanted.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    cells: Mutex<Cells>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Arc<Self> {
+        Arc::new(MetricsRegistry::default())
+    }
+
+    /// The process-wide registry.
+    pub fn global() -> &'static MetricsRegistry {
+        static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(MetricsRegistry::default)
+    }
+
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut c = self.cells.lock().unwrap();
+        Counter(Arc::clone(
+            c.counters
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(AtomicU64::new(0))),
+        ))
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut c = self.cells.lock().unwrap();
+        Gauge(Arc::clone(
+            c.gauges
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(AtomicU64::new(0))),
+        ))
+    }
+
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut c = self.cells.lock().unwrap();
+        Histogram(Arc::clone(
+            c.histograms
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(HistCell::new())),
+        ))
+    }
+
+    /// Render every registered metric. Writers are not paused: each
+    /// cell is read atomically, but cells read at slightly different
+    /// instants (the usual metrics-endpoint contract).
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let c = self.cells.lock().unwrap();
+        RegistrySnapshot {
+            counters: c
+                .counters
+                .iter()
+                .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+                .collect(),
+            gauges: c
+                .gauges
+                .iter()
+                .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+                .collect(),
+            histograms: c
+                .histograms
+                .iter()
+                .map(|(k, v)| {
+                    (k.clone(), Histogram(Arc::clone(v)).snapshot())
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_bounds_invert() {
+        let mut prev = 0usize;
+        for &v in &[0u64, 1, 7, 8, 9, 15, 16, 31, 100, 1_000, 65_535,
+                    1 << 20, (1 << 40) + 12345, u64::MAX / 2, u64::MAX] {
+            let i = bucket_index(v);
+            assert!(i >= prev || v == 0, "index not monotone at {v}");
+            prev = i.max(prev);
+            let (lo, hi) = bucket_bounds(i);
+            assert!(lo <= v && v < hi || hi == u64::MAX && v >= lo,
+                    "v={v} outside bucket {i} = [{lo},{hi})");
+            assert!(i < HIST_BUCKETS);
+        }
+    }
+
+    #[test]
+    fn bucket_width_bound_holds() {
+        for i in HIST_SUB as usize..HIST_BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            if hi == u64::MAX {
+                continue; // saturated top bucket
+            }
+            assert!((hi - lo) * HIST_SUB <= lo,
+                    "bucket {i} wider than lo/{HIST_SUB}: [{lo},{hi})");
+        }
+    }
+
+    #[test]
+    fn counter_gauge_histogram_roundtrip() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("c");
+        c.add(3);
+        reg.counter("c").inc(); // same cell by name
+        assert_eq!(c.get(), 4);
+        let g = reg.gauge("g");
+        g.set(7);
+        g.set(5);
+        assert_eq!(reg.gauge("g").get(), 5);
+        let h = reg.histogram("h");
+        for v in [1u64, 10, 100, 1000] {
+            h.record(v);
+        }
+        let s = reg.snapshot();
+        assert_eq!(s.counters["c"], 4);
+        assert_eq!(s.gauges["g"], 5);
+        let hs = &s.histograms["h"];
+        assert_eq!((hs.count, hs.sum, hs.max), (4, 1111, 1000));
+        let total: u64 = hs.buckets.iter().map(|b| b.2).sum();
+        assert_eq!(total, 4);
+    }
+
+    #[test]
+    fn quantile_of_empty_is_none_and_of_singleton_is_it() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("h");
+        assert_eq!(h.snapshot().quantile(0.5), None);
+        h.record(42);
+        let q = h.snapshot().quantile(0.5).unwrap();
+        assert_eq!(bucket_index(q), bucket_index(42));
+    }
+}

@@ -1,0 +1,231 @@
+//! Step tracer: a bounded ring buffer of per-step engine events — the
+//! flight recorder behind scheduler/fairness debugging. The engine
+//! pushes one small `Copy` record per scheduling decision (admission,
+//! shared-prefix admit/defer, prefill chunk placement, decode batch
+//! composition, CoW splits, eviction recycle, retirement); the ring
+//! overwrites the oldest record past capacity, so memory is O(capacity)
+//! — `capacity · size_of::<TraceEvent>()` — no matter how long the
+//! engine runs. Tracing is opt-in per engine: when disabled the whole
+//! feature costs one `Option` branch per emission site and allocates
+//! nothing (pinned by `rust/tests/batch_decode.rs`: enabling tracing
+//! leaves generated tokens bit-identical, because the tracer only
+//! observes — it never touches RNG streams, admission order, or
+//! kernels).
+//!
+//! Request identity: the engine stamps each submission with a `rid`
+//! (monotone from 0 in submit order, engine-local), carried on every
+//! event about that request. `timeline(rid)` reconstructs one request's
+//! life — admit → chunks → decode participation → retire — from the
+//! interleaved stream; decode steps are batch-level events carrying a
+//! slot bitmask, so a request's decode participation is recovered by
+//! masking its slot between its admit and retire events (slots ≥ 64
+//! fall outside the mask and are attributed by rid events only).
+
+/// What happened, step-stamped. `step` is the engine's step counter at
+/// emission (admissions and deferrals carry the step being set up).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub step: u64,
+    pub ev: Ev,
+}
+
+/// Event taxonomy (see DESIGN.md "Observability" for the contract).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Ev {
+    /// Request `rid` admitted into `slot`; `shared` of its `prompt`
+    /// tokens were admitted by shared-prefix page reference
+    /// (`shared > 0` is a shared-prefix admission).
+    Admit { rid: u64, slot: usize, prompt: usize, shared: usize },
+    /// Request `rid` deferred (kept pending) because a donor is still
+    /// appending a `committed`-token common prefix worth waiting for.
+    Defer { rid: u64, committed: usize },
+    /// One chunked-prefill call for `rid` in `slot`: prompt window
+    /// `[pos, pos + len)`.
+    PrefillChunk { rid: u64, slot: usize, pos: usize, len: usize },
+    /// One batched decode of `batch` rows; bit `s` of `slots_mask` is
+    /// set when slot `s < 64` was in the batch.
+    Decode { batch: usize, slots_mask: u64 },
+    /// `n` copy-on-write page splits this step (pool-level aggregate).
+    CowSplit { n: u64 },
+    /// `rows` ring rows evicted (their blocks recycled in place) this
+    /// step (pool-level aggregate).
+    Recycle { rows: usize },
+    /// Request `rid` retired from `slot` after emitting `gen_tokens`.
+    Retire { rid: u64, slot: usize, gen_tokens: usize },
+}
+
+impl Ev {
+    /// The request this event is about, when it is about one.
+    pub fn rid(&self) -> Option<u64> {
+        match *self {
+            Ev::Admit { rid, .. }
+            | Ev::Defer { rid, .. }
+            | Ev::PrefillChunk { rid, .. }
+            | Ev::Retire { rid, .. } => Some(rid),
+            Ev::Decode { .. } | Ev::CowSplit { .. }
+            | Ev::Recycle { .. } => None,
+        }
+    }
+}
+
+/// Fixed-capacity event ring. All storage is allocated at construction
+/// (`Vec::with_capacity`), pushes never allocate, and the ring
+/// overwrites oldest-first past capacity.
+pub struct StepTracer {
+    buf: Vec<TraceEvent>,
+    head: usize,
+    /// Events ever pushed; `total - len()` is how many the ring dropped.
+    total: u64,
+}
+
+impl StepTracer {
+    pub fn new(capacity: usize) -> Self {
+        let capacity = capacity.max(1);
+        StepTracer {
+            buf: Vec::with_capacity(capacity),
+            head: 0,
+            total: 0,
+        }
+    }
+
+    #[inline]
+    pub fn push(&mut self, ev: TraceEvent) {
+        if self.buf.len() < self.buf.capacity() {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.buf.len();
+        }
+        self.total += 1;
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Events currently held (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events ever pushed (kept + overwritten).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Held events oldest → newest.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+
+    /// One request's timeline, oldest → newest: its own events (admit /
+    /// defer / chunks / retire) plus the batch-level decode events its
+    /// slot participated in between its admit and retire. If the
+    /// admission already fell off the ring, decode participation cannot
+    /// be attributed (slot unknown) and only rid-stamped events return.
+    pub fn timeline(&self, rid: u64) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        let mut slot: Option<usize> = None;
+        for e in self.events() {
+            match e.ev {
+                Ev::Admit { rid: r, slot: s, .. } if r == rid => {
+                    slot = Some(s);
+                    out.push(e);
+                }
+                Ev::Retire { rid: r, .. } if r == rid => {
+                    slot = None;
+                    out.push(e);
+                }
+                Ev::Decode { slots_mask, .. } => {
+                    if let Some(s) = slot {
+                        if s < 64 && slots_mask & (1u64 << s) != 0 {
+                            out.push(e);
+                        }
+                    }
+                }
+                ev if ev.rid() == Some(rid) => out.push(e),
+                _ => {}
+            }
+        }
+        out
+    }
+
+    pub fn clear(&mut self) {
+        self.buf.clear();
+        self.head = 0;
+        self.total = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(step: u64, rid: u64) -> TraceEvent {
+        TraceEvent { step, ev: Ev::Defer { rid, committed: 0 } }
+    }
+
+    #[test]
+    fn ring_wraps_oldest_first_and_stays_bounded() {
+        let mut t = StepTracer::new(4);
+        for i in 0..11u64 {
+            t.push(ev(i, i));
+        }
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.capacity(), 4);
+        assert_eq!(t.total(), 11);
+        let steps: Vec<u64> =
+            t.events().iter().map(|e| e.step).collect();
+        assert_eq!(steps, vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn zero_capacity_is_clamped() {
+        let mut t = StepTracer::new(0);
+        t.push(ev(1, 1));
+        t.push(ev(2, 2));
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.events()[0].step, 2);
+    }
+
+    #[test]
+    fn timeline_masks_decode_to_the_requests_slot_window() {
+        let mut t = StepTracer::new(64);
+        t.push(TraceEvent {
+            step: 0,
+            ev: Ev::Admit { rid: 0, slot: 1, prompt: 4, shared: 0 },
+        });
+        // Decode with slot 1 in the batch: part of rid 0's life.
+        t.push(TraceEvent {
+            step: 1,
+            ev: Ev::Decode { batch: 2, slots_mask: 0b11 },
+        });
+        t.push(TraceEvent {
+            step: 1,
+            ev: Ev::Retire { rid: 0, slot: 1, gen_tokens: 2 },
+        });
+        // Slot 1 reused by rid 7 afterwards: not rid 0's decode.
+        t.push(TraceEvent {
+            step: 2,
+            ev: Ev::Admit { rid: 7, slot: 1, prompt: 2, shared: 0 },
+        });
+        t.push(TraceEvent {
+            step: 3,
+            ev: Ev::Decode { batch: 1, slots_mask: 0b10 },
+        });
+        let tl = t.timeline(0);
+        assert_eq!(tl.len(), 3);
+        assert!(matches!(tl[0].ev, Ev::Admit { rid: 0, .. }));
+        assert!(matches!(tl[1].ev, Ev::Decode { .. }));
+        assert!(matches!(tl[2].ev, Ev::Retire { rid: 0, .. }));
+        let tl7 = t.timeline(7);
+        assert_eq!(tl7.len(), 2); // its admit + its decode
+    }
+}

@@ -565,7 +565,7 @@ fn chunked_prefill_mid_stream_leaves_decoders_token_identical() {
         assert_eq!(g.tokens, d.tokens,
                    "request {i} diverged under mixed prefill+decode");
         assert_eq!(g.stopped, d.stopped, "request {i} stop reason");
-        assert!(g.stats.ttft_s >= g.stats.prefill_s,
+        assert!(g.stats.ttft_ns >= g.stats.prefill_ns,
                 "request {i}: ttft below own prefill work");
     }
     assert_eq!(engine.pool().pages_in_use(), 0);
@@ -637,4 +637,69 @@ fn batch_engine_mid_stream_submission_and_validation() {
     }
     // Idle engine steps are no-ops.
     assert!(engine.step(&exec, &entry, model).unwrap().is_empty());
+}
+
+/// Tracing is observation only: the SAME requests through two
+/// identically-configured engines — one with the flight recorder on,
+/// one without — produce bit-identical tokens and stop reasons, even
+/// with top-k sampling, shared-prefix deferral and slot reuse in play.
+/// This pins the "near-zero cost when disabled / zero interference when
+/// enabled" telemetry contract.
+#[test]
+fn enabling_tracing_leaves_generation_bit_identical() {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(81);
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let exec = NativeEngine::with_workers(1);
+    let model = ModelRef::Dense(&w);
+
+    // Two identical long prompts (forces defer + shared-prefix + CoW)
+    // plus two distinct short ones, 4 requests over 2 slots.
+    let long = random_tokens(&mut rng, PAGE_SIZE + 6, cfg.vocab);
+    let mk = |seed: u64, prompt: &[i32]| {
+        (prompt.to_vec(), GenConfig {
+            max_new: 5,
+            sampling: Sampling::TopK { k: 3, temperature: 0.9 },
+            seed,
+            ..GenConfig::default()
+        })
+    };
+    let reqs = [
+        mk(31, &long),
+        mk(32, &long),
+        mk(33, &random_tokens(&mut rng, 3, cfg.vocab)),
+        mk(34, &random_tokens(&mut rng, 7, cfg.vocab)),
+    ];
+
+    let run = |trace: bool| {
+        let mut engine: BatchEngine<usize> = BatchEngine::new(&cfg, 2);
+        if trace {
+            engine.enable_trace(1024);
+        }
+        for (i, (p, gc)) in reqs.iter().enumerate() {
+            engine.submit(i, p.clone(), gc.clone()).unwrap();
+        }
+        let mut done = engine.run(&exec, &entry, model).unwrap();
+        done.sort_unstable_by_key(|(i, _)| *i);
+        let events = engine
+            .tracer()
+            .map(|t| t.total())
+            .unwrap_or(0);
+        (done, events)
+    };
+
+    let (plain, ev_off) = run(false);
+    let (traced, ev_on) = run(true);
+    assert_eq!(ev_off, 0, "disabled tracer recorded events");
+    assert!(ev_on > 0, "enabled tracer recorded nothing");
+    assert_eq!(plain.len(), traced.len());
+    for ((i, a), (_, b)) in plain.iter().zip(&traced) {
+        assert_eq!(a.tokens, b.tokens,
+                   "request {i}: tracing changed generated tokens");
+        assert_eq!(a.stopped, b.stopped,
+                   "request {i}: tracing changed the stop reason");
+        assert_eq!(a.stats.prompt_tokens, b.stats.prompt_tokens);
+        assert_eq!(a.stats.gen_tokens, b.stats.gen_tokens);
+    }
 }

@@ -150,10 +150,13 @@ fn stop_token_and_max_new_conditions() {
     assert_eq!(g2.tokens.len(), 4);
     assert_eq!(g2.stopped, StopReason::MaxNew);
     // Stats sanity: TTFT covers the request's own prefill work (its
-    // chunks all run inside the admission → first-token window).
-    assert!(g2.stats.prefill_s >= 0.0 && g2.stats.decode_s >= 0.0);
-    assert!(g2.stats.ttft_s >= g2.stats.prefill_s);
-    assert!(g2.stats.total_s() >= g2.stats.decode_s);
+    // chunks all run inside the admission → first-token window), in
+    // integer nanoseconds end-to-end.
+    assert!(g2.stats.ttft_ns >= g2.stats.prefill_ns);
+    assert!(g2.stats.total_ns() >= g2.stats.decode_ns);
+    assert_eq!(g2.stats.total_ns(),
+               g2.stats.ttft_ns + g2.stats.decode_ns);
+    assert!(g2.stats.ttft_s() >= g2.stats.prefill_s());
     assert!(g2.stats.decode_tok_per_s() >= 0.0);
 }
 

@@ -351,9 +351,10 @@ fn mixed_prefill_decode_engine_matches_solo() {
             prop_ensure!(g.tokens == solo[*i],
                          "request {i} diverged under mixed \
                           prefill+decode batching");
-            prop_ensure!(g.stats.ttft_s >= g.stats.prefill_s,
-                         "request {i}: ttft {} < own prefill work {}",
-                         g.stats.ttft_s, g.stats.prefill_s);
+            prop_ensure!(g.stats.ttft_ns >= g.stats.prefill_ns,
+                         "request {i}: ttft {}ns < own prefill work \
+                          {}ns",
+                         g.stats.ttft_ns, g.stats.prefill_ns);
             prop_ensure!(g.stats.prompt_tokens == reqs[*i].0.len(),
                          "request {i}: prompt token count");
         }

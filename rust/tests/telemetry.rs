@@ -1,0 +1,290 @@
+//! Telemetry acceptance: (1) histogram quantile estimates land in the
+//! same log-linear bucket as the exact nearest-rank sample quantile
+//! (the ≤12.5% error bound, as a property over random magnitudes);
+//! (2) the step tracer reconstructs correct per-request timelines from
+//! interleaved multi-slot engine traffic and stays bounded when the
+//! ring wraps; (3) end to end, the serve loop's latency histograms
+//! agree with per-request `GenStats` ground truth — same integers, no
+//! float round trip — and the live snapshot survives the versioned
+//! JSON round trip (the ISSUE's acceptance criterion).
+
+use nsds::coordinator::server::{serve, Client, ServedWeights,
+                                ServerQueue};
+use nsds::infer::{BatchEngine, GenConfig, ModelRef, NativeEngine,
+                  PAGE_SIZE};
+use nsds::model::{ModelConfig, Weights};
+use nsds::prop_ensure;
+use nsds::runtime::ModelEntry;
+use nsds::telemetry::registry::bucket_index;
+use nsds::telemetry::{snapshot_from_json, snapshot_to_json, Ev,
+                      MetricsRegistry};
+use nsds::util::json::Json;
+use nsds::util::prop::check;
+use nsds::util::rng::Rng;
+
+fn tiny_model(seed: u64) -> (ModelEntry, Weights) {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(seed);
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    (entry, w)
+}
+
+/// Exact nearest-rank sample quantile with the same rank formula the
+/// histogram uses, so the comparison isolates bucketing error only.
+fn exact_quantile(sorted: &[u64], q: f64) -> u64 {
+    let rank = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[rank]
+}
+
+#[test]
+fn histogram_quantile_lands_in_the_exact_quantiles_bucket() {
+    check("hist quantile within one bucket", 60, |rng| {
+        let n = 1 + rng.below(300);
+        // Log-uniform magnitudes across ~16 orders (kept under 2^52 so
+        // the running sum cannot wrap and stays exactly comparable).
+        let mut vals: Vec<u64> = (0..n)
+            .map(|_| rng.next_u64() >> (12 + rng.below(52)))
+            .collect();
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("h");
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        let s = h.snapshot();
+        prop_ensure!(s.count == n as u64, "count {} != {n}", s.count);
+        let sum: u64 = vals.iter().sum();
+        prop_ensure!(s.sum == sum, "sum lossy: {} != {sum}", s.sum);
+        prop_ensure!(s.max == *vals.last().unwrap(), "max wrong");
+        for q in [0.0, 0.5, 0.9, 0.99, 1.0] {
+            let exact = exact_quantile(&vals, q);
+            let est = s.quantile(q).expect("non-empty");
+            prop_ensure!(
+                bucket_index(est) == bucket_index(exact),
+                "q={q}: estimate {est} (bucket {}) vs exact {exact} \
+                 (bucket {}) over n={n}",
+                bucket_index(est), bucket_index(exact));
+            prop_ensure!(est <= s.max, "q={q}: {est} above max");
+        }
+        Ok(())
+    });
+}
+
+/// Distinct-first-token prompts: no common prefix, so admissions never
+/// share pages and every prompt token is the request's own prefill.
+fn distinct_requests(rng: &mut Rng, n: usize, vocab: usize)
+    -> Vec<(Vec<i32>, GenConfig)> {
+    (0..n)
+        .map(|i| {
+            let plen = 3 + rng.below(2 * PAGE_SIZE);
+            let mut prompt: Vec<i32> = (0..plen)
+                .map(|_| rng.below(vocab) as i32)
+                .collect();
+            prompt[0] = i as i32;
+            let gc = GenConfig {
+                max_new: 2 + i % 4,
+                seed: 50 + i as u64,
+                ..GenConfig::default()
+            };
+            (prompt, gc)
+        })
+        .collect()
+}
+
+#[test]
+fn tracer_timelines_reconstruct_interleaved_multi_slot_traffic() {
+    let (entry, w) = tiny_model(40);
+    let cfg = entry.config.clone();
+    let exec = NativeEngine::with_workers(1);
+    let model = ModelRef::Dense(&w);
+    let mut rng = Rng::new(41);
+    let reqs = distinct_requests(&mut rng, 5, cfg.vocab);
+
+    // 5 requests over 2 slots, the last 3 submitted mid-flight so
+    // admissions interleave with running decodes and slots get reused.
+    let mut engine: BatchEngine<usize> = BatchEngine::new(&cfg, 2);
+    engine.enable_trace(4096);
+    for i in 0..2 {
+        engine.submit(i, reqs[i].0.clone(), reqs[i].1.clone()).unwrap();
+    }
+    let mut done = Vec::new();
+    done.extend(engine.step(&exec, &entry, model).unwrap());
+    done.extend(engine.step(&exec, &entry, model).unwrap());
+    for i in 2..5 {
+        engine.submit(i, reqs[i].0.clone(), reqs[i].1.clone()).unwrap();
+    }
+    while !engine.is_idle() {
+        done.extend(engine.step(&exec, &entry, model).unwrap());
+    }
+    assert_eq!(done.len(), 5);
+    assert!(engine.steps() > 0);
+
+    let tracer = engine.tracer().expect("tracing enabled");
+    // Nothing dropped at this capacity: the ring holds every event.
+    assert_eq!(tracer.total(), tracer.len() as u64);
+
+    for (tag, g) in &done {
+        // rid == submit order == tag here.
+        let tl = tracer.timeline(*tag as u64);
+        assert!(!tl.is_empty(), "request {tag}: empty timeline");
+        let plen = reqs[*tag].0.len();
+        match tl[0].ev {
+            Ev::Admit { rid, prompt, shared, .. } => {
+                assert_eq!(rid, *tag as u64);
+                assert_eq!(prompt, plen);
+                assert_eq!(shared, 0,
+                           "distinct prompts must not share pages");
+            }
+            ref e => panic!("request {tag}: timeline starts with {e:?}"),
+        }
+        match tl.last().unwrap().ev {
+            Ev::Retire { rid, gen_tokens, .. } => {
+                assert_eq!(rid, *tag as u64);
+                assert_eq!(gen_tokens, g.tokens.len());
+            }
+            ref e => panic!("request {tag}: timeline ends with {e:?}"),
+        }
+        // Steps never run backwards within one request's life.
+        for pair in tl.windows(2) {
+            assert!(pair[0].step <= pair[1].step,
+                    "request {tag}: step went backwards");
+        }
+        // Prefill chunks are contiguous from position 0 and cover the
+        // prompt except possibly its final token (which may ride the
+        // shared decode batch instead of a dedicated chunk).
+        let mut next_pos = 0usize;
+        let mut covered = 0usize;
+        let mut decodes = 0usize;
+        for e in &tl {
+            match e.ev {
+                Ev::PrefillChunk { pos, len, .. } => {
+                    assert_eq!(pos, next_pos,
+                               "request {tag}: chunk gap at {pos}");
+                    next_pos = pos + len;
+                    covered += len;
+                }
+                Ev::Decode { batch, slots_mask } => {
+                    assert!(batch >= 1 && slots_mask != 0);
+                    decodes += 1;
+                }
+                _ => {}
+            }
+        }
+        assert!(covered == plen || covered + 1 == plen,
+                "request {tag}: chunks covered {covered} of {plen}");
+        // Each decode participation produced exactly one sampled token;
+        // the first token may come from the final chunk's logits
+        // instead, so participations are gen or gen - 1.
+        let gen = g.tokens.len();
+        assert!(decodes == gen || decodes + 1 == gen,
+                "request {tag}: {decodes} decode participations for \
+                 {gen} generated tokens");
+    }
+}
+
+#[test]
+fn tracer_ring_wraps_and_stays_bounded_under_long_traffic() {
+    let (entry, w) = tiny_model(44);
+    let cfg = entry.config.clone();
+    let exec = NativeEngine::with_workers(1);
+    let model = ModelRef::Dense(&w);
+    let mut rng = Rng::new(45);
+    let reqs = distinct_requests(&mut rng, 4, cfg.vocab);
+
+    let mut engine: BatchEngine<usize> = BatchEngine::new(&cfg, 2);
+    engine.enable_trace(8); // far fewer than the traffic's events
+    for (i, (p, gc)) in reqs.iter().enumerate() {
+        engine.submit(i, p.clone(), gc.clone()).unwrap();
+    }
+    let done = engine.run(&exec, &entry, model).unwrap();
+    assert_eq!(done.len(), 4);
+
+    let tracer = engine.disable_trace().expect("tracing was on");
+    assert_eq!(tracer.capacity(), 8);
+    assert!(tracer.len() <= 8, "ring exceeded capacity");
+    assert_eq!(tracer.events().len(), tracer.len());
+    assert!(tracer.total() > 8,
+            "traffic too small to wrap the ring ({})", tracer.total());
+    assert!(engine.tracer().is_none(), "disable_trace must detach");
+}
+
+#[test]
+fn served_latency_histograms_match_genstats_ground_truth() {
+    let (entry, w) = tiny_model(42);
+    let cfg = entry.config.clone();
+    let queue = ServerQueue::new(16);
+    let client = Client::new(queue.clone(), cfg.seq);
+
+    let vocab = cfg.vocab;
+    let client2 = client.clone();
+    let t = std::thread::spawn(move || -> anyhow::Result<
+        Vec<(u64, u64, u64)>,
+    > {
+        let mut rng = Rng::new(43);
+        let mut out = Vec::new();
+        for i in 0..12usize {
+            let plen = 2 + rng.below(10);
+            let prompt: Vec<i32> = (0..plen)
+                .map(|_| rng.below(vocab) as i32)
+                .collect();
+            let gc = GenConfig {
+                max_new: 2 + i % 5,
+                seed: 100 + i as u64,
+                ..GenConfig::default()
+            };
+            let g = client2.generate(prompt, gc)?;
+            out.push((g.stats.prefill_ns, g.stats.ttft_ns,
+                      g.stats.decode_ns));
+        }
+        client2.stop();
+        Ok(out)
+    });
+    let exec = NativeEngine::with_workers(1);
+    serve(&exec, &entry, 2, ServedWeights::Dense(w.clone()), &queue)
+        .unwrap();
+    let samples = t.join().unwrap().unwrap();
+
+    // The server recorded the SAME integer nanoseconds each client got
+    // back in its GenStats: counts, sums and maxima match exactly, and
+    // histogram quantiles land in the exact sample quantile's bucket.
+    let snap = queue.metrics().snapshot();
+    for (name, pick) in [
+        ("serve.gen.prefill_ns",
+         (|s: &(u64, u64, u64)| s.0) as fn(&(u64, u64, u64)) -> u64),
+        ("serve.gen.ttft_ns", |s| s.1),
+        ("serve.gen.decode_ns", |s| s.2),
+    ] {
+        let h = snap.histograms.get(name)
+            .unwrap_or_else(|| panic!("{name} not in snapshot"));
+        let mut vals: Vec<u64> = samples.iter().map(pick).collect();
+        vals.sort_unstable();
+        assert_eq!(h.count, vals.len() as u64, "{name} count");
+        assert_eq!(h.sum, vals.iter().sum::<u64>(),
+                   "{name}: sum went through a lossy conversion");
+        assert_eq!(h.max, *vals.last().unwrap(), "{name} max");
+        for q in [0.5, 0.99] {
+            let exact = exact_quantile(&vals, q);
+            let est = h.quantile(q).unwrap();
+            assert_eq!(
+                bucket_index(est), bucket_index(exact),
+                "{name} p{}: histogram {est} vs GenStats {exact} \
+                 disagree beyond one bucket", (q * 100.0) as u32);
+        }
+    }
+    assert_eq!(snap.counters["serve.gen.requests"], 12);
+    let step_h = &snap.histograms["serve.engine.step_ns"];
+    assert!(step_h.count > 0, "no engine steps timed");
+
+    // The live snapshot round-trips through the versioned JSON schema,
+    // and a future schema version is refused rather than misread.
+    let j = snapshot_to_json(&snap);
+    let back = snapshot_from_json(&Json::parse(&j.to_string()).unwrap())
+        .unwrap();
+    assert_eq!(back, snap);
+    let mut bumped = j.clone();
+    if let Json::Obj(m) = &mut bumped {
+        m.insert("schema_version".into(), Json::Num(99.0));
+    }
+    assert!(snapshot_from_json(&bumped).is_err());
+}
