@@ -6,20 +6,26 @@
 //! and the native-vs-PJRT comparison axis.
 //!
 //! Flags (after `--` under `cargo bench`):
-//!   --json    write every section's measurements as the versioned
-//!             `nsds.bench` schema to `BENCH_runtime.json` at the repo
-//!             root (then re-parse + validate it, failing loudly on a
-//!             schema mismatch — CI's gate)
-//!   --quick   ~25x shorter measurement target and reduced prefill
-//!             lengths: the CI smoke mode (plumbing check, not stable
-//!             numbers)
+//!   --json             write every section's measurements as the
+//!                      versioned `nsds.bench` schema to
+//!                      `BENCH_runtime.json` at the repo root (then
+//!                      re-parse + validate it, failing loudly on a
+//!                      schema mismatch — CI's gate)
+//!   --quick            ~25x shorter measurement target and reduced
+//!                      prefill lengths: the CI smoke mode (plumbing
+//!                      check, not stable numbers)
+//!   --baseline <path>  diff this run's decode/prefill sections against
+//!                      a committed `nsds.bench` baseline and exit
+//!                      nonzero on a >2x median regression (notice +
+//!                      skip when the file doesn't exist yet)
 
 #[path = "harness.rs"]
 mod harness;
 
 use harness::{bench, black_box};
-use nsds::infer::{fused_matmul, Executor, KvCache, KvCachePool,
-                  ModelRef, NativeEngine, PackedMatrix, QuantizedModel,
+use nsds::infer::{fused_gemm_small, fused_matmul, fused_vecmat,
+                  Executor, KvCache, KvCachePool, ModelRef,
+                  NativeEngine, PackedMatrix, QuantizedModel,
                   PREFILL_CHUNK};
 use nsds::model::{ModelConfig, Weights};
 use nsds::quant::{rtn, Backend, QuantSpec, DEFAULT_GROUP};
@@ -61,6 +67,26 @@ fn native_section() {
         );
         println!("  -> fused speedup {bits}bit: {:.2}x",
                  baseline.median_ns / fused.median_ns);
+    }
+
+    // The two non-GEMM members of the fused kernel family at their
+    // serving shapes: single-row decode (vecmat) and the small decode
+    // batch (gemm_small) — the per-step hot paths the LUT micro-kernels
+    // target.
+    println!("== fused kernel family micro-benches (decode shapes) ==");
+    for bits in [2u8, 4] {
+        let (k, n, g) = (1024usize, 1024usize, 64usize);
+        let w = Tensor::randn(vec![k, n], &mut rng);
+        let q = rtn::quantize(&w, QuantSpec::new(bits, g));
+        let pm = PackedMatrix::from_quantized(&q);
+        let x1 = Tensor::randn(vec![1, k], &mut rng);
+        bench(&format!("fused_vecmat {bits}bit 1x{k}x{n}"), || {
+            black_box(fused_vecmat(x1.data(), &pm));
+        });
+        let xb = Tensor::randn(vec![8, k], &mut rng);
+        bench(&format!("fused_gemm_small {bits}bit 8x{k}x{n}"), || {
+            black_box(fused_gemm_small(&xb, &pm, workers));
+        });
     }
 
     println!("== native forward latency (synthetic llama-s shape) ==");
@@ -490,12 +516,12 @@ fn pjrt_kernel_section(
     Ok(())
 }
 
-/// Write `take_results()` as the versioned bench document, then
+/// Write the run's entries as the versioned bench document, then
 /// re-read and validate what landed on disk — the same check CI's
 /// bench-smoke job relies on (exit nonzero ⇔ the artifact is unusable).
-fn write_json_report() -> anyhow::Result<()> {
-    let entries = harness::take_results();
-    let doc = nsds::telemetry::bench_report("bench_runtime", &entries);
+fn write_json_report(
+    entries: &[nsds::telemetry::BenchEntry]) -> anyhow::Result<()> {
+    let doc = nsds::telemetry::bench_report("bench_runtime", entries);
     let path = "BENCH_runtime.json";
     std::fs::write(path, format!("{doc}\n"))?;
     let text = std::fs::read_to_string(path)?;
@@ -508,11 +534,99 @@ fn write_json_report() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Sections the baseline diff gates on. The native/pipeline sections
+/// churn with hardware and artifact availability; decode + prefill are
+/// the serving-latency headline this repo's kernels exist for, and
+/// their entry names are stable across runs.
+const GATED_SECTIONS: [&str; 2] = ["decode", "prefill"];
+
+/// Regression threshold: a gated entry may not take more than 2x its
+/// baseline median. Generous on purpose — CI smoke boxes are noisy and
+/// `--quick` numbers are plumbing checks, so this only trips on the
+/// kind of wreckage (accidental O(prefix) decode, dead-path fallback)
+/// that no amount of scheduler jitter produces.
+const REGRESSION_FACTOR: f64 = 2.0;
+
+/// Diff this run's gated sections against a committed baseline bench
+/// document. Entries are matched by (section, name); entries missing
+/// on either side are reported but don't fail (bench sets evolve).
+/// Returns Err (⇒ nonzero exit) iff some matched entry regressed by
+/// more than `REGRESSION_FACTOR`.
+fn diff_against_baseline(
+    path: &str,
+    fresh: &[nsds::telemetry::BenchEntry]) -> anyhow::Result<()> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(_) => {
+            println!(
+                "bench_runtime: no baseline at {path}; skipping the \
+                 regression diff (commit a `--quick --json` run's \
+                 BENCH_runtime.json as {path} to arm it)");
+            return Ok(());
+        }
+    };
+    let parsed = nsds::util::json::Json::parse(&text)
+        .map_err(|e| anyhow::anyhow!("{path} parse failed: {e}"))?;
+    let base = nsds::telemetry::bench_entries_from_json(&parsed)
+        .map_err(|e| anyhow::anyhow!("{path} schema-invalid: {e}"))?;
+
+    println!("== baseline diff vs {path} (sections {:?}, fail > \
+              {REGRESSION_FACTOR:.1}x) ==", GATED_SECTIONS);
+    let mut regressed = Vec::new();
+    let mut matched = 0usize;
+    for e in fresh.iter().filter(|e| {
+        GATED_SECTIONS.contains(&e.section.as_str())
+    }) {
+        let Some(b) = base.iter().find(|b| {
+            b.section == e.section && b.name == e.name
+        }) else {
+            println!("  -> [{}] {}: new entry, no baseline (skipped)",
+                     e.section, e.name);
+            continue;
+        };
+        matched += 1;
+        let ratio = e.median_ns / b.median_ns;
+        let flag = if ratio > REGRESSION_FACTOR { "REGRESSED" }
+                   else { "ok" };
+        println!("  -> [{}] {}: {:.0} ns vs {:.0} ns ({ratio:.2}x) \
+                  {flag}", e.section, e.name, e.median_ns, b.median_ns);
+        if ratio > REGRESSION_FACTOR {
+            regressed.push(format!("[{}] {} {ratio:.2}x",
+                                   e.section, e.name));
+        }
+    }
+    if matched == 0 {
+        println!("  -> no gated entries matched the baseline \
+                  (name drift?); nothing gated");
+    }
+    if regressed.is_empty() {
+        Ok(())
+    } else {
+        anyhow::bail!("baseline regression (> {REGRESSION_FACTOR:.1}x \
+                       median) in {} entr{}: {}",
+                      regressed.len(),
+                      if regressed.len() == 1 { "y" } else { "ies" },
+                      regressed.join(", "))
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     // `cargo bench` also passes harness flags like `--bench`; take
     // what we know, ignore the rest.
     let args: Vec<String> = std::env::args().skip(1).collect();
     let json = args.iter().any(|a| a == "--json");
+    let baseline = args
+        .iter()
+        .position(|a| a == "--baseline")
+        .map(|i| {
+            args.get(i + 1)
+                .filter(|v| !v.starts_with("--"))
+                .cloned()
+                .ok_or_else(|| {
+                    anyhow::anyhow!("--baseline needs a path argument")
+                })
+        })
+        .transpose()?;
     harness::set_quick(args.iter().any(|a| a == "--quick"));
 
     harness::set_section("native");
@@ -533,8 +647,12 @@ fn main() -> anyhow::Result<()> {
         println!("bench_runtime: no artifacts (run `make artifacts`); \
                   skipping pipeline benches");
     }
+    let entries = harness::take_results();
     if json {
-        write_json_report()?;
+        write_json_report(&entries)?;
+    }
+    if let Some(path) = baseline {
+        diff_against_baseline(&path, &entries)?;
     }
     Ok(())
 }

@@ -25,8 +25,8 @@ pub use generate::{generate, generate_batch, BatchEngine, GenConfig,
                    GenStats, Generation, Sampling, StopReason,
                    PREFILL_CHUNK};
 pub use native::NativeEngine;
-pub use qmat::{fused_matmul, fused_vecmat, PackedMatrix, QMat,
-               QuantizedModel};
+pub use qmat::{fused_gemm_small, fused_matmul, fused_vecmat,
+               PackedMatrix, QMat, QuantizedModel};
 
 /// Calibration activations from one probe batch, in the layout the
 /// baselines consume: per-layer `[B·S, X]` row matrices (row = b·S + s).

@@ -19,7 +19,8 @@ use crate::model::{ModelConfig, Weights};
 use crate::runtime::ModelEntry;
 use crate::tensor::matmul::matmul;
 use crate::tensor::Tensor;
-use crate::util::pool::{default_workers, parallel_map};
+use crate::util::pool::{chunk_ranges, default_workers, parallel_map,
+                        workers_for};
 
 const RMS_EPS: f32 = 1e-5;
 const ROPE_BASE: f32 = 10000.0;
@@ -52,7 +53,10 @@ impl Executor for NativeEngine {
 
     fn forward(&self, entry: &ModelEntry, tokens: &[i32], batch: usize,
                weights: &Weights) -> Result<Tensor> {
-        let prep = prepare_dense(&entry.config, weights);
+        // Workers go to the per-sequence batch split in `run_batch`;
+        // kernel-level splits stay off (workers=1) to avoid nesting
+        // thread pools.
+        let prep = prepare_dense(&entry.config, weights, 1);
         let (logits, _) =
             run_batch(&prep, tokens, batch, self.workers, false)?;
         Ok(logits)
@@ -61,7 +65,7 @@ impl Executor for NativeEngine {
     fn forward_packed(&self, entry: &ModelEntry, tokens: &[i32],
                       batch: usize, model: &QuantizedModel)
                       -> Result<Tensor> {
-        let prep = prepare_packed(&entry.config, model)?;
+        let prep = prepare_packed(&entry.config, model, 1)?;
         let (logits, _) =
             run_batch(&prep, tokens, batch, self.workers, false)?;
         Ok(logits)
@@ -69,7 +73,7 @@ impl Executor for NativeEngine {
 
     fn probe(&self, entry: &ModelEntry, tokens: &[i32], batch: usize,
              weights: &Weights) -> Result<Probes> {
-        let prep = prepare_dense(&entry.config, weights);
+        let prep = prepare_dense(&entry.config, weights, 1);
         let (_, probes) =
             run_batch(&prep, tokens, batch, self.workers, true)?;
         Ok(probes.expect("collect=true returns probes"))
@@ -83,21 +87,23 @@ impl Executor for NativeEngine {
                    token: i32, weights: &Weights) -> Result<Tensor> {
         // Borrowing prepare: per-step setup is O(layers) views, no weight
         // copies, so the per-token cost stays prefix- AND weight-copy-free.
-        let prep = prepare_dense_ref(&entry.config, weights);
+        let prep = prepare_dense_ref(&entry.config, weights,
+                                     self.workers);
         decode_with(&prep, cache, token)
     }
 
     fn decode_step_packed(&self, entry: &ModelEntry, cache: &mut KvCache,
                           token: i32, model: &QuantizedModel)
                           -> Result<Tensor> {
-        let prep = prepare_packed(&entry.config, model)?;
+        let prep = prepare_packed(&entry.config, model, self.workers)?;
         decode_with(&prep, cache, token)
     }
 
     fn decode_batch(&self, entry: &ModelEntry, pool: &mut KvCachePool,
                     active: &[(usize, i32)], weights: &Weights)
                     -> Result<Tensor> {
-        let prep = prepare_dense_ref(&entry.config, weights);
+        let prep = prepare_dense_ref(&entry.config, weights,
+                                     self.workers);
         decode_batch_with(&prep, pool, active)
     }
 
@@ -105,14 +111,15 @@ impl Executor for NativeEngine {
                            pool: &mut KvCachePool,
                            active: &[(usize, i32)],
                            model: &QuantizedModel) -> Result<Tensor> {
-        let prep = prepare_packed(&entry.config, model)?;
+        let prep = prepare_packed(&entry.config, model, self.workers)?;
         decode_batch_with(&prep, pool, active)
     }
 
     fn prefill_chunk(&self, entry: &ModelEntry, pool: &mut KvCachePool,
                      slot: usize, tokens: &[i32], weights: &Weights)
                      -> Result<Tensor> {
-        let prep = prepare_dense_ref(&entry.config, weights);
+        let prep = prepare_dense_ref(&entry.config, weights,
+                                     self.workers);
         prefill_chunk_with(&prep, pool, slot, tokens)
     }
 
@@ -120,7 +127,7 @@ impl Executor for NativeEngine {
                             pool: &mut KvCachePool, slot: usize,
                             tokens: &[i32], model: &QuantizedModel)
                             -> Result<Tensor> {
-        let prep = prepare_packed(&entry.config, model)?;
+        let prep = prepare_packed(&entry.config, model, self.workers)?;
         prefill_chunk_with(&prep, pool, slot, tokens)
     }
 }
@@ -138,22 +145,24 @@ enum PMat<'a> {
 }
 
 impl PMat<'_> {
-    /// `x [rows, K] @ W [K, N]` (single-threaded; batch-level parallelism
-    /// happens one level up).
-    fn apply(&self, x: &Tensor) -> Tensor {
+    /// `x [rows, K] @ W [K, N]`. `workers` is a budget, not a demand:
+    /// the fused kernels gate it through `pool::workers_for`, so small
+    /// calls (decode-step projections) stay single-threaded and only
+    /// prefill-sized GEMMs pay a spawn.
+    fn apply(&self, x: &Tensor, workers: usize) -> Tensor {
         match self {
             PMat::Dense(w) => matmul(x, w),
             PMat::DenseRef(w) => matmul(x, w),
-            PMat::Stacked(t, l) => stacked_matmul(x, t, *l),
+            PMat::Stacked(t, l) => stacked_matmul(x, t, *l, workers),
             PMat::Packed(p) => {
                 // All three kernels are bit-identical per row; the split
                 // picks the blocking that fits the input's shape.
                 if x.rows() == 1 {
                     Tensor::new(fused_vecmat(x.data(), p), vec![1, p.n])
                 } else if x.rows() <= DECODE_BATCH_ROWS {
-                    fused_gemm_small(x, p)
+                    fused_gemm_small(x, p, workers)
                 } else {
-                    fused_matmul(x, p, 1)
+                    fused_matmul(x, p, workers)
                 }
             }
         }
@@ -170,8 +179,11 @@ const DECODE_BATCH_ROWS: usize = 16;
 /// `x [M, K] @ stacked[l] [K, N]` over a borrowed slice of a [L, K, N]
 /// tensor. Plain ikj loop with k ascending — the same accumulation order
 /// as `tensor::matmul`'s K panels, so results are bit-identical to a
-/// matmul against the copied-out layer.
-fn stacked_matmul(x: &Tensor, stacked: &Tensor, l: usize) -> Tensor {
+/// matmul against the copied-out layer. Output rows are independent, so
+/// big (prefill-sized) calls split rows across `workers`; the
+/// `pool::workers_for` gate keeps decode-sized calls single-threaded.
+fn stacked_matmul(x: &Tensor, stacked: &Tensor, l: usize,
+                  workers: usize) -> Tensor {
     let dims = stacked.dims();
     debug_assert_eq!(dims.len(), 3, "stacked weight must be [L, K, N]");
     let (k, n) = (dims[1], dims[2]);
@@ -179,19 +191,35 @@ fn stacked_matmul(x: &Tensor, stacked: &Tensor, l: usize) -> Tensor {
     assert_eq!(x.cols(), k, "stacked_matmul: x cols {} != K {k}", x.cols());
     let wd = &stacked.data()[l * k * n..(l + 1) * k * n];
     let xd = x.data();
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let xrow = &xd[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        for (kk, &aik) in xrow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
-            }
-            let wrow = &wd[kk * n..(kk + 1) * n];
-            for (o, wv) in orow.iter_mut().zip(wrow) {
-                *o += aik * wv;
+    let rows = |r0: usize, r1: usize| -> Vec<f32> {
+        let mut out = vec![0.0f32; (r1 - r0) * n];
+        for i in r0..r1 {
+            let xrow = &xd[i * k..(i + 1) * k];
+            let orow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+            for (kk, &aik) in xrow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let wrow = &wd[kk * n..(kk + 1) * n];
+                for (o, wv) in orow.iter_mut().zip(wrow) {
+                    *o += aik * wv;
+                }
             }
         }
+        out
+    };
+    let workers = workers_for(workers, m * k * n).clamp(1, m.max(1));
+    if workers == 1 {
+        return Tensor::new(rows(0, m), vec![m, n]);
+    }
+    let ranges = chunk_ranges(m, workers);
+    let chunks = parallel_map(ranges.len(), ranges.len(), |i| {
+        let (r0, r1) = ranges[i];
+        rows(r0, r1)
+    });
+    let mut out = Vec::with_capacity(m * n);
+    for c in chunks {
+        out.extend_from_slice(&c);
     }
     Tensor::new(out, vec![m, n])
 }
@@ -222,9 +250,16 @@ struct Prepared<'a> {
     unembed: &'a Tensor,
     lnf: &'a Tensor,
     layers: Vec<PLayer<'a>>,
+    /// Kernel-level worker budget for this prepared view's projections
+    /// and attention splits. 1 on the `forward`/`probe` path, where the
+    /// engine's workers are already spent on the per-sequence batch
+    /// split (no nested pools); the engine's worker count on the
+    /// decode / prefill paths, gated per call by `pool::workers_for`.
+    workers: usize,
 }
 
-fn prepare_dense<'a>(cfg: &'a ModelConfig, w: &'a Weights) -> Prepared<'a> {
+fn prepare_dense<'a>(cfg: &'a ModelConfig, w: &'a Weights,
+                     workers: usize) -> Prepared<'a> {
     let layers = (0..cfg.n_layers)
         .map(|l| PLayer {
             ln1: w.get("ln1").slice0(l),
@@ -244,6 +279,7 @@ fn prepare_dense<'a>(cfg: &'a ModelConfig, w: &'a Weights) -> Prepared<'a> {
         unembed: w.get("unembed"),
         lnf: w.get("lnf"),
         layers,
+        workers: workers.max(1),
     }
 }
 
@@ -251,8 +287,8 @@ fn prepare_dense<'a>(cfg: &'a ModelConfig, w: &'a Weights) -> Prepared<'a> {
 /// projections are `PMat::Stacked` views into the stacked store (only the
 /// tiny per-layer norm gains are copied), so building it costs O(layers)
 /// per step instead of O(parameters).
-fn prepare_dense_ref<'a>(cfg: &'a ModelConfig, w: &'a Weights)
-    -> Prepared<'a> {
+fn prepare_dense_ref<'a>(cfg: &'a ModelConfig, w: &'a Weights,
+                         workers: usize) -> Prepared<'a> {
     let layers = (0..cfg.n_layers)
         .map(|l| PLayer {
             ln1: w.get("ln1").slice0(l),
@@ -272,11 +308,12 @@ fn prepare_dense_ref<'a>(cfg: &'a ModelConfig, w: &'a Weights)
         unembed: w.get("unembed"),
         lnf: w.get("lnf"),
         layers,
+        workers: workers.max(1),
     }
 }
 
-fn prepare_packed<'a>(cfg: &'a ModelConfig, qm: &'a QuantizedModel)
-    -> Result<Prepared<'a>> {
+fn prepare_packed<'a>(cfg: &'a ModelConfig, qm: &'a QuantizedModel,
+                      workers: usize) -> Result<Prepared<'a>> {
     let w = &qm.weights;
     ensure!(qm.mats.len() == cfg.n_layers,
             "quantized model has {} layers but config '{}' expects {} — \
@@ -315,6 +352,7 @@ fn prepare_packed<'a>(cfg: &'a ModelConfig, qm: &'a QuantizedModel)
         unembed: w.get("unembed"),
         lnf: w.get("lnf"),
         layers,
+        workers: workers.max(1),
     })
 }
 
@@ -420,24 +458,25 @@ fn forward_seq(prep: &Prepared, tokens: &[i32], collect: bool)
             p.resid_in.push(h.data().to_vec());
         }
         // Attention block.
+        let wk = prep.workers;
         let x1 = rmsnorm(&h, &layer.ln1);
-        let mut q = layer.wq.apply(&x1); // [s, nh·dh]
-        let mut km = layer.wk.apply(&x1); // [s, nkv·dh]
-        let vm = layer.wv.apply(&x1); // [s, nkv·dh]
+        let mut q = layer.wq.apply(&x1, wk); // [s, nh·dh]
+        let mut km = layer.wk.apply(&x1, wk); // [s, nkv·dh]
+        let vm = layer.wv.apply(&x1, wk); // [s, nkv·dh]
         rope(&mut q, nh, dh, &rope_cos, &rope_sin);
         rope(&mut km, nkv, dh, &rope_cos, &rope_sin);
         let ctx = attention(&q, &km, &vm, nh, nkv, dh);
-        let attn_out = layer.wo.apply(&ctx);
+        let attn_out = layer.wo.apply(&ctx, wk);
         h = h.add(&attn_out);
         // FFN block (SwiGLU).
         let x2 = rmsnorm(&h, &layer.ln2);
-        let gate = layer.wgate.apply(&x2);
-        let up = layer.wup.apply(&x2);
+        let gate = layer.wgate.apply(&x2, wk);
+        let up = layer.wup.apply(&x2, wk);
         let mut mid = gate;
         for (g, u) in mid.data_mut().iter_mut().zip(up.data()) {
             *g = silu(*g) * u;
         }
-        let down = layer.wdown.apply(&mid);
+        let down = layer.wdown.apply(&mid, wk);
         if let Some(p) = probes.as_mut() {
             p.x_ln1.push(x1.data().to_vec());
             p.x_ln2.push(x2.data().to_vec());
@@ -640,25 +679,26 @@ fn kv_forward(prep: &Prepared, mut h: Tensor, cos: &[f32], sin: &[f32],
     let qw = nh * dh;
     for (l, layer) in prep.layers.iter().enumerate() {
         // Attention block: shared projections, per-row append+attend.
+        let wk = prep.workers;
         let x1 = rmsnorm(&h, &layer.ln1);
-        let mut q = layer.wq.apply(&x1); // [rows, nh·dh]
-        let mut km = layer.wk.apply(&x1); // [rows, nkv·dh]
-        let vm = layer.wv.apply(&x1); // [rows, nkv·dh]
+        let mut q = layer.wq.apply(&x1, wk); // [rows, nh·dh]
+        let mut km = layer.wk.apply(&x1, wk); // [rows, nkv·dh]
+        let vm = layer.wv.apply(&x1, wk); // [rows, nkv·dh]
         rope(&mut q, nh, dh, cos, sin);
         rope(&mut km, nkv, dh, cos, sin);
         let ctx = Tensor::new(fill_ctx(l, &q, &km, &vm),
                               vec![rows, qw]);
-        let attn_out = layer.wo.apply(&ctx);
+        let attn_out = layer.wo.apply(&ctx, wk);
         h = h.add(&attn_out);
         // FFN block (SwiGLU).
         let x2 = rmsnorm(&h, &layer.ln2);
-        let gate = layer.wgate.apply(&x2);
-        let up = layer.wup.apply(&x2);
+        let gate = layer.wgate.apply(&x2, wk);
+        let up = layer.wup.apply(&x2, wk);
         let mut mid = gate;
         for (g, u) in mid.data_mut().iter_mut().zip(up.data()) {
             *g = silu(*g) * u;
         }
-        let down = layer.wdown.apply(&mid);
+        let down = layer.wdown.apply(&mid, wk);
         h = h.add(&down);
     }
     let hf = rmsnorm(&h, prep.lnf);
@@ -819,12 +859,20 @@ fn prefill_chunk_with(prep: &Prepared, pool: &mut KvCachePool,
         // per-row over that row's own causal window either way.
         let mut ctx = vec![0.0f32; n * qw];
         if bulk {
+            // After the bulk append, chunk rows attend over disjoint
+            // read-only windows — row-independent, so the chunk's
+            // attention splits across the prepared worker budget.
+            // (The evicting branch below interleaves append→attend and
+            // MUST stay sequential.) `parallel_map` returns rows in
+            // index order, so splitting never reorders or changes bits.
             pool.append_rows(slot, l, km.data(), vm.data());
             let view = pool.layer_view(l, slot);
-            for i in 0..n {
-                let c = decode_attention(q.row(i), &view, &windows[i],
-                                         nh, nkv, dh);
-                ctx[i * qw..(i + 1) * qw].copy_from_slice(&c);
+            let rows = parallel_map(n, prep.workers, |i| {
+                decode_attention(q.row(i), &view, &windows[i],
+                                 nh, nkv, dh)
+            });
+            for (i, c) in rows.iter().enumerate() {
+                ctx[i * qw..(i + 1) * qw].copy_from_slice(c);
             }
         } else {
             for i in 0..n {
@@ -974,7 +1022,7 @@ mod tests {
         let stacked = Tensor::randn(vec![3, 10, 7], &mut rng);
         let x = Tensor::randn(vec![4, 10], &mut rng);
         for l in 0..3 {
-            let a = stacked_matmul(&x, &stacked, l);
+            let a = stacked_matmul(&x, &stacked, l, 1 + rng.below(3));
             let b = matmul(&x, &stacked.slice0(l));
             assert_eq!(a, b, "layer {l}"); // bit-identical by design
         }
@@ -1264,5 +1312,27 @@ mod tests {
             assert_eq!(p.resid_in[0].row(si),
                        w.get("embed").row(t as usize));
         }
+    }
+
+    /// The prefill worker budget (kernel splits + bulk-regime parallel
+    /// attention) must never change logits — rows are computed
+    /// independently and stitched in index order.
+    #[test]
+    fn prefill_chunk_is_worker_invariant() {
+        let entry = tiny_entry();
+        let cfg = &entry.config;
+        let mut rng = Rng::new(58);
+        let w = Weights::synth(cfg, &mut rng, &[], &[]);
+        let tokens: Vec<i32> = (0..10)
+            .map(|i| ((i * 7) % cfg.vocab) as i32)
+            .collect();
+        let run = |workers: usize| {
+            let e = NativeEngine::with_workers(workers);
+            let mut pool = KvCachePool::for_model(cfg, 1);
+            let s = pool.admit(tokens.len()).unwrap();
+            e.prefill_chunk(&entry, &mut pool, s, &tokens, &w).unwrap()
+        };
+        assert_eq!(run(1), run(4),
+                   "prefill logits changed with worker count");
     }
 }

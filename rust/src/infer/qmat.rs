@@ -1,15 +1,24 @@
-//! Packed quantized matrices + the fused dequant-matmul kernel — the
+//! Packed quantized matrices + the fused dequant-matmul kernels — the
 //! native serving format. Codes stay in the 2/4-bit `quant::pack` layout
-//! end to end; dequantization happens inside the matmul's cache-blocked
-//! K panels, so the full f32 weight matrix is never materialized (unlike
-//! the unpack-then-`tensor::matmul` baseline the benches compare against).
+//! end to end; dequantization happens inside cache-blocked K×N tiles
+//! through a per-(group, column) lookup table, so the full f32 weight
+//! matrix is never materialized (unlike the unpack-then-`tensor::matmul`
+//! baseline the benches compare against).
+//!
+//! Kernel family contract (see DESIGN.md "Fused kernel family"): for the
+//! same `x` row, `fused_vecmat`, `fused_gemm_small` and `fused_matmul`
+//! produce bit-identical outputs. Normative semantics per output
+//! element: sum `a_k * (s·(code_k − z))` over k ascending, skipping
+//! every term whose activation `a_k == 0.0` — ALL kernels skip, so a
+//! zero activation can never turn a nonfinite dequantized weight into a
+//! NaN in one kernel but not another.
 
 use std::collections::BTreeMap;
 
 use crate::model::{ModelConfig, Weights, QUANT_WEIGHTS, WEIGHT_NAMES};
 use crate::quant::{self, pack, Backend, HessianMap, QuantSpec, QuantizedMatrix};
 use crate::tensor::Tensor;
-use crate::util::pool::parallel_map;
+use crate::util::pool::{chunk_ranges, parallel_map, workers_for};
 
 /// One [K, N] weight in the packed serving layout: 2/4-bit codes packed
 /// along K (`quant::pack`) plus per-(group, column) f32 scale/zero.
@@ -21,9 +30,9 @@ pub struct PackedMatrix {
     pub group: usize,
     /// u8 [K·bits/8, N], little-endian sub-bytes along K.
     pub packed: Vec<u8>,
-    /// f32 [K/group, N].
+    /// f32 [ceil(K/group), N].
     pub scale: Vec<f32>,
-    /// f32 [K/group, N].
+    /// f32 [ceil(K/group), N].
     pub zero: Vec<f32>,
 }
 
@@ -62,9 +71,21 @@ impl PackedMatrix {
     }
 }
 
-/// K-panel height of the fused kernel (matches `tensor::matmul`'s
-/// blocking so the two paths accumulate in the same order).
+/// K-panel height of `fused_matmul` (matches `tensor::matmul`'s blocking
+/// so the two paths accumulate in the same k order).
 const BK: usize = 64;
+
+/// Column-tile width shared by all three kernels. A BK×NB f32 panel is
+/// 16 KB and a NB×16 LUT tile is 4 KB — both L1-resident, which is the
+/// point: the dequant table and the staged panel must not evict the
+/// output rows they feed.
+const NB: usize = 64;
+
+/// Inner accumulation unroll width. `chunks_exact(UNROLL)` hands the
+/// compiler fixed-size blocks of independent mul-adds it can lift to
+/// 8-lane SIMD without `std::simd`; the scalar remainder preserves
+/// per-element op order, so unrolling never changes bits.
+const UNROLL: usize = 8;
 
 /// Decode coordinates of packed weight row `kk`, shared by every fused
 /// kernel: (packed byte row, sub-byte shift, scale row, zero row). The
@@ -87,29 +108,101 @@ fn row_decode(pm: &PackedMatrix, kk: usize)
     )
 }
 
+/// Fill the dequant lookup table for one (group, column tile):
+/// `lut[j*LW + code] = s_j · (code − z_j)` for tile column j. `LW` is
+/// the table width `1 << bits` (4 or 16). The expression is the exact
+/// one the scalar kernels used per element, evaluated once per code
+/// instead of once per weight — same two f32 ops, so every value read
+/// out of the table is bit-identical to computing it inline.
+fn fill_lut<const LW: usize>(srow: &[f32], zrow: &[f32], lut: &mut [f32]) {
+    for ((s, z), l) in
+        srow.iter().zip(zrow).zip(lut.chunks_exact_mut(LW)) {
+        for (code, e) in l.iter_mut().enumerate() {
+            *e = *s * (code as f32 - *z);
+        }
+    }
+}
+
+/// Decode one packed byte row (tile slice) through the LUT into `wrow`.
+#[inline]
+fn gather_row<const LW: usize>(bytes: &[u8], shift: u32, lut: &[f32],
+                               wrow: &mut [f32]) {
+    let mask = (LW - 1) as u8;
+    for (j, (w, &byte)) in wrow.iter_mut().zip(bytes).enumerate() {
+        *w = lut[j * LW + ((byte >> shift) & mask) as usize];
+    }
+}
+
+/// `out[j] += a · lut[j·LW + code_j]` over a tile — the single-row
+/// kernel's inner loop, gathering straight from the LUT (with one x row
+/// there is no reuse to amortize a staged f32 panel).
+#[inline]
+fn gather_axpy<const LW: usize>(a: f32, bytes: &[u8], shift: u32,
+                                lut: &[f32], out: &mut [f32]) {
+    let mask = (LW - 1) as u8;
+    let mut oc = out.chunks_exact_mut(UNROLL);
+    let mut bc = bytes.chunks_exact(UNROLL);
+    let mut j = 0;
+    for (ob, bb) in (&mut oc).zip(&mut bc) {
+        for (u, (o, &byte)) in ob.iter_mut().zip(bb).enumerate() {
+            let code = ((byte >> shift) & mask) as usize;
+            *o += a * lut[(j + u) * LW + code];
+        }
+        j += UNROLL;
+    }
+    for (u, (o, &byte)) in oc
+        .into_remainder()
+        .iter_mut()
+        .zip(bc.remainder())
+        .enumerate() {
+        let code = ((byte >> shift) & mask) as usize;
+        *o += a * lut[(j + u) * LW + code];
+    }
+}
+
+/// `out[j] += a · w[j]` over a tile, 8-wide unrolled. Same per-element
+/// multiply-add in the same order as the scalar loop — the blocking
+/// only changes instruction scheduling, never bits.
+#[inline]
+fn axpy(a: f32, w: &[f32], out: &mut [f32]) {
+    let mut oc = out.chunks_exact_mut(UNROLL);
+    let mut wc = w.chunks_exact(UNROLL);
+    for (ob, wb) in (&mut oc).zip(&mut wc) {
+        for (o, &wv) in ob.iter_mut().zip(wb) {
+            *o += a * wv;
+        }
+    }
+    for (o, &wv) in oc.into_remainder().iter_mut().zip(wc.remainder()) {
+        *o += a * wv;
+    }
+}
+
 /// Fused dequant-matmul: `x [M, K] @ dequant(pm) -> [M, N]` without ever
-/// materializing the f32 weight. Each K panel of `BK` rows is decoded
-/// once into a small cache-resident buffer and reused across all M rows;
-/// rows of `x` are split across `workers` threads via `util::pool`.
+/// materializing the f32 weight. For each column tile, each K panel of
+/// `BK` rows is decoded once through the LUT into a cache-resident f32
+/// panel and reused across all M rows; rows of `x` are split across
+/// `workers` threads via `util::pool` when the call is big enough to
+/// pay for the spawn (`pool::workers_for`).
 pub fn fused_matmul(x: &Tensor, pm: &PackedMatrix, workers: usize)
     -> Tensor {
     let (m, k) = (x.rows(), x.cols());
     assert_eq!(k, pm.k, "fused_matmul: x cols {k} != packed K {}", pm.k);
     let n = pm.n;
-    let workers = workers.clamp(1, m.max(1));
+    let xd = x.data();
+    let run = |r0: usize, r1: usize| match pm.bits {
+        2 => fused_rows::<4>(xd, r0, r1, pm),
+        4 => fused_rows::<16>(xd, r0, r1, pm),
+        b => panic!("fused_matmul: no packed kernel for {b}-bit"),
+    };
+    let workers = workers_for(workers, m * k * n).clamp(1, m.max(1));
     if workers == 1 {
-        let data = fused_rows(x.data(), 0, m, pm);
-        return Tensor::new(data, vec![m, n]);
+        return Tensor::new(run(0, m), vec![m, n]);
     }
     // Contiguous row blocks, one per worker; each decodes its own panels.
-    let per = m.div_ceil(workers);
-    let ranges: Vec<(usize, usize)> = (0..workers)
-        .map(|w| (w * per, ((w + 1) * per).min(m)))
-        .filter(|(a, b)| a < b)
-        .collect();
+    let ranges = chunk_ranges(m, workers);
     let chunks = parallel_map(ranges.len(), ranges.len(), |i| {
         let (r0, r1) = ranges[i];
-        fused_rows(x.data(), r0, r1, pm)
+        run(r0, r1)
     });
     let mut data = Vec::with_capacity(m * n);
     for c in chunks {
@@ -118,63 +211,109 @@ pub fn fused_matmul(x: &Tensor, pm: &PackedMatrix, workers: usize)
     Tensor::new(data, vec![m, n])
 }
 
-/// Fused kernel body for output rows `r0..r1`.
-fn fused_rows(xd: &[f32], r0: usize, r1: usize, pm: &PackedMatrix)
-    -> Vec<f32> {
+/// Fused kernel body for output rows `r0..r1`: column tiles outermost,
+/// BK-row K panels within a tile, LUT rebuilt on group change. Per
+/// output element the k loop still ascends 0..K (tiles partition
+/// columns, panels partition k in order), so tiling is bit-invariant.
+fn fused_rows<const LW: usize>(xd: &[f32], r0: usize, r1: usize,
+                               pm: &PackedMatrix) -> Vec<f32> {
     let (k, n) = (pm.k, pm.n);
-    let mask = (1u8 << pm.bits) - 1;
     let rows = r1 - r0;
     let mut out = vec![0.0f32; rows * n];
-    let panel_rows = BK.min(k);
-    let mut panel = vec![0.0f32; panel_rows * n];
-    let mut k0 = 0;
-    while k0 < k {
-        let k1 = (k0 + BK).min(k);
-        // Decode this K panel once: panel[kk-k0] = s·(code − z).
-        for kk in k0..k1 {
-            let (brow, shift, srow, zrow) = row_decode(pm, kk);
-            let prow = &mut panel[(kk - k0) * n..(kk - k0 + 1) * n];
-            for c in 0..n {
-                let code = (brow[c] >> shift) & mask;
-                prow[c] = srow[c] * (code as f32 - zrow[c]);
-            }
-        }
-        // Accumulate the panel into every output row (ikj order).
-        for i in r0..r1 {
-            let xrow = &xd[i * k..(i + 1) * k];
-            let orow = &mut out[(i - r0) * n..(i - r0 + 1) * n];
+    let mut lut = vec![0.0f32; NB * LW];
+    let mut panel = vec![0.0f32; BK.min(k) * NB.min(n)];
+    for t in 0..n.div_ceil(NB) {
+        let c0 = t * NB;
+        let c1 = (c0 + NB).min(n);
+        let tw = c1 - c0;
+        let lutt = &mut lut[..tw * LW];
+        let mut cur_gr = usize::MAX;
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + BK).min(k);
+            // Decode this K panel's tile once: panel[kk-k0] row =
+            // s·(code − z) via the LUT.
             for kk in k0..k1 {
-                let aik = xrow[kk];
-                let prow = &panel[(kk - k0) * n..(kk - k0 + 1) * n];
-                for (o, p) in orow.iter_mut().zip(prow) {
-                    *o += aik * p;
+                let (brow, shift, srow, zrow) = row_decode(pm, kk);
+                let gr = kk / pm.group;
+                if gr != cur_gr {
+                    fill_lut::<LW>(&srow[c0..c1], &zrow[c0..c1], lutt);
+                    cur_gr = gr;
+                }
+                gather_row::<LW>(&brow[c0..c1], shift, lutt,
+                                 &mut panel[(kk - k0) * tw
+                                            ..(kk - k0 + 1) * tw]);
+            }
+            // Accumulate the panel into every output row (ikj order),
+            // skipping zero activations like the rest of the family.
+            for i in r0..r1 {
+                let xrow = &xd[i * k..(i + 1) * k];
+                let ob = (i - r0) * n;
+                let orow = &mut out[ob + c0..ob + c1];
+                for kk in k0..k1 {
+                    let a = xrow[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    axpy(a, &panel[(kk - k0) * tw..(kk - k0 + 1) * tw],
+                         orow);
                 }
             }
+            k0 = k1;
         }
-        k0 = k1;
     }
     out
 }
 
 /// Single-row fused dequant-dot: `x [K] @ dequant(pm) -> [N]`, the
-/// decode-path kernel. Skips the K-panel staging buffer entirely (for one
-/// row there is no reuse to amortize it) and accumulates k-ascending with
-/// the same `s·(code − z)` grouping as `fused_rows`, so the result is
-/// bit-identical to `fused_matmul` on a [1, K] input.
+/// decode-path kernel. Skips the K-panel staging buffer entirely (for
+/// one row there is no reuse to amortize it) and gathers straight from
+/// the per-(group, tile) LUT, k-ascending per element with the same
+/// `s·(code − z)` values and the same zero-skip as `fused_rows`, so the
+/// result is bit-identical to `fused_matmul` on a [1, K] input. Dead
+/// groups (all activations zero) never pay the LUT build.
 pub fn fused_vecmat(x: &[f32], pm: &PackedMatrix) -> Vec<f32> {
-    let (k, n) = (pm.k, pm.n);
+    let k = pm.k;
     assert_eq!(x.len(), k, "fused_vecmat: x len {} != packed K {k}",
                x.len());
-    let mask = (1u8 << pm.bits) - 1;
+    match pm.bits {
+        2 => vecmat_impl::<4>(x, pm),
+        4 => vecmat_impl::<16>(x, pm),
+        b => panic!("fused_vecmat: no packed kernel for {b}-bit"),
+    }
+}
+
+fn vecmat_impl<const LW: usize>(x: &[f32], pm: &PackedMatrix)
+    -> Vec<f32> {
+    let (k, n) = (pm.k, pm.n);
+    let group = pm.group;
     let mut out = vec![0.0f32; n];
-    for (kk, &a) in x.iter().enumerate() {
-        if a == 0.0 {
-            continue;
-        }
-        let (brow, shift, srow, zrow) = row_decode(pm, kk);
-        for c in 0..n {
-            let code = (brow[c] >> shift) & mask;
-            out[c] += a * (srow[c] * (code as f32 - zrow[c]));
+    let mut lut = vec![0.0f32; NB.min(n) * LW];
+    // One contiguous liveness pass over x, reused by every column tile.
+    let glive: Vec<bool> = x
+        .chunks(group)
+        .map(|g| g.iter().any(|&a| a != 0.0))
+        .collect();
+    for t in 0..n.div_ceil(NB) {
+        let c0 = t * NB;
+        let c1 = (c0 + NB).min(n);
+        let lutt = &mut lut[..(c1 - c0) * LW];
+        for (gr, &live) in glive.iter().enumerate() {
+            if !live {
+                continue;
+            }
+            let g0 = gr * group;
+            let g1 = (g0 + group).min(k);
+            let (_, _, srow, zrow) = row_decode(pm, g0);
+            fill_lut::<LW>(&srow[c0..c1], &zrow[c0..c1], lutt);
+            for (kk, &a) in x.iter().enumerate().take(g1).skip(g0) {
+                if a == 0.0 {
+                    continue;
+                }
+                let (brow, shift, _, _) = row_decode(pm, kk);
+                gather_axpy::<LW>(a, &brow[c0..c1], shift, lutt,
+                                  &mut out[c0..c1]);
+            }
         }
     }
     out
@@ -188,46 +327,108 @@ pub fn fused_vecmat(x: &[f32], pm: &PackedMatrix) -> Vec<f32> {
 /// sequence decodes the same weights M times.)
 ///
 /// Unlike `fused_matmul` there is no K-panel staging buffer: one
-/// dequantized weight row (`[N]` floats) stays cache-resident while it is
-/// accumulated into all M output rows — the right blocking for the small
-/// M (≤ ~16) of a decode batch, where a BK×N panel would evict the
+/// dequantized weight-row tile (≤ NB floats) stays cache-resident while
+/// it is accumulated into all M output rows — the right blocking for the
+/// small M (≤ ~16) of a decode batch, where a BK×N panel would evict the
 /// output rows. Accumulation is k-ascending per output row with the same
-/// `s·(code − z)` grouping, so each row is bit-identical to
-/// `fused_vecmat` on that row (and to `fused_matmul`).
-pub fn fused_gemm_small(x: &Tensor, pm: &PackedMatrix) -> Tensor {
+/// `s·(code − z)` values and the same zero-skip, so each row is
+/// bit-identical to `fused_vecmat` on that row (and to `fused_matmul`).
+///
+/// Dead weight rows (no x row consumes them) are skipped via a per-k
+/// liveness mask built in ONE contiguous pass over `x` up front — not
+/// by re-scanning x with a stride-K walk per weight row. Column tiles
+/// are independent, so large-N calls split tiles across `workers`
+/// (splitting rows instead would decode every weight row once per
+/// worker, defeating the kernel's point).
+pub fn fused_gemm_small(x: &Tensor, pm: &PackedMatrix, workers: usize)
+    -> Tensor {
     let (m, k) = (x.rows(), x.cols());
     assert_eq!(k, pm.k, "fused_gemm_small: x cols {k} != packed K {}",
                pm.k);
     let n = pm.n;
-    let mask = (1u8 << pm.bits) - 1;
+    if m == 0 || n == 0 {
+        return Tensor::new(vec![0.0; m * n], vec![m, n]);
+    }
     let xd = x.data();
+    // Per-k liveness in one pass over x's rows (contiguous loads).
+    let mut live = vec![false; k];
+    for row in xd.chunks_exact(k) {
+        for (lv, &a) in live.iter_mut().zip(row) {
+            *lv |= a != 0.0;
+        }
+    }
+    let run = |t0: usize, t1: usize| match pm.bits {
+        2 => gemm_small_tiles::<4>(xd, m, &live, pm, t0, t1),
+        4 => gemm_small_tiles::<16>(xd, m, &live, pm, t0, t1),
+        b => panic!("fused_gemm_small: no packed kernel for {b}-bit"),
+    };
+    let tiles = n.div_ceil(NB);
+    let workers = workers_for(workers, m * k * n).clamp(1, tiles);
+    if workers == 1 {
+        return Tensor::new(run(0, tiles), vec![m, n]);
+    }
+    let ranges = chunk_ranges(tiles, workers);
+    let blocks = parallel_map(ranges.len(), ranges.len(), |w| {
+        let (t0, t1) = ranges[w];
+        run(t0, t1)
+    });
+    // Stitch each worker's [M, cw] column block into the [M, N] output.
     let mut out = vec![0.0f32; m * n];
-    let mut wrow = vec![0.0f32; n];
-    for kk in 0..k {
-        // Skip the decode when no row consumes this weight row (mirrors
-        // the zero-skip in `fused_vecmat`, which never decodes it).
-        if xd[kk..].iter().step_by(k).all(|&a| a == 0.0) {
-            continue;
-        }
-        let (brow, shift, srow, zrow) = row_decode(pm, kk);
-        // Dequantize weight row kk once...
-        for c in 0..n {
-            let code = (brow[c] >> shift) & mask;
-            wrow[c] = srow[c] * (code as f32 - zrow[c]);
-        }
-        // ...and apply it to every active row.
+    for (w, block) in blocks.iter().enumerate() {
+        let c0 = ranges[w].0 * NB;
+        let cw = block.len() / m;
         for i in 0..m {
-            let a = xd[i * k + kk];
-            if a == 0.0 {
-                continue;
-            }
-            let orow = &mut out[i * n..(i + 1) * n];
-            for (o, w) in orow.iter_mut().zip(&wrow) {
-                *o += a * w;
-            }
+            out[i * n + c0..i * n + c0 + cw]
+                .copy_from_slice(&block[i * cw..(i + 1) * cw]);
         }
     }
     Tensor::new(out, vec![m, n])
+}
+
+/// `fused_gemm_small` body for column tiles `t0..t1`: returns the
+/// [M, cols(t0..t1)] output block. The LUT is rebuilt lazily on group
+/// change, so a fully dead group never pays the build.
+fn gemm_small_tiles<const LW: usize>(xd: &[f32], m: usize, live: &[bool],
+                                     pm: &PackedMatrix, t0: usize,
+                                     t1: usize) -> Vec<f32> {
+    let (k, n) = (pm.k, pm.n);
+    let c_base = t0 * NB;
+    let c_end = (t1 * NB).min(n);
+    let cw = c_end - c_base;
+    let mut out = vec![0.0f32; m * cw];
+    let mut lut = vec![0.0f32; NB.min(n) * LW];
+    let mut wrow = vec![0.0f32; NB.min(n)];
+    for t in t0..t1 {
+        let c0 = t * NB;
+        let c1 = (c0 + NB).min(n);
+        let tw = c1 - c0;
+        let lutt = &mut lut[..tw * LW];
+        let wt = &mut wrow[..tw];
+        let mut cur_gr = usize::MAX;
+        for (kk, &alive) in live.iter().enumerate() {
+            if !alive {
+                continue;
+            }
+            let (brow, shift, srow, zrow) = row_decode(pm, kk);
+            let gr = kk / pm.group;
+            if gr != cur_gr {
+                fill_lut::<LW>(&srow[c0..c1], &zrow[c0..c1], lutt);
+                cur_gr = gr;
+            }
+            // Dequantize weight row kk's tile once...
+            gather_row::<LW>(&brow[c0..c1], shift, lutt, wt);
+            // ...and apply it to every active row.
+            for i in 0..m {
+                let a = xd[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let ob = i * cw + (c0 - c_base);
+                axpy(a, wt, &mut out[ob..ob + tw]);
+            }
+        }
+    }
+    out
 }
 
 /// One projection of a quantized model: packed when the bit width has a
@@ -356,6 +557,57 @@ mod tests {
     use crate::util::prop::check;
     use crate::util::rng::Rng;
 
+    /// Scalar oracle for the kernel family's normative semantics: per
+    /// output element, sum `a · (s·(code − z))` over k ascending,
+    /// skipping `a == 0.0`, decoding through `row_decode`. Deliberately
+    /// naive — no LUT, no tiles, no unrolling.
+    fn oracle(xd: &[f32], m: usize, pm: &PackedMatrix) -> Vec<f32> {
+        let (k, n) = (pm.k, pm.n);
+        let mask = (1u8 << pm.bits) - 1;
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let a = xd[i * k + kk];
+                if a == 0.0 {
+                    continue;
+                }
+                let (brow, shift, srow, zrow) = row_decode(pm, kk);
+                for c in 0..n {
+                    let code = (brow[c] >> shift) & mask;
+                    out[i * n + c] +=
+                        a * (srow[c] * (code as f32 - zrow[c]));
+                }
+            }
+        }
+        out
+    }
+
+    /// True bitwise equality — unlike `==` on f32 slices it
+    /// distinguishes -0.0 from +0.0 and treats equal NaN bits as equal.
+    fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    /// Run all three kernels against the scalar oracle, bitwise.
+    fn ensure_family_matches_oracle(x: &Tensor, pm: &PackedMatrix,
+                                    ctx: &str) -> Result<(), String> {
+        let m = x.rows();
+        let want = oracle(x.data(), m, pm);
+        let full = fused_matmul(x, pm, 1);
+        prop_ensure!(bits_eq(full.data(), &want),
+                     "fused_matmul != oracle ({ctx})");
+        let small = fused_gemm_small(x, pm, 1);
+        prop_ensure!(bits_eq(small.data(), &want),
+                     "fused_gemm_small != oracle ({ctx})");
+        for i in 0..m {
+            let row = fused_vecmat(x.row(i), pm);
+            prop_ensure!(bits_eq(&row, &want[i * pm.n..(i + 1) * pm.n]),
+                         "fused_vecmat row {i} != oracle ({ctx})");
+        }
+        Ok(())
+    }
+
     #[test]
     fn packed_dequantize_matches_unpacked() {
         let mut rng = Rng::new(40);
@@ -405,7 +657,7 @@ mod tests {
             let pm = PackedMatrix::from_quantized(&q);
             let vec_out = fused_vecmat(x.data(), &pm);
             let mat_out = fused_matmul(&x, &pm, 1);
-            prop_ensure!(vec_out == mat_out.data(),
+            prop_ensure!(bits_eq(&vec_out, mat_out.data()),
                          "vecmat diverged from fused_matmul \
                           ({k}x{n}@{bits}b g={g})");
             Ok(())
@@ -429,16 +681,16 @@ mod tests {
             for i in 0..m {
                 x.data_mut()[i * k + dead_k] = 0.0;
             }
-            let small = fused_gemm_small(&x, &pm_of(&w, bits, g));
             let pm = pm_of(&w, bits, g);
+            let small = fused_gemm_small(&x, &pm, 1 + rng.below(3));
             let full = fused_matmul(&x, &pm, 1);
-            prop_ensure!(small == full,
+            prop_ensure!(bits_eq(small.data(), full.data()),
                          "small-batch GEMM diverged from fused_matmul \
                           ({m}x{k}x{n}@{bits}b g={g})");
             // Per-row bit-identity with the single-row kernel.
             for i in 0..m {
                 let row = fused_vecmat(x.row(i), &pm);
-                prop_ensure!(row.as_slice() == small.row(i),
+                prop_ensure!(bits_eq(&row, small.row(i)),
                              "row {i} diverged from fused_vecmat");
             }
             Ok(())
@@ -448,6 +700,158 @@ mod tests {
     fn pm_of(w: &Tensor, bits: u8, g: usize) -> PackedMatrix {
         PackedMatrix::from_quantized(&rtn::quantize(
             w, QuantSpec::new(bits, g)))
+    }
+
+    /// Build a PackedMatrix directly from raw codes + metadata, without
+    /// going through `rtn` — the only way to get ragged tail groups
+    /// (`fit_group` always returns a divisor of K) or nonfinite scales.
+    fn pm_raw(rng: &mut Rng, k: usize, n: usize, bits: u8,
+              group: usize) -> PackedMatrix {
+        let codes: Vec<u8> = (0..k * n)
+            .map(|_| rng.below(1 << bits) as u8)
+            .collect();
+        let gs = k.div_ceil(group);
+        PackedMatrix {
+            k,
+            n,
+            bits,
+            group,
+            packed: pack::pack(&codes, k, n, bits),
+            scale: (0..gs * n).map(|_| 0.1 + rng.f32()).collect(),
+            zero: (0..gs * n)
+                .map(|_| rng.below(1 << bits) as f32)
+                .collect(),
+        }
+    }
+
+    /// Plant structured zeros into x: random scattered zeros, one fully
+    /// dead k column, and a `-0.0` (must behave exactly like `+0.0`).
+    fn plant_zeros(x: &mut Tensor, rng: &mut Rng) {
+        let (m, k) = (x.rows(), x.cols());
+        let xd = x.data_mut();
+        for _ in 0..1 + m * k / 4 {
+            xd[rng.below(m * k)] = 0.0;
+        }
+        let dead_k = rng.below(k);
+        for i in 0..m {
+            xd[i * k + dead_k] = 0.0;
+        }
+        xd[rng.below(m * k)] = -0.0;
+    }
+
+    /// Tentpole regression sweep: every edge shape the tiled/unrolled
+    /// rewrite introduced — N below the unroll width, N=1, N straddling
+    /// the NB tile boundary, K off the BK panel boundary, ragged tail
+    /// groups, both LUT widths — bitwise against the scalar oracle.
+    #[test]
+    fn kernel_family_matches_scalar_oracle_on_edge_shapes() {
+        // K values keep k % (8/bits) == 0 for both bit widths.
+        const KS: [usize; 7] = [4, 8, 20, 64, 68, 100, 128];
+        const NS: [usize; 9] = [1, 3, 7, 8, 9, 63, 64, 65, 130];
+        const MS: [usize; 5] = [1, 2, 5, 16, 17];
+        check("kernel family == oracle (edge shapes)", 60, |rng| {
+            let bits = if rng.f64() < 0.5 { 2u8 } else { 4u8 };
+            let k = KS[rng.below(KS.len())];
+            let n = NS[rng.below(NS.len())];
+            let m = MS[rng.below(MS.len())];
+            // Deliberately allow groups that do NOT divide K (ragged
+            // tail group) — pm_raw builds the layout by hand.
+            let group = [3, 8, 16, 64][rng.below(4)].min(k);
+            let pm = pm_raw(rng, k, n, bits, group);
+            let mut x = Tensor::randn(vec![m, k], rng);
+            plant_zeros(&mut x, rng);
+            ensure_family_matches_oracle(
+                &x, &pm,
+                &format!("{m}x{k}x{n}@{bits}b g={group}"))
+        });
+    }
+
+    /// Headline bugfix pin: uniform zero-skip across the family. A zero
+    /// activation must contribute NOTHING — not `0 · w` — in every
+    /// kernel, so a nonfinite dequantized weight (inf scale) behind a
+    /// zero activation can never produce a NaN in one kernel and a
+    /// finite value in another, and an all-zero row is exactly +0.0.
+    #[test]
+    fn zero_skip_is_uniform_across_the_kernel_family() {
+        let mut rng = Rng::new(47);
+        let (k, n, group) = (8usize, 4usize, 4usize);
+        let mut pm = pm_raw(&mut rng, k, n, 4, group);
+        // Group 0, column 1 dequantizes to +inf: scale inf, codes 3,
+        // zero 1 -> inf · (3 − 1) = +inf for kk in 0..4.
+        pm.zero = vec![1.0; pm.zero.len()];
+        pm.scale[n] = -2.0; // group 1 stays finite, incl. negatives
+        pm.scale[1] = f32::INFINITY;
+        pm.packed = pack::pack(&vec![3u8; k * n], k, n, 4);
+        // row 0: all zeros. row 1: zeros over the inf group (kk 0..4,
+        // incl. a -0.0), finite values elsewhere. row 2: fully nonzero.
+        let x = Tensor::new(
+            vec![
+                0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, //
+                0.0, -0.0, 0.0, 0.0, 1.5, -2.0, 0.25, 3.0, //
+                1.0, 2.0, 1.0, 0.5, -0.5, 1.0, 2.0, -2.0,
+            ],
+            vec![3, k],
+        );
+        let want = oracle(x.data(), 3, &pm);
+        let full = fused_matmul(&x, &pm, 1);
+        let small = fused_gemm_small(&x, &pm, 1);
+        assert!(bits_eq(full.data(), &want), "fused_matmul != oracle");
+        assert!(bits_eq(small.data(), &want),
+                "fused_gemm_small != oracle");
+        for i in 0..3 {
+            let row = fused_vecmat(x.row(i), &pm);
+            assert!(bits_eq(&row, &want[i * n..(i + 1) * n]),
+                    "fused_vecmat row {i} != oracle");
+        }
+        // All-zero row: exactly +0.0 bits, never -0.0 or NaN.
+        for (c, v) in full.data()[..n].iter().enumerate() {
+            assert_eq!(v.to_bits(), 0, "row 0 col {c} not +0.0: {v}");
+        }
+        // Zeros over the inf group: finite result (a non-skipping
+        // kernel would compute 0 · inf = NaN here).
+        for (c, v) in full.data()[n..2 * n].iter().enumerate() {
+            assert!(v.is_finite(), "row 1 col {c} nonfinite: {v}");
+        }
+        // Nonzero activation against the inf weight: +inf, uniformly.
+        assert_eq!(full.data()[2 * n + 1], f32::INFINITY);
+    }
+
+    /// Ragged tail group (K not a multiple of group): the last scale /
+    /// zero row covers fewer than `group` weight rows. `fit_group` never
+    /// produces this, so build the layout by hand for both LUT widths.
+    #[test]
+    fn ragged_tail_groups_match_the_scalar_oracle() {
+        check("ragged tail groups == oracle", 16, |rng| {
+            let bits = if rng.f64() < 0.5 { 2u8 } else { 4u8 };
+            let (k, n, group) = (20, 6, 8); // 3 groups: 8 + 8 + 4
+            let pm = pm_raw(rng, k, n, bits, group);
+            let mut x = Tensor::randn(vec![3, k], rng);
+            plant_zeros(&mut x, rng);
+            ensure_family_matches_oracle(&x, &pm, "ragged 20/8")
+        });
+    }
+
+    /// Worker splits are bit-invariant: fused_matmul's row split and
+    /// fused_gemm_small's column-tile split. The shape is sized past
+    /// `pool::MIN_PAR_WORK` so the parallel path actually runs.
+    #[test]
+    fn worker_splits_are_bitwise_invariant() {
+        let mut rng = Rng::new(48);
+        let (m, k, n) = (8, 256, 600); // 8·256·600 ≈ 1.2M > MIN_PAR_WORK
+        let w = Tensor::randn(vec![k, n], &mut rng);
+        let pm = pm_of(&w, 4, 64);
+        let mut x = Tensor::randn(vec![m, k], &mut rng);
+        plant_zeros(&mut x, &mut rng);
+        let small1 = fused_gemm_small(&x, &pm, 1);
+        let small4 = fused_gemm_small(&x, &pm, 4);
+        assert!(bits_eq(small1.data(), small4.data()),
+                "gemm_small column split changed bits");
+        let full1 = fused_matmul(&x, &pm, 1);
+        let full3 = fused_matmul(&x, &pm, 3);
+        assert!(bits_eq(full1.data(), full3.data()),
+                "fused_matmul row split changed bits");
+        assert!(bits_eq(small1.data(), full1.data()),
+                "gemm_small diverged from fused_matmul");
     }
 
     #[test]

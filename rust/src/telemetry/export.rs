@@ -233,6 +233,33 @@ pub fn validate_bench_report(j: &Json) -> Result<(), String> {
     Ok(())
 }
 
+/// Parse a bench document back into flat entries (round-trip of
+/// `bench_report`) — how the bench binary reads a committed baseline
+/// `BENCH_*.json` to diff a fresh run against. Validates first, so a
+/// corrupt or foreign-versioned baseline is an error, not a silent
+/// empty diff.
+pub fn bench_entries_from_json(j: &Json)
+    -> Result<Vec<BenchEntry>, String> {
+    validate_bench_report(j)?;
+    let mut out = Vec::new();
+    for s in j.get("sections").and_then(Json::as_arr).unwrap() {
+        let section = s.get("name").and_then(Json::as_str).unwrap();
+        for e in s.get("entries").and_then(Json::as_arr).unwrap() {
+            let f = |k: &str| e.get(k).and_then(Json::as_f64).unwrap();
+            out.push(BenchEntry {
+                section: section.to_string(),
+                name: e.get("name").and_then(Json::as_str).unwrap()
+                    .to_string(),
+                iters: f("iters") as u64,
+                median_ns: f("median_ns"),
+                mean_ns: f("mean_ns"),
+                p95_ns: f("p95_ns"),
+            });
+        }
+    }
+    Ok(out)
+}
+
 /// Humanize a value for display: nanosecond metrics (name suffix
 /// `_ns`) get time units, the rest plain integers.
 fn fmt_val(name: &str, v: f64) -> String {
@@ -358,6 +385,9 @@ mod tests {
         // Round-trip through text, as CI consumes it.
         let parsed = Json::parse(&j.to_string()).unwrap();
         validate_bench_report(&parsed).unwrap();
+        // Full entry round-trip (what the --baseline diff reads).
+        assert_eq!(bench_entries_from_json(&parsed).unwrap(), entries);
+        assert!(bench_entries_from_json(&Json::Num(3.0)).is_err());
         // Section order is first-seen, not alphabetical.
         let names: Vec<&str> = parsed.get("sections").unwrap()
             .as_arr().unwrap().iter()

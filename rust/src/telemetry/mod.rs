@@ -25,8 +25,9 @@ pub mod registry;
 pub mod trace;
 
 pub use export::{
-    bench_report, render_summary, snapshot_from_json, snapshot_to_json,
-    validate_bench_report, BenchEntry, SCHEMA_VERSION,
+    bench_entries_from_json, bench_report, render_summary,
+    snapshot_from_json, snapshot_to_json, validate_bench_report,
+    BenchEntry, SCHEMA_VERSION,
 };
 pub use registry::{
     Counter, Gauge, HistSnapshot, Histogram, MetricsRegistry,

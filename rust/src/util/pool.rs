@@ -49,6 +49,37 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
 }
 
+/// Split `0..n` into at most `parts` contiguous near-equal ranges,
+/// dropping empties — the row / column-block splits the fused kernels
+/// hand to `parallel_map` (one range per worker, index order).
+pub fn chunk_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let per = n.div_ceil(parts);
+    (0..parts)
+        .map(|p| (p * per, ((p + 1) * per).min(n)))
+        .filter(|(a, b)| a < b)
+        .collect()
+}
+
+/// Work-size floor (in f32 mul-adds) below which a kernel call runs
+/// single-threaded: scoped spawn + join costs on the order of tens of
+/// microseconds, which only amortizes once the split sides carry ~a
+/// million mul-adds each.
+pub const MIN_PAR_WORK: usize = 1 << 20;
+
+/// Gate a caller's worker budget by the call's work size: collapses to
+/// 1 below `MIN_PAR_WORK`, otherwise passes `workers` through (>= 1).
+pub fn workers_for(workers: usize, work: usize) -> usize {
+    if work < MIN_PAR_WORK {
+        1
+    } else {
+        workers.max(1)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -68,5 +99,31 @@ mod tests {
     #[test]
     fn more_workers_than_items() {
         assert_eq!(parallel_map(2, 16, |i| i + 1), vec![1, 2]);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly_once() {
+        for n in [0usize, 1, 2, 7, 64, 100] {
+            for parts in [1usize, 2, 3, 8, 200] {
+                let r = chunk_ranges(n, parts);
+                assert!(r.len() <= parts.max(1));
+                // Contiguous, non-empty, covering 0..n in order.
+                let mut at = 0;
+                for (a, b) in &r {
+                    assert_eq!(*a, at);
+                    assert!(a < b);
+                    at = *b;
+                }
+                assert_eq!(at, n, "n={n} parts={parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn workers_for_gates_small_work() {
+        assert_eq!(workers_for(8, 0), 1);
+        assert_eq!(workers_for(8, MIN_PAR_WORK - 1), 1);
+        assert_eq!(workers_for(8, MIN_PAR_WORK), 8);
+        assert_eq!(workers_for(0, MIN_PAR_WORK), 1);
     }
 }
