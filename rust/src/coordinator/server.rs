@@ -46,7 +46,7 @@ use anyhow::Result;
 
 use crate::eval::ppl::batch_nll;
 use crate::infer::{BatchEngine, Executor, GenConfig, Generation,
-                   ModelRef, QuantizedModel};
+                   ModelRef, QuantizedModel, SpecCounters};
 use crate::model::Weights;
 use crate::runtime::ModelEntry;
 use crate::telemetry::registry::{Counter, Gauge, Histogram,
@@ -81,10 +81,25 @@ impl ServedWeights {
     }
 }
 
+/// What a swap deploys: the serving TARGET plus an optional cheaper
+/// drafter variant (typically the coordinator's 2-bit artifact of the
+/// SAME weights) for speculative decoding. Target and drafter always
+/// travel together through one drain barrier, so the pair is
+/// consistent: no request ever drafts against one deployment and
+/// verifies against another, and the drafter pool never holds KV from
+/// a stale variant (the barrier guarantees the engine is idle — no
+/// drafter slots exist — at the moment of the swap).
+pub struct Deployment {
+    pub target: ServedWeights,
+    /// `None` serves plain; spec-opted requests decode one token per
+    /// target pass until a drafter is deployed.
+    pub drafter: Option<ServedWeights>,
+}
+
 enum Msg {
     Infer(Request),
     Generate(GenRequest),
-    Swap(Box<ServedWeights>),
+    Swap(Box<Deployment>),
     Stop,
 }
 
@@ -123,6 +138,13 @@ struct GenRequest {
 ///   recording each request's `GenStats` nanosecond fields verbatim
 ///   (same integers, no float round trip — the histogram quantiles and
 ///   per-request ground truth never disagree beyond one bucket).
+/// * `serve.gen.spec.drafted` / `serve.gen.spec.accepted` /
+///   `serve.gen.spec.emitted` / `serve.gen.spec.verify_steps` —
+///   gauges mirroring the engine's cumulative speculative-decode
+///   counters (`BatchEngine::spec_counters`): draft tokens proposed,
+///   drafts committed by exact greedy agreement, tokens emitted by
+///   verify rows, and multi-row verify passes run. All zero unless a
+///   drafter is deployed and requests opt in via `GenConfig::spec`.
 /// * `serve.engine.step_ns` — histogram of scheduler step wall time.
 pub struct ServerQueue {
     queue: Mutex<VecDeque<Msg>>,
@@ -136,6 +158,10 @@ pub struct ServerQueue {
     gen_served: Counter,
     gen_tokens: Counter,
     gen_shared_tokens: Gauge,
+    gen_spec_drafted: Gauge,
+    gen_spec_accepted: Gauge,
+    gen_spec_emitted: Gauge,
+    gen_spec_verify_steps: Gauge,
     gen_prefill: Histogram,
     gen_ttft: Histogram,
     gen_decode: Histogram,
@@ -166,6 +192,13 @@ impl ServerQueue {
             gen_tokens: registry.counter("serve.gen.tokens"),
             gen_shared_tokens:
                 registry.gauge("serve.gen.shared_prefix_tokens"),
+            gen_spec_drafted: registry.gauge("serve.gen.spec.drafted"),
+            gen_spec_accepted:
+                registry.gauge("serve.gen.spec.accepted"),
+            gen_spec_emitted:
+                registry.gauge("serve.gen.spec.emitted"),
+            gen_spec_verify_steps:
+                registry.gauge("serve.gen.spec.verify_steps"),
             gen_prefill: registry.histogram("serve.gen.prefill_ns"),
             gen_ttft: registry.histogram("serve.gen.ttft_ns"),
             gen_decode: registry.histogram("serve.gen.decode_ns"),
@@ -236,6 +269,18 @@ impl ServerQueue {
         (self.gen_prefill.sum() as f64 / 1e9,
          self.gen_ttft.sum() as f64 / 1e9)
     }
+
+    /// Cumulative speculative-decode counters — thin view over the
+    /// `serve.gen.spec.*` gauges (all zero without a deployed drafter
+    /// or spec-opted requests).
+    pub fn gen_spec(&self) -> SpecCounters {
+        SpecCounters {
+            drafted: self.gen_spec_drafted.get(),
+            accepted: self.gen_spec_accepted.get(),
+            verify_steps: self.gen_spec_verify_steps.get(),
+            emitted: self.gen_spec_emitted.get(),
+        }
+    }
 }
 
 /// Client handle (clone freely across threads).
@@ -290,15 +335,30 @@ impl Client {
             .map_err(|_| anyhow::anyhow!("server dropped request"))?
     }
 
-    /// Queue a zero-downtime dense weight swap (ordered with inference).
+    /// Queue a zero-downtime dense weight swap (ordered with
+    /// inference). Clears any deployed drafter: a deployment is the
+    /// (target, drafter) PAIR, and swapping only the target would
+    /// leave a drafter from a different variant set.
     pub fn swap_weights(&self, w: Weights) {
-        self.q.push(Msg::Swap(Box::new(ServedWeights::Dense(w))));
+        self.swap_deployment(ServedWeights::Dense(w), None);
     }
 
     /// Queue a zero-downtime swap to a packed quantized variant, served
-    /// through the fused dequant-matmul path.
+    /// through the fused dequant-matmul path. Clears any deployed
+    /// drafter (see `swap_weights`).
     pub fn swap_packed(&self, qm: QuantizedModel) {
-        self.q.push(Msg::Swap(Box::new(ServedWeights::Packed(qm))));
+        self.swap_deployment(ServedWeights::Packed(qm), None);
+    }
+
+    /// Queue a zero-downtime swap of the whole deployment: the serving
+    /// target plus an optional drafter variant for speculative
+    /// decoding (typically the 2-bit artifact of the same weights,
+    /// with a 4-bit or dense target). The pair applies atomically
+    /// behind the swap's drain barrier, so drafting and verification
+    /// always run against one consistent deployment.
+    pub fn swap_deployment(&self, target: ServedWeights,
+                           drafter: Option<ServedWeights>) {
+        self.q.push(Msg::Swap(Box::new(Deployment { target, drafter })));
     }
 
     /// Ask the serve loop to exit once the queue drains to this message.
@@ -333,9 +393,24 @@ type GenReply = std::sync::mpsc::Sender<Result<Generation>>;
 pub fn serve(exec: &(dyn Executor + Sync), entry: &ModelEntry,
              batch: usize, weights: ServedWeights, q: &ServerQueue)
              -> Result<()> {
+    serve_with_drafter(exec, entry, batch, weights, None, q)
+}
+
+/// `serve` with an optional drafter variant deployed from the start:
+/// generation requests that opt in (`GenConfig::spec`) draft through
+/// it and verify on the target in multi-row passes (see
+/// `BatchEngine::step_spec`; greedy outputs stay bit-identical to
+/// plain serving). Later `swap_deployment` messages replace target and
+/// drafter together behind the usual drain barrier.
+pub fn serve_with_drafter(exec: &(dyn Executor + Sync),
+                          entry: &ModelEntry, batch: usize,
+                          weights: ServedWeights,
+                          drafter: Option<ServedWeights>,
+                          q: &ServerQueue) -> Result<()> {
     let mut engine: BatchEngine<GenReply> =
         BatchEngine::new(&entry.config, batch.max(1));
-    let res = serve_loop(exec, entry, batch, weights, q, &mut engine);
+    let res =
+        serve_loop(exec, entry, batch, weights, drafter, q, &mut engine);
     if let Err(e) = &res {
         // Fatal engine/forward error (e.g. a malformed variant was
         // swapped in): fail every scheduled generation loudly, drop the
@@ -355,6 +430,7 @@ pub fn serve(exec: &(dyn Executor + Sync), entry: &ModelEntry,
 
 fn serve_loop(exec: &(dyn Executor + Sync), entry: &ModelEntry,
               batch: usize, mut weights: ServedWeights,
+              mut drafter: Option<ServedWeights>,
               q: &ServerQueue, engine: &mut BatchEngine<GenReply>)
               -> Result<()> {
     let seq = entry.config.seq;
@@ -408,7 +484,9 @@ fn serve_loop(exec: &(dyn Executor + Sync), entry: &ModelEntry,
                                 && engine.is_idle()
                                 && deferred.is_empty()
                             {
-                                weights = *w;
+                                let d = *w;
+                                weights = d.target;
+                                drafter = d.drafter;
                             } else {
                                 deferred.push_back(Msg::Swap(w));
                                 break;
@@ -440,10 +518,16 @@ fn serve_loop(exec: &(dyn Executor + Sync), entry: &ModelEntry,
         // finished sequences.
         if !engine.is_idle() {
             let t0 = Instant::now();
-            let done =
-                engine.step(exec, entry, weights.model_ref())?;
+            let done = engine.step_spec(
+                exec, entry, weights.model_ref(),
+                drafter.as_ref().map(|d| d.model_ref()))?;
             q.step_ns.record(t0.elapsed().as_nanos() as u64);
             q.gen_shared_tokens.set(engine.shared_prefix_tokens());
+            let sc = engine.spec_counters();
+            q.gen_spec_drafted.set(sc.drafted);
+            q.gen_spec_accepted.set(sc.accepted);
+            q.gen_spec_emitted.set(sc.emitted);
+            q.gen_spec_verify_steps.set(sc.verify_steps);
             for (reply, gen) in done {
                 q.gen_served.inc();
                 q.gen_tokens.add(gen.tokens.len() as u64);

@@ -22,8 +22,9 @@
 
 use anyhow::{ensure, Result};
 
-use crate::infer::{generate_batch, Executor, GenConfig, Generation,
-                   ModelRef, Sampling};
+use crate::infer::{generate_batch, generate_batch_spec, Executor,
+                   GenConfig, Generation, ModelRef, Sampling,
+                   SpecDecode};
 use crate::runtime::ModelEntry;
 
 /// Concurrent sequences per scoring stream: windows decode as one
@@ -70,6 +71,7 @@ fn greedy_cfg(gen_len: usize) -> GenConfig {
         seed: 0,
         stop: Vec::new(),
         cap: 0,
+        spec: None,
     }
 }
 
@@ -97,6 +99,45 @@ pub fn continuation_match_in_context(
     ensure!(!wins.is_empty(),
             "corpus too short for a {prompt_len}+{gen_len} window");
     let gens = batch_greedy(exec, entry, model, context, &wins, gen_len)?;
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for (g, (_, truth)) in gens.iter().zip(&wins) {
+        hits += g
+            .tokens
+            .iter()
+            .zip(*truth)
+            .filter(|(a, b)| a == b)
+            .count();
+        total += truth.len();
+    }
+    Ok(hits as f64 / total as f64)
+}
+
+/// `continuation_match`, decoded speculatively: every window drafts
+/// `k` tokens per step with the cheaper `drafter` variant and verifies
+/// them in one multi-row `target` pass. Greedy acceptance is exact, so
+/// the score is bit-identical to `continuation_match(target)` — what
+/// changes is the number of target forward passes, not the tokens.
+/// This is the scoring path a spec-decode deployment is judged by: it
+/// proves the (target, drafter) pair's accept rate on real corpus
+/// windows without ever risking the metric itself.
+#[allow(clippy::too_many_arguments)]
+pub fn continuation_match_spec(
+    exec: &dyn Executor, entry: &ModelEntry, target: ModelRef,
+    drafter: ModelRef, k: usize, corpus: &[i32], prompt_len: usize,
+    gen_len: usize, max_prompts: usize) -> Result<f64> {
+    ensure!(prompt_len > 0 && gen_len > 0, "empty window");
+    let wins = windows(corpus, prompt_len, gen_len, max_prompts);
+    ensure!(!wins.is_empty(),
+            "corpus too short for a {prompt_len}+{gen_len} window");
+    let mut cfg = greedy_cfg(gen_len);
+    cfg.spec = Some(SpecDecode { k });
+    let reqs: Vec<(Vec<i32>, GenConfig)> = wins
+        .iter()
+        .map(|(p, _)| (p.to_vec(), cfg.clone()))
+        .collect();
+    let gens = generate_batch_spec(exec, entry, target, drafter, &reqs,
+                                   SCORE_SLOTS.min(reqs.len().max(1)))?;
     let mut hits = 0usize;
     let mut total = 0usize;
     for (g, (_, truth)) in gens.iter().zip(&wins) {

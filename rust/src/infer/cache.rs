@@ -385,6 +385,57 @@ impl KvCachePool {
         }
     }
 
+    /// Roll a slot back to `new_pos`, discarding the K/V rows appended
+    /// for positions `new_pos..pos` and releasing every tail page that
+    /// no longer backs a live row. Refcount-correct across
+    /// copy-on-write shares: a released page that another slot still
+    /// references just drops this slot's reference (the other holders
+    /// keep it resident); only the last holder frees it. The block
+    /// holding `new_pos`'s partial tail stays mapped — its low rows
+    /// are live, and the dead high rows are overwritten (through the
+    /// CoW check) before anything can read them, exactly like a fresh
+    /// append. This is the speculative-decode rollback primitive, and
+    /// the only way a slot shrinks without a full `reset`.
+    ///
+    /// Only the unwrapped regime can roll back: once `pos > cap` the
+    /// ring has recycled rows in place, so the data a rewound position
+    /// would need is already overwritten — truncating across a wrap
+    /// would leave attention windows reading rows that belong to other
+    /// positions. Callers keep speculative windows inside the ring
+    /// (`pos + window <= cap`) precisely so this precondition holds;
+    /// violating it panics rather than corrupting the sequence.
+    pub fn truncate(&mut self, slot: usize, new_pos: usize) {
+        let (pos, cap) = {
+            let s = self.slot(slot);
+            (s.pos, s.cap)
+        };
+        if new_pos == pos {
+            return;
+        }
+        assert!(new_pos < pos,
+                "truncate: new_pos {new_pos} is past slot {slot}'s \
+                 position {pos}");
+        assert!(pos <= cap,
+                "truncate: slot {slot} wrapped its ring (pos {pos} > \
+                 cap {cap}) — the rewound rows were recycled in place \
+                 and cannot be restored");
+        // Blocks whose every ring row is at or past `new_pos` hold only
+        // discarded data: unmap them, then drop their references.
+        let first_dead = new_pos.div_ceil(PAGE_SIZE);
+        let dead: Vec<usize> = {
+            let s = self.slot_mut(slot);
+            s.pos = new_pos;
+            s.table
+                .iter_mut()
+                .skip(first_dead)
+                .filter_map(|e| e.take())
+                .collect()
+        };
+        for p in dead {
+            self.release_page(p);
+        }
+    }
+
     /// Page backing `block` of `slot`, private to the slot: allocated on
     /// first write, copied on write while shared (refcount > 1) — the
     /// copy-on-write point for shared prefix pages and the recycle point
@@ -1157,5 +1208,206 @@ mod tests {
         p.append(a, 0, &[1.0; 2], &[1.0; 2]);
         p.advance(a);
         let _ = p.admit_shared(8, a, 2); // donor holds only 1 position
+    }
+
+    #[test]
+    fn truncate_releases_tail_pages_and_keeps_live_rows() {
+        let mut p = KvCachePool::new(1, 1, 2, 1);
+        let s = p.admit(3 * PAGE_SIZE).unwrap();
+        let held = 2 * PAGE_SIZE + 3;
+        for i in 0..held {
+            p.append(s, 0, &row_of(i, 0, 0, 2), &row_of(i, 0, 1, 2));
+            p.advance(s);
+        }
+        assert_eq!(p.pages_in_use(), 3);
+        // Roll back into the middle of block 1: block 2's rows are all
+        // dead, so its page is released; block 1 keeps its live prefix.
+        let keep = PAGE_SIZE + 2;
+        p.truncate(s, keep);
+        assert_eq!(p.pos(s), keep);
+        assert_eq!(p.pages_in_use(), 2);
+        p.check_page_accounting().unwrap();
+        for r in 0..keep {
+            assert_eq!(p.layer_view(0, s).k_row(r),
+                       row_of(r, 0, 0, 2).as_slice(), "k row {r}");
+            assert_eq!(p.layer_view(0, s).v_row(r),
+                       row_of(r, 0, 1, 2).as_slice(), "v row {r}");
+        }
+        // Truncating to the current position is a no-op.
+        p.truncate(s, keep);
+        assert_eq!(p.pos(s), keep);
+        // Appends resume from the rewound position, remapping the
+        // released block on demand; old and new rows read back exactly.
+        for i in keep..2 * PAGE_SIZE + 1 {
+            p.append(s, 0, &row_of(i, 0, 2, 2), &row_of(i, 0, 3, 2));
+            p.advance(s);
+        }
+        assert_eq!(p.pages_in_use(), 3);
+        assert_eq!(p.layer_view(0, s).k_row(keep - 1),
+                   row_of(keep - 1, 0, 0, 2).as_slice());
+        assert_eq!(p.layer_view(0, s).k_row(keep),
+                   row_of(keep, 0, 2, 2).as_slice());
+        p.check_page_accounting().unwrap();
+        // Rewinding to zero leaves no live row: every page goes back
+        // to the free list, exactly like `reset`.
+        p.truncate(s, 0);
+        assert_eq!(p.pos(s), 0);
+        assert_eq!(p.pages_in_use(), 0);
+        p.check_page_accounting().unwrap();
+    }
+
+    #[test]
+    fn truncate_drops_only_this_slots_page_references() {
+        let mut p = KvCachePool::new(1, 1, 2, 2);
+        let cap = 2 * PAGE_SIZE;
+        let a = p.admit(cap).unwrap();
+        for i in 0..cap {
+            p.append(a, 0, &row_of(i, 0, 0, 2), &row_of(i, 0, 1, 2));
+            p.advance(a);
+        }
+        // Page-aligned share: both donor blocks are referenced, no
+        // tail copy is needed.
+        let b = p.admit_shared(cap, a, cap).unwrap();
+        assert_eq!(p.pages_in_use(), 2);
+        assert_eq!(p.shared_page_count(a), 2);
+        // The sharer rolls back past block 1: only ITS reference drops
+        // — the donor keeps the page and every row in it.
+        p.truncate(b, PAGE_SIZE);
+        assert_eq!(p.pages_in_use(), 2);
+        assert_eq!(p.shared_page_count(a), 1);
+        assert_eq!(p.shared_page_count(b), 1);
+        p.check_page_accounting().unwrap();
+        for r in 0..cap {
+            assert_eq!(p.layer_view(0, a).k_row(r),
+                       row_of(r, 0, 0, 2).as_slice(), "donor row {r}");
+        }
+        // The sharer regrows through its own writes: block 1 remaps to
+        // a fresh page while the donor's copy stays untouched.
+        p.append(b, 0, &[7.0; 2], &[7.0; 2]);
+        p.advance(b);
+        assert_eq!(p.pages_in_use(), 3);
+        assert_eq!(p.layer_view(0, b).k_row(PAGE_SIZE), [7.0; 2]);
+        assert_eq!(p.layer_view(0, a).k_row(PAGE_SIZE),
+                   row_of(PAGE_SIZE, 0, 0, 2).as_slice());
+        p.check_page_accounting().unwrap();
+        // Donor rewinds to zero: its references die, but the sharer's
+        // view of the still-shared block 0 survives verbatim.
+        p.truncate(a, 0);
+        assert_eq!(p.pos(a), 0);
+        assert_eq!(p.pages_in_use(), 2);
+        assert_eq!(p.layer_view(0, b).k_row(0),
+                   row_of(0, 0, 0, 2).as_slice());
+        p.check_page_accounting().unwrap();
+        p.retire(a);
+        p.retire(b);
+        assert_eq!(p.pages_in_use(), 0);
+    }
+
+    /// Random append / truncate / share / retire interleavings: the
+    /// page-accounting invariants must hold after every operation, and
+    /// every live row must read back the exact value written — across
+    /// rollbacks, regrowth, and CoW shares whose donors rewind.
+    #[test]
+    fn truncate_accounting_survives_random_interleavings() {
+        let mut state = 0x2545f4914f6cdd1du64;
+        let mut rand = move |m: usize| -> usize {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            (state >> 33) as usize % m
+        };
+        let mut p = KvCachePool::new(1, 1, 2, 4);
+        // Mirror of expected state: (slot, cap, per-row base value).
+        // Appends never pass cap, so no slot ever wraps and every
+        // mirrored row stays resident.
+        let mut live: Vec<(usize, usize, Vec<f32>)> = Vec::new();
+        let mut next_val = 1.0f32;
+        for step in 0..400 {
+            match rand(5) {
+                0 if !live.is_empty() => {
+                    let i = rand(live.len());
+                    let (s, cap, rows) = &mut live[i];
+                    if rows.len() < *cap {
+                        let val = next_val;
+                        next_val += 1.0;
+                        p.append(*s, 0, &[val; 2], &[val + 0.5; 2]);
+                        p.advance(*s);
+                        rows.push(val);
+                    }
+                }
+                1 if !live.is_empty() => {
+                    let i = rand(live.len());
+                    if !live[i].2.is_empty() {
+                        let new_pos = rand(live[i].2.len() + 1);
+                        let (s, _, rows) = &mut live[i];
+                        p.truncate(*s, new_pos);
+                        rows.truncate(new_pos);
+                    }
+                }
+                2 => {
+                    let cap = 1 + rand(3 * PAGE_SIZE);
+                    if let Some(s) = p.admit(cap) {
+                        live.push((s, cap, Vec::new()));
+                    }
+                }
+                3 if !live.is_empty() => {
+                    let i = rand(live.len());
+                    let (donor, rows) = (live[i].0, live[i].2.clone());
+                    if !rows.is_empty() {
+                        let prefix = 1 + rand(rows.len());
+                        let cap = prefix + rand(2 * PAGE_SIZE);
+                        if let Some(s) = p.admit_shared(cap, donor,
+                                                        prefix) {
+                            live.push((s, cap,
+                                       rows[..prefix].to_vec()));
+                        }
+                    }
+                }
+                _ if !live.is_empty() => {
+                    let i = rand(live.len());
+                    let (s, _, _) = live.swap_remove(i);
+                    p.retire(s);
+                }
+                _ => {}
+            }
+            p.check_page_accounting()
+                .unwrap_or_else(|e| panic!("step {step}: {e}"));
+        }
+        for (s, _, rows) in &live {
+            assert_eq!(p.pos(*s), rows.len(), "slot {s} position");
+            for (r, &val) in rows.iter().enumerate() {
+                assert_eq!(p.layer_view(0, *s).k_row(r), [val; 2],
+                           "slot {s} k row {r}");
+                assert_eq!(p.layer_view(0, *s).v_row(r),
+                           [val + 0.5; 2], "slot {s} v row {r}");
+            }
+        }
+        for (s, _, _) in live {
+            p.retire(s);
+        }
+        assert_eq!(p.pages_in_use(), 0);
+        p.check_page_accounting().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "wrapped its ring")]
+    fn truncate_rejects_wrapped_slots() {
+        let mut p = KvCachePool::new(1, 1, 2, 1);
+        let s = p.admit(2).unwrap();
+        for i in 0..3 {
+            p.append(s, 0, &[i as f32; 2], &[i as f32; 2]);
+            p.advance(s);
+        }
+        p.truncate(s, 1); // pos 3 > cap 2: row 1 was recycled in place
+    }
+
+    #[test]
+    #[should_panic(expected = "is past")]
+    fn truncate_rejects_forward_positions() {
+        let mut p = KvCachePool::new(1, 1, 2, 1);
+        let s = p.admit(4).unwrap();
+        p.append(s, 0, &[0.0; 2], &[0.0; 2]);
+        p.advance(s);
+        p.truncate(s, 3);
     }
 }

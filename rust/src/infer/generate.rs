@@ -38,6 +38,24 @@ pub enum Sampling {
     TopK { k: usize, temperature: f32 },
 }
 
+/// Speculative-decode opt-in: per engine step, a cheaper drafter
+/// variant proposes `k` tokens which the target then scores in ONE
+/// multi-row verify pass (`Executor::verify_chunk`), committing the
+/// longest agreeing prefix plus the bonus token from the last accepted
+/// row. Greedy-only: under argmax acceptance the committed tokens are
+/// bit-identical to target-only decode (verify rows ARE the per-token
+/// decode logits), so speculation changes target-pass count, never
+/// output. Requests opt in via `GenConfig::spec`; the engine also
+/// needs a drafter (`BatchEngine::step_spec` / `run_spec`), otherwise
+/// the request decodes plain.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpecDecode {
+    /// Draft tokens proposed per verify step (≥ 1). Each verify costs
+    /// one multi-row target pass over `k + 1` positions and commits
+    /// between 1 and `k + 1` tokens.
+    pub k: usize,
+}
+
 /// Generation request knobs.
 #[derive(Clone, Debug)]
 pub struct GenConfig {
@@ -53,6 +71,9 @@ pub struct GenConfig {
     /// KV-cache capacity; 0 sizes it to `prompt.len() + max_new`, which
     /// keeps incremental decode exact (no ring eviction).
     pub cap: usize,
+    /// Speculative decoding (greedy-only; rejected with other
+    /// sampling). `None` decodes one token per target pass.
+    pub spec: Option<SpecDecode>,
 }
 
 impl Default for GenConfig {
@@ -63,6 +84,7 @@ impl Default for GenConfig {
             seed: 0,
             stop: Vec::new(),
             cap: 0,
+            spec: None,
         }
     }
 }
@@ -157,6 +179,45 @@ pub struct Generation {
     pub tokens: Vec<i32>,
     pub stats: GenStats,
     pub stopped: StopReason,
+}
+
+/// Cumulative speculative-decode counters for one engine. The accept
+/// rate is `accepted / drafted`; the latency multiplier speculation
+/// buys is `emitted / verify_steps` — tokens committed per multi-row
+/// target pass, versus exactly 1 for plain decode (an identical
+/// drafter makes it `k + 1`; a fully adversarial one, 1).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SpecCounters {
+    /// Draft tokens proposed (k per verify pass).
+    pub drafted: u64,
+    /// Drafts committed by exact greedy agreement with the target.
+    pub accepted: u64,
+    /// Multi-row verify passes run.
+    pub verify_steps: u64,
+    /// Tokens committed by verify rows: accepted drafts plus each
+    /// pass's bonus token from its last consumed row.
+    pub emitted: u64,
+}
+
+impl SpecCounters {
+    /// Tokens committed per target verify pass (the speculative
+    /// speedup measure; 0 when no verify has run).
+    pub fn tokens_per_verify(&self) -> f64 {
+        if self.verify_steps > 0 {
+            self.emitted as f64 / self.verify_steps as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Fraction of drafts the target agreed with (0 when none).
+    pub fn accept_rate(&self) -> f64 {
+        if self.drafted > 0 {
+            self.accepted as f64 / self.drafted as f64
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Pick the next token from a logits row.
@@ -282,6 +343,28 @@ fn common_prefix(prompt: &[i32], d_prompt: &[i32], d_tokens: &[i32],
     n
 }
 
+/// Per-sequence speculative-decode state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum SpecSlot {
+    /// Spec requested but no drafter KV slot yet: engages lazily on
+    /// the first step that has a drafter AND the sequence past its
+    /// prompt (a drafter deployed mid-generation via server swap
+    /// picks existing requests up here).
+    Pending,
+    /// Drafting. `dslot` is this sequence's slot in the engine's
+    /// drafter pool; `dfed` is the number of stream tokens the
+    /// drafter has consumed (its cache position) — at most one behind
+    /// the target between steps, further behind only while a freshly
+    /// engaged drafter replays the committed stream in catch-up
+    /// chunks.
+    On { dslot: usize, dfed: usize },
+    /// Permanently plain: spec never requested, or the ring can no
+    /// longer hold a verify window (`fed + k + 1 > cap`) — the
+    /// eviction regime recycles rows in place, where rollback is
+    /// impossible, so the sequence falls back to one-token decode.
+    Off,
+}
+
 /// One admitted sequence: its slot, sampling state, and timings.
 struct Active<T> {
     tag: T,
@@ -291,6 +374,8 @@ struct Active<T> {
     prompt: Vec<i32>,
     gc: GenConfig,
     rng: Rng,
+    /// Speculative-decode state (`SpecSlot::Off` when not requested).
+    spec: SpecSlot,
     /// Tokens the model has consumed so far (prompt, then fed-back
     /// samples) — always equal to the slot's cache position. While
     /// `fed < prompt.len()` the sequence is prefilling (in chunks);
@@ -375,6 +460,16 @@ impl<T> Active<T> {
 pub struct BatchEngine<T> {
     cfg: ModelConfig,
     pool: KvCachePool,
+    /// KV pool for the drafter variant, created lazily on the first
+    /// speculative step (an engine that never specs allocates
+    /// nothing). Slot-for-slot paired with spec sequences: a
+    /// sequence's `SpecSlot::On { dslot }` lives here with the same
+    /// ring capacity as its target slot, so the drafter pool can
+    /// always mirror every admitted sequence.
+    drafter_pool: Option<KvCachePool>,
+    /// Cumulative speculative-decode counters (drafted / accepted /
+    /// verify passes / tokens emitted by verify rows).
+    spec_counters: SpecCounters,
     pending: VecDeque<Pending<T>>,
     active: Vec<Active<T>>,
     shared_tokens: u64,
@@ -397,6 +492,8 @@ impl<T> BatchEngine<T> {
         BatchEngine {
             cfg: cfg.clone(),
             pool: KvCachePool::for_model(cfg, slots),
+            drafter_pool: None,
+            spec_counters: SpecCounters::default(),
             pending: VecDeque::new(),
             active: Vec::new(),
             shared_tokens: 0,
@@ -447,6 +544,18 @@ impl<T> BatchEngine<T> {
         self.shared_tokens
     }
 
+    /// Cumulative speculative-decode counters (zero if no request ever
+    /// ran a verify pass).
+    pub fn spec_counters(&self) -> SpecCounters {
+        self.spec_counters
+    }
+
+    /// The drafter's paged cache pool, if any speculative step has run
+    /// (read-only: page accounting for stats and tests).
+    pub fn drafter_pool(&self) -> Option<&KvCachePool> {
+        self.drafter_pool.as_ref()
+    }
+
     /// Validate a prompt without submitting it (the server routes a bad
     /// prompt's error to its reply channel instead of poisoning the
     /// shared batch).
@@ -468,6 +577,22 @@ impl<T> BatchEngine<T> {
         -> Result<(), (T, anyhow::Error)> {
         if let Err(e) = self.check(&prompt) {
             return Err((tag, e));
+        }
+        // Speculative decoding is greedy-only: acceptance is exact
+        // because argmax over bit-identical verify rows IS the decode
+        // the target would have run. Sampled (rejection-sampling)
+        // acceptance is a follow-up flag, not silently approximated.
+        if let Some(SpecDecode { k }) = gc.spec {
+            if k == 0 {
+                return Err((tag, anyhow::anyhow!(
+                    "generate: spec.k must be at least 1")));
+            }
+            if gc.sampling != Sampling::Greedy {
+                return Err((tag, anyhow::anyhow!(
+                    "generate: speculative decoding requires greedy \
+                     sampling (exact acceptance); sampled acceptance \
+                     is not implemented")));
+            }
         }
         let rid = self.next_rid;
         self.next_rid += 1;
@@ -499,9 +624,34 @@ impl<T> BatchEngine<T> {
     /// per still-prefilling sequence, batch-decode one token per
     /// decoding sequence, sample, retire. Returns the requests that
     /// finished this step (possibly empty). A no-op returning `[]` when
-    /// idle.
+    /// idle. Requests that opted into speculative decoding run plain
+    /// here (no drafter) — use `step_spec` to supply one.
     pub fn step(&mut self, exec: &dyn Executor, entry: &ModelEntry,
                 model: ModelRef) -> Result<Vec<(T, Generation)>> {
+        self.step_spec(exec, entry, model, None)
+    }
+
+    /// `step` with an optional drafter variant. Sequences that opted
+    /// in (`GenConfig::spec`), are past their prompt, and whose ring
+    /// still fits a verify window run SPECULATIVELY this step: the
+    /// drafter proposes k tokens (one batched drafter decode per
+    /// depth, shared across all spec sequences), the target scores
+    /// the already-sampled next token plus all k drafts in ONE
+    /// multi-row `verify_chunk` pass, the longest agreeing prefix
+    /// (plus the bonus token of the last accepted row) commits
+    /// through the same `consume_row` path as plain decode, and both
+    /// pools roll back to the committed position with `truncate`.
+    /// Everything else — prefilling sequences, non-spec requests,
+    /// spec sequences whose drafter is still catching up or whose
+    /// ring entered the eviction regime — takes the plain path in the
+    /// same step. Greedy acceptance is EXACT: verify rows are pinned
+    /// bit-identical to per-token decode, so committed tokens match
+    /// target-only decode bit for bit (pinned by
+    /// `rust/tests/spec_decode.rs`); with `drafter == None` this is
+    /// `step` verbatim.
+    pub fn step_spec(&mut self, exec: &dyn Executor, entry: &ModelEntry,
+                     target: ModelRef, drafter: Option<ModelRef>)
+                     -> Result<Vec<(T, Generation)>> {
         // Admit pending requests into free slots. Per-request cache
         // capacity mirrors the single-sequence policy: `gc.cap`, or
         // prompt + max_new (exact decode, no ring eviction) when 0.
@@ -579,6 +729,11 @@ impl<T> BatchEngine<T> {
             self.shared_tokens += shared as u64;
             let prompt_len = p.prompt.len();
             let rng = Rng::new(p.gc.seed);
+            let spec = if p.gc.spec.is_some() {
+                SpecSlot::Pending
+            } else {
+                SpecSlot::Off
+            };
             self.active.push(Active {
                 tag: p.tag,
                 rid: p.rid,
@@ -586,6 +741,7 @@ impl<T> BatchEngine<T> {
                 prompt: p.prompt,
                 gc: p.gc,
                 rng,
+                spec,
                 fed: shared,
                 tokens: Vec::new(),
                 t_submit: p.t_submit,
@@ -611,6 +767,93 @@ impl<T> BatchEngine<T> {
         }
         self.steps += 1;
 
+        // Speculative phase setup: decide, per opted-in sequence, what
+        // this step does — engage a drafter slot, catch the drafter up
+        // one chunk, fall back to plain decode for good, or draft+verify
+        // now. `spec_mask[i]` marks active sequences taken OUT of the
+        // plain decode batch below.
+        let mut spec_mask = vec![false; self.active.len()];
+        let mut spec_now: Vec<usize> = Vec::new();
+        if let Some(dm) = drafter {
+            for i in 0..self.active.len() {
+                let Some(SpecDecode { k }) = self.active[i].gc.spec
+                else {
+                    continue;
+                };
+                if self.active[i].spec == SpecSlot::Off
+                    || self.active[i].fed + 1 < self.active[i].prompt.len()
+                {
+                    continue; // disabled, or still prefilling
+                }
+                let slot = self.active[i].slot;
+                let cap = self.pool.capacity(slot);
+                if self.active[i].fed + k + 1 > cap {
+                    // The verify window would wrap the ring, where
+                    // rollback is impossible (`KvCachePool::truncate`
+                    // refuses); `fed` only grows, so this is permanent
+                    // — the sequence decodes plain from here on.
+                    if let SpecSlot::On { dslot, .. } =
+                        self.active[i].spec
+                    {
+                        self.drafter_pool
+                            .as_mut()
+                            .expect("On implies drafter pool")
+                            .retire(dslot);
+                    }
+                    self.active[i].spec = SpecSlot::Off;
+                    continue;
+                }
+                if self.active[i].spec == SpecSlot::Pending {
+                    // First eligible step with a drafter present:
+                    // mirror the sequence into the drafter pool. The
+                    // pool has one slot per target slot and `On`
+                    // states map 1:1, so admission cannot fail.
+                    let cfg = &self.cfg;
+                    let slots = self.pool.max_slots();
+                    let dpool = self.drafter_pool.get_or_insert_with(
+                        || KvCachePool::for_model(cfg, slots));
+                    let dslot = dpool
+                        .admit(cap)
+                        .expect("drafter pool mirrors target slots");
+                    self.active[i].spec =
+                        SpecSlot::On { dslot, dfed: 0 };
+                }
+                let SpecSlot::On { dslot, dfed } = self.active[i].spec
+                else {
+                    unreachable!("engaged above")
+                };
+                let fed = self.active[i].fed;
+                if dfed + 1 < fed {
+                    // Catch-up: a freshly engaged drafter replays the
+                    // committed stream in aligned chunks, one per step
+                    // (the same pacing as prompt prefill), while the
+                    // sequence keeps decoding plain. The gap shrinks
+                    // by a chunk minus one token per step, so drafting
+                    // starts after a handful of steps even against
+                    // long prompts.
+                    let n = chunk_len(dfed, fed - dfed, cap);
+                    let a = &self.active[i];
+                    let toks: Vec<i32> = (dfed..dfed + n)
+                        .map(|p| stream_token(&a.prompt, &a.tokens, p))
+                        .collect();
+                    let dpool = self
+                        .drafter_pool
+                        .as_mut()
+                        .expect("On implies drafter pool");
+                    dm.prefill_chunk(exec, entry, dpool, dslot,
+                                     &toks)?;
+                    if let SpecSlot::On { dfed, .. } =
+                        &mut self.active[i].spec
+                    {
+                        *dfed += n;
+                    }
+                    continue;
+                }
+                spec_mask[i] = true;
+                spec_now.push(i);
+            }
+        }
+
         // Split the step's work BEFORE anything mutates: multi-token
         // prompt windows get a dedicated prefill chunk; everything else
         // — decoders AND any sequence with exactly ONE prompt token
@@ -628,7 +871,9 @@ impl<T> BatchEngine<T> {
             .active
             .iter()
             .enumerate()
-            .filter(|(_, a)| a.fed + 1 >= a.prompt.len())
+            .filter(|(i, a)| {
+                a.fed + 1 >= a.prompt.len() && !spec_mask[*i]
+            })
             .map(|(i, _)| i)
             .collect();
         // (active index, prompt offset, chunk length); `a.fed` is the
@@ -658,7 +903,7 @@ impl<T> BatchEngine<T> {
         for (i, from, n) in prefills {
             let slot = self.active[i].slot;
             let t0 = Instant::now();
-            let logits = model.prefill_chunk(
+            let logits = target.prefill_chunk(
                 exec, entry, &mut self.pool, slot,
                 &self.active[i].prompt[from..from + n])?;
             let a = &mut self.active[i];
@@ -693,8 +938,8 @@ impl<T> BatchEngine<T> {
                     (a.slot, stream_token(&a.prompt, &a.tokens, a.fed))
                 })
                 .collect();
-            let logits =
-                model.decode_batch(exec, entry, &mut self.pool, &batch)?;
+            let logits = target.decode_batch(exec, entry,
+                                             &mut self.pool, &batch)?;
             let v = self.cfg.vocab;
             for (ri, &i) in decoding.iter().enumerate() {
                 let a = &mut self.active[i];
@@ -720,6 +965,147 @@ impl<T> BatchEngine<T> {
                 });
             }
         }
+
+        // Speculative draft loop: one batched DRAFTER decode per draft
+        // depth, shared across every spec sequence (the drafter-side
+        // mirror of continuous batching — a cheap variant's weight
+        // stream amortizes over all drafting sequences). Each sequence
+        // first burns its ≤1-token lag on committed stream tokens,
+        // then feeds back its own argmax samples until it holds k
+        // drafts: after consuming token index p, the drafter's argmax
+        // is its guess for stream position p + 1, which is a draft
+        // only once p >= fed (positions up to `fed` are already
+        // committed — the target sampled stream[fed] last step).
+        let mut drafts: Vec<Vec<i32>> = vec![Vec::new(); spec_now.len()];
+        if let Some(dm) = drafter {
+            loop {
+                // (spec_now index, (drafter slot, token to feed))
+                let mut feeds: Vec<(usize, (usize, i32))> = Vec::new();
+                for (si, &i) in spec_now.iter().enumerate() {
+                    let a = &self.active[i];
+                    let SpecDecode { k } =
+                        a.gc.spec.expect("spec sequence");
+                    let SpecSlot::On { dslot, dfed } = a.spec else {
+                        unreachable!("spec_now holds engaged slots")
+                    };
+                    if dfed >= a.fed + k {
+                        continue; // k drafts ready
+                    }
+                    let tok = if dfed <= a.fed {
+                        stream_token(&a.prompt, &a.tokens, dfed)
+                    } else {
+                        drafts[si][dfed - a.fed - 1]
+                    };
+                    feeds.push((si, (dslot, tok)));
+                }
+                if feeds.is_empty() {
+                    break;
+                }
+                let batch: Vec<(usize, i32)> =
+                    feeds.iter().map(|&(_, p)| p).collect();
+                let dpool = self
+                    .drafter_pool
+                    .as_mut()
+                    .expect("spec sequences imply drafter pool");
+                let logits =
+                    dm.decode_batch(exec, entry, dpool, &batch)?;
+                let v = self.cfg.vocab;
+                for (ri, &(si, _)) in feeds.iter().enumerate() {
+                    let a = &mut self.active[spec_now[si]];
+                    let fed = a.fed;
+                    let SpecSlot::On { dfed, .. } = &mut a.spec else {
+                        unreachable!("spec_now holds engaged slots")
+                    };
+                    *dfed += 1;
+                    if *dfed > fed {
+                        drafts[si].push(argmax(
+                            &logits.data()[ri * v..(ri + 1) * v]));
+                    }
+                }
+            }
+        }
+
+        // Verify + exact greedy acceptance, one multi-row TARGET pass
+        // per spec sequence: score the already-sampled next token plus
+        // all k drafts in a single `verify_chunk` (rows bit-identical
+        // to per-token decode), then commit rows through `consume_row`
+        // — the SAME body plain decode uses, so stop/TTFT/max_new
+        // semantics cannot drift — as long as each committed token
+        // agrees with the draft that fed the next row. Both pools then
+        // roll back to the committed boundary.
+        let mut spec_events: Vec<Ev> = Vec::new();
+        for (si, &i) in spec_now.iter().enumerate() {
+            let k = drafts[si].len();
+            let f = self.active[i].fed;
+            let slot = self.active[i].slot;
+            let rid = self.active[i].rid;
+            let mut window = Vec::with_capacity(k + 1);
+            {
+                let a = &self.active[i];
+                window.push(stream_token(&a.prompt, &a.tokens, f));
+                window.extend_from_slice(&drafts[si]);
+            }
+            let logits = target.verify_chunk(
+                exec, entry, &mut self.pool, slot, &window)?;
+            let a = &mut self.active[i];
+            let t0 = a.tokens.len();
+            let mut c = 0usize; // verify rows consumed
+            for r in 0..=k {
+                // Row r is the logits after consuming window[r]; its
+                // argmax commits stream position f + r + 1. Row 0 can
+                // be the last prompt token (TTFT stamps here, exactly
+                // like the decode-batch rider path).
+                a.consume_row(logits.row(r),
+                              f + r + 1 == a.prompt.len());
+                c += 1;
+                if a.finished.is_some() {
+                    break; // stop token / max_new: rest is past the end
+                }
+                if r < k && a.tokens[t0 + r] != drafts[si][r] {
+                    break; // divergence: rows past r fed a wrong token
+                }
+            }
+            // Commit: the target keeps the c consumed positions and
+            // discards the speculative tail; the drafter rewinds to
+            // the committed boundary (capped at f + k — on full
+            // acceptance it is exactly one token behind the target,
+            // which the next draft loop's first feed repays).
+            self.pool.truncate(slot, f + c);
+            let committed = self.active[i].tokens.len() - t0;
+            let accepted = (0..k.min(committed))
+                .filter(|&j| {
+                    self.active[i].tokens[t0 + j] == drafts[si][j]
+                })
+                .count();
+            self.active[i].fed = f + c;
+            let dkeep = (f + c).min(f + k);
+            let SpecSlot::On { dslot, .. } = self.active[i].spec else {
+                unreachable!("spec_now holds engaged slots")
+            };
+            self.drafter_pool
+                .as_mut()
+                .expect("spec sequences imply drafter pool")
+                .truncate(dslot, dkeep);
+            if let SpecSlot::On { dfed, .. } = &mut self.active[i].spec
+            {
+                *dfed = dkeep;
+            }
+            self.spec_counters.drafted += k as u64;
+            self.spec_counters.accepted += accepted as u64;
+            self.spec_counters.verify_steps += 1;
+            self.spec_counters.emitted += committed as u64;
+            spec_events.push(Ev::Draft { rid, slot, k });
+            spec_events.push(Ev::Verify {
+                rid,
+                slot,
+                drafted: k,
+                accepted,
+            });
+        }
+        for ev in spec_events {
+            self.trace(step_no, ev);
+        }
+
         let cow = self.pool.cow_splits() - cow0;
         if cow > 0 {
             self.trace(step_no, Ev::CowSplit { n: cow });
@@ -736,6 +1122,12 @@ impl<T> BatchEngine<T> {
                 None => keep.push(a),
                 Some(stopped) => {
                     self.pool.retire(a.slot);
+                    if let SpecSlot::On { dslot, .. } = a.spec {
+                        self.drafter_pool
+                            .as_mut()
+                            .expect("On implies drafter pool")
+                            .retire(dslot);
+                    }
                     self.trace(step_no, Ev::Retire {
                         rid: a.rid,
                         slot: a.slot,
@@ -770,6 +1162,12 @@ impl<T> BatchEngine<T> {
             self.pending.drain(..).map(|p| p.tag).collect();
         for a in self.active.drain(..) {
             self.pool.retire(a.slot);
+            if let SpecSlot::On { dslot, .. } = a.spec {
+                self.drafter_pool
+                    .as_mut()
+                    .expect("On implies drafter pool")
+                    .retire(dslot);
+            }
             tags.push(a.tag);
         }
         tags
@@ -781,6 +1179,18 @@ impl<T> BatchEngine<T> {
         let mut out = Vec::new();
         while !self.is_idle() {
             out.extend(self.step(exec, entry, model)?);
+        }
+        Ok(out)
+    }
+
+    /// `run` in speculative mode: step with a drafter until every
+    /// submitted request has finished.
+    pub fn run_spec(&mut self, exec: &dyn Executor, entry: &ModelEntry,
+                    target: ModelRef, drafter: Option<ModelRef>)
+                    -> Result<Vec<(T, Generation)>> {
+        let mut out = Vec::new();
+        while !self.is_idle() {
+            out.extend(self.step_spec(exec, entry, target, drafter)?);
         }
         Ok(out)
     }
@@ -802,6 +1212,29 @@ pub fn generate_batch(exec: &dyn Executor, entry: &ModelEntry,
             .map_err(|(_, e)| e)?;
     }
     let mut done = engine.run(exec, entry, model)?;
+    debug_assert_eq!(done.len(), reqs.len());
+    done.sort_unstable_by_key(|(i, _)| *i);
+    Ok(done.into_iter().map(|(_, g)| g).collect())
+}
+
+/// `generate_batch` with a drafter variant: requests whose `GenConfig`
+/// opts into speculative decoding draft through `drafter` and verify
+/// through `target`; the rest decode plain in the same engine. Greedy
+/// outputs are bit-identical to `generate_batch` with `target` alone —
+/// the drafter changes how many target passes the tokens cost, never
+/// the tokens (pinned by `rust/tests/spec_decode.rs`).
+pub fn generate_batch_spec(exec: &dyn Executor, entry: &ModelEntry,
+                           target: ModelRef, drafter: ModelRef,
+                           reqs: &[(Vec<i32>, GenConfig)], slots: usize)
+                           -> Result<Vec<Generation>> {
+    let mut engine: BatchEngine<usize> =
+        BatchEngine::new(&entry.config, slots.max(1));
+    for (i, (prompt, gc)) in reqs.iter().enumerate() {
+        engine
+            .submit(i, prompt.clone(), gc.clone())
+            .map_err(|(_, e)| e)?;
+    }
+    let mut done = engine.run_spec(exec, entry, target, Some(drafter))?;
     debug_assert_eq!(done.len(), reqs.len());
     done.sort_unstable_by_key(|(i, _)| *i);
     Ok(done.into_iter().map(|(_, g)| g).collect())
@@ -888,6 +1321,48 @@ mod tests {
             pos += n;
             rem -= n;
         }
+    }
+
+    #[test]
+    fn submit_gates_spec_requests() {
+        let cfg = ModelConfig::test_config();
+        let mut e: BatchEngine<usize> = BatchEngine::new(&cfg, 1);
+        // Sampled acceptance is not implemented: spec + TopK rejects.
+        let gc = GenConfig {
+            sampling: Sampling::TopK { k: 4, temperature: 1.0 },
+            spec: Some(SpecDecode { k: 4 }),
+            ..GenConfig::default()
+        };
+        assert!(e.submit(0, vec![1, 2], gc).is_err());
+        // A zero-token draft window is meaningless.
+        let gc = GenConfig {
+            spec: Some(SpecDecode { k: 0 }),
+            ..GenConfig::default()
+        };
+        assert!(e.submit(1, vec![1, 2], gc).is_err());
+        // Greedy spec is accepted (Greedy is the default sampling).
+        let gc = GenConfig {
+            spec: Some(SpecDecode { k: 4 }),
+            ..GenConfig::default()
+        };
+        assert!(e.submit(2, vec![1, 2], gc).is_ok());
+        assert_eq!(e.in_flight(), 1);
+        assert_eq!(e.spec_counters(), SpecCounters::default());
+        assert!(e.drafter_pool().is_none(), "allocated lazily");
+    }
+
+    #[test]
+    fn spec_counter_ratios() {
+        let c = SpecCounters {
+            drafted: 8,
+            accepted: 6,
+            verify_steps: 2,
+            emitted: 8,
+        };
+        assert!((c.tokens_per_verify() - 4.0).abs() < 1e-12);
+        assert!((c.accept_rate() - 0.75).abs() < 1e-12);
+        assert_eq!(SpecCounters::default().tokens_per_verify(), 0.0);
+        assert_eq!(SpecCounters::default().accept_rate(), 0.0);
     }
 
     #[test]

@@ -21,8 +21,9 @@ use crate::runtime::ModelEntry;
 use crate::tensor::Tensor;
 
 pub use cache::{KvCache, KvCachePool, LayerKv, PAGE_SIZE};
-pub use generate::{generate, generate_batch, BatchEngine, GenConfig,
-                   GenStats, Generation, Sampling, StopReason,
+pub use generate::{generate, generate_batch, generate_batch_spec,
+                   BatchEngine, GenConfig, GenStats, Generation,
+                   Sampling, SpecCounters, SpecDecode, StopReason,
                    PREFILL_CHUNK};
 pub use native::NativeEngine;
 pub use qmat::{fused_gemm_small, fused_matmul, fused_vecmat,
@@ -186,6 +187,47 @@ pub trait Executor {
         anyhow::bail!("{}: packed chunked prefill not supported",
                       self.platform())
     }
+
+    /// Speculative verify: score a window of candidate tokens for ONE
+    /// slot in a single multi-row pass and return all
+    /// `[tokens.len(), vocab]` logit rows. This IS `prefill_chunk` —
+    /// whose rows are already pinned bit-identical to per-token decode
+    /// — so row `i` is exactly the logits greedy decode would produce
+    /// after committing `tokens[..=i]`; greedy acceptance against
+    /// these rows is therefore exact, not approximate. The K/V rows
+    /// the pass appends are provisional: the caller inspects the
+    /// rows, accepts the longest agreeing prefix, and rolls the slot
+    /// back with `KvCachePool::truncate`. Truncate only operates on
+    /// an unwrapped ring, so the window must fit inside it — enforced
+    /// here (the one contract difference from `prefill_chunk`, which
+    /// happily evicts) so rollback is always sound. Spec-mode
+    /// schedulers gate eligibility on the same bound.
+    fn verify_chunk(&self, entry: &ModelEntry, pool: &mut KvCachePool,
+                    slot: usize, tokens: &[i32], weights: &Weights)
+                    -> Result<Tensor> {
+        let (pos, cap) = (pool.pos(slot), pool.capacity(slot));
+        anyhow::ensure!(pos + tokens.len() <= cap,
+                        "verify_chunk: {}-token window at position \
+                         {pos} overruns slot {slot}'s ring (cap {cap}) \
+                         — rollback would cross a wrap",
+                        tokens.len());
+        self.prefill_chunk(entry, pool, slot, tokens, weights)
+    }
+
+    /// `verify_chunk` over packed 2/4-bit codes (the fused dequant-GEMM
+    /// `prefill_chunk_packed` path, same no-wrap guard).
+    fn verify_chunk_packed(&self, entry: &ModelEntry,
+                           pool: &mut KvCachePool, slot: usize,
+                           tokens: &[i32], model: &QuantizedModel)
+                           -> Result<Tensor> {
+        let (pos, cap) = (pool.pos(slot), pool.capacity(slot));
+        anyhow::ensure!(pos + tokens.len() <= cap,
+                        "verify_chunk: {}-token window at position \
+                         {pos} overruns slot {slot}'s ring (cap {cap}) \
+                         — rollback would cross a wrap",
+                        tokens.len());
+        self.prefill_chunk_packed(entry, pool, slot, tokens, model)
+    }
 }
 
 /// A borrowed deployable weight variant: the generation loop and the
@@ -236,6 +278,22 @@ impl ModelRef<'_> {
             }
             ModelRef::Packed(qm) => {
                 exec.prefill_chunk_packed(entry, pool, slot, tokens, qm)
+            }
+        }
+    }
+
+    /// Speculative multi-row verify of the same variant (see
+    /// `Executor::verify_chunk`): all `tokens.len()` logit rows in one
+    /// pass, provisional K/V the caller rolls back with `truncate`.
+    pub fn verify_chunk(&self, exec: &dyn Executor, entry: &ModelEntry,
+                        pool: &mut KvCachePool, slot: usize,
+                        tokens: &[i32]) -> Result<Tensor> {
+        match self {
+            ModelRef::Dense(w) => {
+                exec.verify_chunk(entry, pool, slot, tokens, w)
+            }
+            ModelRef::Packed(qm) => {
+                exec.verify_chunk_packed(entry, pool, slot, tokens, qm)
             }
         }
     }

@@ -1225,6 +1225,70 @@ mod tests {
     }
 
     #[test]
+    fn verify_chunk_rows_match_decode_and_roll_back_exactly() {
+        // The speculative verify contract end to end: all window rows
+        // bit-identical to per-token decode, then a partial-acceptance
+        // rollback (`truncate`) after which the sequence decodes on
+        // exactly as if the rejected tail had never been appended.
+        let entry = tiny_entry();
+        let cfg = entry.config.clone();
+        let mut rng = Rng::new(71);
+        let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        let e = NativeEngine::with_workers(1);
+        let tokens: Vec<i32> = (0..cfg.seq + 4)
+            .map(|_| rng.below(cfg.vocab) as i32)
+            .collect();
+        let cap = tokens.len() + 2;
+        let split = 3; // committed prefix before the verify window
+        let kwin = 5; // verify window width (next token + 4 "drafts")
+        let accept = 2; // rows kept; the other 3 roll back
+        let mut ref_pool = KvCachePool::for_model(&cfg, 1);
+        let rs = ref_pool.admit(cap).unwrap();
+        let mut ref_rows = Vec::new();
+        for &t in &tokens {
+            let l = e
+                .decode_batch(&entry, &mut ref_pool, &[(rs, t)], &w)
+                .unwrap();
+            ref_rows.push(l.into_data());
+        }
+        let mut pool = KvCachePool::for_model(&cfg, 1);
+        let s = pool.admit(cap).unwrap();
+        for &t in &tokens[..split] {
+            e.decode_batch(&entry, &mut pool, &[(s, t)], &w).unwrap();
+        }
+        let win = e
+            .verify_chunk(&entry, &mut pool, s,
+                          &tokens[split..split + kwin], &w)
+            .unwrap();
+        assert_eq!(win.dims(), &[kwin, cfg.vocab]);
+        for i in 0..kwin {
+            assert_eq!(win.row(i), ref_rows[split + i].as_slice(),
+                       "verify row {i} diverged from per-token decode");
+        }
+        // Partial acceptance: keep `accept` rows, rewind the rest.
+        pool.truncate(s, split + accept);
+        assert_eq!(pool.pos(s), split + accept);
+        pool.check_page_accounting().unwrap();
+        // Decoding on from the rollback point reproduces the reference
+        // stream bit for bit — the speculative tail left no residue.
+        for (i, &t) in tokens.iter().enumerate().skip(split + accept) {
+            let l = e
+                .decode_batch(&entry, &mut pool, &[(s, t)], &w)
+                .unwrap();
+            assert_eq!(l.data(), ref_rows[i].as_slice(),
+                       "post-rollback decode step {i} diverged");
+        }
+        pool.check_page_accounting().unwrap();
+        // The no-wrap guard: a window that would overrun the ring is
+        // rejected BEFORE any mutation (rollback would be unsound).
+        let mut small = KvCachePool::for_model(&cfg, 1);
+        let ss = small.admit(kwin - 1).unwrap();
+        assert!(e.verify_chunk(&entry, &mut small, ss,
+                               &tokens[..kwin], &w).is_err());
+        assert_eq!(small.pos(ss), 0, "rejected verify must not mutate");
+    }
+
+    #[test]
     fn prefill_chunk_validates_before_mutating() {
         let entry = tiny_entry();
         let cfg = entry.config.clone();

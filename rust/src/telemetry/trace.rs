@@ -52,6 +52,16 @@ pub enum Ev {
     Recycle { rows: usize },
     /// Request `rid` retired from `slot` after emitting `gen_tokens`.
     Retire { rid: u64, slot: usize, gen_tokens: usize },
+    /// The drafter proposed `k` speculative tokens for `rid` this
+    /// step (one batched drafter pass per draft depth, shared across
+    /// spec requests; `slot` is the request's TARGET slot).
+    Draft { rid: u64, slot: usize, k: usize },
+    /// One multi-row target verify pass for `rid`: `drafted`
+    /// proposals scored, `accepted` committed by exact greedy
+    /// agreement (the pass also commits one bonus token from its last
+    /// consumed row, so tokens emitted ≥ accepted + 1 except when a
+    /// stop condition cut the window short).
+    Verify { rid: u64, slot: usize, drafted: usize, accepted: usize },
 }
 
 impl Ev {
@@ -61,7 +71,9 @@ impl Ev {
             Ev::Admit { rid, .. }
             | Ev::Defer { rid, .. }
             | Ev::PrefillChunk { rid, .. }
-            | Ev::Retire { rid, .. } => Some(rid),
+            | Ev::Retire { rid, .. }
+            | Ev::Draft { rid, .. }
+            | Ev::Verify { rid, .. } => Some(rid),
             Ev::Decode { .. } | Ev::CowSplit { .. }
             | Ev::Recycle { .. } => None,
         }
@@ -227,5 +239,31 @@ mod tests {
         assert!(matches!(tl[2].ev, Ev::Retire { rid: 0, .. }));
         let tl7 = t.timeline(7);
         assert_eq!(tl7.len(), 2); // its admit + its decode
+    }
+
+    #[test]
+    fn spec_events_carry_rid_and_join_timelines() {
+        let mut t = StepTracer::new(16);
+        t.push(TraceEvent {
+            step: 0,
+            ev: Ev::Admit { rid: 3, slot: 0, prompt: 2, shared: 0 },
+        });
+        t.push(TraceEvent {
+            step: 1,
+            ev: Ev::Draft { rid: 3, slot: 0, k: 4 },
+        });
+        t.push(TraceEvent {
+            step: 1,
+            ev: Ev::Verify { rid: 3, slot: 0, drafted: 4, accepted: 2 },
+        });
+        assert_eq!((Ev::Draft { rid: 3, slot: 0, k: 4 }).rid(), Some(3));
+        assert_eq!(
+            (Ev::Verify { rid: 3, slot: 0, drafted: 4, accepted: 2 })
+                .rid(),
+            Some(3));
+        let tl = t.timeline(3);
+        assert_eq!(tl.len(), 3);
+        assert!(matches!(tl[1].ev, Ev::Draft { k: 4, .. }));
+        assert!(matches!(tl[2].ev, Ev::Verify { accepted: 2, .. }));
     }
 }

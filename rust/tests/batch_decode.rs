@@ -261,6 +261,7 @@ fn generate_batch_matches_sequential_generate() {
                     stop: if i == 2 { vec![1] } else { Vec::new() },
                     // One request decodes in the evicted regime.
                     cap: if i == 3 { 2 } else { 0 },
+                    spec: None,
                 };
                 (prompt, gc)
             })

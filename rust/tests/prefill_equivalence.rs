@@ -310,6 +310,7 @@ fn mixed_prefill_decode_engine_matches_solo() {
                 // Request 3 decodes (and prefills) in the evicted
                 // regime: its ring is smaller than prompt + max_new.
                 cap: if i == 3 { 3 } else { 0 },
+                spec: None,
             };
             reqs.push((prompt, gc));
         }

@@ -1,0 +1,435 @@
+//! Speculative-decoding acceptance: self-speculation from the
+//! quantized zoo must be a pure TARGET-PASS optimization — under
+//! greedy acceptance the committed tokens are bit-identical to
+//! target-only decode, whatever the drafter proposes. Pinned here:
+//!
+//! * `generate_batch_spec` == `generate_batch` token-for-token over
+//!   random ragged-GQA shapes, dense and packed targets, a 2-bit
+//!   drafter of the same weights, K ∈ {1,2,4,8}, mixed spec /
+//!   non-spec requests, stop tokens and an eviction-regime cap.
+//! * An identical drafter (drafter == target) accepts every draft:
+//!   K + 1 tokens per verify pass, so the whole generation finishes
+//!   in far fewer target passes than it has tokens.
+//! * An adversarial drafter (negated unembedding — its argmax is the
+//!   target's argmin) accepts nothing, commits exactly one token per
+//!   verify pass, and still leaves the output bit-identical.
+//! * Sequences whose ring cannot hold a verify window (eviction
+//!   regime) fall back to plain decode — permanently, exactly.
+//! * `SpecCounters` and the `Ev::Draft`/`Ev::Verify` trace agree
+//!   with hand counts of the same run.
+
+use nsds::infer::{generate, generate_batch, generate_batch_spec,
+                  BatchEngine, GenConfig, ModelRef, NativeEngine,
+                  QuantizedModel, Sampling, SpecDecode};
+use nsds::model::{ModelConfig, Weights};
+use nsds::prop_ensure;
+use nsds::quant::Backend;
+use nsds::runtime::ModelEntry;
+use nsds::telemetry::Ev;
+use nsds::util::prop::check;
+use nsds::util::rng::Rng;
+
+/// Random tiny model shape (same generator family as
+/// `batch_decode.rs`): head counts drawn independently to cover MHA,
+/// grouped and ragged GQA; K dims stay multiples of 4 so the same
+/// shapes quantize to packed 2/4-bit.
+fn random_config(rng: &mut Rng) -> ModelConfig {
+    let n_heads = 1 + rng.below(6);
+    let n_kv = 1 + rng.below(n_heads);
+    ModelConfig {
+        name: "spec-prop".into(),
+        vocab: 16 + rng.below(32),
+        d_model: 8 + 4 * rng.below(5),
+        n_heads,
+        n_kv,
+        d_head: 4 * (1 + rng.below(2)),
+        d_ffn: 8 * (1 + rng.below(4)),
+        n_layers: 1 + rng.below(3),
+        seq: 4 + rng.below(9),
+    }
+}
+
+fn random_tokens(rng: &mut Rng, n: usize, vocab: usize) -> Vec<i32> {
+    (0..n).map(|_| rng.below(vocab) as i32).collect()
+}
+
+/// The drafter that can never agree: same weights with the
+/// unembedding negated, so its argmax is the target's argmin — a
+/// guaranteed-divergent proposal stream (random float logits never
+/// tie argmax against argmin).
+fn adversarial(w: &Weights) -> Weights {
+    let mut aw = w.clone();
+    let t = aw
+        .tensors
+        .get_mut("unembed")
+        .expect("model has an unembedding");
+    for v in t.data_mut() {
+        *v = -*v;
+    }
+    aw
+}
+
+/// Bit-identity under speculation, as a property over random shapes:
+/// the SAME requests through `generate_batch` (target only) and
+/// `generate_batch_spec` (2-bit drafter of the same weights) must
+/// produce identical tokens and stop reasons — across K ∈ {1,2,4,8},
+/// spec and non-spec requests co-batched, a stop token, and one
+/// eviction-regime cap that forces the spec fallback.
+#[test]
+fn spec_decode_is_bit_identical_to_target_only_greedy() {
+    check("spec == target-only greedy", 6, |rng| {
+        let cfg = random_config(rng);
+        let entry = ModelEntry::synthetic(cfg.clone());
+        let w = Weights::synth(&cfg, rng, &[], &[]);
+        let q2 = QuantizedModel::quantize(&cfg, &w,
+                                          &vec![2u8; cfg.n_layers], 8,
+                                          Backend::Rtn, None, 1);
+        let q4 = QuantizedModel::quantize(&cfg, &w,
+                                          &vec![4u8; cfg.n_layers], 8,
+                                          Backend::Rtn, None, 1);
+        let drafter = ModelRef::Packed(&q2);
+        let target = if rng.f64() < 0.5 {
+            ModelRef::Dense(&w)
+        } else {
+            ModelRef::Packed(&q4)
+        };
+        let ks = [1usize, 2, 4, 8];
+        let reqs: Vec<(Vec<i32>, GenConfig)> = (0..6)
+            .map(|i| {
+                let plen = 1 + rng.below(cfg.seq);
+                let prompt = random_tokens(rng, plen, cfg.vocab);
+                let gc = GenConfig {
+                    max_new: 3 + rng.below(8),
+                    sampling: Sampling::Greedy,
+                    seed: 0,
+                    stop: if i == 1 { vec![2] } else { Vec::new() },
+                    // One request's ring is too small for any verify
+                    // window: it must fall back to plain decode and
+                    // STILL match the target-only run (which evicts
+                    // identically).
+                    cap: if i == 4 { 3 } else { 0 },
+                    // Two requests decode plain alongside the
+                    // speculating ones.
+                    spec: if i % 3 == 2 {
+                        None
+                    } else {
+                        Some(SpecDecode { k: ks[i % ks.len()] })
+                    },
+                };
+                (prompt, gc)
+            })
+            .collect();
+        let exec = NativeEngine::with_workers(1 + rng.below(3));
+        let plain = generate_batch(&exec, &entry, target, &reqs, 3)
+            .map_err(|e| e.to_string())?;
+        let spec = generate_batch_spec(&exec, &entry, target, drafter,
+                                       &reqs, 3)
+            .map_err(|e| e.to_string())?;
+        prop_ensure!(plain.len() == spec.len(), "result count");
+        for (i, (p, s)) in plain.iter().zip(&spec).enumerate() {
+            prop_ensure!(p.tokens == s.tokens,
+                         "request {i}: speculation changed tokens \
+                          ({:?} vs {:?}; k={:?}, nh={} nkv={} L={})",
+                         p.tokens, s.tokens, reqs[i].1.spec,
+                         cfg.n_heads, cfg.n_kv, cfg.n_layers);
+            prop_ensure!(p.stopped == s.stopped,
+                         "request {i}: stop reason drifted");
+        }
+        Ok(())
+    });
+}
+
+/// The acceptance ceiling: with drafter == target every draft agrees,
+/// so each verify pass commits exactly k + 1 tokens — including the
+/// very first pass, whose row 0 samples the 1-token prompt's first
+/// output. With `max_new = n·(k+1)` the whole run is exactly n
+/// verify passes and nothing else: the counters come out in closed
+/// form, and the engine takes max_new/(k+1) target passes for
+/// max_new tokens (the tokens-per-target-step > 1 claim).
+#[test]
+fn identical_drafter_accepts_k_plus_one_per_verify() {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(90);
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let exec = NativeEngine::with_workers(1);
+    let model = ModelRef::Dense(&w);
+    let (k, n) = (4usize, 3u64);
+    let gc = GenConfig {
+        max_new: n as usize * (k + 1),
+        spec: Some(SpecDecode { k }),
+        ..GenConfig::default()
+    };
+    let prompt = vec![3i32];
+    let direct =
+        generate(&exec, &entry, model, &prompt, &gc).unwrap();
+
+    let mut e: BatchEngine<usize> = BatchEngine::new(&cfg, 1);
+    e.submit(0, prompt, gc.clone()).unwrap();
+    // Drafter == target: self-speculation's upper bound.
+    let done = e.run_spec(&exec, &entry, model, Some(model)).unwrap();
+    assert_eq!(done.len(), 1);
+    assert_eq!(done[0].1.tokens, direct.tokens,
+               "full acceptance still must not change tokens");
+
+    let sc = e.spec_counters();
+    assert_eq!(sc.verify_steps, n);
+    assert_eq!(sc.drafted, n * k as u64);
+    assert_eq!(sc.accepted, n * k as u64,
+               "an identical drafter must accept every draft");
+    assert_eq!(sc.emitted, n * (k as u64 + 1));
+    assert_eq!(sc.accept_rate(), 1.0);
+    assert_eq!(sc.tokens_per_verify(), (k + 1) as f64);
+    // n engine steps — one target pass each — for n·(k+1) tokens:
+    // > 1 token per target pass, by exactly the k + 1 ceiling.
+    assert_eq!(e.steps(), n);
+    assert!(e.steps() < gc.max_new as u64);
+    // Both pools drained their pages.
+    assert_eq!(e.pool().pages_in_use(), 0);
+    let dp = e.drafter_pool().expect("speculation engaged");
+    dp.check_page_accounting().unwrap();
+    assert_eq!(dp.pages_in_use(), 0);
+}
+
+/// The rejection floor: a drafter whose argmax is the target's argmin
+/// never agrees — every verify pass commits exactly its one bonus
+/// token (spec degrades to plain-decode pacing) and the output stays
+/// bit-identical to target-only decode.
+#[test]
+fn adversarial_drafter_accepts_nothing_and_stays_exact() {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(91);
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let aw = adversarial(&w);
+    let exec = NativeEngine::with_workers(1);
+    let model = ModelRef::Dense(&w);
+    let gc = GenConfig {
+        max_new: 9,
+        spec: Some(SpecDecode { k: 3 }),
+        ..GenConfig::default()
+    };
+    let prompt = vec![1i32, 4];
+    let direct =
+        generate(&exec, &entry, model, &prompt, &gc).unwrap();
+
+    let mut e: BatchEngine<usize> = BatchEngine::new(&cfg, 1);
+    e.submit(0, prompt, gc).unwrap();
+    let done = e
+        .run_spec(&exec, &entry, model,
+                  Some(ModelRef::Dense(&aw)))
+        .unwrap();
+    assert_eq!(done[0].1.tokens, direct.tokens,
+               "total rejection still must not change tokens");
+    let sc = e.spec_counters();
+    assert!(sc.verify_steps > 0, "speculation never engaged");
+    assert_eq!(sc.accepted, 0,
+               "argmin proposals can never match the target argmax");
+    assert_eq!(sc.emitted, sc.verify_steps,
+               "each all-rejected pass commits exactly one token");
+    assert_eq!(sc.tokens_per_verify(), 1.0);
+    assert_eq!(e.pool().pages_in_use(), 0);
+    assert_eq!(e.drafter_pool().unwrap().pages_in_use(), 0);
+}
+
+/// Eviction-regime fallback, both flavors: a ring that can never hold
+/// a verify window keeps speculation off from the start (the drafter
+/// pool is never even allocated), and a ring that fits windows early
+/// but not forever turns speculation off mid-run and retires the
+/// drafter slot — with tokens bit-identical to plain decode through
+/// the ring-wrap regime either way.
+#[test]
+fn eviction_regime_falls_back_to_plain_decode() {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(92);
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let exec = NativeEngine::with_workers(1);
+    let model = ModelRef::Dense(&w);
+
+    // cap 4 < fed + k + 1 from the first eligible step: never spec.
+    let gc = GenConfig {
+        max_new: 6,
+        cap: 4,
+        spec: Some(SpecDecode { k: 4 }),
+        ..GenConfig::default()
+    };
+    let prompt = random_tokens(&mut rng, 3, cfg.vocab);
+    let direct = generate(&exec, &entry, model, &prompt, &gc).unwrap();
+    let mut e: BatchEngine<usize> = BatchEngine::new(&cfg, 1);
+    e.submit(0, prompt, gc).unwrap();
+    let done = e.run_spec(&exec, &entry, model, Some(model)).unwrap();
+    assert_eq!(done[0].1.tokens, direct.tokens);
+    assert_eq!(e.spec_counters().verify_steps, 0,
+               "a 4-slot ring cannot hold a 5-row verify window");
+    assert!(e.drafter_pool().is_none(),
+            "no eligible sequence, no drafter pool");
+
+    // cap 8 fits windows while fed ≤ 5, then the gate trips: some
+    // verify passes run, then plain decode wraps the ring.
+    let gc = GenConfig {
+        max_new: 12,
+        cap: 8,
+        spec: Some(SpecDecode { k: 2 }),
+        ..GenConfig::default()
+    };
+    let prompt = random_tokens(&mut rng, 2, cfg.vocab);
+    let direct = generate(&exec, &entry, model, &prompt, &gc).unwrap();
+    let mut e: BatchEngine<usize> = BatchEngine::new(&cfg, 1);
+    e.submit(0, prompt, gc).unwrap();
+    let done = e.run_spec(&exec, &entry, model, Some(model)).unwrap();
+    assert_eq!(done[0].1.tokens, direct.tokens,
+               "mid-run fallback changed tokens");
+    let sc = e.spec_counters();
+    assert!(sc.verify_steps > 0,
+            "speculation never ran before the gate tripped");
+    let dp = e.drafter_pool().expect("speculation engaged");
+    dp.check_page_accounting().unwrap();
+    assert_eq!(dp.pages_in_use(), 0,
+               "mid-run fallback leaked the drafter slot");
+}
+
+/// Mixed load through ONE engine: speculating requests (varied K),
+/// plain greedy, seeded top-k and an eviction-regime cap co-batched
+/// over scarce slots — every request must come out token-identical
+/// to its solo `generate`, and the accounting of both pools must be
+/// clean after the run.
+#[test]
+fn mixed_spec_and_plain_requests_share_one_engine() {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(93);
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let q2 = QuantizedModel::quantize(&cfg, &w,
+                                      &vec![2u8; cfg.n_layers], 8,
+                                      Backend::Hqq, None, 1);
+    let exec = NativeEngine::with_workers(2);
+    let target = ModelRef::Dense(&w);
+    let ks = [1usize, 2, 4, 8];
+    let reqs: Vec<(Vec<i32>, GenConfig)> = (0..7)
+        .map(|i| {
+            let plen = 1 + rng.below(5);
+            let prompt = random_tokens(&mut rng, plen, cfg.vocab);
+            let spec = (i % 2 == 0)
+                .then(|| SpecDecode { k: ks[(i / 2) % ks.len()] });
+            let gc = GenConfig {
+                max_new: 4 + rng.below(6),
+                // Speculation is greedy-only; the plain riders also
+                // exercise seeded sampling next to it.
+                sampling: if spec.is_some() || i == 1 {
+                    Sampling::Greedy
+                } else {
+                    Sampling::TopK { k: 3, temperature: 0.9 }
+                },
+                seed: 60 + i as u64,
+                stop: Vec::new(),
+                cap: if i == 5 { 2 } else { 0 },
+                spec,
+            };
+            (prompt, gc)
+        })
+        .collect();
+    let direct: Vec<_> = reqs
+        .iter()
+        .map(|(p, gc)| generate(&exec, &entry, target, p, gc).unwrap())
+        .collect();
+
+    // 3 slots for 7 requests: admissions wait for retirements, so
+    // spec sequences engage and retire drafter slots continuously.
+    let mut e: BatchEngine<usize> = BatchEngine::new(&cfg, 3);
+    for (i, (p, gc)) in reqs.iter().enumerate() {
+        e.submit(i, p.clone(), gc.clone()).unwrap();
+    }
+    let mut done = Vec::new();
+    while !e.is_idle() {
+        done.extend(
+            e.step_spec(&exec, &entry, target,
+                        Some(ModelRef::Packed(&q2)))
+                .unwrap());
+        e.pool().check_page_accounting().unwrap();
+        if let Some(dp) = e.drafter_pool() {
+            dp.check_page_accounting().unwrap();
+        }
+    }
+    assert_eq!(done.len(), reqs.len());
+    done.sort_unstable_by_key(|(i, _)| *i);
+    for ((i, g), d) in done.iter().zip(&direct) {
+        assert_eq!(g.tokens, d.tokens,
+                   "request {i} diverged in the mixed batch");
+        assert_eq!(g.stopped, d.stopped, "request {i}: stop reason");
+    }
+    assert_eq!(e.pool().pages_in_use(), 0);
+    assert_eq!(e.drafter_pool().unwrap().pages_in_use(), 0);
+}
+
+/// Telemetry ground truth: the `Ev::Draft`/`Ev::Verify` trace stream
+/// and `SpecCounters` are two views of the same run — per-event sums
+/// must reproduce the counters exactly, acceptance per verify is
+/// bounded by its draft count, and the emitted total accounts for
+/// every token the run committed through verify rows.
+#[test]
+fn spec_telemetry_matches_hand_counts() {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(94);
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let q2 = QuantizedModel::quantize(&cfg, &w,
+                                      &vec![2u8; cfg.n_layers], 8,
+                                      Backend::Rtn, None, 1);
+    let exec = NativeEngine::with_workers(1);
+    let target = ModelRef::Dense(&w);
+    let mut e: BatchEngine<usize> = BatchEngine::new(&cfg, 2);
+    e.enable_trace(4096);
+    for i in 0..3usize {
+        let prompt = random_tokens(&mut rng, 1 + rng.below(4),
+                                   cfg.vocab);
+        let gc = GenConfig {
+            max_new: 8,
+            spec: Some(SpecDecode { k: 2 + 2 * (i % 2) }),
+            ..GenConfig::default()
+        };
+        e.submit(i, prompt, gc).unwrap();
+    }
+    let done = e
+        .run_spec(&exec, &entry, target,
+                  Some(ModelRef::Packed(&q2)))
+        .unwrap();
+    assert_eq!(done.len(), 3);
+
+    let sc = e.spec_counters();
+    let (mut drafts, mut verifies) = (0u64, 0u64);
+    let (mut drafted, mut accepted) = (0u64, 0u64);
+    for te in e.tracer().unwrap().events() {
+        match te.ev {
+            Ev::Draft { k, .. } => {
+                drafts += 1;
+                // Draft events carry the same k the verify scores.
+                assert!(k > 0, "drafted an empty window");
+            }
+            Ev::Verify { drafted: d, accepted: a, .. } => {
+                verifies += 1;
+                drafted += d as u64;
+                accepted += a as u64;
+                assert!(a <= d, "accepted more than was drafted");
+            }
+            _ => {}
+        }
+    }
+    assert!(verifies > 0, "run never speculated");
+    assert_eq!(drafts, verifies,
+               "every draft event pairs with one verify event");
+    assert_eq!(verifies, sc.verify_steps);
+    assert_eq!(drafted, sc.drafted);
+    assert_eq!(accepted, sc.accepted);
+    // Every committed token is either a plain-decode/prefill sample
+    // or a verify-row commit; the verify share is what `emitted`
+    // counts, and each pass commits at least its bonus token.
+    assert!(sc.emitted >= sc.verify_steps);
+    assert!(sc.emitted <= done.iter()
+        .map(|(_, g)| g.tokens.len() as u64)
+        .sum::<u64>());
+    assert!(sc.accepted <= sc.emitted,
+            "accepted drafts all arrive through verify rows");
+    assert!(sc.emitted - sc.accepted <= sc.verify_steps,
+            "at most one bonus token per verify pass");
+}
