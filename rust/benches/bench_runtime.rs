@@ -23,6 +23,7 @@
 mod harness;
 
 use harness::{bench, black_box};
+use nsds::allocate::allocate_kv_bits;
 use nsds::infer::{fused_gemm_small, fused_matmul, fused_vecmat,
                   generate_batch, generate_batch_spec, BatchEngine,
                   Executor, GenConfig, KvCache, KvCachePool, ModelRef,
@@ -31,6 +32,7 @@ use nsds::infer::{fused_gemm_small, fused_matmul, fused_vecmat,
 use nsds::model::{ModelConfig, Weights};
 use nsds::quant::{rtn, Backend, QuantSpec, DEFAULT_GROUP};
 use nsds::runtime::{Manifest, ModelEntry};
+use nsds::sensitivity::{nsds_layer_scores, NsdsOptions};
 use nsds::tensor::matmul::matmul;
 use nsds::tensor::Tensor;
 use nsds::util::pool::default_workers;
@@ -546,6 +548,154 @@ fn spec_decode_section() {
     );
 }
 
+/// Mixed-precision KV pages: resident KV bytes and per-token decode
+/// cost at one matched batch size across f32 / int8 / int4 / the
+/// NSDS-allocated mixed plan (same model, same requests — only the
+/// cache storage width changes), plus a speculative row whose drafter
+/// pool opts into 4-bit KV while the target keeps the NSDS plan. The
+/// decode rows pin that fused dequant is a bytes win, not a decode
+/// tax; the spec row pins that drafter KV precision never touches the
+/// committed tokens.
+fn kv_quant_section() {
+    let cfg = ModelConfig::llama_s_synth();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(11);
+    let fp = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let exec = NativeEngine::new();
+    let model = ModelRef::Dense(&fp);
+    let b = 8usize;
+    let held = 24usize;
+    const STEPS: usize = 8;
+
+    // The paper's machinery end to end: NSDS dual-sensitivity layer
+    // scores -> {4, 8, 16} KV widths under a 6-bit/element average.
+    let scores = nsds_layer_scores(&cfg, &fp, &NsdsOptions::default());
+    let plan = allocate_kv_bits(&scores, 6.0);
+    println!("== mixed-precision KV: resident bytes + decode cost \
+              (B={b}, {held} tokens held) ==");
+    println!("  -> nsds kv plan (b̄=6): {plan:?}");
+
+    let plans: [(&str, Vec<u8>); 4] = [
+        ("f32", vec![16u8; cfg.n_layers]),
+        ("kv8", vec![8u8; cfg.n_layers]),
+        ("kv4", vec![4u8; cfg.n_layers]),
+        ("nsds-mixed", plan.clone()),
+    ];
+    let mut f32_bytes = 0usize;
+    for (label, bits) in &plans {
+        let mut pool = KvCachePool::for_model_with_bits(&cfg, b, bits);
+        let slots: Vec<usize> =
+            (0..b).map(|_| pool.admit(cfg.seq).unwrap()).collect();
+        for i in 0..held {
+            let active: Vec<(usize, i32)> = slots
+                .iter()
+                .map(|&s| (s, ((i + s) % cfg.vocab) as i32))
+                .collect();
+            model
+                .decode_batch(&exec, &entry, &mut pool, &active)
+                .unwrap();
+        }
+        if *label == "f32" {
+            f32_bytes = pool.bytes();
+        }
+        println!(
+            "  -> {label}: {} KiB resident ({:.2}x smaller than f32)",
+            pool.bytes() / 1024,
+            f32_bytes as f64 / pool.bytes() as f64
+        );
+        let mut p = pool;
+        let r = bench(
+            &format!("decode_batch {STEPS} steps kv={label} B={b}"),
+            || {
+                for j in 0..STEPS {
+                    let active: Vec<(usize, i32)> = slots
+                        .iter()
+                        .map(|&s| (s, ((j + s) % cfg.vocab) as i32))
+                        .collect();
+                    black_box(
+                        model
+                            .decode_batch(&exec, &entry, &mut p,
+                                          &active)
+                            .unwrap(),
+                    );
+                }
+            },
+        );
+        println!("  -> kv={label}: {:.0} ns/token",
+                 r.median_ns / (STEPS * b) as f64);
+    }
+
+    // Spec row: target pool on the NSDS plan, drafter pool opted into
+    // all-4-bit KV (draft tokens are disposable guesses verified
+    // exactly, so drafter KV precision trades only accept rate).
+    let workers = default_workers();
+    let d2 = QuantizedModel::quantize(&cfg, &fp,
+                                      &vec![2u8; cfg.n_layers],
+                                      DEFAULT_GROUP, Backend::Rtn,
+                                      None, workers);
+    let drafter = ModelRef::Packed(&d2);
+    let sb = 4usize;
+    let plen = 16usize;
+    let max_new = if harness::quick() { 16 } else { 32 };
+    let mk_reqs = |k: Option<usize>| -> Vec<(Vec<i32>, GenConfig)> {
+        (0..sb)
+            .map(|i| {
+                let prompt: Vec<i32> = (0..plen)
+                    .map(|j| ((3 * i + 7 * j) % cfg.vocab) as i32)
+                    .collect();
+                let gc = GenConfig {
+                    max_new,
+                    spec: k.map(|k| SpecDecode { k }),
+                    ..GenConfig::default()
+                };
+                (prompt, gc)
+            })
+            .collect()
+    };
+    let entry_plan =
+        ModelEntry::synthetic(cfg.clone()).with_kv_bits(plan.clone());
+    let plain = generate_batch(&exec, &entry_plan, model,
+                               &mk_reqs(None), sb)
+        .unwrap();
+    let run_kv_spec = || -> BatchEngine<usize> {
+        let mut e: BatchEngine<usize> = BatchEngine::with_kv_bits(
+            &cfg, sb, Some(plan.clone()));
+        e.set_drafter_kv_bits(Some(vec![4u8; cfg.n_layers]));
+        for (i, (p, gc)) in mk_reqs(Some(4)).iter().enumerate() {
+            e.submit(i, p.clone(), gc.clone()).unwrap();
+        }
+        e
+    };
+    let mut e = run_kv_spec();
+    let mut done =
+        e.run_spec(&exec, &entry_plan, model, Some(drafter)).unwrap();
+    done.sort_unstable_by_key(|(i, _)| *i);
+    for ((_, g), p) in done.iter().zip(&plain) {
+        assert_eq!(g.tokens, p.tokens,
+                   "4-bit-KV drafter changed committed tokens");
+    }
+    let sc = e.spec_counters();
+    let dbytes =
+        e.drafter_pool().map(|p| p.bytes()).unwrap_or(0);
+    let r = bench("spec decode k=4 (nsds target KV, 4-bit drafter \
+                   KV)", || {
+        let mut e = run_kv_spec();
+        black_box(
+            e.run_spec(&exec, &entry_plan, model, Some(drafter))
+                .unwrap());
+    });
+    let tok_s = (sb * max_new) as f64 / (r.median_ns / 1e9);
+    println!(
+        "  -> spec k=4, 4-bit drafter KV: {:.2} tokens/target-pass, \
+         accept {:.0}%, {:.0} tok/s, drafter pool {} KiB — tokens \
+         bit-identical to plain decode",
+        sc.tokens_per_verify(),
+        100.0 * sc.accept_rate(),
+        tok_s,
+        dbytes / 1024
+    );
+}
+
 fn pipeline_section() -> anyhow::Result<()> {
     use nsds::baselines::Method;
     use nsds::coordinator::Pipeline;
@@ -756,6 +906,8 @@ fn main() -> anyhow::Result<()> {
     paged_kv_section();
     harness::set_section("spec_decode");
     spec_decode_section();
+    harness::set_section("kv_quant");
+    kv_quant_section();
     let dir = Manifest::default_dir();
     if dir.join("manifest.json").exists() {
         harness::set_section("pipeline");

@@ -36,6 +36,45 @@ pub fn average_bits(bits: &[u8]) -> f64 {
     bits.iter().map(|&b| b as f64).sum::<f64>() / bits.len() as f64
 }
 
+/// Per-layer KV-cache bit widths over {4, 8, 16(f32)} from the same
+/// sensitivity scores, under an average-bit budget b̄ ∈ [4, 16].
+///
+/// Same equal-sized-layer greedy as `allocate_bits`, but with three
+/// tiers: every layer starts at 4-bit, and the budget surplus
+/// `(b̄ − 4)·L` is spent in score order — first upgrading the most
+/// sensitive layers 4 → 8 (4 units each), then, with what remains,
+/// 8 → 16 (8 units each, again most sensitive first). Two passes keep
+/// the allocation monotone in score: a layer is never wider than any
+/// higher-scoring layer. Ties break by layer index (earlier wins), as
+/// everywhere else in this module.
+pub fn allocate_kv_bits(scores: &[f64], budget: f64) -> Vec<u8> {
+    let l = scores.len();
+    let mut order: Vec<usize> = (0..l).collect();
+    order.sort_by(|&a, &b| {
+        scores[b].total_cmp(&scores[a]).then(a.cmp(&b))
+    });
+    let budget = budget.clamp(4.0, 16.0);
+    let mut extra = ((budget - 4.0) * l as f64).round() as i64;
+    let mut bits = vec![4u8; l];
+    for &i in &order {
+        if extra < 4 {
+            break;
+        }
+        bits[i] = 8;
+        extra -= 4;
+    }
+    for &i in &order {
+        if extra < 8 {
+            break;
+        }
+        if bits[i] == 8 {
+            bits[i] = 16;
+            extra -= 8;
+        }
+    }
+    bits
+}
+
 /// Variant used by the KurtBoost baseline: some layers are *forced* to
 /// 4-bit (detected outliers) before filling the rest by score order under
 /// the same budget.
@@ -120,6 +159,61 @@ mod tests {
                 .map(|(_, s)| *s)
                 .fold(f64::NEG_INFINITY, f64::max);
             prop_ensure!(min4 >= max2 - 1e-12, "ranking violated");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn kv_bits_extreme_and_intermediate_budgets() {
+        let scores = vec![0.9, 0.1, 0.5, 0.7];
+        assert_eq!(allocate_kv_bits(&scores, 4.0), vec![4; 4]);
+        assert_eq!(allocate_kv_bits(&scores, 8.0), vec![8; 4]);
+        assert_eq!(allocate_kv_bits(&scores, 16.0), vec![16; 4]);
+        // b̄ = 7: surplus 12 units = three 4→8 upgrades, to the three
+        // highest scores (0.9, 0.7, 0.5).
+        assert_eq!(allocate_kv_bits(&scores, 7.0), vec![8, 4, 8, 8]);
+        // b̄ = 10: surplus 24 = four 4→8 (16) + one 8→16 (8), the
+        // widest going to the top score.
+        assert_eq!(allocate_kv_bits(&scores, 10.0), vec![16, 8, 8, 8]);
+    }
+
+    #[test]
+    fn kv_bits_budget_and_monotonicity_property() {
+        check("kv budget within step, score-monotone", 40, |rng| {
+            let l = 1 + rng.below(40);
+            let scores: Vec<f64> = (0..l).map(|_| rng.f64()).collect();
+            let budget = 4.0 + 12.0 * rng.f64();
+            let bits = allocate_kv_bits(&scores, budget);
+            prop_ensure!(
+                bits.iter().all(|b| [4, 8, 16].contains(b)),
+                "tier outside {{4,8,16}}"
+            );
+            let avg = average_bits(&bits);
+            // Greedy upgrades never overshoot and stop within one
+            // 8→16 upgrade (8 units / L) of the rounded budget.
+            prop_ensure!(
+                avg <= budget + 0.5 / l as f64 + 1e-9,
+                "avg {avg} overshoots budget {budget} (L={l})"
+            );
+            prop_ensure!(
+                avg >= budget - 8.0 / l as f64 - 0.5 / l as f64 - 1e-9,
+                "avg {avg} undershoots budget {budget} (L={l})"
+            );
+            // Monotone: wider storage never goes to a lower score
+            // than narrower storage (ties aside).
+            for i in 0..l {
+                for j in 0..l {
+                    if bits[i] > bits[j] {
+                        prop_ensure!(
+                            scores[i] >= scores[j] - 1e-12,
+                            "layer {i} ({}b) outranks {j} ({}b) \
+                             with lower score",
+                            bits[i],
+                            bits[j]
+                        );
+                    }
+                }
+            }
             Ok(())
         });
     }

@@ -140,11 +140,15 @@ struct GenRequest {
 ///   per-request ground truth never disagree beyond one bucket).
 /// * `serve.gen.spec.drafted` / `serve.gen.spec.accepted` /
 ///   `serve.gen.spec.emitted` / `serve.gen.spec.verify_steps` —
-///   gauges mirroring the engine's cumulative speculative-decode
-///   counters (`BatchEngine::spec_counters`): draft tokens proposed,
-///   drafts committed by exact greedy agreement, tokens emitted by
-///   verify rows, and multi-row verify passes run. All zero unless a
-///   drafter is deployed and requests opt in via `GenConfig::spec`.
+///   monotone counters mirroring the engine's cumulative
+///   speculative-decode totals (`BatchEngine::spec_counters`): draft
+///   tokens proposed, drafts committed by exact greedy agreement,
+///   tokens emitted by verify rows, and multi-row verify passes run.
+///   The serve loop publishes per-step deltas, so rate math over
+///   successive registry snapshots is well-defined (and totals
+///   aggregate correctly when several serve calls share a registry).
+///   All zero unless a drafter is deployed and requests opt in via
+///   `GenConfig::spec`.
 /// * `serve.engine.step_ns` — histogram of scheduler step wall time.
 pub struct ServerQueue {
     queue: Mutex<VecDeque<Msg>>,
@@ -158,10 +162,10 @@ pub struct ServerQueue {
     gen_served: Counter,
     gen_tokens: Counter,
     gen_shared_tokens: Gauge,
-    gen_spec_drafted: Gauge,
-    gen_spec_accepted: Gauge,
-    gen_spec_emitted: Gauge,
-    gen_spec_verify_steps: Gauge,
+    gen_spec_drafted: Counter,
+    gen_spec_accepted: Counter,
+    gen_spec_emitted: Counter,
+    gen_spec_verify_steps: Counter,
     gen_prefill: Histogram,
     gen_ttft: Histogram,
     gen_decode: Histogram,
@@ -192,13 +196,14 @@ impl ServerQueue {
             gen_tokens: registry.counter("serve.gen.tokens"),
             gen_shared_tokens:
                 registry.gauge("serve.gen.shared_prefix_tokens"),
-            gen_spec_drafted: registry.gauge("serve.gen.spec.drafted"),
+            gen_spec_drafted:
+                registry.counter("serve.gen.spec.drafted"),
             gen_spec_accepted:
-                registry.gauge("serve.gen.spec.accepted"),
+                registry.counter("serve.gen.spec.accepted"),
             gen_spec_emitted:
-                registry.gauge("serve.gen.spec.emitted"),
+                registry.counter("serve.gen.spec.emitted"),
             gen_spec_verify_steps:
-                registry.gauge("serve.gen.spec.verify_steps"),
+                registry.counter("serve.gen.spec.verify_steps"),
             gen_prefill: registry.histogram("serve.gen.prefill_ns"),
             gen_ttft: registry.histogram("serve.gen.ttft_ns"),
             gen_decode: registry.histogram("serve.gen.decode_ns"),
@@ -271,8 +276,8 @@ impl ServerQueue {
     }
 
     /// Cumulative speculative-decode counters — thin view over the
-    /// `serve.gen.spec.*` gauges (all zero without a deployed drafter
-    /// or spec-opted requests).
+    /// `serve.gen.spec.*` counters (all zero without a deployed
+    /// drafter or spec-opted requests).
     pub fn gen_spec(&self) -> SpecCounters {
         SpecCounters {
             drafted: self.gen_spec_drafted.get(),
@@ -407,8 +412,8 @@ pub fn serve_with_drafter(exec: &(dyn Executor + Sync),
                           weights: ServedWeights,
                           drafter: Option<ServedWeights>,
                           q: &ServerQueue) -> Result<()> {
-    let mut engine: BatchEngine<GenReply> =
-        BatchEngine::new(&entry.config, batch.max(1));
+    let mut engine: BatchEngine<GenReply> = BatchEngine::with_kv_bits(
+        &entry.config, batch.max(1), entry.kv_bits.clone());
     let res =
         serve_loop(exec, entry, batch, weights, drafter, q, &mut engine);
     if let Err(e) = &res {
@@ -436,6 +441,12 @@ fn serve_loop(exec: &(dyn Executor + Sync), entry: &ModelEntry,
     let seq = entry.config.seq;
     let v = entry.config.vocab;
     let mut stopping = false;
+    // Spec totals already published to the `serve.gen.spec.*` counters
+    // by THIS loop: the engine reports lifetime totals (it outlives
+    // weight swaps), the metrics are monotone counters, so each step
+    // adds only the delta since the last publication. Starts at the
+    // engine's current totals so a resumed engine doesn't double-count.
+    let mut spec_seen = engine.spec_counters();
     loop {
         // Collect up to `batch` NLL rows and feed the scheduler; handle
         // control messages inline. Messages the loop cannot take yet are
@@ -524,10 +535,12 @@ fn serve_loop(exec: &(dyn Executor + Sync), entry: &ModelEntry,
             q.step_ns.record(t0.elapsed().as_nanos() as u64);
             q.gen_shared_tokens.set(engine.shared_prefix_tokens());
             let sc = engine.spec_counters();
-            q.gen_spec_drafted.set(sc.drafted);
-            q.gen_spec_accepted.set(sc.accepted);
-            q.gen_spec_emitted.set(sc.emitted);
-            q.gen_spec_verify_steps.set(sc.verify_steps);
+            q.gen_spec_drafted.add(sc.drafted - spec_seen.drafted);
+            q.gen_spec_accepted.add(sc.accepted - spec_seen.accepted);
+            q.gen_spec_emitted.add(sc.emitted - spec_seen.emitted);
+            q.gen_spec_verify_steps
+                .add(sc.verify_steps - spec_seen.verify_steps);
+            spec_seen = sc;
             for (reply, gen) in done {
                 q.gen_served.inc();
                 q.gen_tokens.add(gen.tokens.len() as u64);

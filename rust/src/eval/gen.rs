@@ -36,9 +36,10 @@ const SCORE_SLOTS: usize = 8;
 /// Greedy-decode every window's prompt — prefixed by the shared
 /// `context`, which the batched engine's prefix-aware admission keeps
 /// resident as ONE set of pages — in one batched stream.
-fn batch_greedy(exec: &dyn Executor, entry: &ModelEntry, model: ModelRef,
-                context: &[i32], wins: &[(&[i32], &[i32])],
-                gen_len: usize) -> Result<Vec<Generation>> {
+pub(super) fn batch_greedy(exec: &dyn Executor, entry: &ModelEntry,
+                           model: ModelRef, context: &[i32],
+                           wins: &[(&[i32], &[i32])], gen_len: usize)
+                           -> Result<Vec<Generation>> {
     let cfg = greedy_cfg(gen_len);
     let reqs: Vec<(Vec<i32>, GenConfig)> = wins
         .iter()
@@ -54,8 +55,8 @@ fn batch_greedy(exec: &dyn Executor, entry: &ModelEntry, model: ModelRef,
 }
 
 /// Cut `corpus` into non-overlapping (prompt, continuation) windows.
-fn windows(corpus: &[i32], prompt_len: usize, gen_len: usize,
-           max_prompts: usize) -> Vec<(&[i32], &[i32])> {
+pub(super) fn windows(corpus: &[i32], prompt_len: usize, gen_len: usize,
+                      max_prompts: usize) -> Vec<(&[i32], &[i32])> {
     let w = prompt_len + gen_len;
     corpus
         .chunks_exact(w)

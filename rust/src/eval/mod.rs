@@ -5,6 +5,7 @@
 //! default, PJRT behind the `xla` feature).
 
 pub mod gen;
+pub mod kv;
 pub mod ppl;
 pub mod tasks;
 

@@ -40,8 +40,49 @@
 //! Admission/retirement (`admit` / `retire`) reuse slot indices through
 //! a free list, so a long-running batch scheduler keeps stable slot ids
 //! as sequences join and leave mid-stream.
+//!
+//! Storage is **precision-polymorphic per layer**: each layer's K/V rows
+//! live as raw f32 (bit-identical compatibility mode, the default), or
+//! as int8 / int4 codes with one affine (scale, zero) pair per
+//! **row-segment** — per (page, layer, in-page row, kv head), i.e. one
+//! `d_head`-wide span. Quantization happens ONCE on append; attention
+//! dequantizes on the fly (`infer::native::decode_attention`), so the
+//! decode hot loop moves 4–8× fewer bytes per window row. The
+//! granularity is deliberately page-local: every page of a layer is
+//! self-contained (codes + its own scales), so CoW sharing, `truncate`,
+//! ring recycle and the whole-page copies behind `admit_shared` and
+//! `writable_block` are precision-agnostic — they copy pages, never
+//! re-quantize. Per-layer widths come from the NSDS sensitivity scores
+//! via `allocate::allocate_kv_bits`; see DESIGN.md "Quantized KV cache".
 
 use crate::model::ModelConfig;
+
+/// Affine quantization parameters for one row-segment (`d_head` values):
+/// `value ≈ scale · (code − zero)`, the same convention
+/// `infer::qmat::PackedMatrix` uses for weights. A constant segment
+/// (including all-zero rows) round-trips exactly: scale 1, zero −min,
+/// every code 0 — so zero K/V rows stay exactly zero under quantization.
+#[inline]
+pub(crate) fn kv_qparams(seg: &[f32], levels: f32) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in seg {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !(hi > lo) {
+        return (1.0, -lo);
+    }
+    let s = (hi - lo) / levels;
+    (s, -lo / s)
+}
+
+/// Encode one value against `kv_qparams` output (codes clamp to
+/// `[0, levels]`, so out-of-range inputs cannot wrap).
+#[inline]
+pub(crate) fn kv_encode(x: f32, s: f32, z: f32, levels: f32) -> u8 {
+    (x / s + z).round().clamp(0.0, levels) as u8
+}
 
 /// Positions per page. The trade: a smaller page wastes less on short
 /// sequences (a slot's minimum footprint is one page) and copies less on
@@ -73,12 +114,47 @@ pub struct KvCachePool {
     n_layers: usize,
     nkv: usize,
     dh: usize,
+    /// Per-layer storage width: 16 (raw f32), 8 or 4 (quantized codes).
+    kv_bits: Vec<u8>,
     slots: Vec<Option<SlotCache>>,
-    /// Page arena, keys: page `p`, layer `l`, in-page row `r` lives at
-    /// `((p·n_layers + l)·PAGE_SIZE + r)·w .. +w`, `w = nkv·dh`.
+    /// Page arena, f32 layers, keys: page `p`, f32 layer `l`, in-page
+    /// row `r` lives at `p·f32_page_words + f32_off[l] + r·w .. +w`,
+    /// `w = nkv·dh`. With every layer at 16 bits this is exactly the
+    /// pre-quantization all-f32 layout.
     k: Vec<f32>,
-    /// Page arena, values: same layout.
+    /// Page arena, f32 layers, values: same layout.
     v: Vec<f32>,
+    /// Code arena, quantized layers, keys: page `p`, quantized layer
+    /// `l`, in-page row `r` lives at `p·code_page_bytes + code_off[l] +
+    /// r·rb .. +rb`, `rb = w` bytes (int8) or `w/2` (int4, two codes
+    /// per byte, even index in the low nibble).
+    kq: Vec<u8>,
+    /// Code arena, quantized layers, values: same layout.
+    vq: Vec<u8>,
+    /// Row-segment scales, keys: one f32 per (page, quantized layer,
+    /// in-page row, kv head), at `p·meta_page_words + meta_off[l] +
+    /// r·nkv + h`.
+    ks: Vec<f32>,
+    /// Row-segment zeros, keys: same layout.
+    kz: Vec<f32>,
+    /// Row-segment scales / zeros, values: same layout.
+    vs: Vec<f32>,
+    vz: Vec<f32>,
+    /// Word offset of each f32 layer's rows inside a page's f32 region
+    /// (`usize::MAX` for quantized layers).
+    f32_off: Vec<usize>,
+    /// Byte offset of each quantized layer's code rows inside a page's
+    /// code region (`usize::MAX` for f32 layers).
+    code_off: Vec<usize>,
+    /// Word offset of each quantized layer's (scale, zero) metadata
+    /// inside a page's metadata region (`usize::MAX` for f32 layers).
+    meta_off: Vec<usize>,
+    /// f32 words one page occupies in EACH of `k` and `v`.
+    f32_page_words: usize,
+    /// Code bytes one page occupies in EACH of `kq` and `vq`.
+    code_page_bytes: usize,
+    /// Metadata words one page occupies in EACH of `ks`/`kz`/`vs`/`vz`.
+    meta_page_words: usize,
     /// Per-page reference counts; 0 ⇔ the page is on the free list.
     refcount: Vec<u32>,
     free: Vec<usize>,
@@ -93,73 +169,298 @@ pub struct KvCachePool {
 /// window may live on non-adjacent pages (and on pages shared with
 /// other slots).
 pub struct LayerKv<'a> {
-    k: &'a [f32],
-    v: &'a [f32],
     table: &'a [Option<usize>],
-    n_layers: usize,
     l: usize,
     w: usize,
+    nkv: usize,
+    dh: usize,
+    repr: LayerRepr<'a>,
+}
+
+/// Storage of one layer inside the page arenas: raw f32, or quantized
+/// codes plus per-row-segment (scale, zero) metadata. Per-layer offsets
+/// and page strides are folded in at view construction so the per-row
+/// accessors do one multiply-add each.
+enum LayerRepr<'a> {
+    F32 {
+        k: &'a [f32],
+        v: &'a [f32],
+        /// f32 words per page across all f32 layers.
+        stride: usize,
+        /// This layer's word offset inside a page's f32 region.
+        base: usize,
+    },
+    Quant {
+        /// 8 or 4.
+        bits: u8,
+        kq: &'a [u8],
+        vq: &'a [u8],
+        ks: &'a [f32],
+        kz: &'a [f32],
+        vs: &'a [f32],
+        vz: &'a [f32],
+        /// Code bytes per page across all quantized layers.
+        cstride: usize,
+        /// This layer's byte offset inside a page's code region.
+        cbase: usize,
+        /// Code bytes per row of this layer (`w` or `w/2`).
+        rb: usize,
+        /// Metadata words per page across all quantized layers.
+        mstride: usize,
+        /// This layer's word offset inside a page's metadata region.
+        mbase: usize,
+    },
 }
 
 impl<'a> LayerKv<'a> {
-    /// Arena word offset of a ring row's K (and V) span. Hoist per-row
-    /// offsets out of per-head attention loops with this.
+    /// Storage width of this layer: 16 (f32), 8 or 4.
+    #[inline]
+    pub fn bits(&self) -> u8 {
+        match &self.repr {
+            LayerRepr::F32 { .. } => 16,
+            LayerRepr::Quant { bits, .. } => *bits,
+        }
+    }
+
+    /// Row locator of a ring row: `page · PAGE_SIZE + in-page row`, the
+    /// precision-independent handle every accessor below takes. Hoist
+    /// per-row locators out of per-head attention loops with this.
     #[inline]
     pub fn offset(&self, ring_row: usize) -> usize {
         let page = self.table[ring_row / PAGE_SIZE].unwrap_or_else(|| {
             panic!("attention read of unwritten ring row {ring_row} \
                     (layer {})", self.l)
         });
-        ((page * self.n_layers + self.l) * PAGE_SIZE
-         + ring_row % PAGE_SIZE) * self.w
+        page * PAGE_SIZE + ring_row % PAGE_SIZE
     }
 
-    /// K row (`nkv·dh` wide) at an `offset()` value.
+    /// K row (`nkv·dh` wide) at an `offset()` locator (f32 layers only).
     #[inline]
-    pub fn k_at(&self, offset: usize) -> &'a [f32] {
-        &self.k[offset..offset + self.w]
+    pub fn k_at(&self, loc: usize) -> &'a [f32] {
+        let LayerRepr::F32 { k, stride, base, .. } = &self.repr else {
+            panic!("f32 read of quantized layer {}", self.l)
+        };
+        let off = loc / PAGE_SIZE * stride + base
+            + loc % PAGE_SIZE * self.w;
+        &k[off..off + self.w]
     }
 
-    /// V row (`nkv·dh` wide) at an `offset()` value.
+    /// V row (`nkv·dh` wide) at an `offset()` locator (f32 layers only).
     #[inline]
-    pub fn v_at(&self, offset: usize) -> &'a [f32] {
-        &self.v[offset..offset + self.w]
+    pub fn v_at(&self, loc: usize) -> &'a [f32] {
+        let LayerRepr::F32 { v, stride, base, .. } = &self.repr else {
+            panic!("f32 read of quantized layer {}", self.l)
+        };
+        let off = loc / PAGE_SIZE * stride + base
+            + loc % PAGE_SIZE * self.w;
+        &v[off..off + self.w]
     }
 
-    /// K row of a logical ring row.
+    /// K codes of kv head `h` at an `offset()` locator: `dh` bytes
+    /// (int8) or `dh/2` packed bytes (int4, even index low nibble).
+    #[inline]
+    pub fn k_codes(&self, loc: usize, h: usize) -> &'a [u8] {
+        let LayerRepr::Quant { kq, cstride, cbase, rb, .. } =
+            &self.repr
+        else {
+            panic!("code read of f32 layer {}", self.l)
+        };
+        let hb = rb / self.nkv;
+        let off = loc / PAGE_SIZE * cstride + cbase
+            + loc % PAGE_SIZE * rb + h * hb;
+        &kq[off..off + hb]
+    }
+
+    /// V codes of kv head `h` at an `offset()` locator.
+    #[inline]
+    pub fn v_codes(&self, loc: usize, h: usize) -> &'a [u8] {
+        let LayerRepr::Quant { vq, cstride, cbase, rb, .. } =
+            &self.repr
+        else {
+            panic!("code read of f32 layer {}", self.l)
+        };
+        let hb = rb / self.nkv;
+        let off = loc / PAGE_SIZE * cstride + cbase
+            + loc % PAGE_SIZE * rb + h * hb;
+        &vq[off..off + hb]
+    }
+
+    /// (scale, zero) of the K row-segment of kv head `h` at a locator.
+    #[inline]
+    pub fn k_meta(&self, loc: usize, h: usize) -> (f32, f32) {
+        let LayerRepr::Quant { ks, kz, mstride, mbase, .. } =
+            &self.repr
+        else {
+            panic!("metadata read of f32 layer {}", self.l)
+        };
+        let idx = loc / PAGE_SIZE * mstride + mbase
+            + loc % PAGE_SIZE * self.nkv + h;
+        (ks[idx], kz[idx])
+    }
+
+    /// (scale, zero) of the V row-segment of kv head `h` at a locator.
+    #[inline]
+    pub fn v_meta(&self, loc: usize, h: usize) -> (f32, f32) {
+        let LayerRepr::Quant { vs, vz, mstride, mbase, .. } =
+            &self.repr
+        else {
+            panic!("metadata read of f32 layer {}", self.l)
+        };
+        let idx = loc / PAGE_SIZE * mstride + mbase
+            + loc % PAGE_SIZE * self.nkv + h;
+        (vs[idx], vz[idx])
+    }
+
+    /// K row of a logical ring row (f32 layers only — quantized layers
+    /// read through `k_codes`/`k_meta` or `k_row_dequant`).
     #[inline]
     pub fn k_row(&self, ring_row: usize) -> &'a [f32] {
         self.k_at(self.offset(ring_row))
     }
 
-    /// V row of a logical ring row.
+    /// V row of a logical ring row (f32 layers only).
     #[inline]
     pub fn v_row(&self, ring_row: usize) -> &'a [f32] {
         self.v_at(self.offset(ring_row))
     }
+
+    /// K row of a logical ring row, dequantized — works at any width
+    /// (f32 layers copy). Test/eval hook, NOT the attention read path:
+    /// `decode_attention` fuses dequant into its dot/accumulate loops
+    /// instead of materializing rows.
+    pub fn k_row_dequant(&self, ring_row: usize) -> Vec<f32> {
+        self.row_dequant(ring_row, true)
+    }
+
+    /// V row of a logical ring row, dequantized (see `k_row_dequant`).
+    pub fn v_row_dequant(&self, ring_row: usize) -> Vec<f32> {
+        self.row_dequant(ring_row, false)
+    }
+
+    fn row_dequant(&self, ring_row: usize, keys: bool) -> Vec<f32> {
+        let loc = self.offset(ring_row);
+        match &self.repr {
+            LayerRepr::F32 { .. } => if keys {
+                self.k_at(loc).to_vec()
+            } else {
+                self.v_at(loc).to_vec()
+            },
+            LayerRepr::Quant { bits, .. } => {
+                let mut out = Vec::with_capacity(self.w);
+                for h in 0..self.nkv {
+                    let (codes, (s, z)) = if keys {
+                        (self.k_codes(loc, h), self.k_meta(loc, h))
+                    } else {
+                        (self.v_codes(loc, h), self.v_meta(loc, h))
+                    };
+                    if *bits == 8 {
+                        for &c in codes {
+                            out.push(s * (c as f32 - z));
+                        }
+                    } else {
+                        for &b in codes {
+                            out.push(s * ((b & 0xf) as f32 - z));
+                            out.push(s * ((b >> 4) as f32 - z));
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
 }
 
 impl KvCachePool {
+    /// All-f32 pool — the bit-identical compatibility mode every
+    /// pre-quantization caller gets by default.
     pub fn new(n_layers: usize, nkv: usize, dh: usize,
                max_slots: usize) -> Self {
+        KvCachePool::with_kv_bits(n_layers, nkv, dh, max_slots,
+                                  &vec![16u8; n_layers])
+    }
+
+    /// Pool with per-layer storage widths: `kv_bits[l]` ∈ {4, 8, 16},
+    /// 16 meaning raw f32. Int4 packs two codes per byte along each
+    /// `d_head` segment, so it requires an even `d_head`.
+    pub fn with_kv_bits(n_layers: usize, nkv: usize, dh: usize,
+                        max_slots: usize, kv_bits: &[u8]) -> Self {
         assert!(n_layers > 0 && nkv > 0 && dh > 0);
         assert!(max_slots > 0, "KvCachePool needs at least one slot");
+        assert_eq!(kv_bits.len(), n_layers,
+                   "kv_bits must name every layer ({} != {n_layers})",
+                   kv_bits.len());
+        let w = nkv * dh;
+        let mut f32_off = vec![usize::MAX; n_layers];
+        let mut code_off = vec![usize::MAX; n_layers];
+        let mut meta_off = vec![usize::MAX; n_layers];
+        let (mut fw, mut cb, mut mw) = (0usize, 0usize, 0usize);
+        for (l, &b) in kv_bits.iter().enumerate() {
+            match b {
+                16 => {
+                    f32_off[l] = fw;
+                    fw += PAGE_SIZE * w;
+                }
+                8 | 4 => {
+                    assert!(b == 8 || dh % 2 == 0,
+                            "int4 KV packs two codes per byte along \
+                             d_head, which must be even (got {dh})");
+                    code_off[l] = cb;
+                    cb += PAGE_SIZE * if b == 8 { w } else { w / 2 };
+                    meta_off[l] = mw;
+                    mw += PAGE_SIZE * nkv;
+                }
+                _ => panic!("kv_bits[{l}] = {b}: KV layers store 4, 8 \
+                             or 16 (f32) bits"),
+            }
+        }
         KvCachePool {
             n_layers,
             nkv,
             dh,
+            kv_bits: kv_bits.to_vec(),
             slots: (0..max_slots).map(|_| None).collect(),
             k: Vec::new(),
             v: Vec::new(),
+            kq: Vec::new(),
+            vq: Vec::new(),
+            ks: Vec::new(),
+            kz: Vec::new(),
+            vs: Vec::new(),
+            vz: Vec::new(),
+            f32_off,
+            code_off,
+            meta_off,
+            f32_page_words: fw,
+            code_page_bytes: cb,
+            meta_page_words: mw,
             refcount: Vec::new(),
             free: Vec::new(),
             cow_splits: 0,
         }
     }
 
-    /// Pool sized for a model config's KV geometry.
+    /// Pool sized for a model config's KV geometry (all-f32 storage).
     pub fn for_model(cfg: &ModelConfig, max_slots: usize) -> Self {
         KvCachePool::new(cfg.n_layers, cfg.n_kv, cfg.d_head, max_slots)
+    }
+
+    /// Pool sized for a model config with per-layer KV storage widths
+    /// (see `with_kv_bits`; typically `allocate::allocate_kv_bits`
+    /// output over the NSDS layer scores).
+    pub fn for_model_with_bits(cfg: &ModelConfig, max_slots: usize,
+                               kv_bits: &[u8]) -> Self {
+        KvCachePool::with_kv_bits(cfg.n_layers, cfg.n_kv, cfg.d_head,
+                                  max_slots, kv_bits)
+    }
+
+    /// Per-layer KV storage widths (16 = f32).
+    pub fn kv_bits(&self) -> &[u8] {
+        &self.kv_bits
+    }
+
+    /// Storage width of one layer (16 = f32).
+    pub fn layer_bits(&self, l: usize) -> u8 {
+        self.kv_bits[l]
     }
 
     /// Whether this pool was laid out for `cfg`'s KV geometry.
@@ -194,9 +495,14 @@ impl KvCachePool {
         self.nkv * self.dh
     }
 
-    /// f32 words one page occupies in EACH of the K and V arenas.
-    fn page_words(&self) -> usize {
-        self.n_layers * PAGE_SIZE * self.kv_width()
+    /// Bytes one page occupies across ALL arenas (K + V, f32 + codes +
+    /// row-segment metadata) — the unit `bytes()` reports in. Fixed at
+    /// construction by the per-layer `kv_bits` plan, so the resident-
+    /// bytes ratio between two precision plans is exactly the ratio of
+    /// their `page_bytes()`.
+    pub fn page_bytes(&self) -> usize {
+        2 * (self.f32_page_words * 4 + self.code_page_bytes
+             + 2 * self.meta_page_words * 4)
     }
 
     /// Pages ever allocated in the arena (in use + on the free list).
@@ -216,10 +522,41 @@ impl KvCachePool {
         }
         let p = self.refcount.len();
         self.refcount.push(1);
-        let words = self.page_words();
-        self.k.resize((p + 1) * words, 0.0);
-        self.v.resize((p + 1) * words, 0.0);
+        let n = p + 1;
+        self.k.resize(n * self.f32_page_words, 0.0);
+        self.v.resize(n * self.f32_page_words, 0.0);
+        self.kq.resize(n * self.code_page_bytes, 0);
+        self.vq.resize(n * self.code_page_bytes, 0);
+        self.ks.resize(n * self.meta_page_words, 0.0);
+        self.kz.resize(n * self.meta_page_words, 0.0);
+        self.vs.resize(n * self.meta_page_words, 0.0);
+        self.vz.resize(n * self.meta_page_words, 0.0);
         p
+    }
+
+    /// Whole-page copy across every arena (f32 rows, codes, and
+    /// row-segment metadata move together, so a copied page is
+    /// self-contained at any mix of layer widths). The one primitive
+    /// behind `admit_shared`'s tail copy and `writable_block`'s
+    /// copy-on-write split — precision never re-enters those paths.
+    fn copy_page(&mut self, src: usize, dst: usize) {
+        let fw = self.f32_page_words;
+        if fw > 0 {
+            self.k.copy_within(src * fw..(src + 1) * fw, dst * fw);
+            self.v.copy_within(src * fw..(src + 1) * fw, dst * fw);
+        }
+        let cb = self.code_page_bytes;
+        if cb > 0 {
+            self.kq.copy_within(src * cb..(src + 1) * cb, dst * cb);
+            self.vq.copy_within(src * cb..(src + 1) * cb, dst * cb);
+        }
+        let mw = self.meta_page_words;
+        if mw > 0 {
+            self.ks.copy_within(src * mw..(src + 1) * mw, dst * mw);
+            self.kz.copy_within(src * mw..(src + 1) * mw, dst * mw);
+            self.vs.copy_within(src * mw..(src + 1) * mw, dst * mw);
+            self.vz.copy_within(src * mw..(src + 1) * mw, dst * mw);
+        }
     }
 
     fn release_page(&mut self, page: usize) {
@@ -303,14 +640,10 @@ impl KvCachePool {
             let src = donor_table[full]
                 .expect("donor tail block below pos must be mapped");
             let dst = self.alloc_page();
-            let words = self.page_words();
             // Whole-page copy: the rows past `tail` carry donor data
             // the new slot overwrites before it can ever read them
             // (attention windows stop at `pos`).
-            self.k.copy_within(src * words..(src + 1) * words,
-                               dst * words);
-            self.v.copy_within(src * words..(src + 1) * words,
-                               dst * words);
+            self.copy_page(src, dst);
             table[full] = Some(dst);
         }
         self.slots[slot] = Some(SlotCache { cap, pos: shared, table });
@@ -452,11 +785,7 @@ impl KvCachePool {
                 // First divergent write into a shared page.
                 self.cow_splits += 1;
                 let q = self.alloc_page();
-                let words = self.page_words();
-                self.k.copy_within(p * words..(p + 1) * words,
-                                   q * words);
-                self.v.copy_within(p * words..(p + 1) * words,
-                                   q * words);
+                self.copy_page(p, q);
                 self.release_page(p); // other holders keep the original
                 self.slot_mut(slot).table[block] = Some(q);
                 q
@@ -490,10 +819,67 @@ impl KvCachePool {
             (s.pos + ahead) % s.cap
         };
         let page = self.writable_block(slot, row / PAGE_SIZE);
-        let off = ((page * self.n_layers + l) * PAGE_SIZE
-                   + row % PAGE_SIZE) * w;
-        self.k[off..off + w].copy_from_slice(krow);
-        self.v[off..off + w].copy_from_slice(vrow);
+        self.write_row(page, row % PAGE_SIZE, l, krow, vrow);
+    }
+
+    /// Land one K/V row in page `page`, in-page row `r`, at layer `l`'s
+    /// storage width: f32 layers copy verbatim (bit-identical to the
+    /// pre-quantization arena); quantized layers encode each kv head's
+    /// `d_head` segment against fresh (scale, zero) affine parameters —
+    /// the ONE quantization site, shared by the per-token and bulk
+    /// append paths.
+    fn write_row(&mut self, page: usize, r: usize, l: usize,
+                 krow: &[f32], vrow: &[f32]) {
+        let (w, dh, nkv) = (self.kv_width(), self.dh, self.nkv);
+        match self.kv_bits[l] {
+            16 => {
+                let off =
+                    page * self.f32_page_words + self.f32_off[l] + r * w;
+                self.k[off..off + w].copy_from_slice(krow);
+                self.v[off..off + w].copy_from_slice(vrow);
+            }
+            bits => {
+                let levels = if bits == 8 { 255.0 } else { 15.0 };
+                let rb = if bits == 8 { w } else { w / 2 };
+                let hb = rb / nkv;
+                let coff = page * self.code_page_bytes
+                    + self.code_off[l] + r * rb;
+                let moff = page * self.meta_page_words
+                    + self.meta_off[l] + r * nkv;
+                for h in 0..nkv {
+                    let kseg = &krow[h * dh..(h + 1) * dh];
+                    let vseg = &vrow[h * dh..(h + 1) * dh];
+                    let (sk, zk) = kv_qparams(kseg, levels);
+                    let (sv, zv) = kv_qparams(vseg, levels);
+                    self.ks[moff + h] = sk;
+                    self.kz[moff + h] = zk;
+                    self.vs[moff + h] = sv;
+                    self.vz[moff + h] = zv;
+                    let at = coff + h * hb;
+                    if bits == 8 {
+                        for (i, &x) in kseg.iter().enumerate() {
+                            self.kq[at + i] =
+                                kv_encode(x, sk, zk, levels);
+                        }
+                        for (i, &x) in vseg.iter().enumerate() {
+                            self.vq[at + i] =
+                                kv_encode(x, sv, zv, levels);
+                        }
+                    } else {
+                        for i in 0..hb {
+                            self.kq[at + i] =
+                                kv_encode(kseg[2 * i], sk, zk, levels)
+                                | (kv_encode(kseg[2 * i + 1], sk, zk,
+                                             levels) << 4);
+                            self.vq[at + i] =
+                                kv_encode(vseg[2 * i], sv, zv, levels)
+                                | (kv_encode(vseg[2 * i + 1], sv, zv,
+                                             levels) << 4);
+                        }
+                    }
+                }
+            }
+        }
     }
 
     /// Map — and privatize — every block the slot's next `n` positions
@@ -564,12 +950,24 @@ impl KvCachePool {
                 .min(cap - row)
                 .min(rows - done);
             let page = self.writable_block(slot, row / PAGE_SIZE);
-            let off = ((page * self.n_layers + l) * PAGE_SIZE + in_page)
-                * w;
-            self.k[off..off + seg * w]
-                .copy_from_slice(&krows[done * w..(done + seg) * w]);
-            self.v[off..off + seg * w]
-                .copy_from_slice(&vrows[done * w..(done + seg) * w]);
+            if self.kv_bits[l] == 16 {
+                let off = page * self.f32_page_words + self.f32_off[l]
+                    + in_page * w;
+                self.k[off..off + seg * w].copy_from_slice(
+                    &krows[done * w..(done + seg) * w]);
+                self.v[off..off + seg * w].copy_from_slice(
+                    &vrows[done * w..(done + seg) * w]);
+            } else {
+                // Quantized layers encode per row-segment either way;
+                // the bulk win here is one block-table lookup (and CoW
+                // check) per page segment instead of per row.
+                for i in 0..seg {
+                    let at = (done + i) * w;
+                    self.write_row(page, in_page + i, l,
+                                   &krows[at..at + w],
+                                   &vrows[at..at + w]);
+                }
+            }
             done += seg;
         }
     }
@@ -591,13 +989,36 @@ impl KvCachePool {
     pub fn layer_view(&self, l: usize, slot: usize) -> LayerKv<'_> {
         debug_assert!(l < self.n_layers, "layer {l} out of range");
         let s = self.slot(slot);
+        let w = self.kv_width();
+        let repr = match self.kv_bits[l] {
+            16 => LayerRepr::F32 {
+                k: &self.k,
+                v: &self.v,
+                stride: self.f32_page_words,
+                base: self.f32_off[l],
+            },
+            bits => LayerRepr::Quant {
+                bits,
+                kq: &self.kq,
+                vq: &self.vq,
+                ks: &self.ks,
+                kz: &self.kz,
+                vs: &self.vs,
+                vz: &self.vz,
+                cstride: self.code_page_bytes,
+                cbase: self.code_off[l],
+                rb: if bits == 8 { w } else { w / 2 },
+                mstride: self.meta_page_words,
+                mbase: self.meta_off[l],
+            },
+        };
         LayerKv {
-            k: &self.k,
-            v: &self.v,
             table: &s.table,
-            n_layers: self.n_layers,
             l,
-            w: self.kv_width(),
+            w,
+            nkv: self.nkv,
+            dh: self.dh,
+            repr,
         }
     }
 
@@ -640,17 +1061,20 @@ impl KvCachePool {
         self.cow_splits
     }
 
-    /// Bytes resident in referenced K/V pages. Pages on the free list
-    /// are excluded: they are reusable arena capacity, not sequence
-    /// state. Compare `contiguous_bytes`.
+    /// Bytes resident in referenced K/V pages — codes and row-segment
+    /// metadata included, so quantized layers report their true (4–8×
+    /// smaller) footprint. Pages on the free list are excluded: they
+    /// are reusable arena capacity, not sequence state. Compare
+    /// `contiguous_bytes`.
     pub fn bytes(&self) -> usize {
-        self.pages_in_use() * 2 * self.page_words() * 4
+        self.pages_in_use() * self.page_bytes()
     }
 
-    /// Bytes the pre-paging contiguous layout would hold resident for
-    /// the currently admitted slots (every slot pre-allocated at its
-    /// full capacity) — the memory-over-allocation baseline the paged
-    /// bench section reports against.
+    /// Bytes the pre-paging contiguous all-f32 layout would hold
+    /// resident for the currently admitted slots (every slot
+    /// pre-allocated at its full capacity) — the memory-over-allocation
+    /// baseline the paged bench section reports against, deliberately
+    /// f32 so a quantized pool's ratio shows both savings.
     pub fn contiguous_bytes(&self) -> usize {
         self.slots
             .iter()
@@ -1409,5 +1833,137 @@ mod tests {
         p.append(s, 0, &[0.0; 2], &[0.0; 2]);
         p.advance(s);
         p.truncate(s, 3);
+    }
+
+    #[test]
+    fn qparams_roundtrip_bound_and_degenerate_segments() {
+        // Affine params reconstruct within half a quantization step.
+        for levels in [255.0f32, 15.0] {
+            let seg = [-1.25f32, 0.5, 3.0, -0.125, 2.75, 0.0];
+            let (s, z) = kv_qparams(&seg, levels);
+            for &x in &seg {
+                let c = kv_encode(x, s, z, levels);
+                let xhat = s * (c as f32 - z);
+                assert!((x - xhat).abs() <= s * 0.5 + 1e-6,
+                        "levels {levels}: {x} -> {xhat} (step {s})");
+            }
+            // Endpoints hit the first and last codes.
+            assert_eq!(kv_encode(-1.25, s, z, levels), 0);
+            assert_eq!(kv_encode(3.0, s, z, levels), levels as u8);
+        }
+        // Constant segments (zero rows included) round-trip EXACTLY:
+        // scale 1, zero −min, every code 0.
+        for c0 in [0.0f32, -7.5, 42.0] {
+            let (s, z) = kv_qparams(&[c0; 4], 15.0);
+            let c = kv_encode(c0, s, z, 15.0);
+            assert_eq!(c, 0);
+            assert_eq!(s * (c as f32 - z), c0);
+        }
+    }
+
+    #[test]
+    fn quantized_rows_read_back_within_step_and_shrink_bytes() {
+        let (nkv, dh) = (2usize, 32);
+        let w = nkv * dh;
+        let rows: Vec<Vec<f32>> = (0..PAGE_SIZE)
+            .map(|r| (0..w)
+                .map(|i| ((r * w + i) as f32 * 0.37).sin() * 3.0)
+                .collect())
+            .collect();
+        let mut byte_sizes = Vec::new();
+        for bits in [16u8, 8, 4] {
+            let mut p =
+                KvCachePool::with_kv_bits(1, nkv, dh, 1, &[bits]);
+            let s = p.admit(PAGE_SIZE).unwrap();
+            for row in &rows {
+                p.append(s, 0, row, row);
+                p.advance(s);
+            }
+            let view = p.layer_view(0, s);
+            assert_eq!(view.bits(), bits);
+            let tol = match bits {
+                16 => 0.0,
+                8 => 6.0 / 255.0 * 0.5 + 1e-6, // range ≤ 6, half step
+                _ => 6.0 / 15.0 * 0.5 + 1e-6,
+            };
+            for (r, row) in rows.iter().enumerate() {
+                let back = view.k_row_dequant(r);
+                let vback = view.v_row_dequant(r);
+                for i in 0..w {
+                    assert!((back[i] - row[i]).abs() <= tol,
+                            "bits {bits} row {r} col {i}: {} vs {}",
+                            back[i], row[i]);
+                    assert_eq!(back[i], vback[i]);
+                }
+            }
+            byte_sizes.push(p.bytes());
+        }
+        // One page resident each. At dh = 32 the per-segment (scale,
+        // zero) overhead leaves f32/kv8 = 4·dh/(dh+8) = 3.2× and
+        // f32/kv4 = 8·dh/(dh+16) ≈ 5.3×.
+        assert!(byte_sizes[0] >= 3 * byte_sizes[1],
+                "f32 {} vs kv8 {}", byte_sizes[0], byte_sizes[1]);
+        assert!(byte_sizes[1] > byte_sizes[2],
+                "kv8 {} vs kv4 {}", byte_sizes[1], byte_sizes[2]);
+    }
+
+    #[test]
+    fn quantized_pages_share_cow_and_truncate_like_f32() {
+        // The donor/sharer/CoW/rollback machinery is precision-agnostic:
+        // a shared quantized page reads back identically from both
+        // slots, and a divergent write splits only the writer's copy.
+        let (nkv, dh) = (1usize, 4);
+        let mut p = KvCachePool::with_kv_bits(1, nkv, dh, 2, &[4]);
+        let a = p.admit(2 * PAGE_SIZE).unwrap();
+        for r in 0..PAGE_SIZE + 4 {
+            let row = vec![r as f32 * 0.5 - 3.0; 4];
+            p.append(a, 0, &row, &row);
+            p.advance(a);
+        }
+        let b = p.admit_shared(2 * PAGE_SIZE, a, PAGE_SIZE).unwrap();
+        assert_eq!(p.shared_page_count(b), 1);
+        for r in 0..PAGE_SIZE {
+            assert_eq!(p.layer_view(0, a).k_row_dequant(r),
+                       p.layer_view(0, b).k_row_dequant(r), "row {r}");
+        }
+        // The sharer's continuation lands in its own fresh block; the
+        // donor's row at the same ring position stays untouched.
+        p.append(b, 0, &[9.0; 4], &[9.0; 4]);
+        p.advance(b);
+        assert_eq!(p.layer_view(0, a).k_row_dequant(PAGE_SIZE),
+                   vec![(PAGE_SIZE as f32) * 0.5 - 3.0; 4]);
+        assert_eq!(p.layer_view(0, b).k_row_dequant(PAGE_SIZE),
+                   vec![9.0; 4]);
+        // Rollback releases the sharer's dead tail page, donor intact.
+        p.truncate(b, 2);
+        p.check_page_accounting().unwrap();
+        assert_eq!(p.layer_view(0, b).k_row_dequant(1),
+                   p.layer_view(0, a).k_row_dequant(1));
+        p.retire(a);
+        p.retire(b);
+        assert_eq!(p.pages_in_use(), 0);
+        p.check_page_accounting().unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "4, 8 or 16")]
+    fn rejects_unsupported_kv_bits() {
+        KvCachePool::with_kv_bits(1, 1, 2, 1, &[2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "must be even")]
+    fn rejects_int4_with_odd_head_dim() {
+        KvCachePool::with_kv_bits(1, 1, 3, 1, &[4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "f32 read of quantized layer")]
+    fn f32_row_view_of_quantized_layer_panics() {
+        let mut p = KvCachePool::with_kv_bits(1, 1, 2, 1, &[8]);
+        let s = p.admit(4).unwrap();
+        p.append(s, 0, &[1.0, 2.0], &[3.0, 4.0]);
+        p.advance(s);
+        let _ = p.layer_view(0, s).k_row(0);
     }
 }

@@ -467,6 +467,12 @@ pub struct BatchEngine<T> {
     /// ring capacity as its target slot, so the drafter pool can
     /// always mirror every admitted sequence.
     drafter_pool: Option<KvCachePool>,
+    /// Per-layer storage widths for the lazily-built drafter pool.
+    /// `None` keeps the drafter's KV at f32: greedy-exact acceptance
+    /// never depends on drafter precision, but the identical-drafter
+    /// acceptance-ceiling guarantee does, so narrow drafter KV is
+    /// opt-in (`set_drafter_kv_bits`).
+    drafter_kv_bits: Option<Vec<u8>>,
     /// Cumulative speculative-decode counters (drafted / accepted /
     /// verify passes / tokens emitted by verify rows).
     spec_counters: SpecCounters,
@@ -488,11 +494,27 @@ impl<T> BatchEngine<T> {
     /// An engine decoding up to `slots` concurrent sequences of `cfg`'s
     /// geometry.
     pub fn new(cfg: &ModelConfig, slots: usize) -> Self {
+        Self::with_kv_bits(cfg, slots, None)
+    }
+
+    /// An engine whose target pool stores each layer's K/V at the given
+    /// width (4/8/16 bits per element, `None` = all-f32). The plan
+    /// usually comes from `allocate::allocate_kv_bits` over NSDS layer
+    /// scores; all-16 is bit-identical to `new`.
+    pub fn with_kv_bits(cfg: &ModelConfig, slots: usize,
+                        kv_bits: Option<Vec<u8>>) -> Self {
         assert!(slots > 0, "BatchEngine needs at least one slot");
+        let pool = match &kv_bits {
+            Some(bits) => {
+                KvCachePool::for_model_with_bits(cfg, slots, bits)
+            }
+            None => KvCachePool::for_model(cfg, slots),
+        };
         BatchEngine {
             cfg: cfg.clone(),
-            pool: KvCachePool::for_model(cfg, slots),
+            pool,
             drafter_pool: None,
+            drafter_kv_bits: None,
             spec_counters: SpecCounters::default(),
             pending: VecDeque::new(),
             active: Vec::new(),
@@ -501,6 +523,21 @@ impl<T> BatchEngine<T> {
             steps: 0,
             next_rid: 0,
         }
+    }
+
+    /// Store the drafter pool's K/V at these per-layer widths (e.g.
+    /// all-4-bit: draft tokens are disposable guesses, verified exactly
+    /// against the target, so narrow drafter KV trades only acceptance
+    /// rate — never output tokens — for memory). Must be called before
+    /// the first speculative step; the drafter pool is built lazily and
+    /// its precision is fixed at that point.
+    pub fn set_drafter_kv_bits(&mut self, kv_bits: Option<Vec<u8>>) {
+        assert!(
+            self.drafter_pool.is_none(),
+            "drafter pool already built; set drafter kv_bits before \
+             the first speculative step"
+        );
+        self.drafter_kv_bits = kv_bits;
     }
 
     /// Start recording step events into a fresh ring of `capacity`
@@ -810,8 +847,15 @@ impl<T> BatchEngine<T> {
                     // states map 1:1, so admission cannot fail.
                     let cfg = &self.cfg;
                     let slots = self.pool.max_slots();
+                    let dbits = self.drafter_kv_bits.as_deref();
                     let dpool = self.drafter_pool.get_or_insert_with(
-                        || KvCachePool::for_model(cfg, slots));
+                        || match dbits {
+                            Some(bits) => {
+                                KvCachePool::for_model_with_bits(
+                                    cfg, slots, bits)
+                            }
+                            None => KvCachePool::for_model(cfg, slots),
+                        });
                     let dslot = dpool
                         .admit(cap)
                         .expect("drafter pool mirrors target slots");
@@ -1204,8 +1248,8 @@ impl<T> BatchEngine<T> {
 pub fn generate_batch(exec: &dyn Executor, entry: &ModelEntry,
                       model: ModelRef, reqs: &[(Vec<i32>, GenConfig)],
                       slots: usize) -> Result<Vec<Generation>> {
-    let mut engine: BatchEngine<usize> =
-        BatchEngine::new(&entry.config, slots.max(1));
+    let mut engine: BatchEngine<usize> = BatchEngine::with_kv_bits(
+        &entry.config, slots.max(1), entry.kv_bits.clone());
     for (i, (prompt, gc)) in reqs.iter().enumerate() {
         engine
             .submit(i, prompt.clone(), gc.clone())
@@ -1227,8 +1271,8 @@ pub fn generate_batch_spec(exec: &dyn Executor, entry: &ModelEntry,
                            target: ModelRef, drafter: ModelRef,
                            reqs: &[(Vec<i32>, GenConfig)], slots: usize)
                            -> Result<Vec<Generation>> {
-    let mut engine: BatchEngine<usize> =
-        BatchEngine::new(&entry.config, slots.max(1));
+    let mut engine: BatchEngine<usize> = BatchEngine::with_kv_bits(
+        &entry.config, slots.max(1), entry.kv_bits.clone());
     for (i, (prompt, gc)) in reqs.iter().enumerate() {
         engine
             .submit(i, prompt.clone(), gc.clone())

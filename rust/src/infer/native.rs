@@ -624,13 +624,34 @@ fn silu(x: f32) -> f32 {
 /// (chronological, so the score/weight accumulation order matches the
 /// full-sequence `attention` and results agree to fp rounding). Same
 /// head mapping as `attention`. Page-table lookups are hoisted out of
-/// the per-head loops: one arena offset per window row.
+/// the per-head loops: one row locator per window row.
+///
+/// Precision dispatch happens ONCE per call on the layer's storage
+/// width: f32 layers take the pre-quantization loops verbatim (the
+/// bit-identity contract), quantized layers fuse dequant into the QK
+/// dot and V accumulation — the hot loop streams 1-byte (int8) or
+/// ½-byte (int4) codes plus one (scale, zero) pair per row-segment and
+/// never materializes f32 K/V rows, which is the whole bandwidth win.
 fn decode_attention(q: &[f32], kv: &LayerKv, rows: &[usize],
                     nh: usize, nkv: usize, dh: usize) -> Vec<f32> {
     let scale = 1.0 / (dh as f32).sqrt();
     let offs: Vec<usize> = rows.iter().map(|&r| kv.offset(r)).collect();
+    match kv.bits() {
+        16 => decode_attention_f32(q, kv, &offs, nh, nkv, dh, scale),
+        bits => {
+            decode_attention_quant(q, kv, &offs, nh, nkv, dh, scale,
+                                   bits)
+        }
+    }
+}
+
+/// The raw-f32 arm: exactly the pre-quantization float operations in
+/// the same order (pinned bit-identical by `rust/tests/kv_quant.rs`).
+fn decode_attention_f32(q: &[f32], kv: &LayerKv, offs: &[usize],
+                        nh: usize, nkv: usize, dh: usize, scale: f32)
+                        -> Vec<f32> {
     let mut ctx = vec![0.0f32; nh * dh];
-    let mut scores = vec![0.0f32; rows.len()];
+    let mut scores = vec![0.0f32; offs.len()];
     for hi in 0..nh {
         let kvh = hi * nkv / nh;
         let qrow = &q[hi * dh..(hi + 1) * dh];
@@ -655,6 +676,71 @@ fn decode_attention(q: &[f32], kv: &LayerKv, rows: &[usize],
             let vrow = &kv.v_at(off)[kvh * dh..(kvh + 1) * dh];
             for (c, vv) in crow.iter_mut().zip(vrow) {
                 *c += wgt * vv;
+            }
+        }
+    }
+    ctx
+}
+
+/// The quantized arm, scale-multiply style (the PR 7 LUT family's
+/// algebra without a table): with `x̂ = s·(c − z)` per row-segment,
+///
+///   QK:  q·k̂ = s·(Σ qᵢ·cᵢ) − s·z·(Σ qᵢ)   — Σ qᵢ hoisted per head,
+///   V:   ctx += p·v̂ = (p·s)·cⱼ − (p·s·z)   — two fused constants,
+///
+/// so the inner loops touch only integer codes; scales enter once per
+/// (row, head) segment. Int4 unpacks two codes per byte in place.
+#[allow(clippy::too_many_arguments)]
+fn decode_attention_quant(q: &[f32], kv: &LayerKv, offs: &[usize],
+                          nh: usize, nkv: usize, dh: usize, scale: f32,
+                          bits: u8) -> Vec<f32> {
+    let mut ctx = vec![0.0f32; nh * dh];
+    let mut scores = vec![0.0f32; offs.len()];
+    for hi in 0..nh {
+        let kvh = hi * nkv / nh;
+        let qrow = &q[hi * dh..(hi + 1) * dh];
+        let qsum: f32 = qrow.iter().sum();
+        let mut mx = f32::NEG_INFINITY;
+        for (j, &off) in offs.iter().enumerate() {
+            let (s, z) = kv.k_meta(off, kvh);
+            let codes = kv.k_codes(off, kvh);
+            let mut cdot = 0.0f32;
+            if bits == 8 {
+                for (a, &c) in qrow.iter().zip(codes) {
+                    cdot += a * c as f32;
+                }
+            } else {
+                for (i, &b) in codes.iter().enumerate() {
+                    cdot += qrow[2 * i] * (b & 0xf) as f32
+                        + qrow[2 * i + 1] * (b >> 4) as f32;
+                }
+            }
+            let sc = s * (cdot - z * qsum) * scale;
+            scores[j] = sc;
+            mx = mx.max(sc);
+        }
+        let mut denom = 0.0f32;
+        for sc in scores.iter_mut() {
+            *sc = (*sc - mx).exp();
+            denom += *sc;
+        }
+        let inv = 1.0 / denom;
+        let crow = &mut ctx[hi * dh..(hi + 1) * dh];
+        for (j, &off) in offs.iter().enumerate() {
+            let wgt = scores[j] * inv;
+            let (s, z) = kv.v_meta(off, kvh);
+            let codes = kv.v_codes(off, kvh);
+            let a = wgt * s;
+            let b0 = a * z;
+            if bits == 8 {
+                for (c, &cc) in crow.iter_mut().zip(codes) {
+                    *c += a * cc as f32 - b0;
+                }
+            } else {
+                for (i, &byte) in codes.iter().enumerate() {
+                    crow[2 * i] += a * (byte & 0xf) as f32 - b0;
+                    crow[2 * i + 1] += a * (byte >> 4) as f32 - b0;
+                }
             }
         }
     }

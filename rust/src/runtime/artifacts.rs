@@ -20,6 +20,11 @@ pub struct ModelEntry {
     pub hlo_grad: String,
     /// (step, loss) pairs from build-time training.
     pub train_log: Vec<(usize, f64)>,
+    /// Per-layer KV-cache storage widths (4/8/16 bits per element),
+    /// typically from `allocate::allocate_kv_bits` over NSDS layer
+    /// scores. `None` (and the manifest default) means all-f32 KV —
+    /// the bit-identical compatibility mode.
+    pub kv_bits: Option<Vec<u8>>,
 }
 
 impl ModelEntry {
@@ -38,7 +43,20 @@ impl ModelEntry {
             hlo_probe: String::new(),
             hlo_grad: String::new(),
             train_log: Vec::new(),
+            kv_bits: None,
         }
+    }
+
+    /// Same entry with a per-layer KV bit-width plan attached; engines
+    /// built from this entry store K/V pages at these widths.
+    pub fn with_kv_bits(mut self, kv_bits: Vec<u8>) -> Self {
+        assert_eq!(
+            kv_bits.len(),
+            self.config.n_layers,
+            "kv_bits length must match n_layers"
+        );
+        self.kv_bits = Some(kv_bits);
+        self
     }
 }
 
@@ -126,6 +144,14 @@ impl Manifest {
                 hlo_probe: gs("probe")?,
                 hlo_grad: gs("grad")?,
                 train_log,
+                kv_bits: m
+                    .get("kv_bits")
+                    .and_then(Json::as_arr)
+                    .map(|a| {
+                        a.iter()
+                            .filter_map(|b| Some(b.as_usize()? as u8))
+                            .collect()
+                    }),
             });
         }
 

@@ -1,0 +1,366 @@
+//! Mixed-precision KV-cache acceptance: quantized K/V pages must be a
+//! pure MEMORY optimization in the all-f32 mode and a gated, bounded
+//! approximation in the 8/4-bit modes. Pinned here:
+//!
+//! * An all-16 `kv_bits` plan (explicit or `None`) is bit-identical to
+//!   the pre-quantization engine token-for-token over random
+//!   ragged-GQA shapes, ring caps included.
+//! * Int8/int4 KV logits stay within a step-derived tolerance of the
+//!   f32-KV logits on chunk-prefilled windows, and greedy agreement
+//!   between quantized-KV and f32-KV engines clears a conservative
+//!   floor.
+//! * The paged-pool property suite — accounting, CoW sharing,
+//!   divergence, `truncate`, retire-to-empty — holds verbatim under
+//!   mixed per-layer bit widths, with dequantized read-back within
+//!   half a quantization step of what was appended.
+//! * Speculative decoding stays bit-identical to plain decode when
+//!   target AND verify share one quantized pool.
+//! * An NSDS-allocated plan at the bench geometry shrinks page bytes
+//!   >= 3x and serves deterministically end-to-end.
+
+use nsds::allocate::{allocate_kv_bits, average_bits};
+use nsds::eval::kv::kv_greedy_agreement;
+use nsds::infer::{generate_batch, generate_batch_spec, Executor,
+                  GenConfig, KvCachePool, ModelRef, NativeEngine,
+                  Sampling, SpecDecode};
+use nsds::model::{ModelConfig, Weights};
+use nsds::prop_ensure;
+use nsds::runtime::ModelEntry;
+use nsds::sensitivity::{nsds_layer_scores, NsdsOptions};
+use nsds::util::prop::check;
+use nsds::util::rng::Rng;
+
+/// Random tiny model shape (same generator family as
+/// `spec_decode.rs`): head counts drawn independently to cover MHA,
+/// grouped and ragged GQA. `d_head` stays a multiple of 4 — even, as
+/// int4 packing requires.
+fn random_config(rng: &mut Rng) -> ModelConfig {
+    let n_heads = 1 + rng.below(6);
+    let n_kv = 1 + rng.below(n_heads);
+    ModelConfig {
+        name: "kv-prop".into(),
+        vocab: 16 + rng.below(32),
+        d_model: 8 + 4 * rng.below(5),
+        n_heads,
+        n_kv,
+        d_head: 4 * (1 + rng.below(2)),
+        d_ffn: 8 * (1 + rng.below(4)),
+        n_layers: 1 + rng.below(3),
+        seq: 8 + rng.below(9),
+    }
+}
+
+fn random_tokens(rng: &mut Rng, n: usize, vocab: usize) -> Vec<i32> {
+    (0..n).map(|_| rng.below(vocab) as i32).collect()
+}
+
+fn greedy(max_new: usize, cap: usize) -> GenConfig {
+    GenConfig {
+        max_new,
+        sampling: Sampling::Greedy,
+        seed: 0,
+        stop: Vec::new(),
+        cap,
+        spec: None,
+    }
+}
+
+/// The compatibility contract: an explicit all-16 plan and `None` run
+/// the IDENTICAL float operations as each other and as the
+/// pre-quantization engine — token-for-token, stop-for-stop, across
+/// random shapes, ragged batches, and an eviction-regime ring cap.
+#[test]
+fn all_f32_kv_plan_is_bit_identical_through_generate() {
+    let exec = NativeEngine::with_workers(2);
+    check("all-16 kv_bits == default engine", 6, |rng| {
+        let cfg = random_config(rng);
+        let w = Weights::synth(&cfg, rng, &[], &[]);
+        let base = ModelEntry::synthetic(cfg.clone());
+        let all16 = base
+            .clone()
+            .with_kv_bits(vec![16u8; cfg.n_layers]);
+        let mut reqs = Vec::new();
+        for i in 0..3 {
+            let plen = 1 + rng.below(cfg.seq / 2);
+            let max_new = 1 + rng.below(cfg.seq - plen);
+            // One request per round decodes in the eviction regime.
+            let cap = if i == 2 { plen.max(4) } else { 0 };
+            reqs.push((random_tokens(rng, plen, cfg.vocab),
+                       greedy(max_new, cap)));
+        }
+        let a = generate_batch(&exec, &base, ModelRef::Dense(&w),
+                               &reqs, 2)
+            .map_err(|e| e.to_string())?;
+        let b = generate_batch(&exec, &all16, ModelRef::Dense(&w),
+                               &reqs, 2)
+            .map_err(|e| e.to_string())?;
+        for (ga, gb) in a.iter().zip(&b) {
+            prop_ensure!(ga.tokens == gb.tokens,
+                         "tokens diverged: {:?} vs {:?}", ga.tokens,
+                         gb.tokens);
+            prop_ensure!(ga.stopped == gb.stopped, "stop diverged");
+        }
+        Ok(())
+    });
+}
+
+/// Chunk-prefill a window through a pool of each precision and bound
+/// the logit error. One layer, so the only approximation between the
+/// two runs is the KV storage itself; tolerances are deliberately
+/// loose multiples of the f32 logit spread (int8's step is ~0.4% of a
+/// segment's range, int4's ~6.7% — catastrophic storage bugs miss by
+/// orders of magnitude).
+#[test]
+fn quantized_kv_logits_stay_within_tolerance() {
+    let exec = NativeEngine::with_workers(2);
+    check("int8/int4 KV logits near f32", 6, |rng| {
+        let mut cfg = random_config(rng);
+        cfg.n_layers = 1;
+        let w = Weights::synth(&cfg, rng, &[], &[]);
+        let entry = ModelEntry::synthetic(cfg.clone());
+        let v = cfg.vocab;
+        let n = 4 + rng.below(cfg.seq - 4);
+        let tokens = random_tokens(rng, n, v);
+        let run = |bits: Option<u8>| -> Result<Vec<f32>, String> {
+            let mut pool = match bits {
+                Some(b) => KvCachePool::for_model_with_bits(
+                    &cfg, 1, &vec![b; cfg.n_layers]),
+                None => KvCachePool::for_model(&cfg, 1),
+            };
+            let slot = pool.admit(n).expect("fresh pool");
+            let logits = exec
+                .prefill_chunk(&entry, &mut pool, slot, &tokens, &w)
+                .map_err(|e| e.to_string())?;
+            Ok(logits.data().to_vec())
+        };
+        let lf = run(None)?;
+        let spread = lf.iter().cloned().fold(f32::MIN, f32::max)
+            - lf.iter().cloned().fold(f32::MAX, f32::min);
+        for (b, frac) in [(8u8, 0.35f32), (4u8, 0.8f32)] {
+            let lq = run(Some(b))?;
+            let tol = frac * spread + 1e-4;
+            for (i, (a, q)) in lf.iter().zip(&lq).enumerate() {
+                prop_ensure!(
+                    (a - q).abs() <= tol,
+                    "int{b} logit {i}: {a} vs {q} (tol {tol})"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Greedy agreement between quantized-KV and f32-KV engines on the
+/// same model clears a conservative floor. Floors are far below what
+/// int8/int4 actually achieve (synthetic near-uniform logits are the
+/// WORST case for argmax stability — chance level is ~1/vocab ≈ 3%),
+/// so a miss means structural corruption, not rounding.
+#[test]
+fn quantized_kv_greedy_agreement_clears_floor() {
+    let exec = NativeEngine::with_workers(2);
+    let mut rng = Rng::new(71);
+    let mut cfg = random_config(&mut rng);
+    cfg.n_layers = 2;
+    cfg.seq = 16;
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let corpus = random_tokens(&mut rng, 96, cfg.vocab);
+    for (bits, floor) in [(8u8, 0.5f64), (4u8, 0.15f64)] {
+        let agree = kv_greedy_agreement(
+            &exec, &entry, ModelRef::Dense(&w),
+            &vec![bits; cfg.n_layers], &corpus, 6, 4, 4)
+            .unwrap();
+        assert!(agree >= floor,
+                "int{bits} agreement {agree} under floor {floor}");
+    }
+}
+
+/// The paged property suite under mixed per-layer widths: bulk + per
+/// row appends, CoW prefix sharing, divergence isolation, truncate
+/// rollback, retire-to-empty — accounting intact after every step and
+/// dequantized read-back within half a step of what was appended.
+#[test]
+fn page_accounting_cow_truncate_under_mixed_bits() {
+    check("paged invariants, mixed kv_bits", 12, |rng| {
+        let n_layers = 1 + rng.below(3);
+        let nkv = 1 + rng.below(3);
+        let dh = 4 * (1 + rng.below(2));
+        let w = nkv * dh;
+        let bits: Vec<u8> = (0..n_layers)
+            .map(|_| [4u8, 8, 16][rng.below(3)])
+            .collect();
+        let mut pool =
+            KvCachePool::with_kv_bits(n_layers, nkv, dh, 3, &bits);
+        let cap = 16 + rng.below(33);
+        let a = pool.admit(cap).expect("empty pool");
+        // Appended rows, kept for read-back: appended[pos][layer].
+        let mut appended: Vec<Vec<(Vec<f32>, Vec<f32>)>> = Vec::new();
+        let rows = 1 + rng.below(cap);
+        for _ in 0..rows {
+            let mut per_layer = Vec::new();
+            for l in 0..n_layers {
+                let kr: Vec<f32> =
+                    (0..w).map(|_| rng.f64() as f32 * 2.0 - 1.0)
+                        .collect();
+                let vr: Vec<f32> =
+                    (0..w).map(|_| rng.f64() as f32 * 2.0 - 1.0)
+                        .collect();
+                pool.append(a, l, &kr, &vr);
+                per_layer.push((kr, vr));
+            }
+            pool.advance(a);
+            appended.push(per_layer);
+        }
+        pool.check_page_accounting()?;
+        readback_ok(&pool, a, &bits, &appended, nkv, dh)?;
+
+        // CoW share, then diverge the sharer by one append.
+        let shared = 1 + rng.below(rows);
+        let b = pool.admit_shared(cap, a, shared).expect("slot free");
+        pool.check_page_accounting()?;
+        for l in 0..n_layers {
+            let kr = vec![0.25f32; w];
+            let vr = vec![-0.5f32; w];
+            pool.append(b, l, &kr, &vr);
+        }
+        pool.advance(b);
+        pool.check_page_accounting()?;
+        // The donor's rows are untouched by the sharer's divergence.
+        readback_ok(&pool, a, &bits, &appended, nkv, dh)?;
+
+        // Truncate the donor (unwrapped regime by construction).
+        let new_pos = rng.below(rows);
+        pool.truncate(a, new_pos);
+        pool.check_page_accounting()?;
+        readback_ok(&pool, a, &bits, &appended[..new_pos], nkv, dh)?;
+
+        pool.retire(a);
+        pool.retire(b);
+        pool.check_page_accounting()?;
+        prop_ensure!(pool.pages_in_use() == 0,
+                     "pages leaked: {}", pool.pages_in_use());
+        Ok(())
+    });
+}
+
+/// Every appended row of every layer reads back (dequantized) within
+/// half a quantization step per head segment; f32 layers exactly.
+fn readback_ok(pool: &KvCachePool, slot: usize, bits: &[u8],
+               appended: &[Vec<(Vec<f32>, Vec<f32>)>], nkv: usize,
+               dh: usize) -> Result<(), String> {
+    for (pos, per_layer) in appended.iter().enumerate() {
+        for (l, (kr, vr)) in per_layer.iter().enumerate() {
+            let view = pool.layer_view(l, slot);
+            let loc = view.offset(pos);
+            let kq = view.k_row_dequant(loc);
+            let vq = view.v_row_dequant(loc);
+            for h in 0..nkv {
+                for (orig, got) in
+                    [(kr, &kq), (vr, &vq)]
+                {
+                    let seg = &orig[h * dh..(h + 1) * dh];
+                    let lo =
+                        seg.iter().cloned().fold(f32::MAX, f32::min);
+                    let hi =
+                        seg.iter().cloned().fold(f32::MIN, f32::max);
+                    let tol = match bits[l] {
+                        16 => 0.0,
+                        8 => (hi - lo) / 255.0 * 0.5 + 1e-6,
+                        _ => (hi - lo) / 15.0 * 0.5 + 1e-6,
+                    };
+                    for i in 0..dh {
+                        let g = got[h * dh + i];
+                        if (seg[i] - g).abs() > tol {
+                            return Err(format!(
+                                "layer {l} pos {pos} head {h} elem \
+                                 {i}: {} vs {g} (tol {tol})",
+                                seg[i]));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Speculative decoding under a quantized target pool: draft, verify
+/// and plain decode all read the SAME pool, so exact greedy acceptance
+/// still guarantees spec == target-only token-for-token — KV precision
+/// changes the tokens both paths agree on, never their agreement.
+#[test]
+fn spec_decode_bit_identical_under_quantized_kv() {
+    let exec = NativeEngine::with_workers(2);
+    let mut rng = Rng::new(72);
+    for trial in 0..3 {
+        let cfg = random_config(&mut rng);
+        let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+        let bits: Vec<u8> = (0..cfg.n_layers)
+            .map(|l| [4u8, 8, 16][(l + trial) % 3])
+            .collect();
+        let entry =
+            ModelEntry::synthetic(cfg.clone()).with_kv_bits(bits);
+        let mut reqs = Vec::new();
+        for _ in 0..3 {
+            let plen = 1 + rng.below(cfg.seq / 2);
+            let max_new = 1 + rng.below(cfg.seq - plen);
+            let mut gc = greedy(max_new, 0);
+            gc.spec = Some(SpecDecode { k: 1 + rng.below(4) });
+            reqs.push((random_tokens(&mut rng, plen, cfg.vocab), gc));
+        }
+        let plain = generate_batch(&exec, &entry, ModelRef::Dense(&w),
+                                   &reqs, 2)
+            .unwrap();
+        let spec = generate_batch_spec(&exec, &entry,
+                                       ModelRef::Dense(&w),
+                                       ModelRef::Dense(&w), &reqs, 2)
+            .unwrap();
+        for (gp, gs) in plain.iter().zip(&spec) {
+            assert_eq!(gp.tokens, gs.tokens,
+                       "spec diverged under quantized KV");
+        }
+    }
+}
+
+/// NSDS scores -> `allocate_kv_bits` -> pool layout, at a bench-like
+/// KV geometry (d_head 32): the allocated plan's resident page bytes
+/// shrink >= 3x vs all-f32, and the full entry-to-engine path serves
+/// deterministically with the plan attached.
+#[test]
+fn nsds_allocated_plan_shrinks_bytes_and_serves() {
+    // Layout arithmetic at the bench geometry, budget 6 bits/elem:
+    // per head segment f32 = 128 B; kv8 = 32 + 8 = 40 B; kv4 = 16 + 8
+    // = 24 B. A 4-layer 8/8/4/4 split gives 512/128 = 4x.
+    let scores = vec![0.9, 0.7, 0.4, 0.2];
+    let bits = allocate_kv_bits(&scores, 6.0);
+    assert_eq!(bits, vec![8, 8, 4, 4]);
+    assert_eq!(average_bits(&bits), 6.0);
+    let f32_pool = KvCachePool::new(4, 2, 32, 2);
+    let mixed = KvCachePool::with_kv_bits(4, 2, 32, 2, &bits);
+    assert!(f32_pool.page_bytes() >= 3 * mixed.page_bytes(),
+            "page bytes {} vs {}", f32_pool.page_bytes(),
+            mixed.page_bytes());
+
+    // End-to-end: score the real test model, allocate, serve twice.
+    let exec = NativeEngine::with_workers(2);
+    let cfg = ModelConfig::test_config();
+    let mut rng = Rng::new(73);
+    let w = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let opts = NsdsOptions { workers: 2, ..NsdsOptions::default() };
+    let scores = nsds_layer_scores(&cfg, &w, &opts);
+    assert_eq!(scores.len(), cfg.n_layers);
+    let plan = allocate_kv_bits(&scores, 8.0);
+    let entry = ModelEntry::synthetic(cfg.clone()).with_kv_bits(plan);
+    let reqs = vec![
+        (random_tokens(&mut rng, 6, cfg.vocab), greedy(6, 0)),
+        (random_tokens(&mut rng, 3, cfg.vocab), greedy(8, 0)),
+    ];
+    let a = generate_batch(&exec, &entry, ModelRef::Dense(&w), &reqs, 2)
+        .unwrap();
+    let b = generate_batch(&exec, &entry, ModelRef::Dense(&w), &reqs, 2)
+        .unwrap();
+    for (ga, gb) in a.iter().zip(&b) {
+        assert!(!ga.tokens.is_empty());
+        assert_eq!(ga.tokens, gb.tokens, "non-deterministic serving");
+    }
+}
