@@ -15,12 +15,17 @@
 
 use std::time::Instant;
 
-use nsds::infer::{generate, Executor, GenConfig, ModelRef, NativeEngine,
-                  QuantizedModel, Sampling};
+use nsds::coordinator::http::{parse_sse, HttpServer};
+use nsds::coordinator::server::{serve, Client, ServedWeights,
+                                ServerQueue};
+use nsds::infer::{generate, Executor, GenConfig, GenEvent, ModelRef,
+                  NativeEngine, QuantizedModel, Sampling};
 use nsds::model::{ModelConfig, Weights};
 use nsds::quant::Backend;
 use nsds::runtime::{run_forward, ModelEntry};
-use nsds::telemetry::{render_summary, MetricsRegistry};
+use nsds::telemetry::{render_summary, snapshot_from_json,
+                      MetricsRegistry};
+use nsds::util::json::Json;
 use nsds::util::rng::Rng;
 
 fn percentile(sorted: &[f64], p: f64) -> f64 {
@@ -80,6 +85,93 @@ fn generation_demo(exec: &dyn Executor, entry: &ModelEntry,
     Ok(())
 }
 
+/// Service front-end demo: the serve loop behind
+/// `Client::generate_streaming` and the HTTP/SSE endpoint. Prints each
+/// token as it arrives (with wall-clock arrival time), then exercises
+/// `POST /v1/generate` over a raw TCP socket and fetches `/metrics`.
+fn streaming_demo(entry: &ModelEntry, w: &Weights)
+    -> anyhow::Result<()> {
+    use std::io::{Read as _, Write as _};
+
+    let queue = ServerQueue::new(16);
+    let client = Client::new(queue.clone(), entry.config.seq);
+    let serve_handle = {
+        let queue = queue.clone();
+        let entry = entry.clone();
+        let w = w.clone();
+        std::thread::spawn(move || {
+            let exec = NativeEngine::new();
+            serve(&exec, &entry, 2, ServedWeights::Dense(w), &queue)
+        })
+    };
+
+    let s = entry.config.seq;
+    let prompt: Vec<i32> = (0..(s / 2).max(1))
+        .map(|i| (i % entry.config.vocab) as i32)
+        .collect();
+    let gc = GenConfig {
+        max_new: (s / 4).clamp(1, 12),
+        ..GenConfig::default()
+    };
+
+    println!("streaming: per-token events from the serve loop");
+    let t0 = Instant::now();
+    let events = client.generate_streaming(prompt.clone(), gc.clone())?;
+    print!(" ");
+    for ev in events {
+        match ev {
+            GenEvent::Token { token, .. } => {
+                print!(" {token}@{:.1}ms",
+                       t0.elapsed().as_secs_f64() * 1e3);
+            }
+            GenEvent::Done(g) => {
+                println!("\n  done: {} tokens, ttft {:.2}ms, decode \
+                          {:.2}ms",
+                         g.tokens.len(), g.stats.ttft_s() * 1e3,
+                         g.stats.decode_s() * 1e3);
+            }
+            GenEvent::Failed(e) => println!("\n  failed: {e}"),
+        }
+    }
+
+    // The same request over HTTP: one SSE frame per token.
+    let mut http = HttpServer::bind("127.0.0.1:0", client.clone(),
+                                    queue.clone())?;
+    let body = format!(r#"{{"prompt": {:?}, "max_new": {}}}"#,
+                       prompt, gc.max_new);
+    let mut sock = std::net::TcpStream::connect(http.addr())?;
+    write!(sock, "POST /v1/generate HTTP/1.1\r\nHost: demo\r\n\
+                  Content-Length: {}\r\n\r\n{body}", body.len())?;
+    let mut resp = String::new();
+    sock.read_to_string(&mut resp)?;
+    let sse = resp.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+    let frames = parse_sse(sse).map_err(|e| anyhow::anyhow!(e))?;
+    let toks = frames.iter().filter(|(n, _)| n == "token").count();
+    println!("  POST /v1/generate on {}: {} SSE frames ({toks} token \
+              + terminal {})",
+             http.addr(), frames.len(),
+             frames.last().map(|(n, _)| n.as_str()).unwrap_or("?"));
+
+    let mut sock = std::net::TcpStream::connect(http.addr())?;
+    write!(sock, "GET /metrics HTTP/1.1\r\nHost: demo\r\n\r\n")?;
+    let mut resp = String::new();
+    sock.read_to_string(&mut resp)?;
+    let json = resp.split_once("\r\n\r\n").map(|(_, b)| b).unwrap_or("");
+    let snap = snapshot_from_json(&Json::parse(json)
+            .map_err(|e| anyhow::anyhow!(e))?)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!("  GET /metrics: {} counters, {} histograms — served {} \
+              generations, {} tokens, {} cancelled",
+             snap.counters.len(), snap.histograms.len(),
+             queue.gen_stats().0, queue.gen_stats().1,
+             queue.gen_cancelled());
+
+    client.stop();
+    serve_handle.join().unwrap()?;
+    http.shutdown();
+    Ok(())
+}
+
 /// Artifact-less mode: synthetic llama-s shape, native engine only.
 fn synthetic_main(n_requests: usize) -> anyhow::Result<()> {
     let cfg = ModelConfig::llama_s_synth();
@@ -113,7 +205,8 @@ fn synthetic_main(n_requests: usize) -> anyhow::Result<()> {
                  percentile(&lat, 0.5), percentile(&lat, 0.95));
     }
     generation_demo(&exec, &entry, ModelRef::Dense(&fp),
-                    ModelRef::Packed(&qm), &corpus)
+                    ModelRef::Packed(&qm), &corpus)?;
+    streaming_demo(&entry, &fp)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -207,5 +300,6 @@ fn main() -> anyhow::Result<()> {
     // decode path), serving the same weight variants.
     let native = NativeEngine::new();
     generation_demo(&native, entry, ModelRef::Dense(&fp),
-                    ModelRef::Packed(&q3_packed), &corpora.wiki_like)
+                    ModelRef::Packed(&q3_packed), &corpora.wiki_like)?;
+    streaming_demo(entry, &fp)
 }

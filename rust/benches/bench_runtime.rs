@@ -26,9 +26,9 @@ use harness::{bench, black_box};
 use nsds::allocate::allocate_kv_bits;
 use nsds::infer::{fused_gemm_small, fused_matmul, fused_vecmat,
                   generate_batch, generate_batch_spec, BatchEngine,
-                  Executor, GenConfig, KvCache, KvCachePool, ModelRef,
-                  NativeEngine, PackedMatrix, QuantizedModel,
-                  SpecDecode, PREFILL_CHUNK};
+                  Executor, GenConfig, GenEvent, GenSink, KvCache,
+                  KvCachePool, ModelRef, NativeEngine, PackedMatrix,
+                  QuantizedModel, SpecDecode, PREFILL_CHUNK};
 use nsds::model::{ModelConfig, Weights};
 use nsds::quant::{rtn, Backend, QuantSpec, DEFAULT_GROUP};
 use nsds::runtime::{Manifest, ModelEntry};
@@ -696,6 +696,133 @@ fn kv_quant_section() {
     );
 }
 
+/// Streaming front-end cost: per-token latency of generation with a
+/// real channel sink attached (one send per committed token — what
+/// `Client::generate_streaming` / the HTTP SSE path pay) vs the no-op
+/// buffered tags, plus cancel-reclaim latency — how long a dead
+/// client's disconnect holds its KV slot before the scheduler retires
+/// it (pinned by test to one step; here we put a wall-clock number on
+/// that step).
+fn stream_section() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{mpsc, Arc};
+
+    /// What the server attaches per request: an unbounded channel send
+    /// per event plus the open-flag probe the scheduler polls.
+    struct ChannelSink {
+        tx: mpsc::Sender<GenEvent>,
+        open: Arc<AtomicBool>,
+    }
+
+    impl GenSink for ChannelSink {
+        fn emit(&self, ev: GenEvent) -> bool {
+            self.open.load(Ordering::Acquire)
+                && self.tx.send(ev).is_ok()
+        }
+
+        fn is_connected(&self) -> bool {
+            self.open.load(Ordering::Acquire)
+        }
+    }
+
+    let cfg = ModelConfig::llama_s_synth();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(12);
+    let fp = Weights::synth(&cfg, &mut rng, &[], &[]);
+    let workers = default_workers();
+    let t4 = QuantizedModel::quantize(&cfg, &fp,
+                                      &vec![4u8; cfg.n_layers],
+                                      DEFAULT_GROUP, Backend::Rtn,
+                                      None, workers);
+    let exec = NativeEngine::new();
+    let model = ModelRef::Packed(&t4);
+
+    let b = 4usize;
+    let plen = 16usize;
+    let max_new = if harness::quick() { 16 } else { 48 };
+    let prompt = |i: usize| -> Vec<i32> {
+        (0..plen)
+            .map(|j| ((3 * i + 7 * j) % cfg.vocab) as i32)
+            .collect()
+    };
+    let gc = GenConfig { max_new, ..GenConfig::default() };
+    let total_tokens = (b * max_new) as f64;
+
+    // Fresh engine per iteration on both sides so the comparison
+    // isolates the sink, not engine setup.
+    println!("== streaming: per-token emit cost + cancel-reclaim \
+              (B={b}, {max_new} tokens/request, 4-bit target) ==");
+    let buffered = bench("buffered generate (no-op tags)", || {
+        let mut e: BatchEngine<usize> = BatchEngine::new(&cfg, b);
+        for i in 0..b {
+            assert!(e.submit(i, prompt(i), gc.clone()).is_ok());
+        }
+        black_box(e.run(&exec, &entry, model).unwrap());
+    });
+    let streamed = bench("streamed generate (channel sinks)", || {
+        let mut e: BatchEngine<ChannelSink> = BatchEngine::new(&cfg, b);
+        let mut rxs = Vec::with_capacity(b);
+        for i in 0..b {
+            let (tx, rx) = mpsc::channel();
+            rxs.push(rx);
+            let sink = ChannelSink {
+                tx,
+                open: Arc::new(AtomicBool::new(true)),
+            };
+            assert!(e.submit(sink, prompt(i), gc.clone()).is_ok());
+        }
+        black_box(e.run(&exec, &entry, model).unwrap());
+        // Drain what a client would read: Token xN then Done.
+        for rx in rxs {
+            black_box(rx.try_iter().count());
+        }
+    });
+    println!(
+        "  -> per token: buffered {:.0} ns, streamed {:.0} ns \
+         (emit overhead {:+.0} ns/token, {:+.1}%)",
+        buffered.median_ns / total_tokens,
+        streamed.median_ns / total_tokens,
+        (streamed.median_ns - buffered.median_ns) / total_tokens,
+        100.0 * (streamed.median_ns - buffered.median_ns)
+            / buffered.median_ns
+    );
+
+    // Cancel-reclaim: submit B streams, decode one step, hang up on
+    // request 0, and count scheduler steps + wall time until the
+    // engine retires it. State-mutating, so measured one-shot rather
+    // than through the harness loop.
+    let mut e: BatchEngine<ChannelSink> = BatchEngine::new(&cfg, b);
+    let mut flags = Vec::with_capacity(b);
+    let mut rxs = Vec::with_capacity(b);
+    for i in 0..b {
+        let (tx, rx) = mpsc::channel();
+        rxs.push(rx);
+        let open = Arc::new(AtomicBool::new(true));
+        flags.push(open.clone());
+        let sink = ChannelSink { tx, open };
+        assert!(e.submit(sink, prompt(i), gc.clone()).is_ok());
+    }
+    e.step(&exec, &entry, model).unwrap();
+    let pages_before = e.pool().pages_in_use();
+    flags[0].store(false, Ordering::Release);
+    drop(rxs.remove(0));
+    let t0 = std::time::Instant::now();
+    let mut steps = 0usize;
+    while e.cancelled_total() == 0 {
+        e.step(&exec, &entry, model).unwrap();
+        steps += 1;
+        assert!(steps <= 4, "disconnect never reclaimed the slot");
+    }
+    let reclaim_ns = t0.elapsed().as_nanos() as f64;
+    println!(
+        "  -> cancel reclaim: {steps} step(s), {:.0} us wall, pages \
+         {pages_before} -> {} (in-flight {b} -> {})",
+        reclaim_ns / 1e3,
+        e.pool().pages_in_use(),
+        e.in_flight()
+    );
+}
+
 fn pipeline_section() -> anyhow::Result<()> {
     use nsds::baselines::Method;
     use nsds::coordinator::Pipeline;
@@ -908,6 +1035,8 @@ fn main() -> anyhow::Result<()> {
     spec_decode_section();
     harness::set_section("kv_quant");
     kv_quant_section();
+    harness::set_section("stream");
+    stream_section();
     let dir = Manifest::default_dir();
     if dir.join("manifest.json").exists() {
         harness::set_section("pipeline");

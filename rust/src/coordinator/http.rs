@@ -1,0 +1,463 @@
+//! HTTP/JSON + SSE facade over the serving coordinator — the piece
+//! that turns the library into a service, with ZERO new dependencies
+//! (std `TcpListener`, `util::json`; serde/hyper are unreachable
+//! offline, see DESIGN.md "Environment deviations").
+//!
+//! Endpoints:
+//!
+//! | route               | method | reply                               |
+//! |---------------------|--------|-------------------------------------|
+//! | `/v1/generate`      | POST   | `text/event-stream`, one SSE frame  |
+//! |                     |        | per committed token, terminated by  |
+//! |                     |        | a `done` (or `error`) frame         |
+//! | `/metrics`          | GET    | `telemetry::snapshot_to_json` of    |
+//! |                     |        | the queue's registry                |
+//! | `/healthz`          | GET    | `200 ok`                            |
+//!
+//! The generate response streams with `Connection: close` and no
+//! Content-Length — each token flushes as its own SSE frame the moment
+//! the scheduler commits it, so time-to-first-byte tracks the engine's
+//! TTFT instead of the full generation. Client disconnect is wired to
+//! the cancel path end to end: a failed frame write drops the
+//! request's `GenEvents` receiver, whose `Drop` clears the stream's
+//! liveness flag, and the serve scheduler retires the KV slot (target
+//! and drafter pools both) at the end of the step that notices — a
+//! dead curl frees its decode slot within one step instead of decoding
+//! to completion.
+//!
+//! One OS thread per connection, plus one accept thread. That is the
+//! right shape here: concurrency is bounded by the engine's KV slots
+//! and the bounded `ServerQueue` (backpressure blocks the connection
+//! thread, not the serve loop), so connection count stays small and an
+//! async runtime would buy nothing for the cost of a dependency.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coordinator::server::{Client, ServerQueue};
+use crate::infer::{GenConfig, GenEvent, Sampling, SpecDecode,
+                   StopReason};
+use crate::telemetry::snapshot_to_json;
+use crate::util::json::Json;
+
+/// Largest accepted `POST /v1/generate` body. Prompts are token-id
+/// arrays (~8 bytes/token as text), so this bounds prompts around
+/// 100k tokens — far past any KV capacity — while keeping a hostile
+/// Content-Length from allocating unbounded memory.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// One parsed SSE frame: `(event name, data payload)`.
+pub type SseFrame = (String, Json);
+
+/// Serialize one generation event as an SSE frame (`event:` +
+/// `data:` + blank line). Inverse of `parse_sse` (round-trip pinned
+/// by `rust/tests/http_serve.rs`).
+pub fn sse_frame(ev: &GenEvent) -> String {
+    let (name, data) = event_to_json(ev);
+    format!("event: {name}\ndata: {data}\n\n")
+}
+
+/// `(event name, JSON payload)` for one generation event — the wire
+/// schema of the `/v1/generate` stream.
+pub fn event_to_json(ev: &GenEvent) -> (&'static str, Json) {
+    fn obj(fields: Vec<(&str, Json)>) -> Json {
+        Json::Obj(fields.into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect())
+    }
+    match ev {
+        GenEvent::Token { token, pos } => ("token", obj(vec![
+            ("token", Json::Num(*token as f64)),
+            ("pos", Json::Num(*pos as f64)),
+        ])),
+        GenEvent::Done(g) => {
+            let tokens = Json::Arr(
+                g.tokens.iter().map(|t| Json::Num(*t as f64)).collect());
+            let stopped = match g.stopped {
+                StopReason::MaxNew => Json::Str("max_new".into()),
+                StopReason::StopToken(t) => {
+                    Json::Str(format!("stop_token:{t}"))
+                }
+            };
+            ("done", obj(vec![
+                ("tokens", tokens),
+                ("stopped", stopped),
+                ("prompt_tokens",
+                 Json::Num(g.stats.prompt_tokens as f64)),
+                ("gen_tokens", Json::Num(g.stats.gen_tokens as f64)),
+                ("prefill_ns", Json::Num(g.stats.prefill_ns as f64)),
+                ("ttft_ns", Json::Num(g.stats.ttft_ns as f64)),
+                ("decode_ns", Json::Num(g.stats.decode_ns as f64)),
+            ]))
+        }
+        GenEvent::Failed(e) => ("error", obj(vec![
+            ("error", Json::Str(e.clone())),
+        ])),
+    }
+}
+
+/// Parse a concatenation of SSE frames back into `(event, data)`
+/// pairs. Tolerates the frame subset `sse_frame` emits (single-line
+/// `data:`), which is all this server ever sends.
+pub fn parse_sse(stream: &str) -> Result<Vec<SseFrame>, String> {
+    let mut out = Vec::new();
+    for frame in stream.split("\n\n").filter(|f| !f.trim().is_empty()) {
+        let mut name = None;
+        let mut data = None;
+        for line in frame.lines() {
+            if let Some(v) = line.strip_prefix("event: ") {
+                name = Some(v.to_string());
+            } else if let Some(v) = line.strip_prefix("data: ") {
+                data = Some(Json::parse(v)?);
+            } else {
+                return Err(format!("unexpected SSE line: {line:?}"));
+            }
+        }
+        match (name, data) {
+            (Some(n), Some(d)) => out.push((n, d)),
+            _ => return Err(format!("incomplete SSE frame: {frame:?}")),
+        }
+    }
+    Ok(out)
+}
+
+/// Parse a `POST /v1/generate` JSON body into (prompt, config).
+///
+/// Schema: `prompt` (required, array of token ids); optional
+/// `max_new`, `seed`, `stop` (array of token ids), `spec_k` (enables
+/// speculative decoding), and `temperature`/`top_k` (either one
+/// switches sampling from greedy to top-k; the other defaults to
+/// `top_k=40` / `temperature=1.0`).
+pub fn parse_gen_request(j: &Json)
+    -> Result<(Vec<i32>, GenConfig), String> {
+    let prompt = j.get("prompt").and_then(Json::as_arr).ok_or(
+        "missing required field \"prompt\" (array of token ids)")?;
+    let mut tokens = Vec::with_capacity(prompt.len());
+    for t in prompt {
+        tokens.push(t.as_f64()
+            .ok_or("\"prompt\" entries must be numbers")? as i32);
+    }
+    let num = |key: &str| -> Result<Option<f64>, String> {
+        match j.get(key) {
+            None => Ok(None),
+            Some(v) => v.as_f64().map(Some)
+                .ok_or(format!("\"{key}\" must be a number")),
+        }
+    };
+    let mut cfg = GenConfig::default();
+    if let Some(n) = num("max_new")? {
+        cfg.max_new = n as usize;
+    }
+    if let Some(n) = num("seed")? {
+        cfg.seed = n as u64;
+    }
+    if let Some(stop) = j.get("stop") {
+        let arr = stop.as_arr()
+            .ok_or("\"stop\" must be an array of token ids")?;
+        cfg.stop = arr.iter()
+            .map(|t| t.as_f64().map(|n| n as i32)
+                .ok_or("\"stop\" entries must be numbers".to_string()))
+            .collect::<Result<_, _>>()?;
+    }
+    let temperature = num("temperature")?;
+    let top_k = num("top_k")?;
+    if temperature.is_some() || top_k.is_some() {
+        cfg.sampling = Sampling::TopK {
+            k: top_k.map(|k| k as usize).unwrap_or(40),
+            temperature: temperature.unwrap_or(1.0) as f32,
+        };
+    }
+    if let Some(k) = num("spec_k")? {
+        cfg.spec = Some(SpecDecode { k: (k as usize).max(1) });
+    }
+    Ok((tokens, cfg))
+}
+
+/// The running HTTP front end: an accept-loop thread plus one thread
+/// per live connection, all speaking to the serve loop through a
+/// cloned `Client`. `shutdown` (or drop) stops accepting; streams in
+/// flight finish or cancel on their own disconnects.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port) and
+    /// start serving requests against `client`/`queue`. The serve
+    /// loop itself must be running on its own thread (`serve` /
+    /// `serve_with_drafter`) for generations to make progress.
+    pub fn bind(addr: &str, client: Client, queue: Arc<ServerQueue>)
+        -> Result<HttpServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let accept = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if flag.load(Ordering::Acquire) {
+                    break;
+                }
+                let Ok(conn) = conn else { continue };
+                let client = client.clone();
+                let queue = queue.clone();
+                std::thread::spawn(move || {
+                    // Connection errors (reset, parse failure) only
+                    // affect this connection; cancellation of any
+                    // in-flight generation rides the GenEvents drop.
+                    let _ = handle_conn(conn, &client, &queue);
+                });
+            }
+        });
+        Ok(HttpServer { addr, stop, accept: Some(accept) })
+    }
+
+    /// The bound address (port resolved when binding `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting connections and join the accept thread.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Read one HTTP/1.1 request: `(method, path, body)`. Only what this
+/// server needs — no chunked bodies, no keep-alive (every response
+/// closes the connection).
+fn read_request(reader: &mut BufReader<TcpStream>)
+    -> std::io::Result<(String, String, String)> {
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        if reader.read_line(&mut h)? == 0 {
+            break;
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h
+            .to_ascii_lowercase()
+            .strip_prefix("content-length:")
+            .map(str::trim)
+        {
+            content_len = v.parse().unwrap_or(0);
+        }
+    }
+    if content_len > MAX_BODY_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData, "body too large"));
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+    let body = String::from_utf8(body).map_err(|_| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData,
+                            "body not utf-8")
+    })?;
+    Ok((method, path, body))
+}
+
+fn respond(s: &mut TcpStream, status: &str, ctype: &str, body: &str)
+    -> std::io::Result<()> {
+    write!(
+        s,
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len())?;
+    s.flush()
+}
+
+fn respond_error(s: &mut TcpStream, status: &str, msg: &str)
+    -> std::io::Result<()> {
+    let body = Json::Obj(
+        [("error".to_string(), Json::Str(msg.to_string()))]
+            .into_iter()
+            .collect());
+    respond(s, status, "application/json", &body.to_string())
+}
+
+fn handle_conn(stream: TcpStream, client: &Client,
+               queue: &Arc<ServerQueue>) -> std::io::Result<()> {
+    // A stalled or hostile client must not pin the reader thread
+    // forever; streaming writes below clear the limit implicitly by
+    // failing, which cancels the generation.
+    stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut stream = stream;
+    let (method, path, body) = read_request(&mut reader)?;
+    match (method.as_str(), path.as_str()) {
+        ("GET", "/healthz") => {
+            respond(&mut stream, "200 OK", "text/plain", "ok\n")
+        }
+        ("GET", "/metrics") => {
+            let snap = queue.metrics().snapshot();
+            respond(&mut stream, "200 OK", "application/json",
+                    &snapshot_to_json(&snap).to_string())
+        }
+        ("POST", "/v1/generate") => {
+            let parsed = Json::parse(&body)
+                .and_then(|j| parse_gen_request(&j));
+            let (prompt, cfg) = match parsed {
+                Ok(p) => p,
+                Err(e) => {
+                    return respond_error(&mut stream,
+                                         "400 Bad Request", &e);
+                }
+            };
+            // Backpressure blocks HERE (this connection's thread),
+            // never the serve loop.
+            let events = match client.generate_streaming(prompt, cfg) {
+                Ok(ev) => ev,
+                Err(e) => {
+                    return respond_error(
+                        &mut stream, "503 Service Unavailable",
+                        &format!("{e:#}"));
+                }
+            };
+            write!(
+                stream,
+                "HTTP/1.1 200 OK\r\n\
+                 Content-Type: text/event-stream\r\n\
+                 Cache-Control: no-cache\r\n\
+                 Connection: close\r\n\r\n")?;
+            stream.flush()?;
+            for ev in events {
+                let terminal = matches!(
+                    ev, GenEvent::Done(_) | GenEvent::Failed(_));
+                let frame = sse_frame(&ev);
+                if stream
+                    .write_all(frame.as_bytes())
+                    .and_then(|_| stream.flush())
+                    .is_err()
+                {
+                    // Receiver gone: breaking drops `events`, whose
+                    // Drop clears the liveness flag — the scheduler
+                    // cancels the request and frees its KV slot at
+                    // the end of the step that notices.
+                    break;
+                }
+                if terminal {
+                    break;
+                }
+            }
+            Ok(())
+        }
+        _ => respond_error(&mut stream, "404 Not Found",
+                           &format!("no route for {method} {path}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::{GenStats, Generation};
+
+    #[test]
+    fn sse_round_trips_every_event_kind() {
+        let evs = vec![
+            GenEvent::Token { token: 42, pos: 0 },
+            GenEvent::Token { token: -1, pos: 1 },
+            GenEvent::Done(Generation {
+                tokens: vec![42, -1],
+                stats: GenStats {
+                    prompt_tokens: 3,
+                    gen_tokens: 2,
+                    prefill_ns: 123,
+                    ttft_ns: 456,
+                    decode_ns: 789,
+                },
+                stopped: StopReason::StopToken(-1),
+            }),
+            GenEvent::Failed("bad prompt: \"x\"\nline2".into()),
+        ];
+        let wire: String = evs.iter().map(sse_frame).collect();
+        let frames = parse_sse(&wire).unwrap();
+        assert_eq!(frames.len(), 4);
+        assert_eq!(frames[0].0, "token");
+        assert_eq!(frames[0].1.get("token").unwrap().as_f64(),
+                   Some(42.0));
+        assert_eq!(frames[1].1.get("token").unwrap().as_f64(),
+                   Some(-1.0));
+        assert_eq!(frames[1].1.get("pos").unwrap().as_usize(), Some(1));
+        assert_eq!(frames[2].0, "done");
+        assert_eq!(frames[2].1.get("stopped").unwrap().as_str(),
+                   Some("stop_token:-1"));
+        assert_eq!(
+            frames[2].1.get("tokens").unwrap().idx(1).unwrap().as_f64(),
+            Some(-1.0));
+        assert_eq!(frames[2].1.get("decode_ns").unwrap().as_f64(),
+                   Some(789.0));
+        assert_eq!(frames[3].0, "error");
+        // Newline inside the error must survive JSON escaping — an
+        // unescaped newline would split the data: line and break SSE.
+        assert_eq!(frames[3].1.get("error").unwrap().as_str(),
+                   Some("bad prompt: \"x\"\nline2"));
+    }
+
+    #[test]
+    fn gen_request_parses_full_schema() {
+        let j = Json::parse(
+            r#"{"prompt": [1, 2, 3], "max_new": 7, "seed": 9,
+                "temperature": 0.5, "top_k": 3, "stop": [0],
+                "spec_k": 4}"#).unwrap();
+        let (prompt, cfg) = parse_gen_request(&j).unwrap();
+        assert_eq!(prompt, vec![1, 2, 3]);
+        assert_eq!(cfg.max_new, 7);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.stop, vec![0]);
+        assert_eq!(cfg.sampling,
+                   Sampling::TopK { k: 3, temperature: 0.5 });
+        assert_eq!(cfg.spec, Some(SpecDecode { k: 4 }));
+    }
+
+    #[test]
+    fn gen_request_defaults_and_greedy() {
+        let j = Json::parse(r#"{"prompt": [5]}"#).unwrap();
+        let (prompt, cfg) = parse_gen_request(&j).unwrap();
+        assert_eq!(prompt, vec![5]);
+        assert_eq!(cfg.sampling, Sampling::Greedy);
+        assert_eq!(cfg.spec, None);
+        let d = GenConfig::default();
+        assert_eq!(cfg.max_new, d.max_new);
+        assert_eq!(cfg.seed, d.seed);
+    }
+
+    #[test]
+    fn gen_request_rejects_bad_shapes() {
+        for bad in [
+            r#"{}"#,
+            r#"{"prompt": 3}"#,
+            r#"{"prompt": ["a"]}"#,
+            r#"{"prompt": [1], "max_new": "x"}"#,
+            r#"{"prompt": [1], "stop": 0}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(parse_gen_request(&j).is_err(), "accepted: {bad}");
+        }
+    }
+}

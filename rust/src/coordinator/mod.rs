@@ -8,6 +8,7 @@
 //! quantizes, and evaluates THROUGH the executor.
 
 pub mod calib;
+pub mod http;
 pub mod server;
 
 use std::collections::HashMap;

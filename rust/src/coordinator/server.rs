@@ -18,14 +18,33 @@
 //! workers. Admission is prefix-aware over the paged KV pool: a request
 //! whose prompt shares a tokenized prefix with a resident sequence
 //! references the resident pages copy-on-write and only chunk-prefills
-//! the tail (the `serve.gen.shared_prefix_tokens` gauge counts the
+//! the tail (the `serve.gen.shared_prefix_tokens` counter counts the
 //! prefill work saved). Serving metrics — counters, gauges, and
 //! latency histograms — record into the queue's `MetricsRegistry`
 //! (see `ServerQueue`); snapshot it for the JSON export or the human
 //! summary.
+//!
+//! Generation replies STREAM: each request's channel carries one
+//! `GenEvent::Token` per committed token as the scheduler commits it
+//! (bit-identical to the batch result — same `consume_row` path),
+//! terminated by `GenEvent::Done` with the finished `Generation` (or
+//! `GenEvent::Failed`). `Client::generate` drains the stream and keeps
+//! its one-shot signature; `Client::generate_streaming` exposes the
+//! events. Dropping the receiver (`GenEvents`) CANCELS the request:
+//! the engine notices the dead sink — a failed token send, or the
+//! liveness flag the receiver's `Drop` clears, which catches
+//! disconnects during prefill when no tokens flow — and retires the
+//! request's KV slot (target and drafter pools both) at the end of
+//! the step that notices, tracing a rid-stamped `Ev::Cancel` and
+//! counting `serve.gen.cancelled`. No reply-channel failure is
+//! silently ignored: undeliverable terminal replies count into
+//! `serve.dropped_replies`.
+//!
 //! Scheduler intake is bounded (about two batches of generations), so
 //! excess requests stay in the bounded queue.
-//! Backpressure: submitters block while the queue is at `max_queue`.
+//! Backpressure: submitters block while the queue holds `max_queue`
+//! WORK messages (control messages — swap/stop barriers — never count
+//! against work capacity).
 //!
 //! Weight swap is a queued control message, so deploying a new quantized
 //! variant is ordered with respect to in-flight requests and requires NO
@@ -45,12 +64,11 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::eval::ppl::batch_nll;
-use crate::infer::{BatchEngine, Executor, GenConfig, Generation,
-                   ModelRef, QuantizedModel, SpecCounters};
+use crate::infer::{BatchEngine, Executor, GenConfig, GenEvent, GenSink,
+                   Generation, ModelRef, QuantizedModel, SpecCounters};
 use crate::model::Weights;
 use crate::runtime::ModelEntry;
-use crate::telemetry::registry::{Counter, Gauge, Histogram,
-                                 MetricsRegistry};
+use crate::telemetry::registry::{Counter, Histogram, MetricsRegistry};
 
 /// A deployable weight variant: dense f32 or packed 2/4-bit codes.
 pub enum ServedWeights {
@@ -113,7 +131,90 @@ struct Request {
 struct GenRequest {
     prompt: Vec<i32>,
     cfg: GenConfig,
-    reply: std::sync::mpsc::Sender<Result<Generation>>,
+    reply: GenStream,
+}
+
+/// The sending half of one generation's event stream — the per-request
+/// tag the shared scheduler carries (`BatchEngine<GenStream>`). `emit`
+/// failing (receiver dropped) latches `open` to false, and the
+/// receiver's `Drop` clears the same flag directly, so the engine's
+/// once-per-step `is_connected` probe catches disconnects even while
+/// the request is still pending or prefilling and no tokens flow.
+pub struct GenStream {
+    tx: std::sync::mpsc::Sender<GenEvent>,
+    open: Arc<AtomicBool>,
+}
+
+impl GenSink for GenStream {
+    fn emit(&self, ev: GenEvent) -> bool {
+        if !self.open.load(Ordering::Acquire) {
+            return false;
+        }
+        if self.tx.send(ev).is_err() {
+            self.open.store(false, Ordering::Release);
+            return false;
+        }
+        true
+    }
+
+    fn is_connected(&self) -> bool {
+        self.open.load(Ordering::Acquire)
+    }
+}
+
+/// The receiving half of one generation's event stream: per-token
+/// `GenEvent`s as the scheduler commits them, terminated by `Done` (the
+/// finished `Generation`, identical to what `Client::generate` returns)
+/// or `Failed`. Dropping this handle CANCELS the generation — the serve
+/// scheduler retires its KV slot at the end of the step that notices
+/// the disconnect instead of decoding to completion.
+pub struct GenEvents {
+    rx: std::sync::mpsc::Receiver<GenEvent>,
+    open: Arc<AtomicBool>,
+}
+
+impl GenEvents {
+    /// Block for the next event; `None` once the stream is exhausted
+    /// (after a terminal event, or if the server dropped the request).
+    pub fn next_event(&self) -> Option<GenEvent> {
+        self.rx.recv().ok()
+    }
+
+    /// Drain the stream to its terminal event and return the finished
+    /// generation — exactly `Client::generate`'s behavior.
+    pub fn wait(self) -> Result<Generation> {
+        loop {
+            match self.rx.recv() {
+                Ok(GenEvent::Token { .. }) => continue,
+                Ok(GenEvent::Done(g)) => return Ok(g),
+                Ok(GenEvent::Failed(e)) => {
+                    return Err(anyhow::anyhow!(e));
+                }
+                Err(_) => {
+                    return Err(anyhow::anyhow!(
+                        "server dropped request"));
+                }
+            }
+        }
+    }
+}
+
+impl Iterator for GenEvents {
+    type Item = GenEvent;
+
+    fn next(&mut self) -> Option<GenEvent> {
+        self.rx.recv().ok()
+    }
+}
+
+impl Drop for GenEvents {
+    /// Disconnect signal: clearing the shared flag is what lets the
+    /// serve scheduler cancel a request that has not emitted anything
+    /// yet (pending or mid-prefill) — a failed send alone could not
+    /// tell it.
+    fn drop(&mut self) {
+        self.open.store(false, Ordering::Release);
+    }
 }
 
 /// Shared queue + telemetry between clients and the engine thread.
@@ -130,9 +231,19 @@ struct GenRequest {
 ///   `serve.nll.padded_rows` — counters for the padded-forward path.
 /// * `serve.gen.requests` / `serve.gen.tokens` — counters over
 ///   finished generations.
-/// * `serve.gen.shared_prefix_tokens` — gauge: prompt tokens admitted
-///   by shared-prefix page reference instead of prefill
-///   (`KvCachePool::admit_shared`).
+/// * `serve.gen.shared_prefix_tokens` — monotone counter: prompt
+///   tokens admitted by shared-prefix page reference instead of
+///   prefill (`KvCachePool::admit_shared`). Published as per-step
+///   deltas against the engine's lifetime total, so it stays correct
+///   across `swap_deployment` engine rebuilds and across serve calls
+///   sharing one registry (the same delta discipline as
+///   `serve.gen.spec.*`).
+/// * `serve.gen.cancelled` — counter: generation requests cancelled
+///   because their receiver disconnected (the engine freed their KV
+///   slots without finishing; same delta discipline).
+/// * `serve.dropped_replies` — counter: terminal replies (finished
+///   generation, NLL result, or failure notice) whose receiver was
+///   already gone — silent client loss made observable.
 /// * `serve.gen.prefill_ns` / `serve.gen.ttft_ns` /
 ///   `serve.gen.decode_ns` — histograms over finished generations,
 ///   recording each request's `GenStats` nanosecond fields verbatim
@@ -161,7 +272,9 @@ pub struct ServerQueue {
     padded_rows: Counter,
     gen_served: Counter,
     gen_tokens: Counter,
-    gen_shared_tokens: Gauge,
+    gen_shared_tokens: Counter,
+    gen_cancelled: Counter,
+    dropped_replies: Counter,
     gen_spec_drafted: Counter,
     gen_spec_accepted: Counter,
     gen_spec_emitted: Counter,
@@ -195,7 +308,10 @@ impl ServerQueue {
             gen_served: registry.counter("serve.gen.requests"),
             gen_tokens: registry.counter("serve.gen.tokens"),
             gen_shared_tokens:
-                registry.gauge("serve.gen.shared_prefix_tokens"),
+                registry.counter("serve.gen.shared_prefix_tokens"),
+            gen_cancelled: registry.counter("serve.gen.cancelled"),
+            dropped_replies:
+                registry.counter("serve.dropped_replies"),
             gen_spec_drafted:
                 registry.counter("serve.gen.spec.drafted"),
             gen_spec_accepted:
@@ -222,8 +338,22 @@ impl ServerQueue {
         let mut q = self.queue.lock().unwrap();
         // Control messages bypass backpressure; work messages respect it
         // (and stop waiting if the server shuts down underneath them).
+        // The wait gates on the number of queued WORK messages, not the
+        // raw queue length: Swap/Stop barriers sitting in the queue
+        // must not shrink effective work capacity (a barrier-heavy
+        // caller could otherwise wedge submitters against a queue
+        // "full" of control messages). O(queue) per wake is fine — the
+        // queue is bounded by max_queue work messages plus however
+        // many barriers, both small.
+        let work = |q: &VecDeque<Msg>| {
+            q.iter()
+                .filter(|m| {
+                    matches!(m, Msg::Infer(_) | Msg::Generate(_))
+                })
+                .count()
+        };
         if matches!(msg, Msg::Infer(_) | Msg::Generate(_)) {
-            while q.len() >= self.max_queue
+            while work(&q) >= self.max_queue
                 && !self.stopped.load(Ordering::Acquire)
             {
                 q = self.cv.wait(q).unwrap();
@@ -256,10 +386,22 @@ impl ServerQueue {
     }
 
     /// Prompt tokens the scheduler admitted by referencing resident
-    /// prefix pages instead of prefilling them
-    /// (`serve.gen.shared_prefix_tokens`).
+    /// prefix pages instead of prefilling them — thin view over the
+    /// `serve.gen.shared_prefix_tokens` counter.
     pub fn gen_shared(&self) -> u64 {
         self.gen_shared_tokens.get()
+    }
+
+    /// Generation requests cancelled on client disconnect — thin view
+    /// over the `serve.gen.cancelled` counter.
+    pub fn gen_cancelled(&self) -> u64 {
+        self.gen_cancelled.get()
+    }
+
+    /// Terminal replies whose receiver was already gone — thin view
+    /// over the `serve.dropped_replies` counter.
+    pub fn dropped_replies(&self) -> u64 {
+        self.dropped_replies.get()
     }
 
     /// (cumulative per-request prefill seconds, cumulative
@@ -321,23 +463,39 @@ impl Client {
 
     /// Submit one generation request (prompt of ANY length — generation
     /// is KV-cached, not bound to the server's [batch, seq] shape);
-    /// blocks under backpressure. Returns the reply channel.
+    /// blocks under backpressure. Returns the event stream: one
+    /// `GenEvent::Token` per committed token, terminated by `Done` or
+    /// `Failed`. Dropping the stream cancels the request and frees its
+    /// KV slot (see `GenEvents`).
     pub fn submit_generate(&self, prompt: Vec<i32>, cfg: GenConfig)
-        -> Result<std::sync::mpsc::Receiver<Result<Generation>>> {
+        -> Result<GenEvents> {
         anyhow::ensure!(!prompt.is_empty(), "empty generation prompt");
         anyhow::ensure!(!self.q.stopped.load(Ordering::Acquire),
                         "server stopped");
         let (tx, rx) = std::sync::mpsc::channel();
-        self.q.push(Msg::Generate(GenRequest { prompt, cfg, reply: tx }));
-        Ok(rx)
+        let open = Arc::new(AtomicBool::new(true));
+        self.q.push(Msg::Generate(GenRequest {
+            prompt,
+            cfg,
+            reply: GenStream { tx, open: open.clone() },
+        }));
+        Ok(GenEvents { rx, open })
     }
 
-    /// Submit a generation request and wait for the finished generation.
+    /// Submit a generation request and stream it: tokens arrive as the
+    /// scheduler commits them (bit-identical to what `generate` would
+    /// return), and dropping the stream cancels the request. Alias of
+    /// `submit_generate`, named for discoverability next to `generate`.
+    pub fn generate_streaming(&self, prompt: Vec<i32>, cfg: GenConfig)
+        -> Result<GenEvents> {
+        self.submit_generate(prompt, cfg)
+    }
+
+    /// Submit a generation request and wait for the finished generation
+    /// (drains the event stream internally).
     pub fn generate(&self, prompt: Vec<i32>, cfg: GenConfig)
         -> Result<Generation> {
-        let rx = self.submit_generate(prompt, cfg)?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("server dropped request"))?
+        self.submit_generate(prompt, cfg)?.wait()
     }
 
     /// Queue a zero-downtime dense weight swap (ordered with
@@ -371,10 +529,6 @@ impl Client {
         self.q.push(Msg::Stop);
     }
 }
-
-/// Per-request tag the shared scheduler carries: the reply channel a
-/// finished generation resolves.
-type GenReply = std::sync::mpsc::Sender<Result<Generation>>;
 
 /// Run the batching serve loop on the thread that owns the executor.
 /// Returns when a `Stop` message is consumed and all earlier work has
@@ -412,7 +566,7 @@ pub fn serve_with_drafter(exec: &(dyn Executor + Sync),
                           weights: ServedWeights,
                           drafter: Option<ServedWeights>,
                           q: &ServerQueue) -> Result<()> {
-    let mut engine: BatchEngine<GenReply> = BatchEngine::with_kv_bits(
+    let mut engine: BatchEngine<GenStream> = BatchEngine::with_kv_bits(
         &entry.config, batch.max(1), entry.kv_bits.clone());
     let res =
         serve_loop(exec, entry, batch, weights, drafter, q, &mut engine);
@@ -423,8 +577,11 @@ pub fn serve_with_drafter(exec: &(dyn Executor + Sync),
         // server stopped so new submissions error instead of hanging on
         // replies that will never come.
         for reply in engine.abort_all() {
-            let _ = reply.send(Err(anyhow::anyhow!(
-                "server failed: {e:#}")));
+            if !reply.emit(GenEvent::Failed(format!(
+                "server failed: {e:#}")))
+            {
+                q.dropped_replies.inc();
+            }
         }
         q.stopped.store(true, Ordering::Release);
         q.queue.lock().unwrap().clear();
@@ -436,17 +593,20 @@ pub fn serve_with_drafter(exec: &(dyn Executor + Sync),
 fn serve_loop(exec: &(dyn Executor + Sync), entry: &ModelEntry,
               batch: usize, mut weights: ServedWeights,
               mut drafter: Option<ServedWeights>,
-              q: &ServerQueue, engine: &mut BatchEngine<GenReply>)
+              q: &ServerQueue, engine: &mut BatchEngine<GenStream>)
               -> Result<()> {
     let seq = entry.config.seq;
     let v = entry.config.vocab;
     let mut stopping = false;
-    // Spec totals already published to the `serve.gen.spec.*` counters
-    // by THIS loop: the engine reports lifetime totals (it outlives
-    // weight swaps), the metrics are monotone counters, so each step
-    // adds only the delta since the last publication. Starts at the
-    // engine's current totals so a resumed engine doesn't double-count.
+    // Engine totals already published to the monotone counters by THIS
+    // loop: the engine reports lifetime totals (it outlives weight
+    // swaps), so each step adds only the delta since the last
+    // publication. Starts at the engine's current totals so a resumed
+    // engine doesn't double-count. Same discipline for spec counters,
+    // shared-prefix tokens, and cancellations.
     let mut spec_seen = engine.spec_counters();
+    let mut shared_seen = engine.shared_prefix_tokens();
+    let mut cancel_seen = engine.cancelled_total();
     loop {
         // Collect up to `batch` NLL rows and feed the scheduler; handle
         // control messages inline. Messages the loop cannot take yet are
@@ -484,7 +644,11 @@ fn serve_loop(exec: &(dyn Executor + Sync), entry: &ModelEntry,
                             if let Err((reply, e)) = engine.submit(
                                 g.reply, g.prompt, g.cfg)
                             {
-                                let _ = reply.send(Err(e));
+                                if !reply.emit(GenEvent::Failed(
+                                    format!("{e:#}")))
+                                {
+                                    q.dropped_replies.inc();
+                                }
                             }
                         }
                         Some(Msg::Swap(w)) => {
@@ -533,7 +697,12 @@ fn serve_loop(exec: &(dyn Executor + Sync), entry: &ModelEntry,
                 exec, entry, weights.model_ref(),
                 drafter.as_ref().map(|d| d.model_ref()))?;
             q.step_ns.record(t0.elapsed().as_nanos() as u64);
-            q.gen_shared_tokens.set(engine.shared_prefix_tokens());
+            let shared = engine.shared_prefix_tokens();
+            q.gen_shared_tokens.add(shared - shared_seen);
+            shared_seen = shared;
+            let cancelled = engine.cancelled_total();
+            q.gen_cancelled.add(cancelled - cancel_seen);
+            cancel_seen = cancelled;
             let sc = engine.spec_counters();
             q.gen_spec_drafted.add(sc.drafted - spec_seen.drafted);
             q.gen_spec_accepted.add(sc.accepted - spec_seen.accepted);
@@ -549,7 +718,13 @@ fn serve_loop(exec: &(dyn Executor + Sync), entry: &ModelEntry,
                 q.gen_prefill.record(gen.stats.prefill_ns);
                 q.gen_ttft.record(gen.stats.ttft_ns);
                 q.gen_decode.record(gen.stats.decode_ns);
-                let _ = reply.send(Ok(gen));
+                // The engine already emitted `Done` through the
+                // stream; a closed stream here means the receiver
+                // vanished between its last token and retirement —
+                // the finished generation was undeliverable.
+                if !reply.is_connected() {
+                    q.dropped_replies.inc();
+                }
             }
         }
 
@@ -570,7 +745,9 @@ fn serve_loop(exec: &(dyn Executor + Sync), entry: &ModelEntry,
                 );
                 let res = batch_nll(&row, &r.tokens, 1, seq);
                 q.served.inc();
-                let _ = r.reply.send(res);
+                if r.reply.send(res).is_err() {
+                    q.dropped_replies.inc();
+                }
             }
         }
 
@@ -623,5 +800,65 @@ mod tests {
         let _r = c.submit(vec![0; 4]).unwrap();
         c.stop(); // must not block even though the queue is "full"
         assert_eq!(q.queue.lock().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn backpressure_ignores_queued_control_messages() {
+        // max_queue = 1: two queued barriers would have wedged this
+        // submit forever when backpressure gated on raw queue length.
+        let q = ServerQueue::new(1);
+        let c = Client::new(q.clone(), 4);
+        c.stop();
+        c.stop();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || {
+            let c2 = Client::new(q2, 4);
+            c2.submit(vec![0; 4]).unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(t.is_finished(),
+                "submit must not block behind control barriers");
+        t.join().unwrap();
+        // One work message now queued: the NEXT submit blocks until it
+        // drains — control messages changed nothing about work capacity.
+        let q3 = q.clone();
+        let t2 = std::thread::spawn(move || {
+            let c3 = Client::new(q3, 4);
+            c3.submit(vec![1; 4]).unwrap();
+        });
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(!t2.is_finished(), "work capacity still enforced");
+        {
+            let mut g = q.queue.lock().unwrap();
+            let pos = g
+                .iter()
+                .position(|m| matches!(m, Msg::Infer(_)))
+                .expect("queued work message");
+            g.remove(pos);
+        }
+        q.cv.notify_all();
+        t2.join().unwrap();
+    }
+
+    #[test]
+    fn dropping_gen_events_clears_the_open_flag() {
+        let q = ServerQueue::new(4);
+        let c = Client::new(q.clone(), 4);
+        let ev = c.submit_generate(vec![1, 2, 3], GenConfig::default())
+            .unwrap();
+        let stream = {
+            let mut g = q.queue.lock().unwrap();
+            match g.pop_front() {
+                Some(Msg::Generate(gr)) => gr.reply,
+                _ => panic!("expected queued generation"),
+            }
+        };
+        assert!(stream.is_connected());
+        assert!(stream.emit(GenEvent::Token { token: 7, pos: 0 }));
+        drop(ev);
+        // The receiver's Drop cleared the shared flag: the engine's
+        // once-per-step probe sees the disconnect without sending.
+        assert!(!stream.is_connected());
+        assert!(!stream.emit(GenEvent::Token { token: 8, pos: 1 }));
     }
 }

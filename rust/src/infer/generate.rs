@@ -14,6 +14,17 @@
 //! engine. Executor- and variant-generic: a `ModelRef` dispatches to
 //! the dense or fused-packed path, so the same engine generates from
 //! FP32 weights and from packed 2/4-bit `QuantizedModel`s.
+//!
+//! Streaming + cancellation: the per-request tag doubles as a
+//! `GenSink` — every committed token (decode, chunk completion, or
+//! spec verify-accept) is emitted as a `GenEvent::Token` through ONE
+//! code path (`Active::consume_row`), so a streamed token sequence is
+//! bit-identical to the batch result. A sink that reports its receiver
+//! gone (failed `emit` or `is_connected() == false`) cancels the
+//! request: the engine retires its target and drafter slots through
+//! the normal refcount-correct paths at the end of the current step
+//! and traces a rid-stamped `Ev::Cancel` — a dead client never holds
+//! a decode slot past the step that notices it.
 
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -180,6 +191,60 @@ pub struct Generation {
     pub stats: GenStats,
     pub stopped: StopReason,
 }
+
+/// One event on a request's stream. Every committed token — from the
+/// plain decode batch, a chunk-completion sample, or a `step_spec`
+/// verify-accept — flows through `Active::consume_row`, the single
+/// emission point, so the streamed token sequence is bit-identical to
+/// the `Generation::tokens` the batch path returns (pinned by
+/// `rust/tests/generate.rs`). Speculative rollback never retracts an
+/// event: `consume_row` only runs for rows the engine commits; rejected
+/// draft rows are discarded before sampling.
+#[derive(Clone, Debug)]
+pub enum GenEvent {
+    /// One committed token; `pos` is its index among the NEW tokens
+    /// (`Generation::tokens[pos] == token`).
+    Token { token: i32, pos: usize },
+    /// Terminal: the finished generation (same value the batch API
+    /// returns for this request).
+    Done(Generation),
+    /// Terminal: the request failed (bad prompt, fatal engine error).
+    Failed(String),
+}
+
+/// Per-request event sink, implemented by the engine's tag type. The
+/// defaults make any tag a no-op sink (`generate_batch`'s `usize`
+/// index, test labels), so only streaming callers — the server's
+/// `GenStream` — pay for delivery.
+///
+/// The two methods are the whole cancel-on-disconnect contract:
+/// `emit` returning `false` (delivery failed: receiver gone) and
+/// `is_connected` returning `false` (liveness probe — catches a
+/// receiver dropped while the request is prefilling or pending, when
+/// no tokens flow) both mark the request cancelled. The engine then
+/// retires it at the END of the current step through the same
+/// refcount-correct `retire`/`truncate` paths as normal completion —
+/// target slot and drafter slot both — emitting a rid-stamped
+/// `Ev::Cancel` instead of building a `Generation`.
+pub trait GenSink {
+    /// Deliver one event. `false` means the receiver is gone; the
+    /// engine treats the request as cancelled.
+    fn emit(&self, ev: GenEvent) -> bool {
+        let _ = ev;
+        true
+    }
+
+    /// Cheap liveness probe, polled once per request per step.
+    fn is_connected(&self) -> bool {
+        true
+    }
+}
+
+/// Index tags (`generate_batch`, benches) don't stream.
+impl GenSink for usize {}
+/// Label tags (tests) don't stream.
+impl GenSink for &str {}
+impl GenSink for () {}
 
 /// Cumulative speculative-decode counters for one engine. The accept
 /// rate is `accepted / drafted`; the latency multiplier speculation
@@ -395,16 +460,22 @@ struct Active<T> {
     /// Stop decision made during the current step; the sequence retires
     /// at the end of the step.
     finished: Option<StopReason>,
+    /// Receiver gone (failed `GenSink::emit` or a false
+    /// `is_connected` probe): the sequence does no further work and
+    /// retires at the end of the step WITHOUT building a `Generation`
+    /// (its `t_prefill_done` may never have been stamped).
+    cancelled: bool,
 }
 
-impl<T> Active<T> {
+impl<T: GenSink> Active<T> {
     /// Consume one logits row for this sequence: sample the next token,
-    /// record any stop condition, and — when `first` marks the step
-    /// that consumed the last prompt token (from a chunk's final row or
-    /// a decode-batch rider row alike) — stamp prefill-done and TTFT.
-    /// `max_new == 0` on that step means there is nothing to sample:
-    /// the prefill itself was the request. ONE body for both the
-    /// chunk-completion and decode paths, so stop/TTFT semantics cannot
+    /// emit it on the request's stream, record any stop condition, and
+    /// — when `first` marks the step that consumed the last prompt
+    /// token (from a chunk's final row or a decode-batch rider row
+    /// alike) — stamp prefill-done and TTFT. `max_new == 0` on that
+    /// step means there is nothing to sample: the prefill itself was
+    /// the request. ONE body for the chunk-completion, decode, and
+    /// verify-accept paths, so stop/TTFT/streaming semantics cannot
     /// drift between them.
     fn consume_row(&mut self, row: &[f32], first: bool) {
         if first {
@@ -415,6 +486,12 @@ impl<T> Active<T> {
         } else {
             let next = sample(row, &self.gc.sampling, &mut self.rng);
             self.tokens.push(next);
+            if !self.tag.emit(GenEvent::Token {
+                token: next,
+                pos: self.tokens.len() - 1,
+            }) {
+                self.cancelled = true;
+            }
             if self.gc.stop.contains(&next) {
                 self.finished = Some(StopReason::StopToken(next));
             } else if self.tokens.len() >= self.gc.max_new {
@@ -479,6 +556,9 @@ pub struct BatchEngine<T> {
     pending: VecDeque<Pending<T>>,
     active: Vec<Active<T>>,
     shared_tokens: u64,
+    /// Requests cancelled on disconnect (pending or in flight),
+    /// cumulative over the engine's life.
+    cancelled_total: u64,
     /// Opt-in flight recorder (`enable_trace`). `None` costs one branch
     /// per emission site and allocates nothing; enabled or not, the
     /// tracer only observes — tokens stay bit-identical (pinned by
@@ -519,6 +599,7 @@ impl<T> BatchEngine<T> {
             pending: VecDeque::new(),
             active: Vec::new(),
             shared_tokens: 0,
+            cancelled_total: 0,
             tracer: None,
             steps: 0,
             next_rid: 0,
@@ -585,6 +666,14 @@ impl<T> BatchEngine<T> {
     /// ran a verify pass).
     pub fn spec_counters(&self) -> SpecCounters {
         self.spec_counters
+    }
+
+    /// Requests cancelled because their receiver disconnected (failed
+    /// `GenSink::emit` or a false `is_connected` probe), cumulative
+    /// over the engine's life. Counts pending and in-flight requests
+    /// alike; none of them produce a `Generation`.
+    pub fn cancelled_total(&self) -> u64 {
+        self.cancelled_total
     }
 
     /// The drafter's paged cache pool, if any speculative step has run
@@ -664,7 +753,10 @@ impl<T> BatchEngine<T> {
     /// idle. Requests that opted into speculative decoding run plain
     /// here (no drafter) — use `step_spec` to supply one.
     pub fn step(&mut self, exec: &dyn Executor, entry: &ModelEntry,
-                model: ModelRef) -> Result<Vec<(T, Generation)>> {
+                model: ModelRef) -> Result<Vec<(T, Generation)>>
+    where
+        T: GenSink,
+    {
         self.step_spec(exec, entry, model, None)
     }
 
@@ -688,7 +780,38 @@ impl<T> BatchEngine<T> {
     /// `step` verbatim.
     pub fn step_spec(&mut self, exec: &dyn Executor, entry: &ModelEntry,
                      target: ModelRef, drafter: Option<ModelRef>)
-                     -> Result<Vec<(T, Generation)>> {
+                     -> Result<Vec<(T, Generation)>>
+    where
+        T: GenSink,
+    {
+        let step_no = self.steps;
+        // Cancel-on-disconnect sweep, once per step: a pending request
+        // whose receiver is gone drops here (it holds no slot); an
+        // in-flight one is marked and does NO work this step — no spec
+        // engagement, no prefill chunk, no decode row — then retires in
+        // the retire phase below, freeing its target (and drafter) slot
+        // through the same refcount-correct paths as completion. A
+        // receiver that vanishes mid-step instead fails a token `emit`,
+        // which sets the same flag (see `consume_row`); either way the
+        // slot is free for admission by the NEXT step.
+        let mut gone: Vec<u64> = Vec::new();
+        self.pending.retain(|p| {
+            if p.tag.is_connected() {
+                true
+            } else {
+                gone.push(p.rid);
+                false
+            }
+        });
+        for rid in gone {
+            self.cancelled_total += 1;
+            self.trace(step_no, Ev::Cancel { rid, slot: None });
+        }
+        for a in &mut self.active {
+            if !a.cancelled && !a.tag.is_connected() {
+                a.cancelled = true;
+            }
+        }
         // Admit pending requests into free slots. Per-request cache
         // capacity mirrors the single-sequence policy: `gc.cap`, or
         // prompt + max_new (exact decode, no ring eviction) when 0.
@@ -712,7 +835,6 @@ impl<T> BatchEngine<T> {
         // Sharing never changes outputs: shared rows are bit-identical
         // to what the request's own prefill would append (see the
         // determinism note below).
-        let step_no = self.steps;
         let cow0 = self.pool.cow_splits();
         let mut deferred: Vec<Pending<T>> = Vec::new();
         while self.pool.free_count() > 0 {
@@ -786,6 +908,7 @@ impl<T> BatchEngine<T> {
                 prefill_work_ns: 0,
                 ttft_ns: 0,
                 finished: None,
+                cancelled: false,
             });
             let rid = self.active.last().expect("just pushed").rid;
             self.trace(step_no, Ev::Admit {
@@ -817,10 +940,11 @@ impl<T> BatchEngine<T> {
                 else {
                     continue;
                 };
-                if self.active[i].spec == SpecSlot::Off
+                if self.active[i].cancelled
+                    || self.active[i].spec == SpecSlot::Off
                     || self.active[i].fed + 1 < self.active[i].prompt.len()
                 {
-                    continue; // disabled, or still prefilling
+                    continue; // cancelled, disabled, or still prefilling
                 }
                 let slot = self.active[i].slot;
                 let cap = self.pool.capacity(slot);
@@ -917,6 +1041,7 @@ impl<T> BatchEngine<T> {
             .enumerate()
             .filter(|(i, a)| {
                 a.fed + 1 >= a.prompt.len() && !spec_mask[*i]
+                    && !a.cancelled
             })
             .map(|(i, _)| i)
             .collect();
@@ -926,7 +1051,7 @@ impl<T> BatchEngine<T> {
             .active
             .iter()
             .enumerate()
-            .filter(|(_, a)| a.fed + 1 < a.prompt.len())
+            .filter(|(_, a)| a.fed + 1 < a.prompt.len() && !a.cancelled)
             .map(|(i, a)| {
                 let cap = self.pool.capacity(a.slot);
                 let n =
@@ -1102,8 +1227,8 @@ impl<T> BatchEngine<T> {
                 a.consume_row(logits.row(r),
                               f + r + 1 == a.prompt.len());
                 c += 1;
-                if a.finished.is_some() {
-                    break; // stop token / max_new: rest is past the end
+                if a.finished.is_some() || a.cancelled {
+                    break; // stop/max_new/disconnect: rest is unused
                 }
                 if r < k && a.tokens[t0 + r] != drafts[si][r] {
                     break; // divergence: rows past r fed a wrong token
@@ -1158,11 +1283,30 @@ impl<T> BatchEngine<T> {
             self.trace(step_no, Ev::Recycle { rows: recycled });
         }
 
-        // Retire finished sequences, freeing their slots.
+        // Retire finished AND cancelled sequences, freeing their slots.
+        // A sequence that both finished and lost its receiver on the
+        // final token retires as finished (the tokens are complete; the
+        // caller sees the closed stream); a cancelled one retires
+        // through the same pool paths but builds no `Generation` — it
+        // may still be prefilling, so `t_prefill_done` can be unset.
         let mut done = Vec::new();
         let mut keep = Vec::with_capacity(self.active.len());
         for a in std::mem::take(&mut self.active) {
             match a.finished {
+                None if a.cancelled => {
+                    self.pool.retire(a.slot);
+                    if let SpecSlot::On { dslot, .. } = a.spec {
+                        self.drafter_pool
+                            .as_mut()
+                            .expect("On implies drafter pool")
+                            .retire(dslot);
+                    }
+                    self.cancelled_total += 1;
+                    self.trace(step_no, Ev::Cancel {
+                        rid: a.rid,
+                        slot: Some(a.slot),
+                    });
+                }
                 None => keep.push(a),
                 Some(stopped) => {
                     self.pool.retire(a.slot);
@@ -1179,7 +1323,7 @@ impl<T> BatchEngine<T> {
                     });
                     let t_pre =
                         a.t_prefill_done.expect("set at prefill end");
-                    done.push((a.tag, Generation {
+                    let gen = Generation {
                         stats: GenStats {
                             prompt_tokens: a.prompt.len(),
                             gen_tokens: a.tokens.len(),
@@ -1190,7 +1334,13 @@ impl<T> BatchEngine<T> {
                         },
                         tokens: a.tokens,
                         stopped,
-                    }));
+                    };
+                    // Terminal stream event: the sink gets its own
+                    // copy; the batch result below goes back to the
+                    // caller regardless (a failed emit just means the
+                    // receiver is already gone).
+                    a.tag.emit(GenEvent::Done(gen.clone()));
+                    done.push((a.tag, gen));
                 }
             }
         }
@@ -1219,7 +1369,10 @@ impl<T> BatchEngine<T> {
 
     /// Step until every submitted request has finished.
     pub fn run(&mut self, exec: &dyn Executor, entry: &ModelEntry,
-               model: ModelRef) -> Result<Vec<(T, Generation)>> {
+               model: ModelRef) -> Result<Vec<(T, Generation)>>
+    where
+        T: GenSink,
+    {
         let mut out = Vec::new();
         while !self.is_idle() {
             out.extend(self.step(exec, entry, model)?);
@@ -1231,7 +1384,10 @@ impl<T> BatchEngine<T> {
     /// submitted request has finished.
     pub fn run_spec(&mut self, exec: &dyn Executor, entry: &ModelEntry,
                     target: ModelRef, drafter: Option<ModelRef>)
-                    -> Result<Vec<(T, Generation)>> {
+                    -> Result<Vec<(T, Generation)>>
+    where
+        T: GenSink,
+    {
         let mut out = Vec::new();
         while !self.is_idle() {
             out.extend(self.step_spec(exec, entry, target, drafter)?);

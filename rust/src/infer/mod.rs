@@ -22,9 +22,9 @@ use crate::tensor::Tensor;
 
 pub use cache::{KvCache, KvCachePool, LayerKv, PAGE_SIZE};
 pub use generate::{generate, generate_batch, generate_batch_spec,
-                   BatchEngine, GenConfig, GenStats, Generation,
-                   Sampling, SpecCounters, SpecDecode, StopReason,
-                   PREFILL_CHUNK};
+                   BatchEngine, GenConfig, GenEvent, GenSink, GenStats,
+                   Generation, Sampling, SpecCounters, SpecDecode,
+                   StopReason, PREFILL_CHUNK};
 pub use native::NativeEngine;
 pub use qmat::{fused_gemm_small, fused_matmul, fused_vecmat,
                PackedMatrix, QMat, QuantizedModel};

@@ -2,7 +2,8 @@
 //! flight recorder behind scheduler/fairness debugging. The engine
 //! pushes one small `Copy` record per scheduling decision (admission,
 //! shared-prefix admit/defer, prefill chunk placement, decode batch
-//! composition, CoW splits, eviction recycle, retirement); the ring
+//! composition, CoW splits, eviction recycle, retirement,
+//! disconnect cancellation); the ring
 //! overwrites the oldest record past capacity, so memory is O(capacity)
 //! — `capacity · size_of::<TraceEvent>()` — no matter how long the
 //! engine runs. Tracing is opt-in per engine: when disabled the whole
@@ -52,6 +53,11 @@ pub enum Ev {
     Recycle { rows: usize },
     /// Request `rid` retired from `slot` after emitting `gen_tokens`.
     Retire { rid: u64, slot: usize, gen_tokens: usize },
+    /// Request `rid` cancelled (its receiver disconnected) and retired
+    /// WITHOUT producing a generation. `slot` is the target slot it
+    /// freed; `None` when the request was still pending — it never
+    /// held one.
+    Cancel { rid: u64, slot: Option<usize> },
     /// The drafter proposed `k` speculative tokens for `rid` this
     /// step (one batched drafter pass per draft depth, shared across
     /// spec requests; `slot` is the request's TARGET slot).
@@ -72,6 +78,7 @@ impl Ev {
             | Ev::Defer { rid, .. }
             | Ev::PrefillChunk { rid, .. }
             | Ev::Retire { rid, .. }
+            | Ev::Cancel { rid, .. }
             | Ev::Draft { rid, .. }
             | Ev::Verify { rid, .. } => Some(rid),
             Ev::Decode { .. } | Ev::CowSplit { .. }
@@ -152,6 +159,12 @@ impl StepTracer {
                     out.push(e);
                 }
                 Ev::Retire { rid: r, .. } if r == rid => {
+                    slot = None;
+                    out.push(e);
+                }
+                // Cancellation ends slot attribution exactly like
+                // retirement: the slot is free for another request.
+                Ev::Cancel { rid: r, .. } if r == rid => {
                     slot = None;
                     out.push(e);
                 }
@@ -239,6 +252,32 @@ mod tests {
         assert!(matches!(tl[2].ev, Ev::Retire { rid: 0, .. }));
         let tl7 = t.timeline(7);
         assert_eq!(tl7.len(), 2); // its admit + its decode
+    }
+
+    #[test]
+    fn cancel_ends_slot_attribution_like_retire() {
+        let mut t = StepTracer::new(16);
+        t.push(TraceEvent {
+            step: 0,
+            ev: Ev::Admit { rid: 2, slot: 3, prompt: 4, shared: 0 },
+        });
+        t.push(TraceEvent {
+            step: 1,
+            ev: Ev::Decode { batch: 1, slots_mask: 0b1000 },
+        });
+        t.push(TraceEvent {
+            step: 1,
+            ev: Ev::Cancel { rid: 2, slot: Some(3) },
+        });
+        // Slot 3 reused after the cancel: not rid 2's decode.
+        t.push(TraceEvent {
+            step: 2,
+            ev: Ev::Decode { batch: 1, slots_mask: 0b1000 },
+        });
+        assert_eq!((Ev::Cancel { rid: 2, slot: None }).rid(), Some(2));
+        let tl = t.timeline(2);
+        assert_eq!(tl.len(), 3);
+        assert!(matches!(tl[2].ev, Ev::Cancel { rid: 2, .. }));
     }
 
     #[test]

@@ -1,20 +1,95 @@
 //! Generation-path coverage: deterministic-seed greedy/top-k golden
 //! tests over the KV-cached decode loop, generation-based eval scoring,
-//! and concurrent generation requests through `server::serve` (results
+//! concurrent generation requests through `server::serve` (results
 //! identical to direct single-threaded generation — no interleaving
-//! corruption — and server stats consistent).
+//! corruption — and server stats consistent), per-token streaming
+//! (events bit-identical to the batch result), and cancel-on-disconnect
+//! (a dropped receiver frees its KV slot — target and drafter pools —
+//! within one scheduler step).
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 
 use nsds::coordinator::server::{serve, Client, ServedWeights,
                                 ServerQueue};
-use nsds::infer::{generate, Executor, GenConfig, Generation, KvCache,
-                  ModelRef, NativeEngine, QuantizedModel, Sampling,
-                  StopReason, PAGE_SIZE};
+use nsds::infer::{generate, BatchEngine, Executor, GenConfig, GenEvent,
+                  GenSink, Generation, KvCache, ModelRef, NativeEngine,
+                  QuantizedModel, Sampling, SpecDecode, StopReason,
+                  PAGE_SIZE};
 use nsds::model::{ModelConfig, Weights, WEIGHT_NAMES};
 use nsds::quant::Backend;
 use nsds::runtime::ModelEntry;
+use nsds::telemetry::Ev;
 use nsds::util::rng::Rng;
+
+/// Test sink: records every event and exposes a disconnect switch —
+/// the engine-level stand-in for the server's `GenStream`.
+#[derive(Clone)]
+struct CollectSink {
+    events: Arc<Mutex<Vec<GenEvent>>>,
+    connected: Arc<AtomicBool>,
+}
+
+impl CollectSink {
+    fn new() -> Self {
+        CollectSink {
+            events: Arc::new(Mutex::new(Vec::new())),
+            connected: Arc::new(AtomicBool::new(true)),
+        }
+    }
+
+    fn disconnect(&self) {
+        self.connected.store(false, Ordering::Release);
+    }
+
+    /// The streamed token sequence, in emission order.
+    fn tokens(&self) -> Vec<i32> {
+        self.events
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|e| match e {
+                GenEvent::Token { token, .. } => Some(*token),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// The `pos` fields of the streamed tokens, in emission order.
+    fn positions(&self) -> Vec<usize> {
+        self.events
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|e| match e {
+                GenEvent::Token { pos, .. } => Some(*pos),
+                _ => None,
+            })
+            .collect()
+    }
+
+    fn done(&self) -> Option<Generation> {
+        self.events.lock().unwrap().iter().find_map(|e| match e {
+            GenEvent::Done(g) => Some(g.clone()),
+            _ => None,
+        })
+    }
+}
+
+impl GenSink for CollectSink {
+    fn emit(&self, ev: GenEvent) -> bool {
+        if !self.connected.load(Ordering::Acquire) {
+            return false;
+        }
+        self.events.lock().unwrap().push(ev);
+        true
+    }
+
+    fn is_connected(&self) -> bool {
+        self.connected.load(Ordering::Acquire)
+    }
+}
 
 fn tiny_model(seed: u64) -> (ModelEntry, Weights) {
     let cfg = ModelConfig::test_config();
@@ -244,8 +319,8 @@ fn server_shares_prefix_pages_across_identical_prompts() {
     client.stop();
     serve(&exec, &entry, 2, ServedWeights::Dense(w.clone()), &queue)
         .unwrap();
-    let g1 = rx1.recv().unwrap().unwrap();
-    let g2 = rx2.recv().unwrap().unwrap();
+    let g1 = rx1.wait().unwrap();
+    let g2 = rx2.wait().unwrap();
     assert_eq!(g1.tokens, direct);
     assert_eq!(g2.tokens, direct,
                "prefix sharing changed a served generation");
@@ -447,4 +522,344 @@ fn server_rejects_empty_prompt_and_swaps_apply_to_generation() {
     let (a, b) = t.join().unwrap().unwrap();
     assert_eq!(a, dense_direct);
     assert_eq!(b, packed_direct);
+}
+
+#[test]
+fn streamed_events_are_bit_identical_to_batch_results() {
+    // Every committed token flows through one emission point
+    // (`consume_row`), so the streamed sequence must equal the batch
+    // result exactly — dense and packed, greedy and top-k, plain and
+    // speculative.
+    let (entry, w) = tiny_model(40);
+    let cfg = entry.config.clone();
+    let exec = NativeEngine::with_workers(1);
+    let qm = QuantizedModel::quantize(&cfg, &w,
+                                      &vec![4u8; cfg.n_layers], 8,
+                                      Backend::Hqq, None, 1);
+    let reqs: Vec<(Vec<i32>, GenConfig)> = vec![
+        (vec![1, 2, 3], GenConfig { max_new: 7,
+                                    ..GenConfig::default() }),
+        (vec![9, 4], GenConfig {
+            max_new: 9,
+            sampling: Sampling::TopK { k: 5, temperature: 1.1 },
+            seed: 21,
+            ..GenConfig::default()
+        }),
+        (vec![6, 6, 1, 0], GenConfig { max_new: 5,
+                                       ..GenConfig::default() }),
+    ];
+    for model in [ModelRef::Dense(&w), ModelRef::Packed(&qm)] {
+        let mut engine: BatchEngine<CollectSink> =
+            BatchEngine::new(&cfg, 2);
+        let sinks: Vec<CollectSink> =
+            reqs.iter().map(|_| CollectSink::new()).collect();
+        for (sink, (p, gc)) in sinks.iter().zip(&reqs) {
+            engine.submit(sink.clone(), p.clone(), gc.clone())
+                .unwrap();
+        }
+        let done = engine.run(&exec, &entry, model).unwrap();
+        assert_eq!(done.len(), reqs.len());
+        for (i, ((p, gc), sink)) in
+            reqs.iter().zip(&sinks).enumerate()
+        {
+            let direct =
+                generate(&exec, &entry, model, p, gc).unwrap();
+            let streamed = sink.tokens();
+            assert_eq!(streamed, direct.tokens,
+                       "request {i}: streamed tokens diverged from \
+                        direct generation");
+            assert_eq!(sink.positions(),
+                       (0..streamed.len()).collect::<Vec<_>>(),
+                       "request {i}: stream positions not 0..n");
+            let done_gen = sink.done().expect("Done event");
+            assert_eq!(done_gen.tokens, direct.tokens,
+                       "request {i}: Done payload diverged");
+            let (_, batch_gen) = done
+                .iter()
+                .find(|(tag, _)| {
+                    Arc::ptr_eq(&tag.events, &sink.events)
+                })
+                .expect("batch result for request");
+            assert_eq!(batch_gen.tokens, direct.tokens,
+                       "request {i}: batch result diverged");
+        }
+    }
+
+    // Speculative path: identical drafter, greedy — verify-accepts
+    // stream through the same path, tokens bit-identical.
+    let gc = GenConfig {
+        max_new: 10,
+        spec: Some(SpecDecode { k: 3 }),
+        ..GenConfig::default()
+    };
+    let prompt = vec![2i32, 7, 5];
+    let plain = GenConfig { spec: None, ..gc.clone() };
+    let direct =
+        generate(&exec, &entry, ModelRef::Dense(&w), &prompt, &plain)
+            .unwrap();
+    let mut engine: BatchEngine<CollectSink> = BatchEngine::new(&cfg, 1);
+    let sink = CollectSink::new();
+    engine.submit(sink.clone(), prompt.clone(), gc).unwrap();
+    let done = engine
+        .run_spec(&exec, &entry, ModelRef::Dense(&w),
+                  Some(ModelRef::Dense(&w)))
+        .unwrap();
+    assert_eq!(done[0].1.tokens, direct.tokens,
+               "spec batch result diverged from plain decode");
+    assert_eq!(sink.tokens(), direct.tokens,
+               "spec streamed tokens diverged from plain decode");
+    let sc = engine.spec_counters();
+    assert!(sc.verify_steps > 0, "spec path never engaged");
+}
+
+#[test]
+fn dropped_receiver_frees_slot_within_one_step() {
+    let (entry, w) = tiny_model(41);
+    let cfg = entry.config.clone();
+    let exec = NativeEngine::with_workers(1);
+    let gc = GenConfig { max_new: 12, ..GenConfig::default() };
+    let prompt_a = vec![1i32, 2, 3, 4];
+    let prompt_b = vec![5i32, 6, 7];
+    let direct_a =
+        generate(&exec, &entry, ModelRef::Dense(&w), &prompt_a, &gc)
+            .unwrap()
+            .tokens;
+    let solo_b =
+        generate(&exec, &entry, ModelRef::Dense(&w), &prompt_b, &gc)
+            .unwrap()
+            .tokens;
+
+    let mut engine: BatchEngine<CollectSink> = BatchEngine::new(&cfg, 2);
+    engine.enable_trace(128);
+    let base = engine.pool().pages_in_use();
+    let a = CollectSink::new();
+    let b = CollectSink::new();
+    engine.submit(a.clone(), prompt_a, gc.clone()).unwrap();
+    engine.submit(b.clone(), prompt_b, gc.clone()).unwrap();
+    // Step 1: both prefill (single chunk) and sample their first token.
+    let mut done =
+        engine.step(&exec, &entry, ModelRef::Dense(&w)).unwrap();
+    assert!(done.is_empty());
+    // prompt + max_new ≤ PAGE_SIZE for both, so each holds EXACTLY one
+    // page for its whole life — page accounting is exact, not fuzzy.
+    assert_eq!(engine.pool().pages_in_use(), base + 2);
+    assert_eq!(a.tokens(), direct_a[..1],
+               "first streamed token diverged before the disconnect");
+
+    a.disconnect();
+    // ONE step later the cancelled request's slot is back in the pool.
+    done.extend(
+        engine.step(&exec, &entry, ModelRef::Dense(&w)).unwrap());
+    assert_eq!(engine.cancelled_total(), 1);
+    assert_eq!(engine.pool().pages_in_use(), base + 1,
+               "cancelled slot not freed within one step");
+    assert_eq!(engine.in_flight(), 1);
+    let cancels: Vec<_> = engine
+        .tracer()
+        .unwrap()
+        .events()
+        .into_iter()
+        .filter(|e| matches!(e.ev, Ev::Cancel { .. }))
+        .collect();
+    assert_eq!(cancels.len(), 1);
+    assert!(matches!(cancels[0].ev, Ev::Cancel { slot: Some(_), .. }),
+            "an in-flight cancel must report the freed slot");
+    // The dead sink received nothing after the disconnect.
+    assert_eq!(a.tokens().len(), 1);
+    assert!(a.done().is_none(),
+            "cancelled request must not produce a Generation");
+
+    // The co-batched survivor is unaffected: identical to its solo run.
+    while !engine.is_idle() {
+        done.extend(
+            engine.step(&exec, &entry, ModelRef::Dense(&w)).unwrap());
+    }
+    assert_eq!(done.len(), 1, "only the survivor finishes");
+    assert_eq!(done[0].1.tokens, solo_b,
+               "survivor diverged from its solo generation");
+    assert_eq!(b.tokens(), solo_b);
+    assert_eq!(engine.pool().pages_in_use(), base,
+               "page accounting not restored after drain");
+}
+
+#[test]
+fn disconnect_during_prefill_and_pending_frees_everything() {
+    let (entry, w) = tiny_model(42);
+    let cfg = entry.config.clone();
+    let exec = NativeEngine::with_workers(1);
+    // Prompt longer than one PREFILL_CHUNK (2 pages): prefill spans
+    // at least two steps, so the disconnect lands mid-prefill, before
+    // any token has streamed.
+    let long: Vec<i32> = (0..(2 * PAGE_SIZE + 8))
+        .map(|i| (i % cfg.vocab) as i32)
+        .collect();
+    let gc = GenConfig { max_new: 6, ..GenConfig::default() };
+    let mut engine: BatchEngine<CollectSink> = BatchEngine::new(&cfg, 1);
+    engine.enable_trace(64);
+    let base = engine.pool().pages_in_use();
+    let pre = CollectSink::new();
+    let pend = CollectSink::new();
+    engine.submit(pre.clone(), long.clone(), gc.clone()).unwrap();
+    // Second request queues behind the single slot: cancelled while
+    // PENDING it must vanish without ever holding pages.
+    engine.submit(pend.clone(), vec![1, 2], gc.clone()).unwrap();
+    engine.step(&exec, &entry, ModelRef::Dense(&w)).unwrap();
+    assert!(engine.pool().pages_in_use() > base);
+    assert!(pre.tokens().is_empty(), "still prefilling, no tokens");
+
+    pend.disconnect();
+    pre.disconnect();
+    engine.step(&exec, &entry, ModelRef::Dense(&w)).unwrap();
+    assert_eq!(engine.cancelled_total(), 2);
+    assert!(engine.is_idle());
+    assert_eq!(engine.pool().pages_in_use(), base,
+               "mid-prefill cancel leaked pages");
+    let cancels: Vec<_> = engine
+        .tracer()
+        .unwrap()
+        .events()
+        .into_iter()
+        .filter_map(|e| match e.ev {
+            Ev::Cancel { slot, .. } => Some(slot),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(cancels.len(), 2);
+    assert!(cancels.contains(&None),
+            "pending cancel must carry slot None");
+    assert!(cancels.iter().any(Option::is_some),
+            "in-flight cancel must carry its freed slot");
+    assert!(pre.tokens().is_empty() && pend.tokens().is_empty());
+}
+
+#[test]
+fn dropped_receiver_frees_drafter_slot_too() {
+    let (entry, w) = tiny_model(43);
+    let cfg = entry.config.clone();
+    let exec = NativeEngine::with_workers(1);
+    let gc = GenConfig {
+        max_new: 12,
+        spec: Some(SpecDecode { k: 2 }),
+        ..GenConfig::default()
+    };
+    let mut engine: BatchEngine<CollectSink> = BatchEngine::new(&cfg, 1);
+    let sink = CollectSink::new();
+    engine.submit(sink.clone(), vec![3, 1, 4], gc).unwrap();
+    // Run until the drafter slot is engaged (prefill, catch-up, then
+    // draft+verify — a handful of steps).
+    for _ in 0..4 {
+        engine
+            .step_spec(&exec, &entry, ModelRef::Dense(&w),
+                       Some(ModelRef::Dense(&w)))
+            .unwrap();
+    }
+    let dpool = engine.drafter_pool().expect("spec engaged");
+    assert!(dpool.pages_in_use() > 0, "drafter never engaged");
+    assert!(engine.spec_counters().verify_steps > 0);
+
+    sink.disconnect();
+    engine
+        .step_spec(&exec, &entry, ModelRef::Dense(&w),
+                   Some(ModelRef::Dense(&w)))
+        .unwrap();
+    assert_eq!(engine.cancelled_total(), 1);
+    assert!(engine.is_idle());
+    assert_eq!(engine.pool().pages_in_use(), 0,
+               "target slot leaked on spec cancel");
+    assert_eq!(engine.drafter_pool().unwrap().pages_in_use(), 0,
+               "drafter slot leaked on spec cancel");
+}
+
+#[test]
+fn server_cancels_dropped_streams_and_counts_them() {
+    // End to end through serve: drop one GenEvents receiver mid-flight;
+    // the serve loop must cancel it (serve.gen.cancelled), finish the
+    // co-batched survivor with tokens identical to a direct call, and
+    // report zero in gen_stats for the cancelled request.
+    let (entry, w) = tiny_model(44);
+    let cfg = entry.config.clone();
+    let exec = NativeEngine::with_workers(1);
+    let gc = GenConfig { max_new: 24, ..GenConfig::default() };
+    let survivor_prompt = vec![4i32, 9, 2];
+    let direct = generate(&exec, &entry, ModelRef::Dense(&w),
+                          &survivor_prompt, &gc)
+        .unwrap()
+        .tokens;
+
+    let queue = ServerQueue::new(8);
+    let client = Client::new(queue.clone(), cfg.seq);
+    let doomed = client
+        .submit_generate(vec![1i32, 2, 3], gc.clone())
+        .unwrap();
+    let survivor = client
+        .submit_generate(survivor_prompt, gc.clone())
+        .unwrap();
+    let serve_handle = {
+        let queue = queue.clone();
+        let entry = entry.clone();
+        let w2 = w.clone();
+        std::thread::spawn(move || {
+            let exec = NativeEngine::with_workers(1);
+            serve(&exec, &entry, 2, ServedWeights::Dense(w2), &queue)
+        })
+    };
+    // Wait for the doomed request's first token so the drop lands
+    // mid-generation (slot held), then disconnect.
+    let first = doomed.next_event();
+    assert!(matches!(first, Some(GenEvent::Token { .. })),
+            "expected a first streamed token, got {first:?}");
+    drop(doomed);
+
+    let g = survivor.wait().unwrap();
+    client.stop();
+    serve_handle.join().unwrap().unwrap();
+    assert_eq!(g.tokens, direct,
+               "survivor diverged after co-batched cancel");
+    assert_eq!(queue.gen_cancelled(), 1,
+               "serve.gen.cancelled missed the dropped stream");
+    let (gen_served, gen_tokens) = queue.gen_stats();
+    assert_eq!(gen_served, 1,
+               "cancelled request must not count as served");
+    assert_eq!(gen_tokens, g.tokens.len() as u64);
+}
+
+#[test]
+fn streaming_through_server_matches_wait() {
+    let (entry, w) = tiny_model(45);
+    let cfg = entry.config.clone();
+    let exec = NativeEngine::with_workers(1);
+    let gc = GenConfig { max_new: 8, ..GenConfig::default() };
+    let prompt = vec![7i32, 3];
+    let direct =
+        generate(&exec, &entry, ModelRef::Dense(&w), &prompt, &gc)
+            .unwrap()
+            .tokens;
+    let queue = ServerQueue::new(4);
+    let client = Client::new(queue.clone(), cfg.seq);
+    let events = client.generate_streaming(prompt, gc).unwrap();
+    client.stop();
+    serve(&exec, &entry, 1, ServedWeights::Dense(w.clone()), &queue)
+        .unwrap();
+    let mut streamed = Vec::new();
+    let mut done = None;
+    for ev in events {
+        match ev {
+            GenEvent::Token { token, pos } => {
+                assert_eq!(pos, streamed.len(),
+                           "stream positions out of order");
+                streamed.push(token);
+            }
+            GenEvent::Done(g) => {
+                done = Some(g);
+                break;
+            }
+            GenEvent::Failed(e) => panic!("stream failed: {e}"),
+        }
+    }
+    let done = done.expect("terminal Done event");
+    assert_eq!(streamed, direct,
+               "served stream diverged from direct generation");
+    assert_eq!(done.tokens, direct);
+    assert_eq!(queue.dropped_replies(), 0);
+    assert_eq!(queue.gen_cancelled(), 0);
 }

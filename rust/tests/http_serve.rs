@@ -1,0 +1,197 @@
+//! HTTP/SSE front-end integration: endpoints over a real TCP socket
+//! against a live serve loop — streamed `/v1/generate` tokens
+//! bit-identical to direct generation, `/metrics` JSON round-trips
+//! through `snapshot_from_json`, and a client that disconnects
+//! mid-stream gets its generation CANCELLED (the serve scheduler frees
+//! the slot; `serve.gen.cancelled` counts it) instead of decoding to
+//! completion.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use nsds::coordinator::http::HttpServer;
+use nsds::coordinator::http::parse_sse;
+use nsds::coordinator::server::{serve, Client, ServedWeights,
+                                ServerQueue};
+use nsds::infer::{generate, GenConfig, ModelRef, NativeEngine};
+use nsds::model::ModelConfig;
+use nsds::runtime::ModelEntry;
+use nsds::telemetry::snapshot_from_json;
+use nsds::util::json::Json;
+use nsds::util::rng::Rng;
+
+struct TestStack {
+    http: HttpServer,
+    queue: Arc<ServerQueue>,
+    client: Client,
+    serve_handle: Option<std::thread::JoinHandle<anyhow::Result<()>>>,
+}
+
+/// Serve loop on its own thread + HTTP front end on an ephemeral port.
+fn stack(seed: u64) -> (TestStack, ModelEntry,
+                        nsds::model::Weights) {
+    let cfg = ModelConfig::test_config();
+    let entry = ModelEntry::synthetic(cfg.clone());
+    let mut rng = Rng::new(seed);
+    let w = nsds::model::Weights::synth(&cfg, &mut rng, &[], &[]);
+    let queue = ServerQueue::new(8);
+    let client = Client::new(queue.clone(), cfg.seq);
+    let serve_handle = {
+        let queue = queue.clone();
+        let entry = entry.clone();
+        let w = w.clone();
+        std::thread::spawn(move || {
+            let exec = NativeEngine::with_workers(1);
+            serve(&exec, &entry, 2, ServedWeights::Dense(w), &queue)
+        })
+    };
+    let http = HttpServer::bind("127.0.0.1:0", client.clone(),
+                                queue.clone())
+        .unwrap();
+    (TestStack { http, queue, client,
+                 serve_handle: Some(serve_handle) },
+     entry, w)
+}
+
+impl TestStack {
+    fn teardown(mut self) {
+        self.client.stop();
+        self.serve_handle.take().unwrap().join().unwrap().unwrap();
+        self.http.shutdown();
+    }
+}
+
+/// One full request/response over a fresh connection; the server
+/// always closes after responding, so read-to-end terminates. Returns
+/// (status line, body).
+fn http_request(stack: &TestStack, req: &str) -> (String, String) {
+    let mut s = TcpStream::connect(stack.http.addr()).unwrap();
+    s.write_all(req.as_bytes()).unwrap();
+    let mut resp = String::new();
+    s.read_to_string(&mut resp).unwrap();
+    let (head, body) = resp.split_once("\r\n\r\n").expect("header end");
+    let status = head.lines().next().unwrap().to_string();
+    (status, body.to_string())
+}
+
+fn get(stack: &TestStack, path: &str) -> (String, String) {
+    http_request(stack,
+                 &format!("GET {path} HTTP/1.1\r\n\
+                           Host: t\r\n\r\n"))
+}
+
+fn post(stack: &TestStack, path: &str, body: &str) -> (String, String) {
+    http_request(stack,
+                 &format!("POST {path} HTTP/1.1\r\nHost: t\r\n\
+                           Content-Length: {}\r\n\r\n{body}",
+                          body.len()))
+}
+
+#[test]
+fn healthz_metrics_and_routing() {
+    let (stack, _entry, _w) = stack(50);
+    let (status, body) = get(&stack, "/healthz");
+    assert!(status.contains("200"), "healthz: {status}");
+    assert_eq!(body, "ok\n");
+
+    // /metrics must serve the versioned telemetry envelope that
+    // snapshot_from_json accepts — the machine-readable contract.
+    let (status, body) = get(&stack, "/metrics");
+    assert!(status.contains("200"), "metrics: {status}");
+    let snap = snapshot_from_json(&Json::parse(&body).unwrap())
+        .expect("metrics JSON must round-trip");
+    assert!(snap.counters.contains_key("serve.gen.cancelled"),
+            "cancel counter missing from exported metrics");
+    assert!(snap.counters.contains_key("serve.dropped_replies"));
+
+    let (status, _) = get(&stack, "/nope");
+    assert!(status.contains("404"), "unknown route: {status}");
+    let (status, body) = post(&stack, "/v1/generate", "{not json");
+    assert!(status.contains("400"), "bad JSON: {status}");
+    assert!(body.contains("error"));
+    let (status, _) =
+        post(&stack, "/v1/generate", r#"{"max_new": 3}"#);
+    assert!(status.contains("400"), "missing prompt: {status}");
+    stack.teardown();
+}
+
+#[test]
+fn generate_endpoint_streams_bit_identical_tokens() {
+    let (stack, entry, w) = stack(51);
+    let gc = GenConfig { max_new: 6, ..GenConfig::default() };
+    let exec = NativeEngine::with_workers(1);
+    let direct = generate(&exec, &entry, ModelRef::Dense(&w),
+                          &[1, 2, 3], &gc)
+        .unwrap();
+
+    let (status, body) = post(
+        &stack, "/v1/generate",
+        r#"{"prompt": [1, 2, 3], "max_new": 6}"#);
+    assert!(status.contains("200"), "generate: {status}");
+    let frames = parse_sse(&body).unwrap();
+    let streamed: Vec<i32> = frames
+        .iter()
+        .filter(|(name, _)| name == "token")
+        .map(|(_, d)| d.get("token").unwrap().as_f64().unwrap() as i32)
+        .collect();
+    assert_eq!(streamed, direct.tokens,
+               "SSE tokens diverged from direct generation");
+    let (name, done) = frames.last().expect("terminal frame");
+    assert_eq!(name, "done");
+    let done_tokens: Vec<i32> = done
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as i32)
+        .collect();
+    assert_eq!(done_tokens, direct.tokens);
+    assert_eq!(done.get("stopped").unwrap().as_str(),
+               Some("max_new"));
+    assert_eq!(done.get("gen_tokens").unwrap().as_usize(),
+               Some(direct.tokens.len()));
+    assert_eq!(stack.queue.gen_cancelled(), 0);
+    stack.teardown();
+}
+
+#[test]
+fn disconnecting_client_cancels_its_generation() {
+    let (stack, _entry, _w) = stack(52);
+    // A generation far too long to finish fast: if cancel-on-disconnect
+    // regressed, this test times out on the counter below (the request
+    // decodes tens of thousands of tokens to completion) instead of
+    // passing quickly.
+    let body = r#"{"prompt": [1, 2, 3], "max_new": 50000}"#;
+    let mut s = TcpStream::connect(stack.http.addr()).unwrap();
+    write!(s, "POST /v1/generate HTTP/1.1\r\nHost: t\r\n\
+               Content-Length: {}\r\n\r\n{body}", body.len())
+        .unwrap();
+    // Read until the first SSE frame boundary (proof the stream is
+    // live and the slot is held), then hang up mid-stream.
+    let mut seen = String::new();
+    let mut buf = [0u8; 256];
+    while !seen.contains("\n\n") {
+        let n = s.read(&mut buf).unwrap();
+        assert!(n > 0, "stream ended before the first token");
+        seen.push_str(std::str::from_utf8(&buf[..n]).unwrap());
+    }
+    drop(s);
+
+    // The conn thread's next frame write fails, dropping the GenEvents
+    // receiver; the serve scheduler cancels within one step of
+    // noticing. Poll the counter rather than sleeping a fixed time.
+    let t0 = Instant::now();
+    while stack.queue.gen_cancelled() == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(30),
+                "disconnect never cancelled the generation");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(stack.queue.gen_cancelled(), 1);
+    // The cancelled request must not count as served.
+    let (gen_served, _) = stack.queue.gen_stats();
+    assert_eq!(gen_served, 0);
+    stack.teardown();
+}
